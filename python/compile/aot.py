@@ -1,0 +1,130 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts for the Rust runtime.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile's
+``make artifacts``). Python runs ONCE here, at build time; the Rust
+binary loads the emitted ``*.hlo.txt`` through the PJRT C API and never
+calls back into Python.
+
+Interchange format is HLO **text**, not serialized ``HloModuleProto``:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Every artifact is recorded in ``manifest.json`` with its input/output
+signature so the Rust side can validate shapes at load time.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Tile geometry shared with rust/src/runtime/. Changing these requires
+# re-running `make artifacts`; the manifest carries the actual values.
+KNN_Q = 256    # query rows per knn_chunk call
+KNN_R = 1024   # reference rows per knn_chunk call
+# Neighbor-slot variants: each top-k round costs a full pass over the
+# distance block (see model.knn_chunk), so the common t* = 2 case (k = 1)
+# should not pay for 16 rounds. The runtime picks the smallest variant
+# with enough slots. KNN_KS[-1] bounds the serviceable t* at 17.
+KNN_KS = (2, 16)
+KNN_K = KNN_KS[-1]
+KM_N = 1024    # point rows per kmeans_assign call
+KM_K = 16      # center slots (k ≤ 16 after padding)
+DIM = 8        # feature dim (datasets are padded up to this)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    return [{"shape": list(a.shape), "dtype": str(a.dtype)} for a in avals]
+
+
+def lower_knn_chunk(k: int = KNN_K):
+    f32 = jnp.float32
+    i32 = jnp.int32
+    fn = functools.partial(model.knn_chunk, k=k)
+    args = (
+        jax.ShapeDtypeStruct((KNN_Q, DIM), f32),
+        jax.ShapeDtypeStruct((KNN_R, DIM), f32),
+        jax.ShapeDtypeStruct((KNN_Q,), i32),
+        jax.ShapeDtypeStruct((KNN_R,), i32),
+    )
+    lowered = jax.jit(fn).lower(*args)
+    name = f"knn_chunk_q{KNN_Q}_r{KNN_R}_d{DIM}_k{k}"
+    return name, lowered, args
+
+def lower_kmeans_assign():
+    f32 = jnp.float32
+    args = (
+        jax.ShapeDtypeStruct((KM_N, DIM), f32),
+        jax.ShapeDtypeStruct((KM_K, DIM), f32),
+        jax.ShapeDtypeStruct((KM_K,), f32),
+        jax.ShapeDtypeStruct((KM_N,), f32),
+    )
+    lowered = jax.jit(model.kmeans_assign).lower(*args)
+    name = f"kmeans_assign_n{KM_N}_k{KM_K}_d{DIM}"
+    return name, lowered, args
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "tile": {
+            "knn_q": KNN_Q,
+            "knn_r": KNN_R,
+            "knn_k": KNN_K,
+            "km_n": KM_N,
+            "km_k": KM_K,
+            "dim": DIM,
+        },
+        "artifacts": [],
+    }
+    jobs = [lower_knn_chunk(k) for k in KNN_KS]
+    jobs.append(lower_kmeans_assign())
+    for name, lowered, in_args in jobs:
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_avals = jax.tree_util.tree_leaves(lowered.out_info)
+        manifest["artifacts"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": _sig(in_args),
+                "outputs": [
+                    {"shape": list(o.shape), "dtype": str(o.dtype)} for o in out_avals
+                ],
+            }
+        )
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""L1: tiled pairwise squared-Euclidean distance Pallas kernel.
+
+This is the compute hot-spot of the whole system: IHTC's k-NN graph
+construction and k-means assignment both reduce to dense blocks of
+``‖q_i − r_j‖²``. The kernel computes one ``(TQ × TR)`` output tile per
+grid step from a VMEM-resident query tile and a streamed reference tile,
+with the cross term ``q · rᵀ`` as a single matmul (the MXU-friendly
+formulation) and the norm corrections fused in-register — the distance
+matrix never round-trips through HBM at tile granularity.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper is
+CPU-R-code, so there is no GPU kernel to port; this is the canonical TPU
+mapping of its inner loop. ``interpret=True`` is mandatory here — the CPU
+PJRT plugin cannot execute Mosaic custom-calls, and interpret-mode lowers
+to plain HLO ops that the Rust runtime executes natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile shape: 128×256 f32 output tile = 128 KiB; with an 8-wide
+# feature dim the three VMEM-resident blocks total ≈ 134 KiB, far under
+# the ~16 MiB VMEM budget, leaving room for double buffering. See
+# DESIGN.md §Perf for the block-shape sweep.
+DEFAULT_TQ = 128
+DEFAULT_TR = 256
+
+
+def _pairwise_kernel(q_ref, r_ref, o_ref):
+    """One output tile: o = max(‖q‖² + ‖r‖² − 2 q·rᵀ, 0)."""
+    qt = q_ref[...]
+    rt = r_ref[...]
+    qn = jnp.sum(qt * qt, axis=1, keepdims=True)          # (TQ, 1)
+    rn = jnp.sum(rt * rt, axis=1)[None, :]                # (1, TR)
+    cross = jnp.dot(qt, rt.T, preferred_element_type=qt.dtype)  # MXU
+    # Cancellation guard: the decomposition can dip slightly negative.
+    o_ref[...] = jnp.maximum(qn + rn - 2.0 * cross, 0.0)
+
+
+def _pick_tile(extent: int, preferred: int) -> int:
+    """Largest divisor of ``extent`` that is ≤ ``preferred``."""
+    t = min(preferred, extent)
+    while extent % t != 0:
+        t -= 1
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "tr"))
+def pairwise_sq_dists(q, r, *, tq: int = DEFAULT_TQ, tr: int = DEFAULT_TR):
+    """Squared Euclidean distances between rows of ``q`` and rows of ``r``.
+
+    Args:
+      q: ``(Q, D)`` query block.
+      r: ``(R, D)`` reference block.
+      tq, tr: preferred tile edge lengths (clipped to divisors).
+
+    Returns:
+      ``(Q, R)`` matrix of squared distances, elementwise ≥ 0.
+    """
+    (Q, D) = q.shape
+    (R, D2) = r.shape
+    if D != D2:
+        raise ValueError(f"feature dims differ: {D} vs {D2}")
+    tq = _pick_tile(Q, tq)
+    tr = _pick_tile(R, tr)
+    grid = (Q // tq, R // tr)
+    return pl.pallas_call(
+        _pairwise_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((tr, D), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, tr), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, R), q.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(q, r)
+
+
+def vmem_bytes(tq: int, tr: int, d: int, itemsize: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (q, r, o tiles)."""
+    return itemsize * (tq * d + tr * d + tq * tr)
+
+
+def mxu_utilization_estimate(tq: int, tr: int, d: int) -> float:
+    """Fraction of MXU lanes fed by the cross-term matmul.
+
+    The 128×128 systolic array is fully fed when both output tile edges
+    are ≥ 128 and the contraction dim keeps the pipeline busy; short
+    contractions (d ≪ 128) cost a pipeline-fill overhead modeled as
+    d/(d+2) per pass.
+    """
+    lane_fill = min(tq, 128) / 128.0 * min(tr, 128) / 128.0
+    pipeline = d / (d + 2.0)
+    return lane_fill * pipeline

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Two independent formulations so the tests can triangulate:
+``pairwise_ref`` uses the same norm decomposition as the kernel (bitwise
+comparable up to reassociation) while ``pairwise_direct`` expands the
+difference explicitly (numerically the ground truth).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pairwise_ref(q, r):
+    """‖q_i − r_j‖² via the ‖q‖² + ‖r‖² − 2 q·rᵀ decomposition."""
+    qn = jnp.sum(q * q, axis=1, keepdims=True)
+    rn = jnp.sum(r * r, axis=1)[None, :]
+    return jnp.maximum(qn + rn - 2.0 * (q @ r.T), 0.0)
+
+
+def pairwise_direct(q, r):
+    """‖q_i − r_j‖² via explicit differences (O(Q·R·D) memory)."""
+    diff = q[:, None, :] - r[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def kmeans_assign_ref(x, centers, center_mask, point_mask, big: float = 1e30):
+    """Reference k-means assignment step (see model.kmeans_assign)."""
+    d2 = pairwise_direct(x, centers)
+    d2 = d2 + (1.0 - center_mask)[None, :] * big
+    assign = jnp.argmin(d2, axis=1)
+    mind = jnp.min(d2, axis=1)
+    k = centers.shape[0]
+    oh = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    oh = oh * point_mask[:, None]
+    sums = oh.T @ x
+    counts = jnp.sum(oh, axis=0)
+    wcss = jnp.sum(mind * point_mask)
+    return assign.astype(jnp.int32), sums, counts, wcss

@@ -1,0 +1,109 @@
+"""L2: the JAX compute graphs the Rust coordinator executes via PJRT.
+
+Two request-path functions, both built on the L1 Pallas pairwise kernel
+(`kernels.pairwise`), both AOT-lowered by `aot.py` to fixed-shape HLO
+text artifacts:
+
+* ``knn_chunk`` — one tile of exact k-NN: a block of queries against a
+  block of references, masked for padding and self-matches, reduced with
+  ``lax.top_k``. The Rust side merges per-block top-k lists across
+  reference blocks (`rust/src/runtime/`).
+* ``kmeans_assign`` — one blocked Lloyd assignment step: nearest (live)
+  center per point plus the per-cluster weighted sums/counts and the
+  block's WCSS contribution, so the Rust driver can finish the update
+  step with a pure reduction.
+
+Masking conventions: padded reference rows carry ``r_ids == -1``; padded
+query/point rows carry ``point_mask == 0``; padded centers carry
+``center_mask == 0``. All shapes here are static — the AOT artifacts are
+compiled once per tile geometry and the Rust runtime pads into them.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.pairwise import pairwise_sq_dists
+
+# Distance added to masked-out candidates; large enough to lose every
+# argmin against real data, small enough to stay finite in f32 math.
+MASK_BIG = 1e30
+
+
+def knn_chunk(q, r, q_ids, r_ids, *, k: int):
+    """Top-``k`` nearest references for each query row.
+
+    Args:
+      q: ``(Q, D)`` query block (padded rows allowed; give them ids -1).
+      r: ``(R, D)`` reference block.
+      q_ids: ``(Q,)`` int32 global ids of the query rows.
+      r_ids: ``(R,)`` int32 global ids of the reference rows, -1 = padding.
+      k: neighbors per query (static).
+
+    Returns:
+      ``(dists, ids)``: ``(Q, k)`` squared distances (``MASK_BIG`` slots
+      mean "no candidate") and the matching ``(Q, k)`` int32 global ids
+      (-1 where invalid).
+    """
+    if k > r.shape[0]:
+        raise ValueError(f"k={k} exceeds reference block R={r.shape[0]}")
+    d2 = pairwise_sq_dists(q, r)
+    invalid = (r_ids[None, :] == q_ids[:, None]) | (r_ids[None, :] < 0)
+    d2 = jnp.where(invalid, MASK_BIG, d2)
+    # Top-k extraction, chosen for this runtime after three dead ends
+    # (EXPERIMENTS.md §Perf): (1) lax.top_k lowers to the `topk(..,
+    # largest=true)` HLO custom op, which xla_extension 0.5.1's text
+    # parser rejects outright; (2) jnp.argsort lowers to the classic
+    # `sort` op, which the 0.5.1 CPU backend executes with a per-element
+    # comparator call (21.6 ms/block measured); (3) jnp.argmin lowers to
+    # a *variadic* reduce whose custom comparator has the same problem
+    # (24.4 ms/block). What IS fast on that backend are plain monoid
+    # reduces (min/max/add) and elementwise ops — so each of the k rounds
+    # computes the row minimum with reduce-min, recovers its column with
+    # an equality mask + reduce-max over the column iota, and masks the
+    # winner out. k is a small compile-time constant (≤ 16), so the
+    # unrolled loop stays tiny. Measured: 1.0 ms/block, 24× faster.
+    col = jnp.arange(r.shape[0], dtype=jnp.int32)[None, :]
+    cur = d2
+    sel_d = []
+    sel_i = []
+    for _ in range(k):
+        dmin = jnp.min(cur, axis=1)                       # plain reduce-min
+        hit = cur == dmin[:, None]                        # elementwise
+        idx = jnp.max(jnp.where(hit, col, -1), axis=1)    # plain reduce-max
+        sel_d.append(dmin)
+        sel_i.append(jnp.take(r_ids, idx))
+        cur = jnp.where(col == idx[:, None], MASK_BIG, cur)
+    dists = jnp.stack(sel_d, axis=1)
+    ids = jnp.stack(sel_i, axis=1)
+    ids = jnp.where(dists >= MASK_BIG, -1, ids)
+    return dists, ids
+
+
+def kmeans_assign(x, centers, center_mask, point_mask):
+    """One blocked k-means assignment step.
+
+    Args:
+      x: ``(N, D)`` point block.
+      centers: ``(K, D)`` current centers (padded rows allowed).
+      center_mask: ``(K,)`` 1.0 for live centers, 0.0 for padding.
+      point_mask: ``(N,)`` 1.0 for live points, 0.0 for padding.
+
+    Returns:
+      ``assign``: ``(N,)`` int32 nearest live center per point;
+      ``sums``: ``(K, D)`` masked per-cluster coordinate sums;
+      ``counts``: ``(K,)`` masked per-cluster point counts;
+      ``wcss``: scalar masked within-cluster sum of squares.
+    """
+    d2 = pairwise_sq_dists(x, centers)
+    d2 = d2 + (1.0 - center_mask)[None, :] * MASK_BIG
+    assign = jnp.argmin(d2, axis=1)
+    mind = jnp.min(d2, axis=1)
+    k = centers.shape[0]
+    oh = (assign[:, None] == jnp.arange(k)[None, :]).astype(x.dtype)
+    oh = oh * point_mask[:, None]
+    sums = oh.T @ x
+    counts = jnp.sum(oh, axis=0)
+    wcss = jnp.sum(mind * point_mask)
+    return assign.astype(jnp.int32), sums, counts, wcss

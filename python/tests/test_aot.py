@@ -1,0 +1,90 @@
+"""AOT pipeline checks: lowering emits parseable HLO text + a consistent
+manifest, and the artifact geometry matches the constants shared with the
+Rust runtime."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestLowering:
+    def test_knn_chunk_lowers_to_hlo_text(self):
+        name, lowered, _ = aot.lower_knn_chunk()
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert f"q{aot.KNN_Q}_r{aot.KNN_R}" in name
+
+    def test_kmeans_assign_lowers_to_hlo_text(self):
+        name, lowered, _ = aot.lower_kmeans_assign()
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        # The root should be a tuple of 4 results (assign/sums/counts/wcss).
+        assert "tuple(" in text.replace(" ", "")
+
+    def test_lowered_executes_like_eager(self):
+        # The lowered module, compiled and run through jax, must agree with
+        # the eager function — this is the same computation the Rust side
+        # executes via PJRT.
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal((aot.KM_N, aot.DIM)).astype(np.float32))
+        c = jnp.asarray(rng.standard_normal((aot.KM_K, aot.DIM)).astype(np.float32))
+        cm = jnp.ones((aot.KM_K,), dtype=jnp.float32)
+        pm = jnp.ones((aot.KM_N,), dtype=jnp.float32)
+        compiled = jax.jit(model.kmeans_assign).lower(x, c, cm, pm).compile()
+        got = compiled(x, c, cm, pm)
+        ref = model.kmeans_assign(x, c, cm, pm)
+        for g, r in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(g), np.asarray(r), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACT_DIR, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestManifest:
+    def _manifest(self):
+        with open(os.path.join(ARTIFACT_DIR, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_files_exist_and_nonempty(self):
+        m = self._manifest()
+        # One knn_chunk per neighbor-slot variant + one kmeans_assign.
+        assert len(m["artifacts"]) == len(aot.KNN_KS) + 1
+        for a in m["artifacts"]:
+            path = os.path.join(ARTIFACT_DIR, a["file"])
+            assert os.path.getsize(path) > 1000, a["file"]
+            with open(path) as f:
+                assert "HloModule" in f.read(200)
+
+    def test_tile_geometry_consistent(self):
+        m = self._manifest()
+        t = m["tile"]
+        assert t["knn_q"] == aot.KNN_Q
+        assert t["knn_r"] == aot.KNN_R
+        assert t["knn_k"] == aot.KNN_K
+        assert t["km_n"] == aot.KM_N
+        assert t["km_k"] == aot.KM_K
+        assert t["dim"] == aot.DIM
+
+    def test_signatures_match_tile(self):
+        m = self._manifest()
+        knns = [a for a in m["artifacts"] if a["name"].startswith("knn_chunk")]
+        slot_counts = sorted(a["outputs"][0]["shape"][1] for a in knns)
+        assert slot_counts == sorted(aot.KNN_KS)
+        for knn in knns:
+            assert knn["inputs"][0]["shape"] == [aot.KNN_Q, aot.DIM]
+            assert knn["inputs"][1]["shape"] == [aot.KNN_R, aot.DIM]
+            assert knn["outputs"][0]["shape"][0] == aot.KNN_Q
+        km = next(a for a in m["artifacts"] if a["name"].startswith("kmeans_assign"))
+        assert km["inputs"][0]["shape"] == [aot.KM_N, aot.DIM]
+        assert km["outputs"][1]["shape"] == [aot.KM_K, aot.DIM]

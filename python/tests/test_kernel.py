@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas pairwise kernel vs the pure-jnp oracles.
+
+Hypothesis sweeps shapes and dtypes; fixed cases pin the numerics the
+Rust native path mirrors (`rust/src/linalg/pairwise_sq_dists`).
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from compile.kernels.pairwise import (
+    mxu_utilization_estimate,
+    pairwise_sq_dists,
+    vmem_bytes,
+    _pick_tile,
+)
+from compile.kernels.ref import pairwise_direct, pairwise_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(rng, shape, dtype=np.float32, scale=3.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+class TestFixedCases:
+    def test_tiny_exact(self):
+        q = jnp.array([[0.0, 0.0], [1.0, 1.0]], dtype=jnp.float32)
+        r = jnp.array([[1.0, 0.0], [0.0, 3.0]], dtype=jnp.float32)
+        out = pairwise_sq_dists(q, r)
+        expect = jnp.array([[1.0, 9.0], [1.0, 5.0]])
+        np.testing.assert_allclose(out, expect, rtol=1e-6)
+
+    def test_zero_on_identical_rows(self):
+        x = jnp.ones((4, 3), dtype=jnp.float32) * 7.5
+        out = pairwise_sq_dists(x, x)
+        np.testing.assert_allclose(out, np.zeros((4, 4)), atol=1e-4)
+
+    def test_never_negative_under_cancellation(self):
+        # Large coordinates provoke catastrophic cancellation.
+        x = jnp.full((8, 4), 1e4, dtype=jnp.float32)
+        out = pairwise_sq_dists(x, x + 1e-2)
+        assert bool(jnp.all(out >= 0.0))
+
+    def test_artifact_tile_geometry(self):
+        # The exact shapes the AOT artifacts are compiled for.
+        rng = np.random.default_rng(0)
+        q = _rand(rng, (256, 8))
+        r = _rand(rng, (1024, 8))
+        out = pairwise_sq_dists(jnp.asarray(q), jnp.asarray(r))
+        expect = pairwise_direct(jnp.asarray(q), jnp.asarray(r))
+        np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+
+
+class TestHypothesisSweeps:
+    @settings(max_examples=40, deadline=None)
+    @given(
+        nq=st.integers(1, 65),
+        nr=st.integers(1, 130),
+        d=st.integers(1, 12),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_direct_f32(self, nq, nr, d, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(_rand(rng, (nq, d)))
+        r = jnp.asarray(_rand(rng, (nr, d)))
+        out = pairwise_sq_dists(q, r)
+        expect = pairwise_direct(q, r)
+        np.testing.assert_allclose(out, expect, rtol=1e-3, atol=1e-3)
+        assert bool(jnp.all(out >= 0.0))
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        nq=st.integers(2, 40),
+        nr=st.integers(2, 40),
+        d=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_bfloat16_loose(self, nq, nr, d, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(_rand(rng, (nq, d))).astype(jnp.bfloat16)
+        r = jnp.asarray(_rand(rng, (nr, d))).astype(jnp.bfloat16)
+        out = pairwise_sq_dists(q, r).astype(jnp.float32)
+        expect = pairwise_direct(
+            q.astype(jnp.float32), r.astype(jnp.float32)
+        )
+        np.testing.assert_allclose(out, expect, rtol=0.15, atol=0.5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        tq=st.integers(1, 64),
+        tr=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_tile_choice_never_changes_result(self, tq, tr, seed):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(_rand(rng, (48, 5)))
+        r = jnp.asarray(_rand(rng, (36, 5)))
+        a = pairwise_sq_dists(q, r, tq=tq, tr=tr)
+        b = pairwise_ref(q, r)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(extent=st.integers(1, 512), preferred=st.integers(1, 512))
+    def test_pick_tile_is_divisor(self, extent, preferred):
+        t = _pick_tile(extent, preferred)
+        assert 1 <= t <= extent
+        assert extent % t == 0
+        assert t <= max(preferred, 1)
+
+
+class TestSymmetryProperties:
+    def test_symmetric_on_same_input(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(_rand(rng, (33, 4)))
+        out = np.asarray(pairwise_sq_dists(x, x))
+        np.testing.assert_allclose(out, out.T, rtol=1e-4, atol=1e-5)
+
+    def test_transpose_equals_swapped_args(self):
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(_rand(rng, (17, 6)))
+        r = jnp.asarray(_rand(rng, (29, 6)))
+        a = np.asarray(pairwise_sq_dists(q, r))
+        b = np.asarray(pairwise_sq_dists(r, q))
+        np.testing.assert_allclose(a, b.T, rtol=1e-4, atol=1e-5)
+
+    def test_translation_invariance(self):
+        rng = np.random.default_rng(7)
+        q = jnp.asarray(_rand(rng, (10, 3)))
+        r = jnp.asarray(_rand(rng, (12, 3)))
+        shift = jnp.asarray([[1.5, -2.0, 0.25]])
+        a = pairwise_sq_dists(q, r)
+        b = pairwise_sq_dists(q + shift, r + shift)
+        np.testing.assert_allclose(a, b, rtol=1e-3, atol=1e-3)
+
+
+class TestPerfModel:
+    def test_vmem_budget_default_tiles(self):
+        # Default tile must fit VMEM (~16 MiB) with double buffering.
+        assert vmem_bytes(128, 256, 8) * 2 < 16 * 1024 * 1024
+
+    def test_mxu_estimate_monotone_in_tiles(self):
+        small = mxu_utilization_estimate(8, 8, 8)
+        big = mxu_utilization_estimate(128, 256, 8)
+        assert 0.0 < small < big <= 1.0

@@ -1,0 +1,163 @@
+"""L2 correctness: knn_chunk and kmeans_assign vs numpy references."""
+
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from compile import model
+from compile.kernels.ref import kmeans_assign_ref, pairwise_direct
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _np_knn(q, r, q_ids, r_ids, k):
+    """Brute-force reference for knn_chunk."""
+    d2 = np.asarray(pairwise_direct(jnp.asarray(q), jnp.asarray(r)))
+    d2 = d2.astype(np.float64)
+    invalid = (r_ids[None, :] == q_ids[:, None]) | (r_ids[None, :] < 0)
+    d2[invalid] = np.inf
+    out_d = np.full((q.shape[0], k), np.inf)
+    out_i = np.full((q.shape[0], k), -1, dtype=np.int64)
+    for i in range(q.shape[0]):
+        order = np.argsort(d2[i], kind="stable")[:k]
+        for s, j in enumerate(order):
+            if np.isinf(d2[i][j]):
+                break
+            out_d[i, s] = d2[i][j]
+            out_i[i, s] = r_ids[j]
+    return out_d, out_i
+
+
+class TestKnnChunk:
+    def test_excludes_self_and_padding(self):
+        rng = np.random.default_rng(1)
+        q = rng.standard_normal((4, 3)).astype(np.float32)
+        r = np.concatenate([q, rng.standard_normal((4, 3)).astype(np.float32)])
+        q_ids = np.arange(4, dtype=np.int32)
+        r_ids = np.concatenate([np.arange(4), [-1, 5, 6, 7]]).astype(np.int32)
+        dists, ids = model.knn_chunk(
+            jnp.asarray(q), jnp.asarray(r), jnp.asarray(q_ids), jnp.asarray(r_ids), k=3
+        )
+        ids = np.asarray(ids)
+        for i in range(4):
+            assert q_ids[i] not in ids[i], f"self id in row {i}: {ids[i]}"
+            # r_ids[4] is padding (-1): index 4's *point* duplicates q rows,
+            # so its id -1 must never be reported as a real neighbor with
+            # finite distance... (-1 slots only where dist is masked).
+        d = np.asarray(dists)
+        assert ((ids >= 0) == (d < model.MASK_BIG / 2)).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        nq=st.integers(1, 20),
+        nr=st.integers(2, 60),
+        d=st.integers(1, 6),
+        k=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_numpy_reference(self, nq, nr, d, k, seed):
+        k = min(k, nr)  # lax.top_k requires k ≤ R
+        rng = np.random.default_rng(seed)
+        q = rng.standard_normal((nq, d)).astype(np.float32)
+        r = rng.standard_normal((nr, d)).astype(np.float32)
+        # Query ids overlap the reference id space; some refs padded.
+        q_ids = rng.choice(max(nr * 2, nq), size=nq, replace=False).astype(np.int32)
+        r_ids = np.arange(nr, dtype=np.int32)
+        r_ids[rng.random(nr) < 0.2] = -1
+        dists, ids = model.knn_chunk(
+            jnp.asarray(q), jnp.asarray(r), jnp.asarray(q_ids), jnp.asarray(r_ids), k=k
+        )
+        ref_d, ref_i = _np_knn(q, r, q_ids, r_ids, k)
+        got_d = np.asarray(dists, dtype=np.float64)
+        got_d[got_d >= model.MASK_BIG / 2] = np.inf
+        # Distances must match (ids can differ on exact ties).
+        finite = np.isfinite(ref_d)
+        np.testing.assert_allclose(got_d[finite], ref_d[finite], rtol=1e-3, atol=1e-3)
+        assert (np.asarray(ids)[~finite] == -1).all()
+
+    def test_sorted_ascending(self):
+        rng = np.random.default_rng(2)
+        q = rng.standard_normal((8, 4)).astype(np.float32)
+        r = rng.standard_normal((32, 4)).astype(np.float32)
+        dists, _ = model.knn_chunk(
+            jnp.asarray(q),
+            jnp.asarray(r),
+            jnp.full((8,), -2, dtype=jnp.int32),
+            jnp.arange(32, dtype=jnp.int32),
+            k=5,
+        )
+        d = np.asarray(dists)
+        assert (np.diff(d, axis=1) >= -1e-6).all()
+
+
+class TestKmeansAssign:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(2, 60),
+        k=st.integers(1, 10),
+        d=st.integers(1, 6),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_reference(self, n, k, d, seed):
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((n, d)).astype(np.float32)
+        c = rng.standard_normal((k, d)).astype(np.float32)
+        cmask = (rng.random(k) < 0.8).astype(np.float32)
+        if cmask.sum() == 0:
+            cmask[0] = 1.0
+        pmask = (rng.random(n) < 0.9).astype(np.float32)
+        got = model.kmeans_assign(
+            jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask), jnp.asarray(pmask)
+        )
+        ref = kmeans_assign_ref(
+            jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask), jnp.asarray(pmask)
+        )
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(ref[0]))
+        np.testing.assert_allclose(got[1], ref[1], rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(got[2], ref[2], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(got[3], ref[3], rtol=1e-3)
+
+    def test_masked_centers_never_chosen(self):
+        x = jnp.asarray(np.zeros((5, 2), dtype=np.float32))
+        c = jnp.asarray(np.array([[100.0, 100.0], [0.1, 0.0]], dtype=np.float32))
+        cmask = jnp.asarray(np.array([1.0, 0.0], dtype=np.float32))
+        pmask = jnp.ones((5,), dtype=jnp.float32)
+        assign, sums, counts, _ = model.kmeans_assign(x, c, cmask, pmask)
+        # Center 1 is closer but masked → everything goes to center 0.
+        assert (np.asarray(assign) == 0).all()
+        assert counts[1] == 0.0
+
+    def test_padded_points_excluded_from_stats(self):
+        rng = np.random.default_rng(3)
+        x = rng.standard_normal((10, 3)).astype(np.float32)
+        c = rng.standard_normal((4, 3)).astype(np.float32)
+        cmask = np.ones(4, dtype=np.float32)
+        pmask = np.ones(10, dtype=np.float32)
+        pmask[7:] = 0.0
+        _, sums, counts, wcss = model.kmeans_assign(
+            jnp.asarray(x), jnp.asarray(c), jnp.asarray(cmask), jnp.asarray(pmask)
+        )
+        assert float(np.asarray(counts).sum()) == 7.0
+        # Recompute from the live prefix only.
+        _, s2, c2, w2 = kmeans_assign_ref(
+            jnp.asarray(x[:7]),
+            jnp.asarray(c),
+            jnp.asarray(cmask),
+            jnp.ones(7, dtype=jnp.float32),
+        )
+        np.testing.assert_allclose(sums, s2, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(wcss, w2, rtol=1e-4)
+
+    def test_wcss_zero_when_points_on_centers(self):
+        c = np.array([[0.0, 0.0], [5.0, 5.0]], dtype=np.float32)
+        x = np.repeat(c, 3, axis=0)
+        _, _, counts, wcss = model.kmeans_assign(
+            jnp.asarray(x),
+            jnp.asarray(c),
+            jnp.ones(2, dtype=jnp.float32),
+            jnp.ones(6, dtype=jnp.float32),
+        )
+        assert float(wcss) < 1e-5
+        np.testing.assert_array_equal(np.asarray(counts), [3.0, 3.0])

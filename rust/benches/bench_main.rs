@@ -1,0 +1,201 @@
+//! Benchmark harness (`cargo bench`). Criterion is unavailable offline,
+//! so this is a self-contained harness: warmup + repeated timing, median
+//! and spread per benchmark, with one end-to-end bench per paper table
+//! plus the microbenches the §Perf pass iterates on.
+//!
+//! Filter by substring: `cargo bench -- knn` runs only knn benches.
+//! `IHTC_BENCH_FAST=1` shrinks workloads (used by CI-style smoke runs).
+
+use ihtc::cluster::hac::{hac, HacConfig, Linkage};
+use ihtc::cluster::kmeans::{kmeans_with_backend, KMeansConfig, NativeAssign};
+use ihtc::coordinator::{parallel_knn, WorkerPool};
+use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
+use ihtc::data::Preprocess;
+use ihtc::hybrid::{FinalClusterer, Ihtc};
+use ihtc::itis::{itis, ItisConfig};
+use ihtc::knn::{knn_brute, knn_chunked, kdtree::KdTree, NativeChunks};
+use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
+use ihtc::tc::{threshold_cluster, TcConfig};
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: ihtc::memtrack::CountingAllocator = ihtc::memtrack::CountingAllocator;
+
+struct Bench {
+    filter: Vec<String>,
+    fast: bool,
+}
+
+impl Bench {
+    fn matches(&self, name: &str) -> bool {
+        self.filter.is_empty() || self.filter.iter().any(|f| name.contains(f))
+    }
+
+    /// Time `f` (which returns a value to keep the optimizer honest).
+    fn run<T>(&self, name: &str, iters: usize, mut f: impl FnMut() -> T) {
+        if !self.matches(name) {
+            return;
+        }
+        let iters = if self.fast { 1 } else { iters.max(1) };
+        // Warmup.
+        std::hint::black_box(f());
+        let mut times = Vec::with_capacity(iters);
+        ihtc::memtrack::reset_peak();
+        let base = ihtc::memtrack::live_bytes();
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        let peak = ihtc::memtrack::peak_bytes().saturating_sub(base);
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = times[times.len() / 2];
+        let min = times[0];
+        let max = *times.last().unwrap();
+        println!(
+            "bench {name:<42} median {:>10.4}s  min {:>10.4}s  max {:>10.4}s  peak {:>9} MB  ({iters} iters)",
+            median, min, max, ihtc::memtrack::fmt_mb(peak)
+        );
+    }
+}
+
+fn main() {
+    // `cargo bench` passes `--bench`; everything else is a filter.
+    let filter: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let fast = std::env::var("IHTC_BENCH_FAST").is_ok();
+    let b = Bench { filter, fast };
+    let engine = Engine::load(Engine::default_dir()).ok();
+    if engine.is_none() {
+        eprintln!("note: PJRT artifacts not found; pjrt benches skipped");
+    }
+    let small = if b.fast { 2_000 } else { 20_000 };
+    let big = if b.fast { 5_000 } else { 100_000 };
+
+    // ---------- microbenches (the §Perf iteration targets) ----------
+    let ds_small = gaussian_mixture_paper(small, 1);
+    let ds_big = gaussian_mixture_paper(big, 1);
+
+    b.run("micro/knn_brute_n2e4_k3", 3, || knn_brute(&ds_small.points, 3).unwrap());
+    b.run("micro/knn_kdtree_n2e4_k3", 5, || {
+        KdTree::build(&ds_small.points).knn_all(&ds_small.points, 3).unwrap()
+    });
+    b.run("micro/knn_kdtree_n1e5_k3", 3, || {
+        KdTree::build(&ds_big.points).knn_all(&ds_big.points, 3).unwrap()
+    });
+    let pool = WorkerPool::new(0);
+    b.run(
+        &format!("micro/knn_parallel_n1e5_k3_w{}", pool.workers()),
+        3,
+        || parallel_knn(&ds_big.points, 3, &pool).unwrap(),
+    );
+    b.run("micro/knn_chunked_native_n2e4_k15", 3, || {
+        knn_chunked(&ds_small.points, 15, 256, 1024, &NativeChunks::default()).unwrap()
+    });
+    if let Some(engine) = &engine {
+        b.run("micro/knn_chunked_pjrt_n2e4_k15", 3, || {
+            knn_chunked(&ds_small.points, 15, engine.tile.knn_q, engine.tile.knn_r, &PjrtChunks {
+                engine,
+            })
+            .unwrap()
+        });
+    }
+    b.run("micro/tc_t2_n1e5(graph+seeds+grow)", 3, || {
+        threshold_cluster(&ds_big.points, &TcConfig::new(2)).unwrap()
+    });
+    b.run("micro/itis_m3_t2_n1e5", 3, || {
+        itis(&ds_big.points, &ItisConfig::iterations(2, 3)).unwrap()
+    });
+    b.run("micro/kmeans_native_n1e5_k3", 3, || {
+        kmeans_with_backend(&ds_big.points, None, &KMeansConfig::new(3), &NativeAssign).unwrap()
+    });
+    if let Some(engine) = &engine {
+        b.run("micro/kmeans_pjrt_n1e5_k3", 3, || {
+            kmeans_with_backend(&ds_big.points, None, &KMeansConfig::new(3), &PjrtAssign {
+                engine,
+            })
+            .unwrap()
+        });
+    }
+    let ds_hac = gaussian_mixture_paper(if b.fast { 500 } else { 4_000 }, 2);
+    b.run("micro/hac_ward_n4e3", 3, || {
+        hac(&ds_hac.points, &HacConfig::default()).unwrap()
+    });
+
+    // ---------- one end-to-end bench per paper table ----------
+    // Table 1 / Figs 3-4: IHTC+kmeans, m=0 vs m=1 vs m=2 (the headline).
+    for m in [0usize, 1, 2] {
+        b.run(&format!("table1/ihtc_kmeans_n1e5_m{m}"), 3, || {
+            Ihtc::new(2, m, FinalClusterer::KMeans { k: 3, restarts: 4 })
+                .run(&ds_big.points)
+                .unwrap()
+        });
+    }
+    // Table 2 / Figs 5-6: IHTC+HAC (m chosen so HAC is feasible).
+    for m in [3usize, 5] {
+        b.run(&format!("table2/ihtc_hac_n1e5_m{m}"), 2, || {
+            Ihtc::new(2, m, FinalClusterer::Hac { k: 3, linkage: Linkage::Ward })
+                .run(&ds_big.points)
+                .unwrap()
+        });
+    }
+    // Tables 3-6 / Figs 7-8: the dataset analogues.
+    let cover = {
+        let spec = find_spec("covertype").unwrap();
+        let ds = realistic(spec, if b.fast { 400 } else { 20 }, 3);
+        Preprocess { standardize: true, pca_variance: Some(0.99), max_components: None }
+            .apply(&ds)
+            .unwrap()
+    };
+    b.run("table4/covertype_kmeans_m0", 2, || {
+        Ihtc::new(2, 0, FinalClusterer::KMeans { k: 7, restarts: 4 }).run(&cover.points).unwrap()
+    });
+    b.run("table4/covertype_kmeans_m2", 2, || {
+        Ihtc::new(2, 2, FinalClusterer::KMeans { k: 7, restarts: 4 }).run(&cover.points).unwrap()
+    });
+    b.run("table6/covertype_hac_m4", 2, || {
+        Ihtc::new(2, 4, FinalClusterer::Hac { k: 7, linkage: Linkage::Ward })
+            .run(&cover.points)
+            .unwrap()
+    });
+    // Table 7/8 (Appendix A): t* sweep at m=1.
+    for t in [2usize, 8, 32] {
+        b.run(&format!("table7/tstar{t}_kmeans_n2e4_m1"), 2, || {
+            Ihtc::new(t, 1, FinalClusterer::KMeans { k: 3, restarts: 4 })
+                .run(&ds_small.points)
+                .unwrap()
+        });
+    }
+    b.run("table8/tstar8_hac_n2e4_m1", 2, || {
+        Ihtc::new(8, 1, FinalClusterer::Hac { k: 3, linkage: Linkage::Ward })
+            .run(&ds_small.points)
+            .unwrap()
+    });
+    // Table 9 (Appendix B): DBSCAN hybrid.
+    let pm = {
+        let spec = find_spec("pm 2.5").unwrap();
+        let ds = realistic(spec, if b.fast { 30 } else { 2 }, 4);
+        Preprocess { standardize: true, pca_variance: Some(0.99), max_components: None }
+            .apply(&ds)
+            .unwrap()
+    };
+    let params = ihtc::cluster::dbscan::estimate_params(&pm.points, 1000, 5).unwrap();
+    for m in [0usize, 1] {
+        b.run(&format!("table9/pm25_dbscan_m{m}"), 2, || {
+            Ihtc::new(2, m, FinalClusterer::Dbscan { eps: params.eps, min_pts: params.min_pts })
+                .run(&pm.points)
+                .unwrap()
+        });
+    }
+
+    // ---------- coordinator / pipeline overhead ----------
+    b.run("pipeline/e2e_native_n1e5_m2", 2, || {
+        let mut cfg = ihtc::config::PipelineConfig::default();
+        cfg.source = ihtc::config::DataSource::PaperMixture { n: big };
+        cfg.iterations = 2;
+        cfg.workers = 0;
+        ihtc::coordinator::driver::run(&cfg).unwrap()
+    });
+}

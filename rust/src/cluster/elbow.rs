@@ -1,0 +1,135 @@
+//! Elbow selection of the cluster count `k`.
+//!
+//! §5 of the paper: "The number of classes (k) is chosen by the elbow of
+//! plot of within-cluster sum of squared distances for different k."
+//! This module automates the visual rule: sweep `k`, fit k-means on each
+//! (on a subsample for speed), and pick the point of maximum distance
+//! below the chord of the WCSS curve (the discrete "kneedle" criterion —
+//! the same rule `dbscan::estimate_params` uses for ε).
+
+use super::kmeans::{kmeans, KMeansConfig};
+use crate::linalg::Matrix;
+use crate::rng::Xoshiro256;
+use crate::{Error, Result};
+
+/// One point of the sweep.
+#[derive(Clone, Debug)]
+pub struct ElbowPoint {
+    /// Number of clusters.
+    pub k: usize,
+    /// Within-cluster sum of squares at that k.
+    pub wcss: f64,
+}
+
+/// Result of an elbow sweep.
+#[derive(Clone, Debug)]
+pub struct ElbowResult {
+    /// The selected k.
+    pub k: usize,
+    /// The full curve (for plotting / the paper's figure).
+    pub curve: Vec<ElbowPoint>,
+}
+
+/// Sweep `k ∈ [k_min, k_max]` and select the elbow.
+///
+/// `sample` caps the number of points k-means sees per fit (the curve's
+/// shape, not its absolute level, determines the elbow).
+pub fn select_k(
+    points: &Matrix,
+    k_min: usize,
+    k_max: usize,
+    sample: usize,
+    seed: u64,
+) -> Result<ElbowResult> {
+    if k_min < 1 || k_max < k_min {
+        return Err(Error::InvalidArgument(format!("bad k range [{k_min}, {k_max}]")));
+    }
+    let n = points.rows();
+    if n < k_max {
+        return Err(Error::InvalidArgument(format!("n={n} < k_max={k_max}")));
+    }
+    let sub = if n > sample {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let idx = rng.sample_indices(n, sample);
+        points.select_rows(&idx)
+    } else {
+        points.clone()
+    };
+    let mut curve = Vec::with_capacity(k_max - k_min + 1);
+    for k in k_min..=k_max {
+        let cfg = KMeansConfig { restarts: 3, seed, ..KMeansConfig::new(k) };
+        let fit = kmeans(&sub, &cfg)?;
+        curve.push(ElbowPoint { k, wcss: fit.wcss });
+    }
+    // Discrete kneedle on the (k, log wcss) curve. The log matters: raw
+    // WCSS curves are steeply convex and the raw chord test fires one or
+    // two steps early; in log space the drop at the true k dominates.
+    let lw: Vec<f64> = curve.iter().map(|p| p.wcss.max(1e-12).ln()).collect();
+    let first_k = curve[0].k as f64;
+    let span_k = (curve[curve.len() - 1].k - curve[0].k).max(1) as f64;
+    let span_w = lw[0] - lw[lw.len() - 1];
+    let mut best = (curve[0].k, f64::NEG_INFINITY);
+    for (p, &w) in curve.iter().zip(&lw) {
+        let chord = lw[0] - span_w * (p.k as f64 - first_k) / span_k;
+        let below = chord - w;
+        if below > best.1 {
+            best = (p.k, below);
+        }
+    }
+    Ok(ElbowResult { k: best.0, curve })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    fn blobs(k: usize, per: usize, sep: f32, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = Vec::with_capacity(k * per * 2);
+        for c in 0..k {
+            let cx = (c as f32) * sep;
+            let cy = ((c * 7919) % 13) as f32 * sep * 0.3;
+            for _ in 0..per {
+                data.push(cx + rng.next_gaussian() as f32 * 0.5);
+                data.push(cy + rng.next_gaussian() as f32 * 0.5);
+            }
+        }
+        Matrix::from_vec(data, k * per, 2).unwrap()
+    }
+
+    #[test]
+    fn finds_true_k_on_separated_blobs() {
+        for true_k in [3usize, 5] {
+            let m = blobs(true_k, 150, 20.0, 42);
+            let r = select_k(&m, 1, 9, 2_000, 1).unwrap();
+            assert_eq!(r.k, true_k, "curve: {:?}", r.curve);
+        }
+    }
+
+    #[test]
+    fn curve_is_monotone_decreasing_roughly() {
+        let m = blobs(4, 100, 15.0, 43);
+        let r = select_k(&m, 1, 8, 2_000, 2).unwrap();
+        // WCSS never increases by more than noise between consecutive k.
+        for w in r.curve.windows(2) {
+            assert!(w[1].wcss <= w[0].wcss * 1.05, "{:?}", r.curve);
+        }
+    }
+
+    #[test]
+    fn invalid_ranges_rejected() {
+        let m = blobs(2, 20, 10.0, 44);
+        assert!(select_k(&m, 0, 5, 100, 1).is_err());
+        assert!(select_k(&m, 5, 2, 100, 1).is_err());
+        assert!(select_k(&m, 1, 1000, 100, 1).is_err());
+    }
+
+    #[test]
+    fn subsampling_does_not_change_selection() {
+        let m = blobs(3, 400, 25.0, 45);
+        let full = select_k(&m, 1, 7, usize::MAX, 3).unwrap();
+        let sub = select_k(&m, 1, 7, 300, 3).unwrap();
+        assert_eq!(full.k, sub.k);
+    }
+}

@@ -1,0 +1,395 @@
+//! Hierarchical agglomerative clustering (§2.2).
+//!
+//! Implemented with the nearest-neighbor-chain algorithm over a condensed
+//! distance matrix and Lance–Williams updates, giving `O(n²)` time and
+//! `O(n²)` memory for the four classic reducible linkages (Ward, average,
+//! complete, single). Ward is the paper's choice (Ward Jr. 1963 is the
+//! §2.2 citation) and the default.
+//!
+//! Like R's `hclust` — which the paper notes "will throw an error" past
+//! 65 536 points — construction refuses inputs above a configurable cap.
+//! That cap is exactly the pain IHTC exists to remove: ITIS first reduces
+//! `n` below the cap, then HAC runs on the prototypes.
+
+use crate::linalg::{sq_dist, Matrix};
+use crate::{Error, Result};
+
+/// Linkage criterion (Lance–Williams family, all reducible).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Linkage {
+    /// Ward's minimum-variance method (paper default; R's `ward.D2`).
+    Ward,
+    /// Unweighted average (UPGMA).
+    Average,
+    /// Complete linkage (farthest neighbor).
+    Complete,
+    /// Single linkage (nearest neighbor).
+    Single,
+}
+
+/// HAC configuration.
+#[derive(Clone, Debug)]
+pub struct HacConfig {
+    /// Linkage criterion.
+    pub linkage: Linkage,
+    /// Refuse inputs larger than this (R's `hclust` practical limit).
+    pub max_n: usize,
+}
+
+impl Default for HacConfig {
+    fn default() -> Self {
+        Self { linkage: Linkage::Ward, max_n: 65_536 }
+    }
+}
+
+/// One merge step: clusters `a` and `b` (scipy node convention: leaves are
+/// `0..n`, the merge at step `s` creates node `n + s`) joined at `height`.
+#[derive(Clone, Copy, Debug)]
+pub struct Merge {
+    /// First merged node id.
+    pub a: u32,
+    /// Second merged node id.
+    pub b: u32,
+    /// Merge dissimilarity (Euclidean scale for every linkage).
+    pub height: f32,
+    /// Size of the new cluster.
+    pub size: u32,
+}
+
+/// The full merge tree.
+#[derive(Clone, Debug)]
+pub struct Dendrogram {
+    /// Number of leaves.
+    pub n: usize,
+    /// `n − 1` merges in the order the algorithm performed them.
+    pub merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    /// Cut the tree into `k` clusters; returns per-leaf labels `0..k`.
+    ///
+    /// Merges are replayed in ascending height order (valid for reducible
+    /// linkages) through a union-find until `k` components remain.
+    pub fn cut(&self, k: usize) -> Result<Vec<u32>> {
+        let n = self.n;
+        if k == 0 || k > n {
+            return Err(Error::InvalidArgument(format!("cut k={k} of n={n}")));
+        }
+        let mut order: Vec<usize> = (0..self.merges.len()).collect();
+        order.sort_by(|&x, &y| {
+            self.merges[x]
+                .height
+                .partial_cmp(&self.merges[y].height)
+                .unwrap()
+                .then(x.cmp(&y))
+        });
+        // Union-find over merge-tree node ids (2n − 1 of them).
+        let mut parent: Vec<u32> = (0..(2 * n - 1) as u32).collect();
+        fn find(parent: &mut [u32], mut x: u32) -> u32 {
+            while parent[x as usize] != x {
+                parent[x as usize] = parent[parent[x as usize] as usize];
+                x = parent[x as usize];
+            }
+            x
+        }
+        let mut components = n;
+        for &mi in &order {
+            if components == k {
+                break;
+            }
+            let m = &self.merges[mi];
+            let node = (n + mi) as u32;
+            let ra = find(&mut parent, m.a);
+            let rb = find(&mut parent, m.b);
+            parent[ra as usize] = node;
+            parent[rb as usize] = node;
+            components -= 1;
+        }
+        // Relabel roots to compact 0..k.
+        let mut labels = vec![0u32; n];
+        let mut remap = std::collections::HashMap::new();
+        for i in 0..n {
+            let root = find(&mut parent, i as u32);
+            let next = remap.len() as u32;
+            let id = *remap.entry(root).or_insert(next);
+            labels[i] = id;
+        }
+        Ok(labels)
+    }
+}
+
+#[inline]
+fn cidx(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n);
+    i * n - i * (i + 1) / 2 + (j - i - 1)
+}
+
+/// Run HAC; returns the dendrogram. Use [`Dendrogram::cut`] for labels or
+/// [`hac_cut`] for the one-call version.
+pub fn hac(points: &Matrix, config: &HacConfig) -> Result<Dendrogram> {
+    let n = points.rows();
+    if n > config.max_n {
+        return Err(Error::InvalidArgument(format!(
+            "HAC refuses n={n} > max_n={} (this is the bottleneck ITIS pre-processing removes; \
+             reduce first or raise max_n)",
+            config.max_n
+        )));
+    }
+    if n == 0 {
+        return Ok(Dendrogram { n: 0, merges: vec![] });
+    }
+    // Working dissimilarity: squared Euclidean for Ward, Euclidean otherwise.
+    let ward = config.linkage == Linkage::Ward;
+    let mut dmat = vec![0.0f32; n * (n - 1) / 2];
+    for i in 0..n {
+        let ri = points.row(i);
+        for j in (i + 1)..n {
+            let d2 = sq_dist(ri, points.row(j));
+            dmat[cidx(n, i, j)] = if ward { d2 } else { d2.sqrt() };
+        }
+    }
+    hac_from_dissimilarity(n, &mut dmat, config.linkage)
+}
+
+/// NN-chain over a prefilled condensed dissimilarity matrix (consumed).
+/// For `Linkage::Ward` the matrix must contain *squared* distances.
+pub fn hac_from_dissimilarity(
+    n: usize,
+    dmat: &mut [f32],
+    linkage: Linkage,
+) -> Result<Dendrogram> {
+    if n == 0 {
+        return Ok(Dendrogram { n: 0, merges: vec![] });
+    }
+    assert_eq!(dmat.len(), n * (n - 1) / 2);
+    let ward = linkage == Linkage::Ward;
+    let mut active: Vec<bool> = vec![true; n];
+    let mut size: Vec<u32> = vec![1; n];
+    // Map active row → current merge-tree node id.
+    let mut node_id: Vec<u32> = (0..n as u32).collect();
+    let mut merges: Vec<Merge> = Vec::with_capacity(n.saturating_sub(1));
+    let mut chain: Vec<usize> = Vec::with_capacity(n);
+    let mut remaining = n;
+    let get = |dmat: &[f32], a: usize, b: usize| -> f32 {
+        if a < b { dmat[cidx(n, a, b)] } else { dmat[cidx(n, b, a)] }
+    };
+
+    while remaining > 1 {
+        if chain.is_empty() {
+            let start = active.iter().position(|&a| a).expect("an active cluster");
+            chain.push(start);
+        }
+        loop {
+            let a = *chain.last().unwrap();
+            // Nearest active neighbor of a (smallest dissimilarity,
+            // ties to the smaller index for determinism).
+            let mut best = usize::MAX;
+            let mut best_d = f32::INFINITY;
+            for b in 0..n {
+                if b == a || !active[b] {
+                    continue;
+                }
+                let d = get(dmat, a, b);
+                if d < best_d {
+                    best_d = d;
+                    best = b;
+                }
+            }
+            let b = best;
+            if chain.len() >= 2 && chain[chain.len() - 2] == b {
+                // Reciprocal nearest neighbors: merge a and b.
+                chain.pop();
+                chain.pop();
+                let dab = best_d;
+                let (sa, sb) = (size[a] as f32, size[b] as f32);
+                // Lance–Williams update of every other active cluster's
+                // dissimilarity to the merged cluster (stored at slot a).
+                for k in 0..n {
+                    if k == a || k == b || !active[k] {
+                        continue;
+                    }
+                    let dak = get(dmat, a, k);
+                    let dbk = get(dmat, b, k);
+                    let sk = size[k] as f32;
+                    let newd = match linkage {
+                        Linkage::Ward => {
+                            ((sa + sk) * dak + (sb + sk) * dbk - sk * dab) / (sa + sb + sk)
+                        }
+                        Linkage::Average => (sa * dak + sb * dbk) / (sa + sb),
+                        Linkage::Complete => dak.max(dbk),
+                        Linkage::Single => dak.min(dbk),
+                    };
+                    let idx = if a < k { cidx(n, a, k) } else { cidx(n, k, a) };
+                    dmat[idx] = newd;
+                }
+                active[b] = false;
+                size[a] += size[b];
+                let height = if ward { dab.max(0.0).sqrt() } else { dab };
+                let new_node = (n + merges.len()) as u32;
+                merges.push(Merge {
+                    a: node_id[a],
+                    b: node_id[b],
+                    height,
+                    size: size[a],
+                });
+                node_id[a] = new_node;
+                remaining -= 1;
+                break;
+            }
+            chain.push(b);
+        }
+    }
+    Ok(Dendrogram { n, merges })
+}
+
+/// One-call HAC + cut.
+pub fn hac_cut(points: &Matrix, k: usize, config: &HacConfig) -> Result<Vec<u32>> {
+    hac(points, config)?.cut(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::metrics;
+    use crate::rng::Xoshiro256;
+
+    fn blobs(seed: u64, per: usize, centers: &[(f32, f32)], spread: f32) -> (Matrix, Vec<u32>) {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let mut data = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, &(cx, cy)) in centers.iter().enumerate() {
+            for _ in 0..per {
+                data.push(cx + spread * rng.next_gaussian() as f32);
+                data.push(cy + spread * rng.next_gaussian() as f32);
+                labels.push(ci as u32);
+            }
+        }
+        (Matrix::from_vec(data, per * centers.len(), 2).unwrap(), labels)
+    }
+
+    #[test]
+    fn separated_blobs_recovered_every_linkage() {
+        let (m, truth) = blobs(91, 30, &[(0.0, 0.0), (50.0, 0.0), (0.0, 50.0)], 1.0);
+        for linkage in [Linkage::Ward, Linkage::Average, Linkage::Complete, Linkage::Single] {
+            let cfg = HacConfig { linkage, ..Default::default() };
+            let labels = hac_cut(&m, 3, &cfg).unwrap();
+            let acc = metrics::prediction_accuracy(&truth, &labels).unwrap();
+            assert_eq!(acc, 1.0, "{linkage:?}");
+        }
+    }
+
+    #[test]
+    fn merge_count_and_sizes() {
+        let (m, _) = blobs(92, 10, &[(0.0, 0.0), (10.0, 10.0)], 0.5);
+        let dend = hac(&m, &HacConfig::default()).unwrap();
+        assert_eq!(dend.merges.len(), 19);
+        assert_eq!(dend.merges.last().unwrap().size, 20);
+    }
+
+    #[test]
+    fn cut_extremes() {
+        let (m, _) = blobs(93, 5, &[(0.0, 0.0), (10.0, 10.0)], 0.5);
+        let dend = hac(&m, &HacConfig::default()).unwrap();
+        let all = dend.cut(1).unwrap();
+        assert!(all.iter().all(|&l| l == 0));
+        let singles = dend.cut(10).unwrap();
+        let distinct: std::collections::HashSet<_> = singles.iter().collect();
+        assert_eq!(distinct.len(), 10);
+        assert!(dend.cut(0).is_err());
+        assert!(dend.cut(11).is_err());
+    }
+
+    #[test]
+    fn max_n_guard_replicates_hclust_limit() {
+        let m = Matrix::zeros(11, 2);
+        let cfg = HacConfig { max_n: 10, ..Default::default() };
+        let err = hac(&m, &cfg).unwrap_err();
+        assert!(err.to_string().contains("max_n"), "{err}");
+    }
+
+    #[test]
+    fn single_linkage_chains() {
+        // A chain of equidistant points plus one far point: single linkage
+        // with k=2 isolates the far point.
+        let mut data = Vec::new();
+        for i in 0..8 {
+            data.push(i as f32);
+            data.push(0.0);
+        }
+        data.push(100.0);
+        data.push(0.0);
+        let m = Matrix::from_vec(data, 9, 1 + 1).unwrap();
+        let labels = hac_cut(&m, 2, &HacConfig { linkage: Linkage::Single, ..Default::default() }).unwrap();
+        assert_eq!(labels[8] == labels[0], false);
+        for i in 1..8 {
+            assert_eq!(labels[i], labels[0]);
+        }
+    }
+
+    #[test]
+    fn ward_heights_monotone() {
+        // For reducible linkages, sorted replay = valid hierarchy; Ward
+        // heights from NN-chain should be non-decreasing after sorting and
+        // the final merge the largest.
+        let ds = gaussian_mixture_paper(120, 94);
+        let dend = hac(&ds.points, &HacConfig::default()).unwrap();
+        let mut heights: Vec<f32> = dend.merges.iter().map(|m| m.height).collect();
+        let max = heights.iter().cloned().fold(0.0f32, f32::max);
+        heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(*heights.last().unwrap(), max);
+        assert!(heights.iter().all(|&h| h >= 0.0));
+    }
+
+    #[test]
+    fn average_linkage_two_pairs() {
+        // Known tiny instance: points at 0, 1, 10, 11 on a line.
+        let m = Matrix::from_vec(vec![0.0, 1.0, 10.0, 11.0], 4, 1).unwrap();
+        let dend = hac(&m, &HacConfig { linkage: Linkage::Average, ..Default::default() }).unwrap();
+        // First two merges at height 1 (the pairs), final at average
+        // distance between pairs = (9+10+10+11)/4 = 10.
+        let mut hs: Vec<f32> = dend.merges.iter().map(|m| m.height).collect();
+        hs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((hs[0] - 1.0).abs() < 1e-5);
+        assert!((hs[1] - 1.0).abs() < 1e-5);
+        assert!((hs[2] - 10.0).abs() < 1e-4, "{hs:?}");
+    }
+
+    #[test]
+    fn matches_bruteforce_agglomeration_complete() {
+        // Cross-check NN-chain against a naive O(n³) agglomerative
+        // implementation on a small random instance (complete linkage).
+        let ds = gaussian_mixture_paper(40, 95);
+        let n = 40;
+        let fast = hac(&ds.points, &HacConfig { linkage: Linkage::Complete, ..Default::default() })
+            .unwrap();
+        // Naive: repeatedly merge the globally closest pair.
+        let mut clusters: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+        let mut naive_heights = Vec::new();
+        while clusters.len() > 1 {
+            let mut best = (0, 1, f32::INFINITY);
+            for a in 0..clusters.len() {
+                for b in (a + 1)..clusters.len() {
+                    let mut dmax = 0.0f32;
+                    for &i in &clusters[a] {
+                        for &j in &clusters[b] {
+                            dmax = dmax.max(sq_dist(ds.points.row(i), ds.points.row(j)).sqrt());
+                        }
+                    }
+                    if dmax < best.2 {
+                        best = (a, b, dmax);
+                    }
+                }
+            }
+            naive_heights.push(best.2);
+            let merged = clusters.remove(best.1);
+            clusters[best.0].extend(merged);
+        }
+        let mut fast_heights: Vec<f32> = fast.merges.iter().map(|m| m.height).collect();
+        fast_heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        naive_heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for (f, e) in fast_heights.iter().zip(&naive_heights) {
+            assert!((f - e).abs() < 1e-4, "{fast_heights:?} vs {naive_heights:?}");
+        }
+    }
+}

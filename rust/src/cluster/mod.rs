@@ -1,0 +1,17 @@
+//! Conventional clustering algorithms (the "sophisticated" methods IHTC
+//! hybridizes): k-means, hierarchical agglomerative clustering, DBSCAN.
+//!
+//! Each returns a plain `Vec<u32>` assignment so [`crate::hybrid`] can
+//! back labels out through the ITIS prototype maps uniformly.
+
+pub mod dbscan;
+pub mod elbow;
+pub mod gmm;
+pub mod hac;
+pub mod kmeans;
+
+pub use dbscan::{dbscan, DbscanConfig, NOISE};
+pub use elbow::{select_k, ElbowResult};
+pub use gmm::{gmm, GmmConfig, GmmResult};
+pub use hac::{hac, Dendrogram, HacConfig, Linkage};
+pub use kmeans::{kmeans, KMeansConfig, KMeansInit, KMeansResult};

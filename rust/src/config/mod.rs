@@ -1,0 +1,339 @@
+//! Configuration system for the `ihtc` launcher.
+//!
+//! Pipeline runs are described by JSON config files (parsed with the
+//! in-tree [`json`] parser — no external crates exist offline). A config
+//! fully determines a run: dataset source, preprocessing, ITIS settings,
+//! final clusterer, coordinator knobs, and output location. Every field
+//! has a default so minimal configs stay small; `PipelineConfig::from_json`
+//! validates cross-field constraints (e.g. `t* ≥ 2`, k-means needs `k`).
+
+pub mod json;
+
+use crate::cluster::hac::Linkage;
+use crate::hybrid::FinalClusterer;
+use crate::itis::PrototypeKind;
+use crate::tc::SeedOrder;
+use crate::{Error, Result};
+use json::Json;
+
+/// Where the input data comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSource {
+    /// Load a CSV file (`path`, optional label column).
+    Csv {
+        /// File path.
+        path: String,
+        /// Column index holding integer labels.
+        label_column: Option<usize>,
+    },
+    /// The paper's §4 Gaussian mixture with `n` points.
+    PaperMixture {
+        /// Number of points.
+        n: usize,
+    },
+    /// A Table 3 analogue by name (`"covertype"`, `"stock"`, ...).
+    Analogue {
+        /// Dataset name (prefix match against Table 3).
+        name: String,
+        /// Divide the paper's instance count by this.
+        scale_div: usize,
+    },
+}
+
+/// Which distance/assignment backend executes the hot path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust kd-tree / native loops.
+    Native,
+    /// AOT PJRT artifacts (requires `make artifacts`).
+    Pjrt,
+}
+
+/// Full pipeline configuration.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Run name (reports, output files).
+    pub name: String,
+    /// Input data.
+    pub source: DataSource,
+    /// RNG seed for everything downstream.
+    pub seed: u64,
+    /// Standardize columns before clustering.
+    pub standardize: bool,
+    /// PCA variance fraction to retain (None = skip PCA).
+    pub pca_variance: Option<f64>,
+    /// TC threshold `t*`.
+    pub threshold: usize,
+    /// ITIS iterations `m`.
+    pub iterations: usize,
+    /// Prototype kind.
+    pub prototype: PrototypeKind,
+    /// Seed-selection order for TC.
+    pub seed_order: SeedOrder,
+    /// Final clusterer.
+    pub clusterer: FinalClusterer,
+    /// Hot-path backend.
+    pub backend: Backend,
+    /// Coordinator worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Rows per shard fed through the pipeline.
+    pub shard_size: usize,
+    /// Bounded-queue capacity between stages (backpressure depth).
+    pub queue_capacity: usize,
+    /// Write the final assignment CSV here (optional).
+    pub output: Option<String>,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        Self {
+            name: "ihtc-run".into(),
+            source: DataSource::PaperMixture { n: 10_000 },
+            seed: 42,
+            standardize: false,
+            pca_variance: None,
+            threshold: 2,
+            iterations: 2,
+            prototype: PrototypeKind::Centroid,
+            seed_order: SeedOrder::Natural,
+            clusterer: FinalClusterer::KMeans { k: 3, restarts: 4 },
+            backend: Backend::Native,
+            workers: 0,
+            shard_size: 8_192,
+            queue_capacity: 4,
+            output: None,
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Parse and validate a JSON config document.
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text)?;
+        let mut cfg = PipelineConfig::default();
+        if let Some(name) = j.get("name").and_then(Json::as_str) {
+            cfg.name = name.to_string();
+        }
+        if let Some(seed) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = seed as u64;
+        }
+        if let Some(source) = j.get("source") {
+            cfg.source = parse_source(source)?;
+        }
+        if let Some(b) = j.get("standardize").and_then(Json::as_bool) {
+            cfg.standardize = b;
+        }
+        if let Some(v) = j.get("pca_variance").and_then(Json::as_f64) {
+            if !(0.0..=1.0).contains(&v) {
+                return Err(Error::Config(format!("pca_variance must be in [0,1], got {v}")));
+            }
+            cfg.pca_variance = Some(v);
+        }
+        if let Some(t) = j.get("threshold").and_then(Json::as_usize) {
+            cfg.threshold = t;
+        }
+        if let Some(m) = j.get("iterations").and_then(Json::as_usize) {
+            cfg.iterations = m;
+        }
+        if let Some(p) = j.get("prototype").and_then(Json::as_str) {
+            cfg.prototype = match p {
+                "centroid" => PrototypeKind::Centroid,
+                "weighted" => PrototypeKind::WeightedCentroid,
+                "medoid" => PrototypeKind::Medoid,
+                other => return Err(Error::Config(format!("unknown prototype '{other}'"))),
+            };
+        }
+        if let Some(o) = j.get("seed_order").and_then(Json::as_str) {
+            cfg.seed_order = match o {
+                "natural" => SeedOrder::Natural,
+                "degree_asc" => SeedOrder::DegreeAscending,
+                "degree_desc" => SeedOrder::DegreeDescending,
+                other => return Err(Error::Config(format!("unknown seed_order '{other}'"))),
+            };
+        }
+        if let Some(c) = j.get("clusterer") {
+            cfg.clusterer = parse_clusterer(c)?;
+        }
+        if let Some(b) = j.get("backend").and_then(Json::as_str) {
+            cfg.backend = match b {
+                "native" => Backend::Native,
+                "pjrt" => Backend::Pjrt,
+                other => return Err(Error::Config(format!("unknown backend '{other}'"))),
+            };
+        }
+        if let Some(w) = j.get("workers").and_then(Json::as_usize) {
+            cfg.workers = w;
+        }
+        if let Some(s) = j.get("shard_size").and_then(Json::as_usize) {
+            cfg.shard_size = s;
+        }
+        if let Some(q) = j.get("queue_capacity").and_then(Json::as_usize) {
+            cfg.queue_capacity = q;
+        }
+        if let Some(o) = j.get("output").and_then(Json::as_str) {
+            cfg.output = Some(o.to_string());
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read config {path}: {e}")))?;
+        Self::from_json(&text)
+    }
+
+    /// Cross-field validation.
+    pub fn validate(&self) -> Result<()> {
+        if self.iterations > 0 && self.threshold < 2 {
+            return Err(Error::Config(format!(
+                "threshold t*={} must be ≥ 2 when iterations > 0",
+                self.threshold
+            )));
+        }
+        if self.shard_size == 0 {
+            return Err(Error::Config("shard_size must be > 0".into()));
+        }
+        if self.queue_capacity == 0 {
+            return Err(Error::Config("queue_capacity must be > 0".into()));
+        }
+        match &self.clusterer {
+            FinalClusterer::KMeans { k, .. } | FinalClusterer::Hac { k, .. } if *k == 0 => {
+                Err(Error::Config("clusterer k must be ≥ 1".into()))
+            }
+            FinalClusterer::Dbscan { eps, min_pts } if *eps <= 0.0 || *min_pts == 0 => {
+                Err(Error::Config("dbscan needs eps > 0 and min_pts ≥ 1".into()))
+            }
+            _ => Ok(()),
+        }
+    }
+}
+
+fn parse_source(j: &Json) -> Result<DataSource> {
+    let kind = j.req_str("kind")?;
+    Ok(match kind {
+        "csv" => DataSource::Csv {
+            path: j.req_str("path")?.to_string(),
+            label_column: j.get("label_column").and_then(Json::as_usize),
+        },
+        "paper_mixture" => DataSource::PaperMixture { n: j.req_usize("n")? },
+        "analogue" => DataSource::Analogue {
+            name: j.req_str("dataset")?.to_string(),
+            scale_div: j.get("scale_div").and_then(Json::as_usize).unwrap_or(1),
+        },
+        other => return Err(Error::Config(format!("unknown source kind '{other}'"))),
+    })
+}
+
+fn parse_clusterer(j: &Json) -> Result<FinalClusterer> {
+    let kind = j.req_str("kind")?;
+    Ok(match kind {
+        "kmeans" => FinalClusterer::KMeans {
+            k: j.req_usize("k")?,
+            restarts: j.get("restarts").and_then(Json::as_usize).unwrap_or(4),
+        },
+        "hac" => FinalClusterer::Hac {
+            k: j.req_usize("k")?,
+            linkage: match j.get("linkage").and_then(Json::as_str).unwrap_or("ward") {
+                "ward" => Linkage::Ward,
+                "average" => Linkage::Average,
+                "complete" => Linkage::Complete,
+                "single" => Linkage::Single,
+                other => return Err(Error::Config(format!("unknown linkage '{other}'"))),
+            },
+        },
+        "dbscan" => FinalClusterer::Dbscan {
+            eps: j
+                .get("eps")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| Error::Config("dbscan needs 'eps'".into()))?,
+            min_pts: j.req_usize("min_pts")?,
+        },
+        "gmm" => FinalClusterer::Gmm {
+            k: j.req_usize("k")?,
+            weighted: j.get("weighted").and_then(Json::as_bool).unwrap_or(false),
+        },
+        other => return Err(Error::Config(format!("unknown clusterer '{other}'"))),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn minimal_config_uses_defaults() {
+        let cfg = PipelineConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.threshold, 2);
+        assert_eq!(cfg.iterations, 2);
+        assert!(matches!(cfg.source, DataSource::PaperMixture { n: 10_000 }));
+    }
+
+    #[test]
+    fn full_config_roundtrip() {
+        let doc = r#"{
+          "name": "covertype-hac",
+          "seed": 7,
+          "source": {"kind": "analogue", "dataset": "covertype", "scale_div": 100},
+          "standardize": true,
+          "pca_variance": 0.95,
+          "threshold": 3,
+          "iterations": 4,
+          "prototype": "medoid",
+          "seed_order": "degree_asc",
+          "clusterer": {"kind": "hac", "k": 7, "linkage": "average"},
+          "backend": "pjrt",
+          "workers": 4,
+          "shard_size": 2048,
+          "queue_capacity": 8,
+          "output": "/tmp/out.csv"
+        }"#;
+        let cfg = PipelineConfig::from_json(doc).unwrap();
+        assert_eq!(cfg.name, "covertype-hac");
+        assert_eq!(cfg.threshold, 3);
+        assert_eq!(cfg.prototype, PrototypeKind::Medoid);
+        assert_eq!(cfg.seed_order, SeedOrder::DegreeAscending);
+        assert_eq!(cfg.backend, Backend::Pjrt);
+        assert!(matches!(cfg.clusterer, FinalClusterer::Hac { k: 7, .. }));
+        assert!(matches!(cfg.source, DataSource::Analogue { ref name, scale_div: 100 } if name == "covertype"));
+        assert_eq!(cfg.output.as_deref(), Some("/tmp/out.csv"));
+    }
+
+    #[test]
+    fn rejects_bad_threshold() {
+        let err = PipelineConfig::from_json(r#"{"threshold": 1, "iterations": 2}"#).unwrap_err();
+        assert!(err.to_string().contains("≥ 2"), "{err}");
+    }
+
+    #[test]
+    fn m0_with_threshold_1_allowed() {
+        // m = 0 means TC never runs; t* is irrelevant.
+        assert!(PipelineConfig::from_json(r#"{"threshold": 1, "iterations": 0}"#).is_ok());
+    }
+
+    #[test]
+    fn rejects_unknown_enum_values() {
+        assert!(PipelineConfig::from_json(r#"{"prototype": "quantum"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"backend": "gpu"}"#).is_err());
+        assert!(
+            PipelineConfig::from_json(r#"{"clusterer": {"kind": "hac", "k": 3, "linkage": "x"}}"#)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn rejects_invalid_dbscan() {
+        let err = PipelineConfig::from_json(
+            r#"{"clusterer": {"kind": "dbscan", "eps": 0.0, "min_pts": 4}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("dbscan"), "{err}");
+    }
+
+    #[test]
+    fn pca_variance_bounds() {
+        assert!(PipelineConfig::from_json(r#"{"pca_variance": 1.5}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"pca_variance": 0.9}"#).is_ok());
+    }
+}

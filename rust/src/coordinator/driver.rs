@@ -1,0 +1,569 @@
+//! End-to-end pipeline driver: config in, clustered dataset + report out.
+//!
+//! Phases (each timed and memory-bracketed):
+//!
+//! 1. **ingest** — the dataset streams shard-by-shard through the bounded
+//!    pipeline while first/second moments are folded for standardization
+//!    and PCA (single pass; no second scan of the source).
+//! 2. **preprocess** — standardize + PCA transform, sharded across the
+//!    worker pool.
+//! 3. **reduce** — ITIS with the coordinator's k-NN backend (work-stealing
+//!    kd-tree shards, or the PJRT AOT artifact when `backend = "pjrt"`).
+//! 4. **cluster** — the configured final clusterer on the prototypes.
+//! 5. **backout** — label propagation to all `n` units, metrics, output.
+
+use super::pipeline::{collect, PipelineBuilder, StageMetrics};
+use super::{parallel_knn, WorkerPool};
+use crate::cluster::kmeans::{self, NativeAssign};
+use crate::cluster::{dbscan, hac};
+use crate::config::{Backend, DataSource, PipelineConfig};
+use crate::data::synth::{find_spec, gaussian_mixture_paper, realistic};
+use crate::data::{csv, Dataset};
+use crate::hybrid::FinalClusterer;
+use crate::itis::{itis_with, ItisConfig, ItisResult, KnnProvider, StopRule};
+use crate::knn::KnnLists;
+use crate::linalg::{pca::Pca, Matrix};
+use crate::runtime::{Engine, PjrtAssign, PjrtChunks};
+use crate::{memtrack, Error, Result};
+use std::time::Instant;
+
+/// Timing + memory for one pipeline phase.
+#[derive(Clone, Debug)]
+pub struct PhaseStat {
+    /// Phase name.
+    pub name: &'static str,
+    /// Wall-clock seconds.
+    pub seconds: f64,
+    /// Peak allocation above baseline during the phase (bytes; 0 unless
+    /// the binary installs [`crate::memtrack::CountingAllocator`]).
+    pub peak_bytes: usize,
+}
+
+/// Everything a run produces besides the labels themselves.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Config name.
+    pub name: String,
+    /// Units processed.
+    pub n: usize,
+    /// Input dimensionality.
+    pub dim_in: usize,
+    /// Dimensionality after preprocessing.
+    pub dim_used: usize,
+    /// ITIS iterations actually run.
+    pub iterations: usize,
+    /// Prototypes handed to the final clusterer.
+    pub prototypes: usize,
+    /// Final number of clusters.
+    pub clusters: usize,
+    /// Prediction accuracy vs ground-truth labels (when known).
+    pub accuracy: Option<f64>,
+    /// BSS/TSS of the final clustering on the preprocessed data.
+    pub bss_tss: f64,
+    /// Per-phase timing/memory.
+    pub phases: Vec<PhaseStat>,
+    /// Streaming-stage metrics from the ingest pipeline.
+    pub stages: Vec<StageMetrics>,
+    /// End-to-end seconds.
+    pub total_seconds: f64,
+}
+
+impl RunReport {
+    /// Render a human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "run '{}': n={} d={}→{} m={} prototypes={} clusters={}\n",
+            self.name, self.n, self.dim_in, self.dim_used, self.iterations, self.prototypes,
+            self.clusters
+        ));
+        if let Some(acc) = self.accuracy {
+            out.push_str(&format!("  accuracy       {acc:.4}\n"));
+        }
+        out.push_str(&format!("  BSS/TSS        {:.4}\n", self.bss_tss));
+        for p in &self.phases {
+            out.push_str(&format!(
+                "  phase {:<10} {:>9.3}s  peak {:>10} B\n",
+                p.name, p.seconds, p.peak_bytes
+            ));
+        }
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  stage {:<10} items={:<6} busy={:?} blocked={:?}\n",
+                s.name, s.items, s.busy, s.blocked
+            ));
+        }
+        out.push_str(&format!("  total          {:>9.3}s\n", self.total_seconds));
+        out
+    }
+}
+
+/// k-NN provider backed by the work-stealing pool.
+struct PoolKnn<'a> {
+    pool: &'a WorkerPool,
+}
+
+impl KnnProvider for PoolKnn<'_> {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        parallel_knn(points, k, self.pool)
+    }
+}
+
+/// k-NN provider driving the PJRT knn_chunk artifact, falling back to the
+/// pool when `k` exceeds the artifact's neighbor slots.
+struct PjrtKnn<'a> {
+    engine: &'a Engine,
+    fallback: PoolKnn<'a>,
+}
+
+impl KnnProvider for PjrtKnn<'_> {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        let t = &self.engine.tile;
+        if k > t.knn_k || points.cols() > t.dim {
+            log::warn!(
+                "PJRT knn artifact cannot serve k={k}/d={}; falling back to native pool",
+                points.cols()
+            );
+            return self.fallback.knn(points, k);
+        }
+        crate::knn::knn_chunked(points, k, t.knn_q, t.knn_r, &PjrtChunks { engine: self.engine })
+    }
+}
+
+/// Load or synthesize the configured dataset, streaming shards through
+/// the bounded pipeline while folding first/second moments.
+fn ingest(config: &PipelineConfig) -> Result<(Dataset, Moments, Vec<StageMetrics>)> {
+    // Materialize the source dataset (generation is itself sharded so the
+    // pipeline really streams; CSV reads are shard-sliced after load).
+    let ds = match &config.source {
+        DataSource::Csv { path, label_column } => {
+            let opts = csv::CsvOptions { label_column: *label_column, ..Default::default() };
+            csv::read_csv(path, &opts)?
+        }
+        DataSource::PaperMixture { n } => gaussian_mixture_paper(*n, config.seed),
+        DataSource::Analogue { name, scale_div } => {
+            let spec = find_spec(name).ok_or_else(|| {
+                Error::Config(format!("unknown analogue dataset '{name}' (see Table 3)"))
+            })?;
+            realistic(spec, *scale_div, config.seed)
+        }
+    };
+    let n = ds.len();
+    let d = ds.dim();
+    let shard = config.shard_size.max(1);
+    let points = ds.points.clone();
+    let capacity = config.queue_capacity;
+    // Stream shards through the pipeline: source emits row ranges, the
+    // moments stage folds Σx and Σx² per column (enough for standardize)
+    // plus the full cross-moment matrix (enough for PCA covariance).
+    let pipe = PipelineBuilder::source("source", capacity, move |emit| {
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + shard).min(n);
+            emit(points.slice_rows(start, end))?;
+            start = end;
+        }
+        Ok(())
+    })
+    .map("moments", move |m: Matrix| {
+        let mut mo = Moments::new(d);
+        mo.fold(&m);
+        Ok(mo)
+    })
+    .build();
+    let (parts, stages) = collect(pipe)?;
+    let mut total = Moments::new(d);
+    for p in parts {
+        total.merge(&p);
+    }
+    Ok((ds, total, stages))
+}
+
+/// Streaming first/second moments for standardization + PCA covariance.
+#[derive(Clone, Debug)]
+pub struct Moments {
+    /// Rows folded.
+    pub count: usize,
+    /// Per-column sums.
+    pub sum: Vec<f64>,
+    /// Upper-triangular cross-products Σ xᵢxⱼ (row-major d×d).
+    pub cross: Vec<f64>,
+}
+
+impl Moments {
+    /// Empty accumulator for `d` columns.
+    pub fn new(d: usize) -> Self {
+        Self { count: 0, sum: vec![0.0; d], cross: vec![0.0; d * d] }
+    }
+
+    /// Fold a shard.
+    pub fn fold(&mut self, m: &Matrix) {
+        let d = self.sum.len();
+        debug_assert_eq!(m.cols(), d);
+        self.count += m.rows();
+        for i in 0..m.rows() {
+            let row = m.row(i);
+            for a in 0..d {
+                self.sum[a] += row[a] as f64;
+                for b in a..d {
+                    self.cross[a * d + b] += row[a] as f64 * row[b] as f64;
+                }
+            }
+        }
+    }
+
+    /// Merge another accumulator.
+    pub fn merge(&mut self, other: &Moments) {
+        self.count += other.count;
+        for (a, b) in self.sum.iter_mut().zip(&other.sum) {
+            *a += b;
+        }
+        for (a, b) in self.cross.iter_mut().zip(&other.cross) {
+            *a += b;
+        }
+    }
+
+    /// Column means.
+    pub fn means(&self) -> Vec<f64> {
+        let n = self.count.max(1) as f64;
+        self.sum.iter().map(|s| s / n).collect()
+    }
+
+    /// Column standard deviations (population).
+    pub fn stds(&self) -> Vec<f64> {
+        let d = self.sum.len();
+        let n = self.count.max(1) as f64;
+        let means = self.means();
+        (0..d)
+            .map(|a| (self.cross[a * d + a] / n - means[a] * means[a]).max(0.0).sqrt())
+            .collect()
+    }
+}
+
+/// Standardize in place using streaming moments (so no second stats pass).
+fn standardize_with(m: &mut Matrix, moments: &Moments, pool: &WorkerPool) -> Result<()> {
+    let means = moments.means();
+    let stds = moments.stds();
+    let d = m.cols();
+    let n = m.rows();
+    // Sharded in-place transform: compute each shard into a fresh buffer.
+    let parts = pool.run_chunks(n, 16_384, |start, end| {
+        let mut buf = vec![0.0f32; (end - start) * d];
+        for i in start..end {
+            let row = m.row(i);
+            for j in 0..d {
+                let c = row[j] as f64 - means[j];
+                buf[(i - start) * d + j] =
+                    if stds[j] > 1e-12 { (c / stds[j]) as f32 } else { c as f32 };
+            }
+        }
+        Ok((start, buf))
+    })?;
+    for (start, buf) in parts {
+        let rows = buf.len() / d;
+        m.data_mut()[start * d..(start + rows) * d].copy_from_slice(&buf);
+    }
+    Ok(())
+}
+
+/// Run the full pipeline: returns `(assignments, report)`.
+pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
+    config.validate()?;
+    let t_all = Instant::now();
+    let pool = WorkerPool::new(config.workers);
+    let mut phases = Vec::new();
+
+    // Phase 1: ingest (+ streaming moments).
+    let t0 = Instant::now();
+    let (ingested, peak) = memtrack::measure(|| ingest(config));
+    let (mut ds, moments, stages) = ingested?;
+    phases.push(PhaseStat {
+        name: "ingest",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+    let dim_in = ds.dim();
+
+    // Phase 2: preprocess (standardize from streaming moments, then PCA).
+    let t0 = Instant::now();
+    let (prep, peak) = memtrack::measure(|| -> Result<Matrix> {
+        let mut points = ds.points.clone();
+        if config.standardize {
+            standardize_with(&mut points, &moments, &pool)?;
+        }
+        if let Some(frac) = config.pca_variance {
+            let pca = Pca::fit(&points)?;
+            let k = pca.components_for_variance(frac);
+            points = pca.transform(&points, k)?;
+        }
+        Ok(points)
+    });
+    ds.points = prep?;
+    phases.push(PhaseStat {
+        name: "preprocess",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+    let dim_used = ds.dim();
+
+    // Backend setup (PJRT engine lives on this thread only).
+    let engine = match config.backend {
+        Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
+        Backend::Native => None,
+    };
+    let pool_knn = PoolKnn { pool: &pool };
+    let pjrt_knn = engine.as_ref().map(|e| PjrtKnn { engine: e, fallback: PoolKnn { pool: &pool } });
+    let knn_provider: &dyn KnnProvider = match &pjrt_knn {
+        Some(p) => p,
+        None => &pool_knn,
+    };
+
+    // Phase 3: reduce (ITIS).
+    let t0 = Instant::now();
+    let (reduced, peak) = memtrack::measure(|| -> Result<ItisResult> {
+        if config.iterations == 0 {
+            return Ok(ItisResult {
+                levels: vec![],
+                prototypes: ds.points.clone(),
+                weights: vec![1; ds.len()],
+                n_original: ds.len(),
+            });
+        }
+        let itis_cfg = ItisConfig {
+            threshold: config.threshold,
+            stop: StopRule::Iterations(config.iterations),
+            prototype: config.prototype,
+            seed_order: config.seed_order,
+            min_prototypes: match &config.clusterer {
+                FinalClusterer::KMeans { k, .. }
+                | FinalClusterer::Hac { k, .. }
+                | FinalClusterer::Gmm { k, .. } => *k,
+                FinalClusterer::Dbscan { .. } => 2,
+            },
+        };
+        itis_with(&ds.points, &itis_cfg, knn_provider)
+    });
+    let reduction = reduced?;
+    phases.push(PhaseStat {
+        name: "reduce",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    // Phase 4: final clusterer on the prototypes.
+    let t0 = Instant::now();
+    let (labels, peak) = memtrack::measure(|| -> Result<Vec<u32>> {
+        let protos = &reduction.prototypes;
+        match &config.clusterer {
+            FinalClusterer::KMeans { k, restarts } => {
+                let cfg = kmeans::KMeansConfig {
+                    restarts: (*restarts).max(1),
+                    seed: config.seed,
+                    ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
+                };
+                let result = match &engine {
+                    Some(e) if protos.cols() <= e.tile.dim && cfg.k <= e.tile.km_k => {
+                        kmeans::kmeans_with_backend(protos, None, &cfg, &PjrtAssign { engine: e })?
+                    }
+                    _ => kmeans::kmeans_with_backend(protos, None, &cfg, &NativeAssign)?,
+                };
+                Ok(result.assignments)
+            }
+            FinalClusterer::Hac { k, linkage } => {
+                let cfg = hac::HacConfig { linkage: *linkage, ..Default::default() };
+                hac::hac_cut(protos, (*k).min(protos.rows()), &cfg)
+            }
+            FinalClusterer::Dbscan { eps, min_pts } => {
+                dbscan::dbscan(protos, &dbscan::DbscanConfig { eps: *eps, min_pts: *min_pts })
+            }
+            FinalClusterer::Gmm { k, weighted } => {
+                let cfg = crate::cluster::gmm::GmmConfig {
+                    seed: config.seed,
+                    ..crate::cluster::gmm::GmmConfig::new((*k).min(protos.rows()))
+                };
+                let masses: Vec<f32>;
+                let w = if *weighted {
+                    masses = reduction.weights.iter().map(|&x| x as f32).collect();
+                    Some(masses.as_slice())
+                } else {
+                    None
+                };
+                Ok(crate::cluster::gmm::gmm(protos, w, &cfg)?.assignments)
+            }
+        }
+    });
+    let prototype_labels = labels?;
+    phases.push(PhaseStat {
+        name: "cluster",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    // Phase 5: back-out + metrics + optional output.
+    let t0 = Instant::now();
+    let (backout, peak) = memtrack::measure(|| -> Result<(Vec<u32>, Option<f64>, f64)> {
+        let assignments = reduction.back_out(&prototype_labels)?;
+        let accuracy = match &ds.labels {
+            Some(truth) => Some(crate::metrics::prediction_accuracy(truth, &assignments)?),
+            None => None,
+        };
+        let ratio = crate::metrics::bss_tss(&ds.points, &assignments)?;
+        if let Some(path) = &config.output {
+            write_assignments(path, &assignments)?;
+        }
+        Ok((assignments, accuracy, ratio))
+    });
+    let (assignments, accuracy, ratio) = backout?;
+    phases.push(PhaseStat {
+        name: "backout",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    let report = RunReport {
+        name: config.name.clone(),
+        n: ds.len(),
+        dim_in,
+        dim_used,
+        iterations: reduction.iterations(),
+        prototypes: reduction.prototypes.rows(),
+        clusters: crate::metrics::num_clusters(&assignments),
+        accuracy,
+        bss_tss: ratio,
+        phases,
+        stages,
+        total_seconds: t_all.elapsed().as_secs_f64(),
+    };
+    Ok((assignments, report))
+}
+
+/// Write `unit_index,cluster` rows.
+fn write_assignments(path: &str, assignments: &[u32]) -> Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "unit,cluster")?;
+    for (i, &c) in assignments.iter().enumerate() {
+        writeln!(w, "{i},{c}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base_config(n: usize) -> PipelineConfig {
+        PipelineConfig {
+            source: DataSource::PaperMixture { n },
+            workers: 2,
+            shard_size: 1024,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_native_kmeans() {
+        let cfg = base_config(4000);
+        let (assign, report) = run(&cfg).unwrap();
+        assert_eq!(assign.len(), 4000);
+        assert_eq!(report.n, 4000);
+        assert_eq!(report.iterations, 2);
+        assert!(report.prototypes <= 1000);
+        assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
+        assert!(report.bss_tss > 0.5);
+        assert_eq!(report.phases.len(), 5);
+        assert!(report.stages.iter().any(|s| s.name == "source"));
+    }
+
+    #[test]
+    fn end_to_end_hac() {
+        let mut cfg = base_config(3000);
+        cfg.iterations = 4;
+        cfg.clusterer = FinalClusterer::Hac { k: 3, linkage: crate::cluster::hac::Linkage::Ward };
+        let (assign, report) = run(&cfg).unwrap();
+        assert_eq!(assign.len(), 3000);
+        assert!(report.prototypes <= 3000 / 16);
+        assert!(report.accuracy.unwrap() > 0.80, "{report:?}");
+    }
+
+    #[test]
+    fn end_to_end_with_preprocess() {
+        let mut cfg = base_config(2000);
+        cfg.standardize = true;
+        cfg.pca_variance = Some(0.9999);
+        let (_, report) = run(&cfg).unwrap();
+        assert!(report.dim_used <= report.dim_in);
+        assert!(report.accuracy.unwrap() > 0.80);
+    }
+
+    #[test]
+    fn analogue_source_runs() {
+        let mut cfg = base_config(0);
+        cfg.source = DataSource::Analogue { name: "pm 2.5".into(), scale_div: 50 };
+        cfg.clusterer = FinalClusterer::KMeans { k: 4, restarts: 2 };
+        cfg.standardize = true;
+        let (_, report) = run(&cfg).unwrap();
+        assert!(report.n >= 200);
+        assert!(report.bss_tss > 0.0);
+    }
+
+    #[test]
+    fn output_written() {
+        let mut cfg = base_config(500);
+        let path = std::env::temp_dir().join("ihtc_driver_out.csv");
+        cfg.output = Some(path.to_string_lossy().into_owned());
+        run(&cfg).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("unit,cluster"));
+        assert_eq!(text.lines().count(), 501);
+    }
+
+    #[test]
+    fn m0_skips_reduction() {
+        let mut cfg = base_config(800);
+        cfg.iterations = 0;
+        let (_, report) = run(&cfg).unwrap();
+        assert_eq!(report.prototypes, 800);
+        assert_eq!(report.iterations, 0);
+    }
+
+    #[test]
+    fn unknown_analogue_rejected() {
+        let mut cfg = base_config(0);
+        cfg.source = DataSource::Analogue { name: "nope".into(), scale_div: 1 };
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn moments_match_direct_stats() {
+        let ds = gaussian_mixture_paper(3000, 7);
+        let mut mo = Moments::new(2);
+        mo.fold(&ds.points);
+        let means = mo.means();
+        let direct = ds.points.col_means();
+        for (a, b) in means.iter().zip(&direct) {
+            assert!((a - b).abs() < 1e-9);
+        }
+        let stds = mo.stds();
+        let dstds = ds.points.col_stds();
+        for (a, b) in stds.iter().zip(&dstds) {
+            assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn moments_merge_equals_single_fold() {
+        let ds = gaussian_mixture_paper(1000, 8);
+        let mut whole = Moments::new(2);
+        whole.fold(&ds.points);
+        let mut a = Moments::new(2);
+        a.fold(&ds.points.slice_rows(0, 400));
+        let mut b = Moments::new(2);
+        b.fold(&ds.points.slice_rows(400, 1000));
+        a.merge(&b);
+        assert_eq!(a.count, whole.count);
+        for (x, y) in a.cross.iter().zip(&whole.cross) {
+            assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! L3 streaming coordinator.
+//!
+//! The paper's §3.1 closes by noting that "the computation required of
+//! ITIS may be drastically improved through the discovery of methods for
+//! parallelization of threshold clustering". This module is that system:
+//! a data-pipeline orchestrator that
+//!
+//! * streams the dataset through bounded-channel **stages** with real
+//!   backpressure ([`pipeline`]),
+//! * shards the k-NN graph construction — the computational bottleneck of
+//!   ITIS — across a **work-stealing worker pool** ([`WorkerPool`],
+//!   [`parallel_knn`]) with exact (not approximate) results,
+//! * runs the whole IHTC flow end-to-end from a config ([`driver`]),
+//!   collecting per-stage metrics.
+//!
+//! Threading is std-only (no tokio offline): scoped threads, `sync_channel`
+//! for bounded queues, an atomic cursor for stealing. The PJRT engine is
+//! kept on the coordinator thread (the xla handles are not `Sync`);
+//! native workers absorb the parallel sections.
+
+pub mod driver;
+pub mod pipeline;
+
+use crate::knn::{kdtree::KdTree, KnnLists};
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Resolve a worker-count setting (0 = available parallelism − 1, min 1).
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// A work-stealing parallel-for over chunked index ranges.
+///
+/// Workers repeatedly claim the next chunk via an atomic cursor — cheap,
+/// contention-free rebalancing that keeps stragglers from stalling the
+/// pipeline (dense regions of the kd-tree cost more per query than
+/// sparse ones).
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    /// Create a pool descriptor (threads are scoped per call).
+    pub fn new(workers: usize) -> Self {
+        Self { workers: resolve_workers(workers) }
+    }
+
+    /// Number of worker threads used.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Process `0..n` in chunks of `chunk`; `f(start, end)` produces a
+    /// partial result collected into the output vector (in arbitrary
+    /// order). Errors from any worker abort the call.
+    pub fn run_chunks<T: Send>(
+        &self,
+        n: usize,
+        chunk: usize,
+        f: impl Fn(usize, usize) -> Result<T> + Sync,
+    ) -> Result<Vec<T>> {
+        let chunk = chunk.max(1);
+        let cursor = AtomicUsize::new(0);
+        let (tx, rx) = mpsc::channel::<Result<T>>();
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers {
+                let tx = tx.clone();
+                let cursor = &cursor;
+                let f = &f;
+                scope.spawn(move || loop {
+                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + chunk).min(n);
+                    let out = f(start, end);
+                    let failed = out.is_err();
+                    if tx.send(out).is_err() || failed {
+                        break;
+                    }
+                });
+            }
+            drop(tx);
+            let mut results = Vec::new();
+            for item in rx {
+                results.push(item?);
+            }
+            Ok(results)
+        })
+    }
+}
+
+/// Exact k-NN lists computed by sharding queries across the pool against
+/// a shared kd-tree. Identical output to [`crate::knn::knn_auto`], but
+/// wall-clock scales with workers; this is the coordinator's answer to
+/// the paper's "parallelize TC" future work (step 1 dominates).
+pub fn parallel_knn(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnLists> {
+    let n = points.rows();
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    let tree = KdTree::build(points);
+    let chunk = 512usize;
+    let parts = pool.run_chunks(n, chunk, |start, end| {
+        let lists = tree.knn_range(points, k, start, end)?;
+        Ok((start, lists.indices, lists.dists))
+    })?;
+    let mut indices = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    for (start, idx, dst) in parts {
+        indices[start * k..start * k + idx.len()].copy_from_slice(&idx);
+        dists[start * k..start * k + dst.len()].copy_from_slice(&dst);
+    }
+    Ok(KnnLists { k, indices, dists })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+
+    #[test]
+    fn resolve_workers_bounds() {
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn run_chunks_covers_all_indices() {
+        let pool = WorkerPool::new(4);
+        let parts = pool
+            .run_chunks(1003, 100, |s, e| Ok((s, e)))
+            .unwrap();
+        let mut covered = vec![false; 1003];
+        for (s, e) in parts {
+            for slot in covered.iter_mut().take(e).skip(s) {
+                assert!(!*slot, "overlap at {s}..{e}");
+                *slot = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn run_chunks_propagates_errors() {
+        let pool = WorkerPool::new(2);
+        let res: Result<Vec<()>> = pool.run_chunks(100, 10, |s, _| {
+            if s >= 50 {
+                Err(Error::Coordinator("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn parallel_knn_matches_serial() {
+        let ds = gaussian_mixture_paper(1500, 201);
+        let serial = knn_brute(&ds.points, 4).unwrap();
+        let pool = WorkerPool::new(4);
+        let par = parallel_knn(&ds.points, 4, &pool).unwrap();
+        for i in 0..1500 {
+            let a = serial.distances(i);
+            let b = par.distances(i);
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_knn_single_worker_ok() {
+        let ds = gaussian_mixture_paper(300, 202);
+        let pool = WorkerPool::new(1);
+        let r = parallel_knn(&ds.points, 2, &pool).unwrap();
+        assert_eq!(r.len(), 300);
+    }
+}

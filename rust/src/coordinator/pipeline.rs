@@ -1,0 +1,257 @@
+//! Bounded-channel streaming pipeline with backpressure and metrics.
+//!
+//! The ingestion path (`source → preprocess → reduce`) is expressed as a
+//! chain of stages connected by `sync_channel`s of configurable capacity.
+//! A slow downstream stage fills its input queue and blocks the producer
+//! — classic backpressure — and every stage records items processed,
+//! busy time, and blocked-on-send time so the launcher can print where
+//! the pipeline is actually bottlenecked.
+
+use crate::{Error, Result};
+use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Metrics recorded by one stage.
+#[derive(Clone, Debug, Default)]
+pub struct StageMetrics {
+    /// Stage name.
+    pub name: String,
+    /// Items that passed through.
+    pub items: usize,
+    /// Time spent doing work.
+    pub busy: Duration,
+    /// Time spent blocked sending downstream (backpressure).
+    pub blocked: Duration,
+}
+
+impl StageMetrics {
+    /// Items per second of busy time.
+    pub fn throughput(&self) -> f64 {
+        if self.busy.is_zero() {
+            0.0
+        } else {
+            self.items as f64 / self.busy.as_secs_f64()
+        }
+    }
+}
+
+/// Shared collection of per-stage metrics for a run.
+pub type MetricsHandle = Arc<Mutex<Vec<StageMetrics>>>;
+
+/// Send with blocked-time accounting: non-blocking first, then a
+/// blocking send whose wait is attributed to backpressure.
+fn send_counted<T>(tx: &SyncSender<T>, item: T, blocked: &mut Duration) -> Result<()> {
+    match tx.try_send(item) {
+        Ok(()) => Ok(()),
+        Err(TrySendError::Full(back)) => {
+            let t0 = Instant::now();
+            let r = tx.send(back);
+            *blocked += t0.elapsed();
+            r.map_err(|_| Error::Coordinator("downstream stage hung up".into()))
+        }
+        Err(TrySendError::Disconnected(_)) => {
+            Err(Error::Coordinator("downstream stage hung up".into()))
+        }
+    }
+}
+
+/// A running pipeline of threads; dropping joins nothing — call
+/// [`Pipeline::join`].
+pub struct Pipeline<T> {
+    /// Receiver of the final stage's output.
+    pub output: Receiver<T>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    metrics: MetricsHandle,
+}
+
+impl<T> Pipeline<T> {
+    /// Wait for all stages; returns per-stage metrics. Errors from any
+    /// stage surface here.
+    pub fn join(self) -> Result<Vec<StageMetrics>> {
+        for h in self.handles {
+            h.join().map_err(|_| Error::Coordinator("stage panicked".into()))??;
+        }
+        let m = self.metrics.lock().map_err(|_| Error::Coordinator("metrics poisoned".into()))?;
+        Ok(m.clone())
+    }
+}
+
+/// Builder for a linear pipeline `source → map… → output`.
+pub struct PipelineBuilder<T: Send + 'static> {
+    capacity: usize,
+    metrics: MetricsHandle,
+    head: Receiver<T>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl<T: Send + 'static> PipelineBuilder<T> {
+    /// Start a pipeline from a source closure that pushes items downstream.
+    pub fn source(
+        name: &str,
+        capacity: usize,
+        produce: impl FnOnce(&mut dyn FnMut(T) -> Result<()>) -> Result<()> + Send + 'static,
+    ) -> Self {
+        let metrics: MetricsHandle = Arc::new(Mutex::new(Vec::new()));
+        let (tx, rx) = std::sync::mpsc::sync_channel::<T>(capacity.max(1));
+        let m = metrics.clone();
+        let name = name.to_string();
+        let handle = std::thread::spawn(move || {
+            let mut stats = StageMetrics { name, ..Default::default() };
+            let t0 = Instant::now();
+            let mut blocked = Duration::ZERO;
+            let mut emit = |item: T| -> Result<()> {
+                stats.items += 1;
+                send_counted(&tx, item, &mut blocked)
+            };
+            let out = produce(&mut emit);
+            stats.busy = t0.elapsed().saturating_sub(blocked);
+            stats.blocked = blocked;
+            m.lock().unwrap().push(stats);
+            out
+        });
+        Self { capacity: capacity.max(1), metrics, head: rx, handles: vec![handle] }
+    }
+
+    /// Append a transform stage.
+    pub fn map<U: Send + 'static>(
+        self,
+        name: &str,
+        f: impl FnMut(T) -> Result<U> + Send + 'static,
+    ) -> PipelineBuilder<U> {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
+        let m = self.metrics.clone();
+        let name = name.to_string();
+        let upstream = self.head;
+        let mut f = f;
+        let mut handles = self.handles;
+        handles.push(std::thread::spawn(move || {
+            let mut stats = StageMetrics { name, ..Default::default() };
+            let mut blocked = Duration::ZERO;
+            let mut result = Ok(());
+            for item in upstream {
+                let t0 = Instant::now();
+                match f(item) {
+                    Ok(out) => {
+                        stats.busy += t0.elapsed();
+                        stats.items += 1;
+                        if let Err(e) = send_counted(&tx, out, &mut blocked) {
+                            result = Err(e);
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        result = Err(e);
+                        break;
+                    }
+                }
+            }
+            stats.blocked = blocked;
+            m.lock().unwrap().push(stats);
+            result
+        }));
+        PipelineBuilder { capacity: self.capacity, metrics: self.metrics, head: rx, handles }
+    }
+
+    /// Finish building; the caller consumes `output`.
+    pub fn build(self) -> Pipeline<T> {
+        Pipeline { output: self.head, handles: self.handles, metrics: self.metrics }
+    }
+}
+
+/// Convenience: run a source→maps pipeline and fold the outputs.
+pub fn collect<T: Send + 'static>(p: Pipeline<T>) -> Result<(Vec<T>, Vec<StageMetrics>)> {
+    let mut out = Vec::new();
+    for item in &p.output {
+        out.push(item);
+    }
+    let metrics = p.join()?;
+    Ok((out, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_pipeline_transforms_in_order() {
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in 0..100u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map("double", |x| Ok(x * 2))
+        .map("plus1", |x| Ok(x + 1))
+        .build();
+        let (out, metrics) = collect(p).unwrap();
+        assert_eq!(out, (0..100u64).map(|i| i * 2 + 1).collect::<Vec<_>>());
+        assert_eq!(metrics.len(), 3);
+        assert!(metrics.iter().all(|m| m.items == 100));
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        // Slow consumer + capacity 1 → the source records blocked time.
+        let p = PipelineBuilder::source("fast", 1, |emit| {
+            for i in 0..20u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map("slow", |x| {
+            std::thread::sleep(Duration::from_millis(3));
+            Ok(x)
+        })
+        .build();
+        let (_, metrics) = collect(p).unwrap();
+        let source = metrics.iter().find(|m| m.name == "fast").unwrap();
+        assert!(
+            source.blocked > Duration::from_millis(10),
+            "expected backpressure, blocked={:?}",
+            source.blocked
+        );
+    }
+
+    #[test]
+    fn stage_error_propagates() {
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in 0..10u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map("explode", |x| {
+            if x == 5 {
+                Err(Error::Coordinator("kaboom".into()))
+            } else {
+                Ok(x)
+            }
+        })
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(err.to_string().contains("kaboom") || err.to_string().contains("hung up"));
+    }
+
+    #[test]
+    fn source_error_propagates() {
+        let p = PipelineBuilder::source("bad", 2, |emit| {
+            emit(1u64)?;
+            Err(Error::Coordinator("source died".into()))
+        })
+        .map("id", Ok)
+        .build();
+        assert!(collect(p).is_err());
+    }
+
+    #[test]
+    fn throughput_metric_sane() {
+        let m = StageMetrics {
+            name: "x".into(),
+            items: 100,
+            busy: Duration::from_secs(2),
+            blocked: Duration::ZERO,
+        };
+        assert!((m.throughput() - 50.0).abs() < 1e-9);
+    }
+}

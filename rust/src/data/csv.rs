@@ -1,0 +1,182 @@
+//! Minimal, dependency-free CSV reader/writer for numeric datasets.
+//!
+//! Supports the subset of CSV the pipeline needs: numeric feature columns,
+//! optional header row, optional integer label column. Malformed rows are
+//! reported with line numbers.
+
+use super::Dataset;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Options for [`read_csv`].
+#[derive(Clone, Debug)]
+pub struct CsvOptions {
+    /// Field delimiter.
+    pub delimiter: char,
+    /// Skip the first line as a header.
+    pub has_header: bool,
+    /// Column index holding an integer class label (excluded from features).
+    pub label_column: Option<usize>,
+    /// Suggested `k` recorded on the resulting dataset.
+    pub k_hint: usize,
+}
+
+impl Default for CsvOptions {
+    fn default() -> Self {
+        Self { delimiter: ',', has_header: true, label_column: None, k_hint: 0 }
+    }
+}
+
+/// Read a numeric CSV file into a [`Dataset`].
+pub fn read_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    parse_csv(reader, &name, opts)
+}
+
+/// Parse CSV from any reader (exposed for tests and in-memory sources).
+pub fn parse_csv(reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<Dataset> {
+    let mut data: Vec<f32> = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut cols: Option<usize> = None;
+    let mut rows = 0usize;
+
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if lineno == 0 && opts.has_header {
+            continue;
+        }
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = trimmed.split(opts.delimiter).collect();
+        let nfeat = fields.len() - opts.label_column.map(|_| 1).unwrap_or(0);
+        match cols {
+            None => cols = Some(nfeat),
+            Some(c) if c != nfeat => {
+                return Err(Error::Data(format!(
+                    "{name}:{}: expected {c} feature fields, found {nfeat}",
+                    lineno + 1
+                )))
+            }
+            _ => {}
+        }
+        for (i, field) in fields.iter().enumerate() {
+            if Some(i) == opts.label_column {
+                let v: i64 = field.trim().parse().map_err(|_| {
+                    Error::Data(format!("{name}:{}: bad label '{field}'", lineno + 1))
+                })?;
+                labels.push(v as u32);
+            } else {
+                let v: f32 = field.trim().parse().map_err(|_| {
+                    Error::Data(format!("{name}:{}: bad number '{field}'", lineno + 1))
+                })?;
+                data.push(v);
+            }
+        }
+        rows += 1;
+    }
+    let cols = cols.unwrap_or(0);
+    let points = Matrix::from_vec(data, rows, cols)?;
+    let labels = if opts.label_column.is_some() { Some(labels) } else { None };
+    Dataset::new(name, points, labels, opts.k_hint)
+}
+
+/// Write a dataset to CSV (features then optional `label` column).
+pub fn write_csv(ds: &Dataset, path: impl AsRef<Path>) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(file);
+    let d = ds.dim();
+    // Header.
+    let mut header: Vec<String> = (0..d).map(|j| format!("x{j}")).collect();
+    if ds.labels.is_some() {
+        header.push("label".into());
+    }
+    writeln!(w, "{}", header.join(","))?;
+    for i in 0..ds.len() {
+        let row = ds.points.row(i);
+        let mut fields: Vec<String> = row.iter().map(|v| format!("{v}")).collect();
+        if let Some(labels) = &ds.labels {
+            fields.push(labels[i].to_string());
+        }
+        writeln!(w, "{}", fields.join(","))?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parse_basic() {
+        let src = "a,b\n1.0,2.0\n3.5,-4\n";
+        let ds = parse_csv(Cursor::new(src), "t", &CsvOptions::default()).unwrap();
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.points.row(1), &[3.5, -4.0]);
+        assert!(ds.labels.is_none());
+    }
+
+    #[test]
+    fn parse_with_labels() {
+        let src = "x,y,c\n1,2,0\n3,4,1\n5,6,1\n";
+        let opts = CsvOptions { label_column: Some(2), k_hint: 2, ..Default::default() };
+        let ds = parse_csv(Cursor::new(src), "t", &opts).unwrap();
+        assert_eq!(ds.dim(), 2);
+        assert_eq!(ds.labels, Some(vec![0, 1, 1]));
+        assert_eq!(ds.k_hint, 2);
+    }
+
+    #[test]
+    fn ragged_rows_rejected() {
+        let src = "1,2\n3,4,5\n";
+        let opts = CsvOptions { has_header: false, ..Default::default() };
+        let err = parse_csv(Cursor::new(src), "t", &opts).unwrap_err();
+        assert!(err.to_string().contains("expected 2"));
+    }
+
+    #[test]
+    fn bad_number_reported_with_line() {
+        let src = "h1,h2\n1,oops\n";
+        let err = parse_csv(Cursor::new(src), "t", &CsvOptions::default()).unwrap_err();
+        assert!(err.to_string().contains(":2:"), "{err}");
+    }
+
+    #[test]
+    fn roundtrip_through_file() {
+        let ds = crate::data::synth::gaussian_mixture_paper(64, 9);
+        let dir = std::env::temp_dir().join("ihtc_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("round.csv");
+        write_csv(&ds, &path).unwrap();
+        let opts = CsvOptions { label_column: Some(2), k_hint: 3, ..Default::default() };
+        let back = read_csv(&path, &opts).unwrap();
+        assert_eq!(back.len(), ds.len());
+        assert_eq!(back.dim(), ds.dim());
+        assert_eq!(back.labels, ds.labels);
+        for i in 0..ds.len() {
+            for j in 0..ds.dim() {
+                assert!((back.points.get(i, j) - ds.points.get(i, j)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn empty_lines_skipped() {
+        let src = "h\n1\n\n2\n";
+        let opts = CsvOptions { ..Default::default() };
+        let ds = parse_csv(Cursor::new(src), "t", &opts).unwrap();
+        assert_eq!(ds.len(), 2);
+    }
+}

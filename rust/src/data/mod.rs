@@ -1,0 +1,130 @@
+//! Dataset containers, CSV I/O, and preprocessing.
+//!
+//! The paper's pipeline (§5): load → PCA feature selection → standardized
+//! Euclidean dissimilarity → cluster. This module owns the first two steps
+//! plus the synthetic workload generators used by the simulation study.
+
+pub mod csv;
+pub mod synth;
+
+use crate::linalg::{pca::Pca, standardize, Matrix};
+use crate::{Error, Result};
+
+/// A dataset: `n × d` covariates plus optional ground-truth labels.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Human-readable name (used in reports).
+    pub name: String,
+    /// Covariate matrix, one row per unit.
+    pub points: Matrix,
+    /// Ground-truth class labels, when known (simulations; labeled data).
+    pub labels: Option<Vec<u32>>,
+    /// Suggested number of clusters `k` (paper's Table 3 "Classes").
+    pub k_hint: usize,
+}
+
+impl Dataset {
+    /// Build a dataset from parts.
+    pub fn new(name: impl Into<String>, points: Matrix, labels: Option<Vec<u32>>, k_hint: usize) -> Result<Self> {
+        if let Some(l) = &labels {
+            if l.len() != points.rows() {
+                return Err(Error::Data(format!(
+                    "{} labels for {} rows",
+                    l.len(),
+                    points.rows()
+                )));
+            }
+        }
+        Ok(Self { name: name.into(), points, labels, k_hint })
+    }
+
+    /// Number of units.
+    pub fn len(&self) -> usize {
+        self.points.rows()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.points.rows() == 0
+    }
+
+    /// Dimensionality.
+    pub fn dim(&self) -> usize {
+        self.points.cols()
+    }
+}
+
+/// Preprocessing options applied before clustering (paper §5 defaults:
+/// PCA feature selection + Euclidean distance on standardized columns).
+#[derive(Clone, Debug)]
+pub struct Preprocess {
+    /// Standardize columns to zero mean / unit variance.
+    pub standardize: bool,
+    /// Keep the smallest number of principal components explaining at
+    /// least this fraction of variance (`None` = no PCA).
+    pub pca_variance: Option<f64>,
+    /// Hard cap on the number of components kept.
+    pub max_components: Option<usize>,
+}
+
+impl Default for Preprocess {
+    fn default() -> Self {
+        Self { standardize: true, pca_variance: None, max_components: None }
+    }
+}
+
+impl Preprocess {
+    /// Apply to a dataset, returning the transformed copy.
+    pub fn apply(&self, ds: &Dataset) -> Result<Dataset> {
+        let mut points = ds.points.clone();
+        if self.standardize {
+            standardize(&mut points);
+        }
+        if let Some(frac) = self.pca_variance {
+            let pca = Pca::fit(&points)?;
+            let mut k = pca.components_for_variance(frac);
+            if let Some(cap) = self.max_components {
+                k = k.min(cap);
+            }
+            points = pca.transform(&points, k)?;
+        }
+        Dataset::new(ds.name.clone(), points, ds.labels.clone(), ds.k_hint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_length_checked() {
+        let m = Matrix::zeros(4, 2);
+        assert!(Dataset::new("x", m.clone(), Some(vec![0, 1]), 2).is_err());
+        assert!(Dataset::new("x", m, Some(vec![0, 1, 0, 1]), 2).is_ok());
+    }
+
+    #[test]
+    fn preprocess_standardizes() {
+        let m = Matrix::from_vec(vec![0.0, 100.0, 1.0, 200.0, 2.0, 300.0, 3.0, 400.0], 4, 2).unwrap();
+        let ds = Dataset::new("t", m, None, 2).unwrap();
+        let out = Preprocess::default().apply(&ds).unwrap();
+        let stds = out.points.col_stds();
+        assert!((stds[0] - 1.0).abs() < 1e-5);
+        assert!((stds[1] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn preprocess_pca_reduces_dim() {
+        let ds = synth::gaussian_mixture_paper(500, 3);
+        // Add a redundant third column = copy of the first.
+        let mut data = Vec::with_capacity(500 * 3);
+        for i in 0..500 {
+            let r = ds.points.row(i);
+            data.extend_from_slice(&[r[0], r[1], r[0]]);
+        }
+        let wide = Dataset::new("wide", Matrix::from_vec(data, 500, 3).unwrap(), None, 3).unwrap();
+        let pp = Preprocess { standardize: true, pca_variance: Some(0.999), max_components: None };
+        let out = pp.apply(&wide).unwrap();
+        assert!(out.dim() <= 2, "redundant column should be dropped, dim={}", out.dim());
+    }
+}

@@ -1,0 +1,289 @@
+//! IHTC — Iterative Hybridized Threshold Clustering (§3.2).
+//!
+//! The paper's headline method: run [`crate::itis`] for `m` iterations to
+//! form prototypes, cluster the prototypes with a conventional algorithm,
+//! then "back out" the labels onto all `n` units. Guarantees every final
+//! cluster contains at least `(t*)^m` units and reduces the downstream
+//! algorithm's input size by the same factor.
+
+use crate::cluster::{dbscan, gmm, hac, kmeans};
+use crate::itis::{itis, ItisConfig, ItisResult, PrototypeKind};
+use crate::linalg::Matrix;
+use crate::tc::SeedOrder;
+use crate::Result;
+
+/// The conventional ("sophisticated") algorithm applied to the prototypes.
+#[derive(Clone, Debug)]
+pub enum FinalClusterer {
+    /// k-means with `restarts` random restarts.
+    KMeans {
+        /// Number of clusters.
+        k: usize,
+        /// Restarts (`nstart`).
+        restarts: usize,
+    },
+    /// Hierarchical agglomerative clustering cut at `k`.
+    Hac {
+        /// Number of clusters after cutting the dendrogram.
+        k: usize,
+        /// Linkage criterion.
+        linkage: hac::Linkage,
+    },
+    /// DBSCAN with explicit parameters.
+    Dbscan {
+        /// Neighborhood radius ε.
+        eps: f64,
+        /// Core-point neighborhood size.
+        min_pts: usize,
+    },
+    /// Diagonal-covariance Gaussian mixture fit by EM (extension; §3.2
+    /// notes IHTC applies to "most other clustering algorithms"). When
+    /// `weighted`, prototypes carry their represented-unit masses into
+    /// the fit.
+    Gmm {
+        /// Number of components.
+        k: usize,
+        /// Weight prototypes by represented-unit counts.
+        weighted: bool,
+    },
+}
+
+/// IHTC configuration: `m` ITIS iterations at threshold `t*`, then a
+/// final clusterer.
+#[derive(Clone, Debug)]
+pub struct Ihtc {
+    /// TC size threshold `t*` (≥ 2).
+    pub threshold: usize,
+    /// ITIS iterations `m` (0 = run the final clusterer directly, the
+    /// paper's "Null"/m=0 rows).
+    pub iterations: usize,
+    /// Final clustering algorithm.
+    pub clusterer: FinalClusterer,
+    /// Prototype kind (paper: centroid).
+    pub prototype: PrototypeKind,
+    /// TC seed-selection order.
+    pub seed_order: SeedOrder,
+    /// Base RNG seed for the final clusterer.
+    pub seed: u64,
+}
+
+/// Full IHTC output.
+#[derive(Clone, Debug)]
+pub struct IhtcResult {
+    /// Cluster label per original unit ([`crate::cluster::NOISE`] marks
+    /// DBSCAN noise).
+    pub assignments: Vec<u32>,
+    /// Labels assigned to the prototypes by the final clusterer.
+    pub prototype_labels: Vec<u32>,
+    /// The ITIS reduction that produced the prototypes.
+    pub itis: ItisResult,
+}
+
+impl IhtcResult {
+    /// Number of prototypes the final clusterer saw.
+    pub fn num_prototypes(&self) -> usize {
+        self.itis.prototypes.rows()
+    }
+}
+
+impl Ihtc {
+    /// Paper-default construction.
+    pub fn new(threshold: usize, iterations: usize, clusterer: FinalClusterer) -> Self {
+        Self {
+            threshold,
+            iterations,
+            clusterer,
+            prototype: PrototypeKind::Centroid,
+            seed_order: SeedOrder::Natural,
+            seed: 0x1117C,
+        }
+    }
+
+    /// Run IHTC on `points`.
+    pub fn run(&self, points: &Matrix) -> Result<IhtcResult> {
+        let itis_cfg = ItisConfig {
+            threshold: self.threshold,
+            stop: crate::itis::StopRule::Iterations(self.iterations),
+            prototype: self.prototype,
+            seed_order: self.seed_order,
+            min_prototypes: match &self.clusterer {
+                FinalClusterer::KMeans { k, .. }
+                | FinalClusterer::Hac { k, .. }
+                | FinalClusterer::Gmm { k, .. } => *k,
+                FinalClusterer::Dbscan { .. } => 2,
+            },
+        };
+        let reduction = if self.iterations == 0 {
+            // m = 0: no pre-processing; identity ITIS result.
+            ItisResult {
+                levels: vec![],
+                prototypes: points.clone(),
+                weights: vec![1; points.rows()],
+                n_original: points.rows(),
+            }
+        } else {
+            itis(points, &itis_cfg)?
+        };
+        let protos = &reduction.prototypes;
+        let prototype_labels: Vec<u32> = match &self.clusterer {
+            FinalClusterer::KMeans { k, restarts } => {
+                let cfg = kmeans::KMeansConfig {
+                    restarts: (*restarts).max(1),
+                    seed: self.seed,
+                    ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
+                };
+                kmeans::kmeans(protos, &cfg)?.assignments
+            }
+            FinalClusterer::Hac { k, linkage } => {
+                let cfg = hac::HacConfig { linkage: *linkage, ..Default::default() };
+                hac::hac_cut(protos, (*k).min(protos.rows()), &cfg)?
+            }
+            FinalClusterer::Dbscan { eps, min_pts } => {
+                dbscan::dbscan(protos, &dbscan::DbscanConfig { eps: *eps, min_pts: *min_pts })?
+            }
+            FinalClusterer::Gmm { k, weighted } => {
+                let cfg = gmm::GmmConfig { seed: self.seed, ..gmm::GmmConfig::new((*k).min(protos.rows())) };
+                let masses: Vec<f32>;
+                let w = if *weighted {
+                    masses = reduction.weights.iter().map(|&x| x as f32).collect();
+                    Some(masses.as_slice())
+                } else {
+                    None
+                };
+                gmm::gmm(protos, w, &cfg)?.assignments
+            }
+        };
+        let assignments = reduction.back_out(&prototype_labels)?;
+        Ok(IhtcResult { assignments, prototype_labels, itis: reduction })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::hac::Linkage;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::metrics;
+
+    #[test]
+    fn m0_equals_plain_kmeans_accuracy() {
+        let ds = gaussian_mixture_paper(2000, 111);
+        let ih = Ihtc::new(2, 0, FinalClusterer::KMeans { k: 3, restarts: 4 });
+        let r = ih.run(&ds.points).unwrap();
+        let acc =
+            metrics::prediction_accuracy(ds.labels.as_ref().unwrap(), &r.assignments).unwrap();
+        assert!(acc > 0.85, "{acc}");
+        assert_eq!(r.num_prototypes(), 2000);
+    }
+
+    #[test]
+    fn accuracy_preserved_across_iterations() {
+        // The paper's central claim (Table 1): accuracy stays ≈ constant
+        // for the first few iterations.
+        let ds = gaussian_mixture_paper(4000, 112);
+        let truth = ds.labels.as_ref().unwrap();
+        let base = Ihtc::new(2, 0, FinalClusterer::KMeans { k: 3, restarts: 4 })
+            .run(&ds.points)
+            .unwrap();
+        let base_acc = metrics::prediction_accuracy(truth, &base.assignments).unwrap();
+        for m in 1..=3 {
+            let r = Ihtc::new(2, m, FinalClusterer::KMeans { k: 3, restarts: 4 })
+                .run(&ds.points)
+                .unwrap();
+            let acc = metrics::prediction_accuracy(truth, &r.assignments).unwrap();
+            assert!(
+                acc > base_acc - 0.05,
+                "m={m}: accuracy dropped {base_acc} → {acc}"
+            );
+        }
+    }
+
+    #[test]
+    fn min_cluster_size_guarantee() {
+        // IHTC ensures each final cluster has ≥ (t*)^m units (§3.2).
+        let ds = gaussian_mixture_paper(3000, 113);
+        for (t, m) in [(2usize, 3usize), (3, 2)] {
+            let r = Ihtc::new(t, m, FinalClusterer::KMeans { k: 3, restarts: 2 })
+                .run(&ds.points)
+                .unwrap();
+            let guarantee = t.pow(m as u32);
+            let min = metrics::min_cluster_size(&r.assignments);
+            assert!(
+                min >= guarantee,
+                "t*={t}, m={m}: min cluster {min} < {guarantee}"
+            );
+        }
+    }
+
+    #[test]
+    fn prototype_count_shrinks_geometrically() {
+        let ds = gaussian_mixture_paper(4096, 114);
+        let mut last = usize::MAX;
+        for m in 1..=4 {
+            let r = Ihtc::new(2, m, FinalClusterer::KMeans { k: 3, restarts: 1 })
+                .run(&ds.points)
+                .unwrap();
+            let np = r.num_prototypes();
+            assert!(np <= 4096 / (1 << m));
+            assert!(np < last);
+            last = np;
+        }
+    }
+
+    #[test]
+    fn hac_hybrid_works_past_its_cap() {
+        // HAC alone refuses big inputs; IHTC makes it feasible — the core
+        // §4.2 story, scaled down: cap HAC at 200, cluster 2000 points.
+        let ds = gaussian_mixture_paper(2000, 115);
+        let direct = crate::cluster::hac::hac(
+            &ds.points,
+            &crate::cluster::hac::HacConfig { max_n: 200, ..Default::default() },
+        );
+        assert!(direct.is_err());
+        let r = Ihtc::new(2, 4, FinalClusterer::Hac { k: 3, linkage: Linkage::Ward })
+            .run(&ds.points)
+            .unwrap();
+        assert!(r.num_prototypes() <= 200, "prototypes={}", r.num_prototypes());
+        let acc = metrics::prediction_accuracy(ds.labels.as_ref().unwrap(), &r.assignments)
+            .unwrap();
+        assert!(acc > 0.80, "{acc}");
+    }
+
+    #[test]
+    fn dbscan_hybrid_propagates_noise() {
+        let ds = gaussian_mixture_paper(1000, 116);
+        let r = Ihtc::new(2, 1, FinalClusterer::Dbscan { eps: 0.6, min_pts: 4 })
+            .run(&ds.points)
+            .unwrap();
+        assert_eq!(r.assignments.len(), 1000);
+        // Any unit mapped to a noise prototype must itself be noise.
+        let map = r.itis.unit_to_prototype();
+        for i in 0..1000 {
+            assert_eq!(r.assignments[i], r.prototype_labels[map[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn gmm_hybrid_weighted_and_unweighted() {
+        let ds = gaussian_mixture_paper(3000, 118);
+        let truth = ds.labels.as_ref().unwrap();
+        for weighted in [false, true] {
+            let r = Ihtc::new(2, 2, FinalClusterer::Gmm { k: 3, weighted })
+                .run(&ds.points)
+                .unwrap();
+            let acc = metrics::prediction_accuracy(truth, &r.assignments).unwrap();
+            assert!(acc > 0.85, "weighted={weighted}: {acc}");
+        }
+    }
+
+    #[test]
+    fn labels_cover_all_units() {
+        let ds = gaussian_mixture_paper(1500, 117);
+        let r = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 2 })
+            .run(&ds.points)
+            .unwrap();
+        assert_eq!(r.assignments.len(), 1500);
+        let k = metrics::num_clusters(&r.assignments);
+        assert!(k <= 3);
+    }
+}

@@ -1,0 +1,436 @@
+//! ITIS — iterated threshold instance selection (§3.1).
+//!
+//! Given a size threshold `t*`, each iteration (i) threshold-clusters the
+//! current point set, (ii) collapses every cluster to a **prototype**
+//! (its centroid or medoid), and (iii) repeats on the prototypes until
+//! the requested reduction is reached. `m` iterations reduce `n` by at
+//! least a factor `(t*)^m` and cost `O(t*·m·n·log n)`.
+//!
+//! The full chain of per-level assignments is retained so a clustering of
+//! the final prototypes can be "backed out" onto the original units
+//! (IHTC step 3) by composing the maps.
+
+use crate::knn::graph::NeighborGraph;
+use crate::knn::KnnLists;
+use crate::linalg::Matrix;
+use crate::tc::{threshold_cluster, threshold_cluster_graph, TcConfig, TcResult};
+use crate::{Error, Result};
+
+/// Pluggable k-NN backend for ITIS's inner loop: the coordinator injects
+/// its sharded/PJRT implementation here while the default goes through
+/// [`crate::knn::knn_auto`].
+pub trait KnnProvider {
+    /// Exact k-NN lists for all rows of `points`.
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists>;
+}
+
+/// Default provider: best serial exact backend.
+pub struct DefaultKnn;
+
+impl KnnProvider for DefaultKnn {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        crate::knn::knn_auto(points, k)
+    }
+}
+
+/// How prototypes summarize their cluster.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrototypeKind {
+    /// Cluster centroid (mean) — the paper's default.
+    Centroid,
+    /// Cluster centroid weighted by the number of *original* units each
+    /// point represents (extension; exact mean of the represented units).
+    WeightedCentroid,
+    /// Cluster medoid: the member minimizing total dissimilarity to the
+    /// other members (stays on a real data point).
+    Medoid,
+}
+
+/// Stopping rule for the iteration (§3.1 step 3).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum StopRule {
+    /// Run exactly `m` iterations.
+    Iterations(usize),
+    /// Stop once `n / n*` ≥ `alpha`.
+    ReductionFactor(f64),
+    /// Stop once the prototype count is ≤ this target.
+    TargetSize(usize),
+}
+
+/// ITIS configuration.
+#[derive(Clone, Debug)]
+pub struct ItisConfig {
+    /// TC size threshold `t*`.
+    pub threshold: usize,
+    /// Stopping rule.
+    pub stop: StopRule,
+    /// Prototype kind.
+    pub prototype: PrototypeKind,
+    /// TC seed order (passed through).
+    pub seed_order: crate::tc::SeedOrder,
+    /// Never reduce below this many prototypes (guards the final
+    /// clustering step, e.g. k-means needs ≥ k points).
+    pub min_prototypes: usize,
+}
+
+impl ItisConfig {
+    /// Paper defaults: centroid prototypes, `m` iterations at threshold `t*`.
+    pub fn iterations(threshold: usize, m: usize) -> Self {
+        Self {
+            threshold,
+            stop: StopRule::Iterations(m),
+            prototype: PrototypeKind::Centroid,
+            seed_order: crate::tc::SeedOrder::Natural,
+            min_prototypes: 1,
+        }
+    }
+
+    /// Reduce until `n/n* ≥ alpha`.
+    pub fn reduction(threshold: usize, alpha: f64) -> Self {
+        Self {
+            threshold,
+            stop: StopRule::ReductionFactor(alpha),
+            prototype: PrototypeKind::Centroid,
+            seed_order: crate::tc::SeedOrder::Natural,
+            min_prototypes: 1,
+        }
+    }
+}
+
+/// One ITIS level: the TC assignment of level-`i` points to level-`i+1`
+/// prototypes, and the prototypes themselves.
+#[derive(Clone, Debug)]
+pub struct ItisLevel {
+    /// `points_at_level[i] → prototype index` (length = level size).
+    pub assignments: Vec<u32>,
+    /// Number of prototypes formed (next level's size).
+    pub num_prototypes: usize,
+}
+
+/// Full ITIS output.
+#[derive(Clone, Debug)]
+pub struct ItisResult {
+    /// Per-iteration assignment maps, first applies to the original data.
+    pub levels: Vec<ItisLevel>,
+    /// Final prototype matrix (`n* × d`).
+    pub prototypes: Matrix,
+    /// Number of original units each final prototype represents.
+    pub weights: Vec<u32>,
+    /// Original `n`.
+    pub n_original: usize,
+}
+
+impl ItisResult {
+    /// Achieved reduction factor `n / n*`.
+    pub fn reduction_factor(&self) -> f64 {
+        self.n_original as f64 / self.prototypes.rows().max(1) as f64
+    }
+
+    /// Number of iterations actually performed.
+    pub fn iterations(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Map every original unit to its final prototype by composing the
+    /// per-level assignment maps.
+    pub fn unit_to_prototype(&self) -> Vec<u32> {
+        let mut map: Vec<u32> = (0..self.n_original as u32).collect();
+        for level in &self.levels {
+            for slot in map.iter_mut() {
+                *slot = level.assignments[*slot as usize];
+            }
+        }
+        map
+    }
+
+    /// IHTC step 3 ("back out"): given a clustering of the final
+    /// prototypes, produce the clustering of all original units.
+    pub fn back_out(&self, prototype_labels: &[u32]) -> Result<Vec<u32>> {
+        if prototype_labels.len() != self.prototypes.rows() {
+            return Err(Error::Shape(format!(
+                "{} prototype labels for {} prototypes",
+                prototype_labels.len(),
+                self.prototypes.rows()
+            )));
+        }
+        Ok(self
+            .unit_to_prototype()
+            .into_iter()
+            .map(|p| prototype_labels[p as usize])
+            .collect())
+    }
+}
+
+/// Compute prototypes for one TC level.
+fn make_prototypes(
+    points: &Matrix,
+    weights: &[u32],
+    tc: &TcResult,
+    kind: PrototypeKind,
+) -> (Matrix, Vec<u32>) {
+    let d = points.cols();
+    let k = tc.num_clusters;
+    let mut sums = vec![0.0f64; k * d];
+    let mut wsum = vec![0u64; k];
+    let mut counts = vec![0u32; k];
+    for (i, &c) in tc.assignments.iter().enumerate() {
+        let c = c as usize;
+        counts[c] += 1;
+        let w = match kind {
+            PrototypeKind::WeightedCentroid => weights[i] as u64,
+            _ => 1,
+        };
+        wsum[c] += w;
+        let row = points.row(i);
+        let acc = &mut sums[c * d..(c + 1) * d];
+        for (a, &x) in acc.iter_mut().zip(row) {
+            *a += x as f64 * w as f64;
+        }
+    }
+    let mut protos = Matrix::zeros(k, d);
+    for c in 0..k {
+        let denom = wsum[c].max(1) as f64;
+        let row = protos.row_mut(c);
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = (sums[c * d + j] / denom) as f32;
+        }
+    }
+    if kind == PrototypeKind::Medoid {
+        // Snap each centroid to the nearest member of its cluster.
+        let mut best = vec![(f32::INFINITY, 0u32); k];
+        for (i, &c) in tc.assignments.iter().enumerate() {
+            let c = c as usize;
+            let d2 = crate::linalg::sq_dist(points.row(i), protos.row(c));
+            if d2 < best[c].0 {
+                best[c] = (d2, i as u32);
+            }
+        }
+        for c in 0..k {
+            let src = points.row(best[c].1 as usize).to_vec();
+            protos.row_mut(c).copy_from_slice(&src);
+        }
+    }
+    // New weights: total original units represented per prototype.
+    let mut new_weights = vec![0u32; k];
+    for (i, &c) in tc.assignments.iter().enumerate() {
+        new_weights[c as usize] += weights[i];
+    }
+    (protos, new_weights)
+}
+
+/// Run ITIS on `points` with the default serial k-NN backend.
+pub fn itis(points: &Matrix, config: &ItisConfig) -> Result<ItisResult> {
+    itis_with(points, config, &DefaultKnn)
+}
+
+/// Run ITIS with an injected k-NN backend (the coordinator passes its
+/// work-stealing parallel or PJRT implementation).
+pub fn itis_with(
+    points: &Matrix,
+    config: &ItisConfig,
+    knn: &dyn KnnProvider,
+) -> Result<ItisResult> {
+    if config.threshold < 2 {
+        return Err(Error::InvalidArgument(format!(
+            "ITIS needs t* ≥ 2, got {}",
+            config.threshold
+        )));
+    }
+    let n0 = points.rows();
+    let mut current = points.clone();
+    let mut weights: Vec<u32> = vec![1; n0];
+    let mut levels = Vec::new();
+
+    let max_iters = match config.stop {
+        StopRule::Iterations(m) => m,
+        _ => 64, // safety bound; reduction by ≥ t* per level hits any target long before
+    };
+
+    for _ in 0..max_iters {
+        let done = match config.stop {
+            StopRule::Iterations(_) => false,
+            StopRule::ReductionFactor(alpha) => {
+                (n0 as f64 / current.rows() as f64) >= alpha
+            }
+            StopRule::TargetSize(target) => current.rows() <= target,
+        };
+        if done {
+            break;
+        }
+        // Too small to keep reducing?
+        if current.rows() <= config.threshold
+            || current.rows() / config.threshold < config.min_prototypes.max(1)
+        {
+            break;
+        }
+        let tc_cfg = TcConfig { threshold: config.threshold, seed_order: config.seed_order };
+        let tc = if current.rows() <= config.threshold {
+            threshold_cluster(&current, &tc_cfg)?
+        } else {
+            let lists = knn.knn(&current, config.threshold - 1)?;
+            let graph = NeighborGraph::from_knn(&lists);
+            threshold_cluster_graph(&graph, &current, &tc_cfg)
+        };
+        if tc.num_clusters >= current.rows() {
+            break; // no reduction possible
+        }
+        let (protos, new_weights) = make_prototypes(&current, &weights, &tc, config.prototype);
+        levels.push(ItisLevel { assignments: tc.assignments, num_prototypes: tc.num_clusters });
+        current = protos;
+        weights = new_weights;
+    }
+
+    Ok(ItisResult { levels, prototypes: current, weights, n_original: n0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+
+    #[test]
+    fn reduction_guarantee_per_iteration() {
+        let ds = gaussian_mixture_paper(3000, 61);
+        for m in 1..=4 {
+            let r = itis(&ds.points, &ItisConfig::iterations(2, m)).unwrap();
+            assert_eq!(r.iterations(), m);
+            // Each iteration reduces by ≥ t* = 2.
+            assert!(
+                r.prototypes.rows() <= 3000 / (1 << m),
+                "m={m}: n*={}",
+                r.prototypes.rows()
+            );
+            assert!(r.reduction_factor() >= (1 << m) as f64);
+        }
+    }
+
+    #[test]
+    fn weights_conserve_units() {
+        let ds = gaussian_mixture_paper(1111, 62);
+        let r = itis(&ds.points, &ItisConfig::iterations(2, 3)).unwrap();
+        let total: u64 = r.weights.iter().map(|&w| w as u64).sum();
+        assert_eq!(total, 1111);
+    }
+
+    #[test]
+    fn unit_to_prototype_composes() {
+        let ds = gaussian_mixture_paper(500, 63);
+        let r = itis(&ds.points, &ItisConfig::iterations(2, 2)).unwrap();
+        let map = r.unit_to_prototype();
+        assert_eq!(map.len(), 500);
+        let np = r.prototypes.rows() as u32;
+        assert!(map.iter().all(|&p| p < np));
+        // Prototype weights match the composed map's fiber sizes.
+        let mut fibers = vec![0u32; np as usize];
+        for &p in &map {
+            fibers[p as usize] += 1;
+        }
+        assert_eq!(fibers, r.weights);
+    }
+
+    #[test]
+    fn back_out_respects_composition() {
+        let ds = gaussian_mixture_paper(400, 64);
+        let r = itis(&ds.points, &ItisConfig::iterations(2, 2)).unwrap();
+        // Label prototypes by parity.
+        let labels: Vec<u32> = (0..r.prototypes.rows() as u32).map(|i| i % 2).collect();
+        let full = r.back_out(&labels).unwrap();
+        let map = r.unit_to_prototype();
+        for i in 0..400 {
+            assert_eq!(full[i], labels[map[i] as usize]);
+        }
+    }
+
+    #[test]
+    fn back_out_length_checked() {
+        let ds = gaussian_mixture_paper(100, 65);
+        let r = itis(&ds.points, &ItisConfig::iterations(2, 1)).unwrap();
+        assert!(r.back_out(&[0]).is_err());
+    }
+
+    #[test]
+    fn reduction_factor_stop_rule() {
+        let ds = gaussian_mixture_paper(4000, 66);
+        let r = itis(&ds.points, &ItisConfig::reduction(2, 10.0)).unwrap();
+        assert!(r.reduction_factor() >= 10.0, "{}", r.reduction_factor());
+        // Should not overshoot by more than one extra iteration (each
+        // iteration multiplies the reduction by roughly t*..2t*).
+        assert!(r.reduction_factor() < 10.0 * 8.0);
+    }
+
+    #[test]
+    fn target_size_stop_rule() {
+        let ds = gaussian_mixture_paper(2000, 67);
+        let cfg = ItisConfig {
+            stop: StopRule::TargetSize(100),
+            ..ItisConfig::iterations(2, 0)
+        };
+        let r = itis(&ds.points, &cfg).unwrap();
+        assert!(r.prototypes.rows() <= 100);
+    }
+
+    #[test]
+    fn centroid_prototypes_are_cluster_means() {
+        let ds = gaussian_mixture_paper(300, 68);
+        let r = itis(&ds.points, &ItisConfig::iterations(3, 1)).unwrap();
+        let level = &r.levels[0];
+        // Recompute one centroid by hand.
+        let c0: Vec<usize> =
+            (0..300).filter(|&i| level.assignments[i] == 0).collect();
+        let sub = ds.points.select_rows(&c0);
+        let mean = sub.centroid();
+        for j in 0..2 {
+            assert!((mean[j] - r.prototypes.get(0, j)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn medoid_prototypes_are_data_points() {
+        let ds = gaussian_mixture_paper(300, 69);
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::Medoid,
+            ..ItisConfig::iterations(2, 1)
+        };
+        let r = itis(&ds.points, &cfg).unwrap();
+        // Every prototype must coincide with an original point.
+        for p in 0..r.prototypes.rows() {
+            let proto = r.prototypes.row(p);
+            let found = (0..300).any(|i| {
+                crate::linalg::sq_dist(proto, ds.points.row(i)) < 1e-12
+            });
+            assert!(found, "prototype {p} is not a data point");
+        }
+    }
+
+    #[test]
+    fn weighted_centroid_tracks_mass() {
+        // After two iterations, WeightedCentroid prototypes equal the mean
+        // of all original units they represent.
+        let ds = gaussian_mixture_paper(256, 70);
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 2)
+        };
+        let r = itis(&ds.points, &cfg).unwrap();
+        let map = r.unit_to_prototype();
+        for p in 0..r.prototypes.rows().min(5) {
+            let members: Vec<usize> =
+                (0..256).filter(|&i| map[i] == p as u32).collect();
+            let mean = ds.points.select_rows(&members).centroid();
+            for j in 0..2 {
+                assert!(
+                    (mean[j] - r.prototypes.get(p, j)).abs() < 1e-3,
+                    "proto {p} dim {j}: {} vs {}",
+                    mean[j],
+                    r.prototypes.get(p, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_threshold_one() {
+        let ds = gaussian_mixture_paper(50, 71);
+        assert!(itis(&ds.points, &ItisConfig::iterations(1, 1)).is_err());
+    }
+}

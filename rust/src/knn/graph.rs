@@ -1,0 +1,217 @@
+//! Symmetrized nearest-neighbor graph in CSR form.
+//!
+//! Definition 6 of the paper: the k-NN *subgraph* `NG_k` has the edge `ij`
+//! iff `j` is one of the `k` closest vertices to `i` **or** vice versa.
+//! TC (§2.3) then needs exactly two queries on this graph: adjacency
+//! (walks of length 1) and two-walks (length ≤ 2). CSR gives both with
+//! zero per-query allocation.
+
+use super::KnnLists;
+
+/// Undirected graph in compressed-sparse-row form.
+#[derive(Clone, Debug)]
+pub struct NeighborGraph {
+    /// Row offsets, length `n + 1`.
+    offsets: Vec<u32>,
+    /// Column indices, sorted within each row.
+    targets: Vec<u32>,
+    /// Edge weights (squared distances), parallel to `targets`.
+    weights: Vec<f32>,
+}
+
+impl NeighborGraph {
+    /// Symmetrize directed k-NN lists into `NG_k`.
+    pub fn from_knn(knn: &KnnLists) -> Self {
+        let n = knn.len();
+        let k = knn.k;
+        // Collect both directions, dedup (i<j canonical), then build CSR.
+        let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(n * k);
+        for i in 0..n {
+            let nbrs = knn.neighbors(i);
+            let ds = knn.distances(i);
+            for (&j, &d) in nbrs.iter().zip(ds) {
+                let (a, b) = if (i as u32) < j { (i as u32, j) } else { (j, i as u32) };
+                edges.push((a, b, d));
+            }
+        }
+        edges.sort_unstable_by(|x, y| x.0.cmp(&y.0).then(x.1.cmp(&y.1)));
+        edges.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
+
+        let mut degree = vec![0u32; n];
+        for &(a, b, _) in &edges {
+            degree[a as usize] += 1;
+            degree[b as usize] += 1;
+        }
+        let mut offsets = vec![0u32; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let m = offsets[n] as usize;
+        let mut targets = vec![0u32; m];
+        let mut weights = vec![0f32; m];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for &(a, b, d) in &edges {
+            let ca = cursor[a as usize] as usize;
+            targets[ca] = b;
+            weights[ca] = d;
+            cursor[a as usize] += 1;
+            let cb = cursor[b as usize] as usize;
+            targets[cb] = a;
+            weights[cb] = d;
+            cursor[b as usize] += 1;
+        }
+        // Rows come out sorted because edges were sorted by (a, b) and
+        // reverse edges are appended in increasing a — but not guaranteed
+        // for the reverse direction; sort each row for determinism.
+        for i in 0..n {
+            let (s, e) = (offsets[i] as usize, offsets[i + 1] as usize);
+            let mut row: Vec<(u32, f32)> =
+                targets[s..e].iter().copied().zip(weights[s..e].iter().copied()).collect();
+            row.sort_unstable_by_key(|&(t, _)| t);
+            for (slot, (t, w)) in row.into_iter().enumerate() {
+                targets[s + slot] = t;
+                weights[s + slot] = w;
+            }
+        }
+        Self { offsets, targets, weights }
+    }
+
+    /// Number of vertices.
+    pub fn len(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// True when the graph has no vertices.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of undirected edges.
+    pub fn edge_count(&self) -> usize {
+        self.targets.len() / 2
+    }
+
+    /// Neighbors of `i` (sorted ascending).
+    #[inline]
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.targets[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Edge weights parallel to [`Self::neighbors`].
+    #[inline]
+    pub fn weights(&self, i: usize) -> &[f32] {
+        &self.weights[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// Degree of vertex `i`.
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// Visit every vertex within a walk of length ≤ 2 of `i` (excluding
+    /// `i` itself); `f(j, hops)` with hops ∈ {1, 2}. A vertex reachable at
+    /// both 1 and 2 hops is reported at 1 hop only.
+    pub fn for_two_walk(&self, i: usize, mut f: impl FnMut(u32, u8)) {
+        // Mark direct neighbors to suppress duplicate 2-hop reports.
+        let direct = self.neighbors(i);
+        for &j in direct {
+            f(j, 1);
+        }
+        for &j in direct {
+            for &l in self.neighbors(j as usize) {
+                if l as usize != i && direct.binary_search(&l).is_err() {
+                    f(l, 2);
+                }
+            }
+        }
+    }
+
+    /// Maximum edge weight in the graph (the bottleneck of `NG_k`).
+    pub fn max_weight(&self) -> f32 {
+        self.weights.iter().copied().fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+
+    fn line_graph() -> NeighborGraph {
+        // Points 0,1,3,7 on a line, k=1: directed lists 0→1, 1→0, 2→1, 3→2.
+        let m = crate::linalg::Matrix::from_vec(vec![0.0, 1.0, 3.0, 7.0], 4, 1).unwrap();
+        let knn = knn_brute(&m, 1).unwrap();
+        NeighborGraph::from_knn(&knn)
+    }
+
+    #[test]
+    fn symmetrization_or_semantics() {
+        let g = line_graph();
+        // Edge 2-1 exists because 1 is 2's nearest, even though 2 is not 1's.
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        assert_eq!(g.neighbors(3), &[2]);
+        assert_eq!(g.edge_count(), 3);
+    }
+
+    #[test]
+    fn weights_match_distances() {
+        let g = line_graph();
+        let i = g.neighbors(2).iter().position(|&t| t == 3).unwrap();
+        assert_eq!(g.weights(2)[i], 16.0);
+    }
+
+    #[test]
+    fn two_walk_visits_correct_set() {
+        let g = line_graph();
+        // From 0: 1-hop {1}, 2-hop {2} (via 1).
+        let mut one = vec![];
+        let mut two = vec![];
+        g.for_two_walk(0, |j, h| if h == 1 { one.push(j) } else { two.push(j) });
+        assert_eq!(one, vec![1]);
+        assert_eq!(two, vec![2]);
+    }
+
+    #[test]
+    fn two_walk_no_self_no_dup_direct() {
+        let ds = gaussian_mixture_paper(200, 41);
+        let knn = knn_brute(&ds.points, 3).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        for i in 0..200 {
+            let mut seen_direct = std::collections::HashSet::new();
+            g.for_two_walk(i, |j, h| {
+                assert_ne!(j as usize, i, "self reported from {i}");
+                if h == 1 {
+                    seen_direct.insert(j);
+                } else {
+                    assert!(!seen_direct.contains(&j), "dup 2-hop {j} from {i}");
+                }
+            });
+        }
+    }
+
+    #[test]
+    fn degrees_at_least_k() {
+        // Each vertex has ≥ k incident edges after symmetrization.
+        let ds = gaussian_mixture_paper(300, 42);
+        let k = 4;
+        let knn = knn_brute(&ds.points, k).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        for i in 0..300 {
+            assert!(g.degree(i) >= k, "degree({i}) = {}", g.degree(i));
+        }
+    }
+
+    #[test]
+    fn rows_sorted() {
+        let ds = gaussian_mixture_paper(150, 43);
+        let knn = knn_brute(&ds.points, 5).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        for i in 0..150 {
+            let n = g.neighbors(i);
+            assert!(n.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+}

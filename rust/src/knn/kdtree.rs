@@ -1,0 +1,397 @@
+//! Exact k-d tree for low-dimensional k-NN queries.
+//!
+//! The paper's complexity claim for TC rests on the `(t*−1)`-NN graph
+//! being constructible in `O(k·n·log n)` when the covariate space is
+//! low-dimensional (Friedman et al. 1976; Vaidya 1989). After the §5 PCA
+//! step d is 2–7, squarely in k-d tree territory.
+//!
+//! Implementation notes (§Perf): nodes live in a flat arena with their
+//! bounding boxes in a parallel flat `f32` arena (no per-node heap
+//! indirection — the box pruning test is the hottest branch of the
+//! query). Splits choose the axis of maximum spread at the median (via
+//! `select_nth_unstable`); leaves hold up to `leaf_size` points and are
+//! scanned linearly, which is both cache-friendly and what the Pallas
+//! tile kernel mirrors at L1. Batch queries reuse one [`TopK`] and one
+//! scratch buffer (`knn_range`) so the hot loop does not allocate.
+
+use super::{KnnLists, TopK};
+use crate::linalg::{sq_dist, Matrix};
+use crate::{Error, Result};
+
+/// Arena node: either an internal split or a leaf range into `perm`.
+/// The node's bounding box lives at `bboxes[node_id * 2d ..]`.
+#[derive(Clone, Debug)]
+enum Node {
+    Split { axis: u16, left: u32, right: u32 },
+    Leaf { start: u32, end: u32 },
+}
+
+/// An immutable k-d tree over the rows of a [`Matrix`].
+pub struct KdTree {
+    nodes: Vec<Node>,
+    /// `lo[d] ++ hi[d]` per node, indexed by node id.
+    bboxes: Vec<f32>,
+    /// Permutation of row indices; leaves own contiguous ranges.
+    perm: Vec<u32>,
+    root: u32,
+    dim: usize,
+    leaf_size: usize,
+}
+
+impl KdTree {
+    /// Build with the default leaf size (tuned in the §Perf pass: the
+    /// flat-arena + nearest-child-first query favors small leaves; 12
+    /// was the sweep minimum at n = 10⁵, d = 2).
+    pub fn build(points: &Matrix) -> Self {
+        Self::build_with_leaf_size(points, 12)
+    }
+
+    /// Build with an explicit leaf size.
+    pub fn build_with_leaf_size(points: &Matrix, leaf_size: usize) -> Self {
+        let n = points.rows();
+        let d = points.cols();
+        let leaf_size = leaf_size.max(1);
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        let cap = 2 * (n / leaf_size + 1);
+        let mut tree = KdTree {
+            nodes: Vec::with_capacity(cap),
+            bboxes: Vec::with_capacity(cap * 2 * d),
+            perm: Vec::new(),
+            root: 0,
+            dim: d,
+            leaf_size,
+        };
+        let root = if n == 0 {
+            tree.push_node(Node::Leaf { start: 0, end: 0 }, &[f32::INFINITY], &[f32::NEG_INFINITY])
+        } else {
+            tree.build_rec(points, &mut perm, 0, n)
+        };
+        tree.root = root;
+        tree.perm = perm;
+        tree
+    }
+
+    fn push_node(&mut self, node: Node, lo: &[f32], hi: &[f32]) -> u32 {
+        let id = self.nodes.len() as u32;
+        self.nodes.push(node);
+        // Degenerate (empty-tree) boxes are padded to `dim`.
+        for j in 0..self.dim.max(1) {
+            self.bboxes.push(lo.get(j).copied().unwrap_or(f32::INFINITY));
+        }
+        for j in 0..self.dim.max(1) {
+            self.bboxes.push(hi.get(j).copied().unwrap_or(f32::NEG_INFINITY));
+        }
+        id
+    }
+
+    fn build_rec(&mut self, points: &Matrix, perm: &mut [u32], offset: usize, len: usize) -> u32 {
+        let d = points.cols();
+        let slice = &mut perm[offset..offset + len];
+        let mut lo = vec![f32::INFINITY; d];
+        let mut hi = vec![f32::NEG_INFINITY; d];
+        for &i in slice.iter() {
+            let row = points.row(i as usize);
+            for j in 0..d {
+                lo[j] = lo[j].min(row[j]);
+                hi[j] = hi[j].max(row[j]);
+            }
+        }
+        if len <= self.leaf_size {
+            return self.push_node(
+                Node::Leaf { start: offset as u32, end: (offset + len) as u32 },
+                &lo,
+                &hi,
+            );
+        }
+        // Axis of maximum spread.
+        let mut axis = 0usize;
+        let mut best = -1.0f32;
+        for j in 0..d {
+            let spread = hi[j] - lo[j];
+            if spread > best {
+                best = spread;
+                axis = j;
+            }
+        }
+        if best <= 0.0 {
+            // All points identical: force a leaf to avoid infinite recursion.
+            return self.push_node(
+                Node::Leaf { start: offset as u32, end: (offset + len) as u32 },
+                &lo,
+                &hi,
+            );
+        }
+        let mid = len / 2;
+        slice.select_nth_unstable_by(mid, |&a, &b| {
+            points
+                .get(a as usize, axis)
+                .partial_cmp(&points.get(b as usize, axis))
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        let left = self.build_rec(points, perm, offset, mid);
+        let right = self.build_rec(points, perm, offset + mid, len - mid);
+        self.push_node(Node::Split { axis: axis as u16, left, right }, &lo, &hi)
+    }
+
+    /// Configured leaf size.
+    pub fn leaf_size(&self) -> usize {
+        self.leaf_size
+    }
+
+    /// Minimum squared distance from `q` to a node's bounding box.
+    #[inline]
+    fn bbox_min_dist(&self, node: u32, q: &[f32]) -> f32 {
+        let d = self.dim.max(1);
+        let base = node as usize * 2 * d;
+        let lo = &self.bboxes[base..base + d];
+        let hi = &self.bboxes[base + d..base + 2 * d];
+        let mut acc = 0.0f32;
+        for j in 0..q.len().min(d) {
+            let v = q[j];
+            let e = if v < lo[j] {
+                lo[j] - v
+            } else if v > hi[j] {
+                v - hi[j]
+            } else {
+                0.0
+            };
+            acc += e * e;
+        }
+        acc
+    }
+
+    fn search(&self, points: &Matrix, q: &[f32], exclude: u32, node: u32, top: &mut TopK) {
+        match self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                for &idx in &self.perm[start as usize..end as usize] {
+                    if idx == exclude {
+                        continue;
+                    }
+                    let d = sq_dist(q, points.row(idx as usize));
+                    if d < top.bound() {
+                        top.push(d, idx);
+                    }
+                }
+            }
+            Node::Split { axis, left, right } => {
+                // Descend into the child whose box is closer first.
+                let dl = self.bbox_min_dist(left, q);
+                let dr = self.bbox_min_dist(right, q);
+                let _ = axis;
+                let (near, near_d, far, far_d) =
+                    if dl <= dr { (left, dl, right, dr) } else { (right, dr, left, dl) };
+                if near_d < top.bound() {
+                    self.search(points, q, exclude, near, top);
+                }
+                if far_d < top.bound() {
+                    self.search(points, q, exclude, far, top);
+                }
+            }
+        }
+    }
+
+    /// k nearest neighbors of the query vector `q` among the indexed
+    /// points, excluding index `exclude` (pass `u32::MAX` to keep all).
+    pub fn knn_query(&self, points: &Matrix, q: &[f32], k: usize, exclude: u32) -> Vec<(f32, u32)> {
+        assert_eq!(q.len(), self.dim);
+        let mut top = TopK::new(k);
+        self.search(points, q, exclude, self.root, &mut top);
+        top.into_sorted()
+    }
+
+    /// k-NN lists for every indexed point (self excluded): the TC step-1
+    /// workhorse. Allocation-free per query (one reused [`TopK`] and
+    /// scratch buffer), and queries are issued in tree (leaf) order so
+    /// consecutive queries share search paths and cache lines (§Perf).
+    pub fn knn_all(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        let n = points.rows();
+        if k == 0 || k >= n {
+            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+        }
+        let mut indices = vec![0u32; n * k];
+        let mut dists = vec![0f32; n * k];
+        let mut top = TopK::new(k);
+        let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
+        for &pi in &self.perm {
+            let i = pi as usize;
+            top.reset();
+            self.search(points, points.row(i), pi, self.root, &mut top);
+            top.drain_sorted_into(&mut scratch);
+            debug_assert_eq!(scratch.len(), k);
+            for (slot, &(d, j)) in scratch.iter().enumerate() {
+                indices[i * k + slot] = j;
+                dists[i * k + slot] = d;
+            }
+        }
+        Ok(KnnLists { k, indices, dists })
+    }
+
+    /// [`Self::knn_all`] restricted to query rows `[start, end)` — the
+    /// shard unit the coordinator's worker pool distributes.
+    pub fn knn_range(
+        &self,
+        points: &Matrix,
+        k: usize,
+        start: usize,
+        end: usize,
+    ) -> Result<KnnLists> {
+        let n = points.rows();
+        if k == 0 || k >= n {
+            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+        }
+        assert!(start <= end && end <= n);
+        let m = end - start;
+        let mut indices = vec![0u32; m * k];
+        let mut dists = vec![0f32; m * k];
+        let mut top = TopK::new(k);
+        let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
+        for i in start..end {
+            top.reset();
+            self.search(points, points.row(i), i as u32, self.root, &mut top);
+            top.drain_sorted_into(&mut scratch);
+            debug_assert_eq!(scratch.len(), k);
+            let o = i - start;
+            for (slot, &(d, j)) in scratch.iter().enumerate() {
+                indices[o * k + slot] = j;
+                dists[o * k + slot] = d;
+            }
+        }
+        Ok(KnnLists { k, indices, dists })
+    }
+
+    /// All indexed points within squared radius `r2` of `q` (used by
+    /// DBSCAN's region queries), excluding `exclude`.
+    pub fn radius_query(&self, points: &Matrix, q: &[f32], r2: f32, exclude: u32) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.radius_rec(points, q, r2, exclude, self.root, &mut out);
+        out
+    }
+
+    fn radius_rec(
+        &self,
+        points: &Matrix,
+        q: &[f32],
+        r2: f32,
+        exclude: u32,
+        node: u32,
+        out: &mut Vec<u32>,
+    ) {
+        if self.bbox_min_dist(node, q) > r2 {
+            return;
+        }
+        match self.nodes[node as usize] {
+            Node::Leaf { start, end } => {
+                for &idx in &self.perm[start as usize..end as usize] {
+                    if idx == exclude {
+                        continue;
+                    }
+                    if sq_dist(q, points.row(idx as usize)) <= r2 {
+                        out.push(idx);
+                    }
+                }
+            }
+            Node::Split { left, right, .. } => {
+                self.radius_rec(points, q, r2, exclude, left, out);
+                self.radius_rec(points, q, r2, exclude, right, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+
+    #[test]
+    fn matches_brute_force_distances() {
+        let ds = gaussian_mixture_paper(800, 31);
+        let tree = KdTree::build(&ds.points);
+        let brute = knn_brute(&ds.points, 6).unwrap();
+        let fast = tree.knn_all(&ds.points, 6).unwrap();
+        for i in 0..800 {
+            let a = brute.distances(i);
+            let b = fast.distances(i);
+            for (x, y) in a.iter().zip(b) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_points_handled() {
+        // 100 copies of the same point + 10 distinct ones.
+        let mut data = vec![1.0f32; 200];
+        for i in 0..10 {
+            data.push(i as f32 * 3.0);
+            data.push(-(i as f32));
+        }
+        let m = Matrix::from_vec(data, 110, 2).unwrap();
+        let tree = KdTree::build_with_leaf_size(&m, 4);
+        let knn = tree.knn_all(&m, 3).unwrap();
+        // A duplicated point's neighbors are other duplicates at distance 0.
+        assert_eq!(knn.distances(0), &[0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn radius_query_exact() {
+        let ds = gaussian_mixture_paper(500, 32);
+        let tree = KdTree::build(&ds.points);
+        let q = ds.points.row(17).to_vec();
+        let r2 = 0.5f32;
+        let mut expect: Vec<u32> = (0..500u32)
+            .filter(|&j| j != 17 && sq_dist(&q, ds.points.row(j as usize)) <= r2)
+            .collect();
+        let mut got = tree.radius_query(&ds.points, &q, r2, 17);
+        expect.sort_unstable();
+        got.sort_unstable();
+        assert_eq!(expect, got);
+    }
+
+    #[test]
+    fn small_leaf_sizes_consistent() {
+        let ds = gaussian_mixture_paper(300, 33);
+        let t1 = KdTree::build_with_leaf_size(&ds.points, 1);
+        let t64 = KdTree::build_with_leaf_size(&ds.points, 64);
+        let a = t1.knn_all(&ds.points, 4).unwrap();
+        let b = t64.knn_all(&ds.points, 4).unwrap();
+        for i in 0..300 {
+            for (x, y) in a.distances(i).iter().zip(b.distances(i)) {
+                assert!((x - y).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn query_excludes_requested_index() {
+        let ds = gaussian_mixture_paper(100, 34);
+        let tree = KdTree::build(&ds.points);
+        let res = tree.knn_query(&ds.points, ds.points.row(5), 10, 5);
+        assert!(res.iter().all(|&(_, j)| j != 5));
+        let res_all = tree.knn_query(&ds.points, ds.points.row(5), 10, u32::MAX);
+        assert!(res_all.iter().any(|&(d, j)| j == 5 && d == 0.0));
+    }
+
+    #[test]
+    fn knn_range_matches_knn_all() {
+        let ds = gaussian_mixture_paper(400, 35);
+        let tree = KdTree::build(&ds.points);
+        let all = tree.knn_all(&ds.points, 4).unwrap();
+        let mid = tree.knn_range(&ds.points, 4, 100, 250).unwrap();
+        for i in 0..150 {
+            assert_eq!(all.neighbors(100 + i), mid.neighbors(i));
+        }
+    }
+
+    #[test]
+    fn empty_and_tiny_trees() {
+        let empty = Matrix::zeros(0, 2);
+        let _ = KdTree::build(&empty); // must not panic
+        let one = Matrix::from_vec(vec![1.0, 2.0], 1, 2).unwrap();
+        let t = KdTree::build(&one);
+        let res = t.knn_query(&one, &[0.0, 0.0], 1, u32::MAX);
+        assert_eq!(res.len(), 1);
+    }
+}

@@ -1,0 +1,360 @@
+//! k-nearest-neighbor graph construction.
+//!
+//! TC's step 1 (§2.3) builds the `(t*−1)`-nearest-neighbors subgraph. This
+//! module provides three interchangeable backends:
+//!
+//! * [`knn_brute`] — exact `O(n²·d)`, the baseline and oracle.
+//! * [`kdtree::KdTree`] — exact `O(k·n·log n)` for the low-dimensional
+//!   covariate spaces the paper targets (d ≤ 8 after PCA).
+//! * [`knn_chunked`] — exact, block-tiled queries×references evaluation
+//!   driven through an arbitrary chunk evaluator; this is the entry point
+//!   the PJRT runtime plugs its AOT pairwise-distance executable into, and
+//!   the shape the coordinator shards across workers.
+//!
+//! All backends produce a [`KnnLists`], which [`graph::NeighborGraph`]
+//! symmetrizes into the CSR adjacency TC consumes (Definition 6: the edge
+//! `ij` exists iff `j` is one of `i`'s k nearest **or** `i` one of `j`'s).
+
+pub mod graph;
+pub mod kdtree;
+
+use crate::linalg::{sq_dist, Matrix};
+use crate::{Error, Result};
+
+/// Directed k-NN lists: for each of `n` query points, its `k` nearest
+/// neighbors (by squared Euclidean distance), self excluded, ascending.
+#[derive(Clone, Debug)]
+pub struct KnnLists {
+    /// Neighbors per point.
+    pub k: usize,
+    /// `n × k` neighbor indices, row-major.
+    pub indices: Vec<u32>,
+    /// `n × k` squared distances, row-major, ascending per row.
+    pub dists: Vec<f32>,
+}
+
+impl KnnLists {
+    /// Number of query points.
+    pub fn len(&self) -> usize {
+        if self.k == 0 { 0 } else { self.indices.len() / self.k }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Neighbor indices of point `i`.
+    pub fn neighbors(&self, i: usize) -> &[u32] {
+        &self.indices[i * self.k..(i + 1) * self.k]
+    }
+
+    /// Squared distances of point `i`'s neighbor list.
+    pub fn distances(&self, i: usize) -> &[f32] {
+        &self.dists[i * self.k..(i + 1) * self.k]
+    }
+}
+
+/// A bounded max-heap used to keep the k smallest distances seen so far.
+/// Stored as a binary heap over (dist, idx) with the *largest* at the root
+/// so it can be evicted in O(log k).
+#[derive(Clone, Debug)]
+pub struct TopK {
+    k: usize,
+    heap: Vec<(f32, u32)>,
+}
+
+impl TopK {
+    /// New collector for the `k` smallest entries.
+    pub fn new(k: usize) -> Self {
+        Self { k, heap: Vec::with_capacity(k) }
+    }
+
+    /// The `k` this collector was built for.
+    pub fn capacity(&self) -> usize {
+        self.k
+    }
+
+    /// Clear for reuse (keeps the allocation) — the kd-tree batch query
+    /// path calls this once per point instead of reallocating.
+    pub fn reset(&mut self) {
+        self.heap.clear();
+    }
+
+    /// Drain into `out` sorted ascending (ties by index), reusing both
+    /// buffers. Leaves `self` empty.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<(f32, u32)>) {
+        out.clear();
+        out.extend_from_slice(&self.heap);
+        self.heap.clear();
+        out.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+    }
+
+    /// Current worst (largest) kept distance, or +inf while under-full.
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        if self.heap.len() < self.k { f32::INFINITY } else { self.heap[0].0 }
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, d: f32, idx: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push((d, idx));
+            let mut i = self.heap.len() - 1;
+            while i > 0 {
+                let parent = (i - 1) / 2;
+                if self.heap[parent].0 < self.heap[i].0 {
+                    self.heap.swap(parent, i);
+                    i = parent;
+                } else {
+                    break;
+                }
+            }
+        } else if d < self.heap[0].0 {
+            self.heap[0] = (d, idx);
+            // Sift down.
+            let mut i = 0;
+            loop {
+                let (l, r) = (2 * i + 1, 2 * i + 2);
+                let mut largest = i;
+                if l < self.heap.len() && self.heap[l].0 > self.heap[largest].0 {
+                    largest = l;
+                }
+                if r < self.heap.len() && self.heap[r].0 > self.heap[largest].0 {
+                    largest = r;
+                }
+                if largest == i {
+                    break;
+                }
+                self.heap.swap(i, largest);
+                i = largest;
+            }
+        }
+    }
+
+    /// Drain into `(dist, idx)` pairs sorted ascending by distance
+    /// (ties broken by index for determinism).
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.heap
+            .sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        self.heap
+    }
+}
+
+/// Exact brute-force k-NN: the `O(n²)` oracle used for tests and as the
+/// baseline in the complexity benches.
+pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
+    let n = points.rows();
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    let mut indices = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    for i in 0..n {
+        let mut top = TopK::new(k);
+        let qi = points.row(i);
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let d = sq_dist(qi, points.row(j));
+            if d < top.bound() {
+                top.push(d, j as u32);
+            }
+        }
+        for (slot, (d, j)) in top.into_sorted().into_iter().enumerate() {
+            indices[i * k + slot] = j;
+            dists[i * k + slot] = d;
+        }
+    }
+    Ok(KnnLists { k, indices, dists })
+}
+
+/// A chunk evaluator: given a block of query rows (global offset `q0`) and
+/// the full point set, fill per-query [`TopK`] collectors. The PJRT
+/// runtime implements this with the AOT pairwise+top-k executable; the
+/// native implementation tiles `pairwise_sq_dists`.
+pub trait ChunkEvaluator {
+    /// Evaluate queries `[q0, q0+nq)` against references `[r0, r0+nr)`,
+    /// updating `tops[q]` for each local query index `q`.
+    fn eval_block(
+        &self,
+        points: &Matrix,
+        q0: usize,
+        nq: usize,
+        r0: usize,
+        nr: usize,
+        tops: &mut [TopK],
+    ) -> Result<()>;
+}
+
+/// Native (pure-Rust) chunk evaluator mirroring the L1 Pallas kernel.
+pub struct NativeChunks {
+    /// Reference-block edge length.
+    pub block: usize,
+}
+
+impl Default for NativeChunks {
+    fn default() -> Self {
+        Self { block: 1024 }
+    }
+}
+
+impl ChunkEvaluator for NativeChunks {
+    fn eval_block(
+        &self,
+        points: &Matrix,
+        q0: usize,
+        nq: usize,
+        r0: usize,
+        nr: usize,
+        tops: &mut [TopK],
+    ) -> Result<()> {
+        for qi in 0..nq {
+            let q = points.row(q0 + qi);
+            let top = &mut tops[qi];
+            for rj in r0..r0 + nr {
+                if rj == q0 + qi {
+                    continue;
+                }
+                let d = sq_dist(q, points.row(rj));
+                if d < top.bound() {
+                    top.push(d, rj as u32);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Exact k-NN through a [`ChunkEvaluator`]: queries are processed in
+/// blocks of `q_block`, references streamed in blocks of `r_block`. This
+/// is the tiling the AOT artifacts are compiled for and the unit of work
+/// the coordinator distributes.
+pub fn knn_chunked(
+    points: &Matrix,
+    k: usize,
+    q_block: usize,
+    r_block: usize,
+    eval: &dyn ChunkEvaluator,
+) -> Result<KnnLists> {
+    let n = points.rows();
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    let mut indices = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    let mut q0 = 0;
+    while q0 < n {
+        let nq = q_block.min(n - q0);
+        let mut tops: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+        let mut r0 = 0;
+        while r0 < n {
+            let nr = r_block.min(n - r0);
+            eval.eval_block(points, q0, nq, r0, nr, &mut tops)?;
+            r0 += nr;
+        }
+        for (qi, top) in tops.into_iter().enumerate() {
+            let i = q0 + qi;
+            for (slot, (d, j)) in top.into_sorted().into_iter().enumerate() {
+                indices[i * k + slot] = j;
+                dists[i * k + slot] = d;
+            }
+        }
+        q0 += nq;
+    }
+    Ok(KnnLists { k, indices, dists })
+}
+
+/// Pick the best exact backend for the given workload: kd-tree for low
+/// dimension, chunked brute force otherwise.
+pub fn knn_auto(points: &Matrix, k: usize) -> Result<KnnLists> {
+    if points.cols() <= 12 && points.rows() > 256 {
+        kdtree::KdTree::build(points).knn_all(points, k)
+    } else {
+        knn_chunked(points, k, 256, 1024, &NativeChunks::default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(3);
+        for (d, i) in [(5.0, 0), (1.0, 1), (4.0, 2), (0.5, 3), (9.0, 4), (2.0, 5)] {
+            t.push(d, i);
+        }
+        let out = t.into_sorted();
+        assert_eq!(out.iter().map(|x| x.1).collect::<Vec<_>>(), vec![3, 1, 5]);
+        assert!(out.windows(2).all(|w| w[0].0 <= w[1].0));
+    }
+
+    #[test]
+    fn topk_underfull() {
+        let mut t = TopK::new(5);
+        t.push(2.0, 7);
+        t.push(1.0, 3);
+        let out = t.into_sorted();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].1, 3);
+    }
+
+    #[test]
+    fn brute_small_known() {
+        // Points on a line: 0, 1, 3, 7.
+        let m = Matrix::from_vec(vec![0.0, 1.0, 3.0, 7.0], 4, 1).unwrap();
+        let knn = knn_brute(&m, 2).unwrap();
+        assert_eq!(knn.neighbors(0), &[1, 2]); // d²=1, 9
+        assert_eq!(knn.neighbors(1), &[0, 2]); // d²=1, 4
+        assert_eq!(knn.neighbors(2), &[1, 0]); // d²=4, 9 (point 3 is d²=16)
+        assert_eq!(knn.neighbors(3), &[2, 1]); // d²=16, 36
+    }
+
+    #[test]
+    fn brute_rejects_bad_k() {
+        let m = Matrix::zeros(4, 2);
+        assert!(knn_brute(&m, 0).is_err());
+        assert!(knn_brute(&m, 4).is_err());
+    }
+
+    #[test]
+    fn chunked_matches_brute() {
+        let ds = gaussian_mixture_paper(300, 21);
+        let a = knn_brute(&ds.points, 5).unwrap();
+        let b = knn_chunked(&ds.points, 5, 64, 128, &NativeChunks::default()).unwrap();
+        assert_eq!(a.indices, b.indices);
+        for (x, y) in a.dists.iter().zip(&b.dists) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn auto_matches_brute() {
+        let ds = gaussian_mixture_paper(500, 22);
+        let a = knn_brute(&ds.points, 3).unwrap();
+        let b = knn_auto(&ds.points, 3).unwrap();
+        // kd-tree may order equal distances differently; compare dists.
+        for i in 0..ds.len() {
+            let da = a.distances(i);
+            let db = b.distances(i);
+            for (x, y) in da.iter().zip(db) {
+                assert!((x - y).abs() < 1e-4, "row {i}: {da:?} vs {db:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rows_sorted_ascending() {
+        let ds = gaussian_mixture_paper(200, 23);
+        let knn = knn_auto(&ds.points, 4).unwrap();
+        for i in 0..200 {
+            let d = knn.distances(i);
+            assert!(d.windows(2).all(|w| w[0] <= w[1]), "row {i}: {d:?}");
+            assert!(!knn.neighbors(i).contains(&(i as u32)), "self in row {i}");
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! # ihtc — Iterative Hybridized Threshold Clustering for Massive Data
+//!
+//! A production-grade reproduction of *Hybridized Threshold Clustering for
+//! Massive Data* (Luo, Annakula, Kannamareddy, Sekhon, Hsu, Higgins; stat.ML
+//! 2019) as a three-layer Rust + JAX + Pallas data-pipeline framework.
+//!
+//! The paper's contributions, all implemented here:
+//!
+//! * [`tc`] — **threshold clustering** (TC), a 4-approximation to the
+//!   bottleneck threshold partitioning problem: every cluster has at least
+//!   `t*` units and the maximum within-cluster dissimilarity is within a
+//!   factor 4 of optimal (Higgins et al. 2016).
+//! * [`itis`] — **iterated threshold instance selection**: repeated TC +
+//!   prototype (centroid) collapse, reducing `n` by a factor `(t*)^m`.
+//! * [`hybrid`] — **IHTC**: ITIS as a pre-processing step for a
+//!   conventional clustering algorithm ([`cluster::kmeans`],
+//!   [`cluster::hac`], [`cluster::dbscan`]) followed by "backing out" the
+//!   prototype labels onto all `n` original units.
+//!
+//! Everything on the request path is Rust. The numeric hot-spot (tiled
+//! pairwise distances feeding k-NN construction and k-means assignment) is
+//! authored in JAX + Pallas (`python/compile/`), AOT-lowered to HLO text,
+//! and executed through the PJRT CPU client by [`runtime`]. The
+//! [`coordinator`] module provides the streaming orchestrator (sharding,
+//! bounded-channel backpressure, work-stealing workers) that drives the
+//! whole pipeline over large datasets.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use ihtc::data::synth::gaussian_mixture_paper;
+//! use ihtc::hybrid::{Ihtc, FinalClusterer};
+//!
+//! let ds = gaussian_mixture_paper(10_000, 42);
+//! let result = Ihtc::new(2, 3, FinalClusterer::KMeans { k: 3, restarts: 4 })
+//!     .run(&ds.points)
+//!     .unwrap();
+//! assert!(result.assignments.len() == 10_000);
+//! ```
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod hybrid;
+pub mod itis;
+pub mod knn;
+pub mod linalg;
+pub mod memtrack;
+pub mod metrics;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tc;
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    #[error("dataset error: {0}")]
+    Data(String),
+    #[error("config error: {0}")]
+    Config(String),
+    #[error("runtime (PJRT) error: {0}")]
+    Runtime(String),
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+/// Bail out with [`Error::InvalidArgument`].
+#[macro_export]
+macro_rules! invalid {
+    ($($arg:tt)*) => {
+        return Err($crate::Error::InvalidArgument(format!($($arg)*)))
+    };
+}

@@ -1,0 +1,353 @@
+//! Dense linear-algebra substrate: row-major `f32` matrices, distance
+//! kernels, and summary statistics.
+//!
+//! Every clustering algorithm in this crate operates on a [`Matrix`] of
+//! `n` rows (units) × `d` columns (covariates). Distances are squared
+//! Euclidean unless stated otherwise, matching the paper (§2: "We use
+//! Euclidean distance to measure dissimilarity").
+
+pub mod pca;
+
+use crate::{Error, Result};
+
+/// A dense, row-major matrix of `f32` values.
+///
+/// Row `i` is the covariate vector of unit `i`. The layout is chosen so a
+/// row is a contiguous `&[f32]`, which is what the distance kernels, the
+/// PJRT tile packers, and the CSV writer all want.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Matrix {
+    /// Create a matrix from a flat row-major buffer.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer has {} elements, expected {rows}x{cols}={}",
+                data.len(),
+                rows * cols
+            )));
+        }
+        Ok(Self { data, rows, cols })
+    }
+
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Number of rows (units).
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns (features).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row access.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Gather a subset of rows into a new matrix.
+    pub fn select_rows(&self, idx: &[usize]) -> Matrix {
+        let mut out = Matrix::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Vertical slice `[start, end)` of rows (copied).
+    pub fn slice_rows(&self, start: usize, end: usize) -> Matrix {
+        assert!(start <= end && end <= self.rows);
+        Matrix {
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+            rows: end - start,
+            cols: self.cols,
+        }
+    }
+
+    /// Per-column mean.
+    pub fn col_means(&self) -> Vec<f64> {
+        let mut means = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for (m, &v) in means.iter_mut().zip(self.row(i)) {
+                *m += v as f64;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        for m in &mut means {
+            *m /= n;
+        }
+        means
+    }
+
+    /// Per-column (population) standard deviation.
+    pub fn col_stds(&self) -> Vec<f64> {
+        let means = self.col_means();
+        let mut vars = vec![0.0f64; self.cols];
+        for i in 0..self.rows {
+            for ((v, &m), &x) in vars.iter_mut().zip(&means).zip(self.row(i)) {
+                let d = x as f64 - m;
+                *v += d * d;
+            }
+        }
+        let n = self.rows.max(1) as f64;
+        vars.iter().map(|v| (v / n).sqrt()).collect()
+    }
+
+    /// The grand centroid (mean row).
+    pub fn centroid(&self) -> Vec<f32> {
+        self.col_means().iter().map(|&m| m as f32).collect()
+    }
+}
+
+/// Squared Euclidean distance between two feature vectors.
+///
+/// Unrolled-by-4 accumulation: this is the innermost loop of the whole
+/// system (k-NN graph construction, k-means assignment, HAC linkage), so
+/// it is kept branch-free and auto-vectorizable.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    // Fast paths for the post-PCA dimensionalities the paper uses (§5:
+    // d ∈ 2..7). The generic unrolled loop below costs a division and
+    // two loop setups that dominate at d = 2.
+    if n == 2 {
+        let d0 = a[0] - b[0];
+        let d1 = a[1] - b[1];
+        return d0 * d0 + d1 * d1;
+    }
+    if n == 3 {
+        let d0 = a[0] - b[0];
+        let d1 = a[1] - b[1];
+        let d2 = a[2] - b[2];
+        return d0 * d0 + d1 * d1 + d2 * d2;
+    }
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        let d0 = a[i] - b[i];
+        let d1 = a[i + 1] - b[i + 1];
+        let d2 = a[i + 2] - b[i + 2];
+        let d3 = a[i + 3] - b[i + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    sq_dist(a, b).sqrt()
+}
+
+/// Squared L2 norm.
+#[inline]
+pub fn sq_norm(a: &[f32]) -> f32 {
+    a.iter().map(|&x| x * x).sum()
+}
+
+/// `out[i][j] = ||q_i - r_j||²` for a block of queries × references —
+/// the pure-Rust mirror of the L1 Pallas kernel (`pairwise.py`), used as
+/// the native fallback path and as the oracle in cross-validation tests
+/// against the PJRT artifacts.
+///
+/// Uses the same `‖q‖² + ‖r‖² − 2 q·r` decomposition as the kernel so the
+/// two paths agree bit-for-bit up to standard float reassociation.
+pub fn pairwise_sq_dists(queries: &Matrix, refs: &Matrix, out: &mut [f32]) {
+    assert_eq!(queries.cols(), refs.cols());
+    assert_eq!(out.len(), queries.rows() * refs.rows());
+    let (nq, nr) = (queries.rows(), refs.rows());
+    let rnorms: Vec<f32> = (0..nr).map(|j| sq_norm(refs.row(j))).collect();
+    for i in 0..nq {
+        let q = queries.row(i);
+        let qn = sq_norm(q);
+        let row = &mut out[i * nr..(i + 1) * nr];
+        for (j, slot) in row.iter_mut().enumerate() {
+            let r = refs.row(j);
+            let mut dot = 0.0f32;
+            for (x, y) in q.iter().zip(r) {
+                dot += x * y;
+            }
+            // Clamp: catastrophic cancellation can produce tiny negatives.
+            *slot = (qn + rnorms[j] - 2.0 * dot).max(0.0);
+        }
+    }
+}
+
+/// Standardize columns to zero mean / unit variance in place.
+/// Columns with zero variance are left centered only.
+pub fn standardize(m: &mut Matrix) {
+    let means = m.col_means();
+    let stds = m.col_stds();
+    let cols = m.cols();
+    for i in 0..m.rows() {
+        let row = m.row_mut(i);
+        for j in 0..cols {
+            let s = stds[j];
+            let centered = row[j] as f64 - means[j];
+            row[j] = if s > 1e-12 { (centered / s) as f32 } else { centered as f32 };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f32, b: f32, eps: f32) -> bool {
+        (a - b).abs() <= eps * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn matrix_roundtrip() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], 2, 3).unwrap();
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+        assert_eq!(m.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn matrix_shape_error() {
+        assert!(Matrix::from_vec(vec![1.0; 5], 2, 3).is_err());
+    }
+
+    #[test]
+    fn sq_dist_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.7).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32 * 0.3).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum();
+        assert!(approx(sq_dist(&a, &b), naive, 1e-6));
+    }
+
+    #[test]
+    fn sq_dist_zero_on_self() {
+        let a = [1.5f32, -2.0, 3.25];
+        assert_eq!(sq_dist(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn pairwise_matches_pointwise() {
+        let q = Matrix::from_vec(vec![0.0, 0.0, 1.0, 1.0, -1.0, 2.0], 3, 2).unwrap();
+        let r = Matrix::from_vec(vec![1.0, 0.0, 0.0, 3.0], 2, 2).unwrap();
+        let mut out = vec![0.0f32; 6];
+        pairwise_sq_dists(&q, &r, &mut out);
+        for i in 0..3 {
+            for j in 0..2 {
+                let expect = sq_dist(q.row(i), r.row(j));
+                assert!(approx(out[i * 2 + j], expect, 1e-5), "{i},{j}");
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_never_negative() {
+        // Points far from origin trigger cancellation in ‖q‖²+‖r‖²−2qr.
+        let q = Matrix::from_vec(vec![1e4, 1e4], 1, 2).unwrap();
+        let r = Matrix::from_vec(vec![1e4, 1e4], 1, 2).unwrap();
+        let mut out = vec![0.0f32; 1];
+        pairwise_sq_dists(&q, &r, &mut out);
+        assert!(out[0] >= 0.0);
+    }
+
+    #[test]
+    fn col_stats() {
+        let m = Matrix::from_vec(vec![1.0, 10.0, 3.0, 20.0], 2, 2).unwrap();
+        let means = m.col_means();
+        assert_eq!(means, vec![2.0, 15.0]);
+        let stds = m.col_stds();
+        assert!((stds[0] - 1.0).abs() < 1e-9);
+        assert!((stds[1] - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn standardize_gives_unit_stats() {
+        let mut m = Matrix::from_vec(
+            (0..40).map(|i| (i as f32) * 1.7 + 3.0).collect(),
+            20,
+            2,
+        )
+        .unwrap();
+        standardize(&mut m);
+        let means = m.col_means();
+        let stds = m.col_stds();
+        for j in 0..2 {
+            assert!(means[j].abs() < 1e-6);
+            assert!((stds[j] - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn standardize_constant_column() {
+        let mut m = Matrix::from_vec(vec![5.0, 1.0, 5.0, 2.0, 5.0, 3.0], 3, 2).unwrap();
+        standardize(&mut m);
+        for i in 0..3 {
+            assert_eq!(m.get(i, 0), 0.0); // centered, not divided
+        }
+    }
+
+    #[test]
+    fn select_and_slice_rows() {
+        let m = Matrix::from_vec((0..12).map(|x| x as f32).collect(), 4, 3).unwrap();
+        let s = m.select_rows(&[3, 0]);
+        assert_eq!(s.row(0), &[9.0, 10.0, 11.0]);
+        assert_eq!(s.row(1), &[0.0, 1.0, 2.0]);
+        let sl = m.slice_rows(1, 3);
+        assert_eq!(sl.rows(), 2);
+        assert_eq!(sl.row(0), &[3.0, 4.0, 5.0]);
+    }
+}

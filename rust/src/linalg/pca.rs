@@ -1,0 +1,242 @@
+//! Principal component analysis.
+//!
+//! §5 of the paper uses PCA for feature selection on every real dataset
+//! before clustering. Covariate dimensionality there is 5–7, so a dense
+//! cyclic Jacobi eigensolver on the covariance matrix is exact, fast, and
+//! dependency-free.
+
+use super::Matrix;
+use crate::{Error, Result};
+
+/// A fitted PCA transform.
+#[derive(Clone, Debug)]
+pub struct Pca {
+    /// Column means of the fitted data (length `d`).
+    pub means: Vec<f64>,
+    /// Eigenvalues (variances) sorted descending (length `d`).
+    pub eigenvalues: Vec<f64>,
+    /// Principal axes, row `c` is the `c`-th component (shape `d × d`,
+    /// row-major, sorted to match `eigenvalues`).
+    pub components: Vec<Vec<f64>>,
+}
+
+impl Pca {
+    /// Fit PCA on `data` (covariance of centered columns, Jacobi
+    /// eigendecomposition).
+    pub fn fit(data: &Matrix) -> Result<Pca> {
+        let (n, d) = (data.rows(), data.cols());
+        if n < 2 {
+            return Err(Error::InvalidArgument("PCA needs at least 2 rows".into()));
+        }
+        let means = data.col_means();
+        // Covariance matrix (d × d), f64 accumulation.
+        let mut cov = vec![vec![0.0f64; d]; d];
+        for i in 0..n {
+            let row = data.row(i);
+            for a in 0..d {
+                let da = row[a] as f64 - means[a];
+                for b in a..d {
+                    cov[a][b] += da * (row[b] as f64 - means[b]);
+                }
+            }
+        }
+        let denom = (n - 1) as f64;
+        for a in 0..d {
+            for b in a..d {
+                cov[a][b] /= denom;
+                cov[b][a] = cov[a][b];
+            }
+        }
+        let (mut eigvals, mut eigvecs) = jacobi_eigen(&mut cov, 100, 1e-12);
+        // Sort descending by eigenvalue.
+        let mut order: Vec<usize> = (0..d).collect();
+        order.sort_by(|&a, &b| eigvals[b].partial_cmp(&eigvals[a]).unwrap());
+        eigvals = order.iter().map(|&i| eigvals[i]).collect();
+        eigvecs = order.iter().map(|&i| eigvecs[i].clone()).collect();
+        Ok(Pca { means, eigenvalues: eigvals, components: eigvecs })
+    }
+
+    /// Project `data` onto the top `k` components.
+    pub fn transform(&self, data: &Matrix, k: usize) -> Result<Matrix> {
+        let d = self.means.len();
+        if data.cols() != d {
+            return Err(Error::Shape(format!(
+                "PCA fitted on d={d}, got d={}",
+                data.cols()
+            )));
+        }
+        let k = k.min(d);
+        let mut out = Matrix::zeros(data.rows(), k);
+        for i in 0..data.rows() {
+            let row = data.row(i);
+            for c in 0..k {
+                let mut acc = 0.0f64;
+                for j in 0..d {
+                    acc += (row[j] as f64 - self.means[j]) * self.components[c][j];
+                }
+                out.set(i, c, acc as f32);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Smallest `k` whose cumulative explained-variance ratio ≥ `frac`.
+    pub fn components_for_variance(&self, frac: f64) -> usize {
+        let total: f64 = self.eigenvalues.iter().map(|v| v.max(0.0)).sum();
+        if total <= 0.0 {
+            return self.eigenvalues.len();
+        }
+        let mut cum = 0.0;
+        for (i, v) in self.eigenvalues.iter().enumerate() {
+            cum += v.max(0.0);
+            if cum / total >= frac {
+                return i + 1;
+            }
+        }
+        self.eigenvalues.len()
+    }
+}
+
+/// Cyclic Jacobi eigendecomposition of a symmetric matrix (in place).
+/// Returns `(eigenvalues, eigenvectors)` where eigenvector `i` is a row.
+fn jacobi_eigen(a: &mut [Vec<f64>], max_sweeps: usize, tol: f64) -> (Vec<f64>, Vec<Vec<f64>>) {
+    let d = a.len();
+    // v starts as identity; columns accumulate the rotations.
+    let mut v = vec![vec![0.0f64; d]; d];
+    for (i, row) in v.iter_mut().enumerate() {
+        row[i] = 1.0;
+    }
+    for _ in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0;
+        for p in 0..d {
+            for q in (p + 1)..d {
+                off += a[p][q] * a[p][q];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                if a[p][q].abs() <= 1e-300 {
+                    continue;
+                }
+                let theta = (a[q][q] - a[p][p]) / (2.0 * a[p][q]);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                for k in 0..d {
+                    let akp = a[k][p];
+                    let akq = a[k][q];
+                    a[k][p] = c * akp - s * akq;
+                    a[k][q] = s * akp + c * akq;
+                }
+                for k in 0..d {
+                    let apk = a[p][k];
+                    let aqk = a[q][k];
+                    a[p][k] = c * apk - s * aqk;
+                    a[q][k] = s * apk + c * aqk;
+                }
+                for row in v.iter_mut() {
+                    let vp = row[p];
+                    let vq = row[q];
+                    row[p] = c * vp - s * vq;
+                    row[q] = s * vp + c * vq;
+                }
+            }
+        }
+    }
+    let eigvals: Vec<f64> = (0..d).map(|i| a[i][i]).collect();
+    // Transpose v: eigenvector i (for eigenvalue i) as a row.
+    let eigvecs: Vec<Vec<f64>> = (0..d).map(|i| (0..d).map(|j| v[j][i]).collect()).collect();
+    (eigvals, eigvecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256;
+
+    #[test]
+    fn identity_covariance() {
+        // Isotropic data → eigenvalues all ≈ 1 after standardization.
+        let mut r = Xoshiro256::seed_from_u64(11);
+        let n = 20_000;
+        let data: Vec<f32> = (0..n * 3).map(|_| r.next_gaussian() as f32).collect();
+        let m = Matrix::from_vec(data, n, 3).unwrap();
+        let pca = Pca::fit(&m).unwrap();
+        for &v in &pca.eigenvalues {
+            assert!((v - 1.0).abs() < 0.05, "eig={v}");
+        }
+    }
+
+    #[test]
+    fn recovers_dominant_direction() {
+        // Data along (1, 1)/√2 with small noise: first component ≈ that axis.
+        let mut r = Xoshiro256::seed_from_u64(12);
+        let n = 5_000;
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let t = r.next_gaussian() * 5.0;
+            let e1 = r.next_gaussian() * 0.1;
+            let e2 = r.next_gaussian() * 0.1;
+            data.push((t + e1) as f32);
+            data.push((t + e2) as f32);
+        }
+        let m = Matrix::from_vec(data, n, 2).unwrap();
+        let pca = Pca::fit(&m).unwrap();
+        assert!(pca.eigenvalues[0] > 20.0 * pca.eigenvalues[1]);
+        let c = &pca.components[0];
+        let inv_sqrt2 = std::f64::consts::FRAC_1_SQRT_2;
+        assert!((c[0].abs() - inv_sqrt2).abs() < 0.02, "{c:?}");
+        assert!((c[1].abs() - inv_sqrt2).abs() < 0.02, "{c:?}");
+    }
+
+    #[test]
+    fn transform_decorrelates() {
+        let mut r = Xoshiro256::seed_from_u64(13);
+        let n = 4_000;
+        let mut data = Vec::with_capacity(n * 2);
+        for _ in 0..n {
+            let x = r.next_gaussian();
+            let y = 0.8 * x + 0.2 * r.next_gaussian();
+            data.push(x as f32);
+            data.push(y as f32);
+        }
+        let m = Matrix::from_vec(data, n, 2).unwrap();
+        let pca = Pca::fit(&m).unwrap();
+        let t = pca.transform(&m, 2).unwrap();
+        // Empirical covariance of the projected data should be ~diagonal.
+        let mut cov01 = 0.0f64;
+        for i in 0..n {
+            cov01 += t.get(i, 0) as f64 * t.get(i, 1) as f64;
+        }
+        cov01 /= (n - 1) as f64;
+        assert!(cov01.abs() < 0.02, "cov01={cov01}");
+    }
+
+    #[test]
+    fn explained_variance_selection() {
+        let mut r = Xoshiro256::seed_from_u64(14);
+        let n = 3_000;
+        let mut data = Vec::with_capacity(n * 3);
+        for _ in 0..n {
+            data.push((r.next_gaussian() * 10.0) as f32);
+            data.push(r.next_gaussian() as f32);
+            data.push((r.next_gaussian() * 0.01) as f32);
+        }
+        let m = Matrix::from_vec(data, n, 3).unwrap();
+        let pca = Pca::fit(&m).unwrap();
+        assert_eq!(pca.components_for_variance(0.95), 1);
+        assert_eq!(pca.components_for_variance(0.9999), 2);
+    }
+
+    #[test]
+    fn transform_shape_error() {
+        let m = Matrix::from_vec(vec![0.0; 8], 4, 2).unwrap();
+        let pca = Pca::fit(&m).unwrap();
+        let bad = Matrix::from_vec(vec![0.0; 9], 3, 3).unwrap();
+        assert!(pca.transform(&bad, 2).is_err());
+    }
+}

@@ -1,0 +1,298 @@
+//! `ihtc` — launcher for the IHTC data-pipeline framework.
+//!
+//! Subcommands:
+//!
+//! * `run --config cfg.json` — execute a full pipeline from a config.
+//! * `repro --exp table1 [--scale default] [--out-dir results]` —
+//!   regenerate a paper table/figure (or `--all`).
+//! * `ablation` — seed-order × prototype-kind ablation (DESIGN.md §Perf).
+//! * `generate --dataset gmm --n 10000 --out data.csv` — emit datasets.
+//! * `check-artifacts` — load the PJRT artifacts and run a smoke block.
+//! * `list` — list reproducible experiments.
+
+use ihtc::config::PipelineConfig;
+use ihtc::coordinator::driver;
+use ihtc::data::{csv, synth};
+use ihtc::report::Table;
+use ihtc::sim::{self, Scale};
+use ihtc::Result;
+use std::path::PathBuf;
+
+// Peak-memory accounting for the paper's "Memory (Mb)" columns.
+#[global_allocator]
+static ALLOC: ihtc::memtrack::CountingAllocator = ihtc::memtrack::CountingAllocator;
+
+/// Minimal flag parser: `--key value` pairs plus positional words.
+struct Args {
+    #[allow(dead_code)]
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: impl Iterator<Item = String>) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut argv = argv.peekable();
+        while let Some(arg) = argv.next() {
+            if let Some(key) = arg.strip_prefix("--") {
+                let value = match argv.peek() {
+                    Some(v) if !v.starts_with("--") => argv.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), value);
+            } else {
+                positional.push(arg);
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ihtc::Error::InvalidArgument(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                ihtc::Error::InvalidArgument(format!("--{key} expects an integer, got '{v}'"))
+            }),
+        }
+    }
+}
+
+const USAGE: &str = "\
+ihtc — Iterative Hybridized Threshold Clustering (Luo et al. 2019 reproduction)
+
+USAGE:
+  ihtc run --config cfg.json            run a pipeline from a JSON config
+  ihtc run [--n 100000] [--t 2] [--m 2] [--k 3] [--backend native|pjrt]
+           [--workers N] [--clusterer kmeans|hac|dbscan] [--seed S]
+                                        run an inline-configured pipeline
+  ihtc repro --exp table1 [--scale smoke|default|full] [--seed S]
+             [--out-dir results]        regenerate one paper table/figure
+  ihtc repro --all [...]                regenerate every table
+  ihtc ablation [--seed S]              seed-order × prototype ablation
+  ihtc itis-profile [--n 100000] [--t 2]  ITIS reduction profile
+  ihtc generate --dataset gmm|<table3-name> --n N --out file.csv
+  ihtc check-artifacts [--dir artifacts]  smoke-test the PJRT artifacts
+  ihtc list                             list experiments
+";
+
+fn main() {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_default();
+    let args = Args::parse(argv);
+    let code = match cmd.as_str() {
+        "run" => run_cmd(&args),
+        "repro" => repro_cmd(&args),
+        "ablation" => ablation_cmd(&args),
+        "itis-profile" => itis_profile_cmd(&args),
+        "generate" => generate_cmd(&args),
+        "check-artifacts" => check_artifacts_cmd(&args),
+        "list" => {
+            for e in sim::EXPERIMENTS {
+                println!("{:<8} {}", e.id, e.description);
+            }
+            Ok(())
+        }
+        "" | "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(ihtc::Error::InvalidArgument(format!(
+            "unknown command '{other}'\n{USAGE}"
+        ))),
+    };
+    if let Err(e) = code {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run_cmd(args: &Args) -> Result<()> {
+    let cfg = match args.get("config") {
+        Some(path) => PipelineConfig::from_file(path)?,
+        None => {
+            let mut cfg = PipelineConfig::default();
+            cfg.source = ihtc::config::DataSource::PaperMixture {
+                n: args.get_usize("n", 100_000)?,
+            };
+            if let Some(name) = args.get("dataset") {
+                if name != "gmm" {
+                    cfg.source = ihtc::config::DataSource::Analogue {
+                        name: name.to_string(),
+                        scale_div: args.get_usize("scale-div", 1)?,
+                    };
+                    cfg.standardize = true;
+                }
+            }
+            cfg.threshold = args.get_usize("t", 2)?;
+            cfg.iterations = args.get_usize("m", 2)?;
+            cfg.seed = args.get_u64("seed", 42)?;
+            cfg.workers = args.get_usize("workers", 0)?;
+            let k = args.get_usize("k", 3)?;
+            cfg.clusterer = match args.get("clusterer").unwrap_or("kmeans") {
+                "kmeans" => ihtc::hybrid::FinalClusterer::KMeans { k, restarts: 4 },
+                "hac" => ihtc::hybrid::FinalClusterer::Hac {
+                    k,
+                    linkage: ihtc::cluster::hac::Linkage::Ward,
+                },
+                "dbscan" => ihtc::hybrid::FinalClusterer::Dbscan {
+                    eps: args
+                        .get("eps")
+                        .map(|v| v.parse().unwrap_or(0.5))
+                        .unwrap_or(0.5),
+                    min_pts: args.get_usize("min-pts", 4)?,
+                },
+                other => {
+                    return Err(ihtc::Error::InvalidArgument(format!(
+                        "unknown clusterer '{other}'"
+                    )))
+                }
+            };
+            cfg.backend = match args.get("backend").unwrap_or("native") {
+                "native" => ihtc::config::Backend::Native,
+                "pjrt" => ihtc::config::Backend::Pjrt,
+                other => {
+                    return Err(ihtc::Error::InvalidArgument(format!(
+                        "unknown backend '{other}'"
+                    )))
+                }
+            };
+            if let Some(out) = args.get("output") {
+                cfg.output = Some(out.to_string());
+            }
+            cfg
+        }
+    };
+    let (_, report) = driver::run(&cfg)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn save_or_print(tables: &[Table], out_dir: Option<&str>, stem: &str) -> Result<()> {
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        if let Some(dir) = out_dir {
+            let dir = PathBuf::from(dir);
+            t.save(&dir, &format!("{stem}_{i}"))?;
+        }
+    }
+    Ok(())
+}
+
+fn repro_cmd(args: &Args) -> Result<()> {
+    let scale = Scale::parse(args.get("scale").unwrap_or("default"))?;
+    let seed = args.get_u64("seed", 42)?;
+    let out_dir = args.get("out-dir");
+    let ids: Vec<&str> = if args.get("all").is_some() {
+        sim::EXPERIMENTS.iter().map(|e| e.id).collect()
+    } else {
+        vec![args.get("exp").ok_or_else(|| {
+            ihtc::Error::InvalidArgument("repro needs --exp <id> or --all".into())
+        })?]
+    };
+    for id in ids {
+        eprintln!("[repro] running {id} at {scale:?} scale…");
+        let t0 = std::time::Instant::now();
+        let tables = sim::run_experiment(id, scale, seed)?;
+        save_or_print(&tables, out_dir, id)?;
+        if let Some(dir) = out_dir {
+            // Emit the paper's figures (SVG) from the sweep series.
+            for (stem, chart) in sim::figures(id, &tables) {
+                let path = PathBuf::from(dir).join(format!("{stem}.svg"));
+                chart.save(&path)?;
+                eprintln!("[repro] wrote {}", path.display());
+            }
+        }
+        eprintln!("[repro] {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn ablation_cmd(args: &Args) -> Result<()> {
+    let seed = args.get_u64("seed", 42)?;
+    let tables = sim::ablation(seed)?;
+    save_or_print(&tables, args.get("out-dir"), "ablation")
+}
+
+fn itis_profile_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 100_000)?;
+    let t = args.get_usize("t", 2)?;
+    let seed = args.get_u64("seed", 42)?;
+    let table = sim::itis_profile(n, t, seed)?;
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn generate_cmd(args: &Args) -> Result<()> {
+    let n = args.get_usize("n", 10_000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| ihtc::Error::InvalidArgument("generate needs --out".into()))?;
+    let name = args.get("dataset").unwrap_or("gmm");
+    let ds = if name == "gmm" {
+        synth::gaussian_mixture_paper(n, seed)
+    } else {
+        let spec = synth::find_spec(name).ok_or_else(|| {
+            ihtc::Error::InvalidArgument(format!("unknown dataset '{name}'"))
+        })?;
+        let div = (spec.instances / n.max(1)).max(1);
+        synth::realistic(spec, div, seed)
+    };
+    csv::write_csv(&ds, out)?;
+    println!("wrote {} rows × {} cols to {out}", ds.len(), ds.dim());
+    Ok(())
+}
+
+fn check_artifacts_cmd(args: &Args) -> Result<()> {
+    let dir = args
+        .get("dir")
+        .map(PathBuf::from)
+        .unwrap_or_else(ihtc::runtime::Engine::default_dir);
+    let engine = ihtc::runtime::Engine::load(&dir)?;
+    println!(
+        "loaded artifacts from {} (tile: q{} r{} k{} | n{} k{} | d{})",
+        dir.display(),
+        engine.tile.knn_q,
+        engine.tile.knn_r,
+        engine.tile.knn_k,
+        engine.tile.km_n,
+        engine.tile.km_k,
+        engine.tile.dim
+    );
+    // Smoke: cross-check one knn pass against the native path.
+    let ds = synth::gaussian_mixture_paper(2_000, 1);
+    let native = ihtc::knn::knn_auto(&ds.points, 3)?;
+    let pjrt = ihtc::knn::knn_chunked(
+        &ds.points,
+        3,
+        engine.tile.knn_q,
+        engine.tile.knn_r,
+        &ihtc::runtime::PjrtChunks { engine: &engine },
+    )?;
+    let mut max_err = 0f32;
+    for i in 0..ds.len() {
+        for (a, b) in native.distances(i).iter().zip(pjrt.distances(i)) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    println!("knn cross-check vs native: max |Δd²| = {max_err:.3e}");
+    if max_err > 1e-2 {
+        return Err(ihtc::Error::Runtime("PJRT/native mismatch".into()));
+    }
+    println!("check-artifacts OK");
+    Ok(())
+}

@@ -1,0 +1,213 @@
+//! External and internal cluster-validity indices beyond the paper's
+//! accuracy/BSS÷TSS pair: adjusted Rand index, normalized mutual
+//! information, and (sampled) silhouette. Used by the extended
+//! evaluation in `ihtc repro` CSVs and the property-test suite.
+
+use super::compact_labels;
+use crate::linalg::{dist, Matrix};
+use crate::rng::Xoshiro256;
+use crate::{Error, Result};
+
+fn contingency(a: &[u32], b: &[u32]) -> (Vec<Vec<f64>>, Vec<f64>, Vec<f64>, f64) {
+    let (a, ka) = compact_labels(a);
+    let (b, kb) = compact_labels(b);
+    let mut table = vec![vec![0.0f64; kb]; ka];
+    for (&x, &y) in a.iter().zip(&b) {
+        table[x as usize][y as usize] += 1.0;
+    }
+    let rows: Vec<f64> = table.iter().map(|r| r.iter().sum()).collect();
+    let cols: Vec<f64> = (0..kb).map(|j| table.iter().map(|r| r[j]).sum()).collect();
+    let n = a.len() as f64;
+    (table, rows, cols, n)
+}
+
+fn choose2(x: f64) -> f64 {
+    x * (x - 1.0) / 2.0
+}
+
+/// Adjusted Rand index between two labelings (1 = identical partitions,
+/// ≈ 0 = chance agreement).
+pub fn adjusted_rand_index(a: &[u32], b: &[u32]) -> Result<f64> {
+    if a.len() != b.len() {
+        return Err(Error::Shape("label vectors differ in length".into()));
+    }
+    if a.is_empty() {
+        return Ok(0.0);
+    }
+    let (table, rows, cols, n) = contingency(a, b);
+    let sum_cells: f64 = table.iter().flatten().map(|&c| choose2(c)).sum();
+    let sum_rows: f64 = rows.iter().map(|&r| choose2(r)).sum();
+    let sum_cols: f64 = cols.iter().map(|&c| choose2(c)).sum();
+    let total = choose2(n);
+    if total == 0.0 {
+        return Ok(0.0);
+    }
+    let expected = sum_rows * sum_cols / total;
+    let max = 0.5 * (sum_rows + sum_cols);
+    if (max - expected).abs() < 1e-12 {
+        return Ok(if (sum_cells - expected).abs() < 1e-12 { 1.0 } else { 0.0 });
+    }
+    Ok((sum_cells - expected) / (max - expected))
+}
+
+/// Normalized mutual information (arithmetic normalization), in [0, 1].
+pub fn normalized_mutual_info(a: &[u32], b: &[u32]) -> Result<f64> {
+    if a.len() != b.len() {
+        return Err(Error::Shape("label vectors differ in length".into()));
+    }
+    if a.is_empty() {
+        return Ok(0.0);
+    }
+    let (table, rows, cols, n) = contingency(a, b);
+    let mut mi = 0.0f64;
+    for (i, row) in table.iter().enumerate() {
+        for (j, &c) in row.iter().enumerate() {
+            if c > 0.0 {
+                mi += (c / n) * ((c * n) / (rows[i] * cols[j])).ln();
+            }
+        }
+    }
+    let h = |margin: &[f64]| -> f64 {
+        margin
+            .iter()
+            .filter(|&&m| m > 0.0)
+            .map(|&m| -(m / n) * (m / n).ln())
+            .sum()
+    };
+    let (ha, hb) = (h(&rows), h(&cols));
+    if ha <= 0.0 && hb <= 0.0 {
+        return Ok(1.0); // both partitions trivial and identical
+    }
+    let denom = 0.5 * (ha + hb);
+    Ok(if denom > 0.0 { (mi / denom).clamp(0.0, 1.0) } else { 0.0 })
+}
+
+/// Mean silhouette coefficient, computed exactly when `n ≤ sample` and
+/// on a seeded subsample otherwise (exact silhouette is O(n²)).
+pub fn silhouette(points: &Matrix, labels: &[u32], sample: usize, seed: u64) -> Result<f64> {
+    if points.rows() != labels.len() {
+        return Err(Error::Shape("points vs labels".into()));
+    }
+    let (labels, k) = compact_labels(labels);
+    if k < 2 {
+        return Ok(0.0);
+    }
+    let n = points.rows();
+    let idx: Vec<usize> = if n > sample {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        rng.sample_indices(n, sample)
+    } else {
+        (0..n).collect()
+    };
+    // Cluster membership restricted to the sample (distances are
+    // computed within the sample — the standard subsampled estimator).
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for &i in &idx {
+        members[labels[i] as usize].push(i);
+    }
+    let mut total = 0.0f64;
+    let mut counted = 0usize;
+    for &i in &idx {
+        let own = labels[i] as usize;
+        if members[own].len() < 2 {
+            continue; // silhouette undefined for singletons
+        }
+        let mut a = 0.0f64;
+        for &j in &members[own] {
+            if j != i {
+                a += dist(points.row(i), points.row(j)) as f64;
+            }
+        }
+        a /= (members[own].len() - 1) as f64;
+        let mut b = f64::INFINITY;
+        for (c, group) in members.iter().enumerate() {
+            if c == own || group.is_empty() {
+                continue;
+            }
+            let mut m = 0.0f64;
+            for &j in group {
+                m += dist(points.row(i), points.row(j)) as f64;
+            }
+            b = b.min(m / group.len() as f64);
+        }
+        if b.is_finite() {
+            total += (b - a) / a.max(b);
+            counted += 1;
+        }
+    }
+    Ok(if counted > 0 { total / counted as f64 } else { 0.0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+
+    #[test]
+    fn ari_identical_and_permuted() {
+        let a = vec![0, 0, 1, 1, 2, 2];
+        assert!((adjusted_rand_index(&a, &a).unwrap() - 1.0).abs() < 1e-12);
+        let p = vec![5, 5, 9, 9, 1, 1]; // same partition, odd labels
+        assert!((adjusted_rand_index(&a, &p).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_near_zero_for_random() {
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(9);
+        let a: Vec<u32> = (0..4000).map(|_| rng.next_below(4) as u32).collect();
+        let b: Vec<u32> = (0..4000).map(|_| rng.next_below(4) as u32).collect();
+        let ari = adjusted_rand_index(&a, &b).unwrap();
+        assert!(ari.abs() < 0.02, "{ari}");
+    }
+
+    #[test]
+    fn ari_disagreement_below_one() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let ari = adjusted_rand_index(&a, &b).unwrap();
+        assert!(ari > 0.0 && ari < 1.0, "{ari}");
+    }
+
+    #[test]
+    fn nmi_bounds_and_extremes() {
+        let a = vec![0, 0, 1, 1];
+        assert!((normalized_mutual_info(&a, &a).unwrap() - 1.0).abs() < 1e-12);
+        let indep = vec![0, 1, 0, 1];
+        let nmi = normalized_mutual_info(&a, &indep).unwrap();
+        assert!(nmi < 0.01, "{nmi}");
+    }
+
+    #[test]
+    fn nmi_invariant_to_relabeling() {
+        let a = vec![0, 0, 1, 2, 2, 1];
+        let b = vec![7, 7, 3, 0, 0, 3];
+        assert!((normalized_mutual_info(&a, &b).unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silhouette_separated_vs_mixed() {
+        let ds = gaussian_mixture_paper(1_000, 10);
+        let truth = ds.labels.clone().unwrap();
+        let good = silhouette(&ds.points, &truth, 500, 1).unwrap();
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(2);
+        let random: Vec<u32> = (0..1_000).map(|_| rng.next_below(3) as u32).collect();
+        let bad = silhouette(&ds.points, &random, 500, 1).unwrap();
+        assert!(good > bad + 0.2, "good={good} bad={bad}");
+        assert!((-1.0..=1.0).contains(&good));
+    }
+
+    #[test]
+    fn silhouette_single_cluster_zero() {
+        let ds = gaussian_mixture_paper(100, 11);
+        let labels = vec![0u32; 100];
+        assert_eq!(silhouette(&ds.points, &labels, 100, 1).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn length_mismatches_rejected() {
+        assert!(adjusted_rand_index(&[0], &[0, 1]).is_err());
+        assert!(normalized_mutual_info(&[0], &[0, 1]).is_err());
+        let m = Matrix::zeros(3, 2);
+        assert!(silhouette(&m, &[0, 1], 10, 1).is_err());
+    }
+}

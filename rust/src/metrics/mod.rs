@@ -1,0 +1,359 @@
+//! Clustering evaluation metrics used by the paper.
+//!
+//! * [`prediction_accuracy`] — §4: fraction of units whose cluster, after
+//!   the optimal cluster↔class matching (Hungarian algorithm on the
+//!   contingency table), equals their true class.
+//! * [`bss_tss`] — §5: between-cluster sum of squares over total sum of
+//!   squares; larger is better.
+//! * [`bottleneck`] — §2.3: maximum within-cluster dissimilarity, the
+//!   objective TC 4-approximates.
+//! * [`min_cluster_size`] — the `(t*)^m` guarantee of IHTC.
+
+pub mod external;
+
+pub use external::{adjusted_rand_index, normalized_mutual_info, silhouette};
+
+use crate::linalg::{sq_dist, Matrix};
+use crate::{Error, Result};
+
+/// Compact arbitrary labels (including sentinels like
+/// [`crate::cluster::NOISE`]) to dense `0..k` ids, preserving first-seen
+/// order. Returns `(compact_labels, k)`.
+pub fn compact_labels(assign: &[u32]) -> (Vec<u32>, usize) {
+    let mut remap = std::collections::HashMap::new();
+    let mut out = Vec::with_capacity(assign.len());
+    for &a in assign {
+        let next = remap.len() as u32;
+        let id = *remap.entry(a).or_insert(next);
+        out.push(id);
+    }
+    (out, remap.len())
+}
+
+/// Count distinct clusters in an assignment vector.
+pub fn num_clusters(assign: &[u32]) -> usize {
+    assign.iter().collect::<std::collections::HashSet<_>>().len()
+}
+
+/// Sizes of each cluster (after label compaction; order = first seen).
+pub fn cluster_sizes(assign: &[u32]) -> Vec<usize> {
+    let (compact, k) = compact_labels(assign);
+    let mut sizes = vec![0usize; k];
+    for &a in &compact {
+        sizes[a as usize] += 1;
+    }
+    sizes
+}
+
+/// Smallest cluster size (0 for empty assignment).
+pub fn min_cluster_size(assign: &[u32]) -> usize {
+    cluster_sizes(assign).into_iter().min().unwrap_or(0)
+}
+
+/// Prediction accuracy under the best one-to-one matching of predicted
+/// clusters to true classes (Hungarian algorithm, maximizing agreement).
+///
+/// When the number of predicted clusters differs from the number of
+/// classes the contingency table is padded with zeros, so surplus
+/// clusters simply contribute no matched units.
+pub fn prediction_accuracy(truth: &[u32], pred: &[u32]) -> Result<f64> {
+    if truth.len() != pred.len() {
+        return Err(Error::Shape(format!("{} truths vs {} preds", truth.len(), pred.len())));
+    }
+    if truth.is_empty() {
+        return Ok(0.0);
+    }
+    let (truth, kt) = compact_labels(truth);
+    let (pred, kp) = compact_labels(pred);
+    let k = kt.max(kp);
+    // Contingency counts[pred][truth].
+    let mut counts = vec![vec![0i64; k]; k];
+    for (&t, &p) in truth.iter().zip(&pred) {
+        counts[p as usize][t as usize] += 1;
+    }
+    // Hungarian wants costs; maximize agreement = minimize (max - count).
+    let maxc = counts.iter().flatten().copied().max().unwrap_or(0);
+    let cost: Vec<Vec<i64>> = counts
+        .iter()
+        .map(|row| row.iter().map(|&c| maxc - c).collect())
+        .collect();
+    let matching = hungarian(&cost);
+    let matched: i64 = matching.iter().enumerate().map(|(p, &t)| counts[p][t]).sum();
+    Ok(matched as f64 / truth.len() as f64)
+}
+
+/// Hungarian (Kuhn–Munkres) algorithm for the square assignment problem,
+/// O(k³), minimizing total cost. Returns `row → column`.
+///
+/// This is the classic potentials-based JV formulation; `k` here is the
+/// number of clusters (≤ a few dozen), so cubic cost is negligible.
+pub fn hungarian(cost: &[Vec<i64>]) -> Vec<usize> {
+    let n = cost.len();
+    if n == 0 {
+        return vec![];
+    }
+    // Potentials u (rows), v (cols); way[j] = previous column on the
+    // augmenting path; matches p[j] = row matched to column j.
+    // 1-indexed internally per the standard e-maxx formulation.
+    let inf = i64::MAX / 4;
+    let mut u = vec![0i64; n + 1];
+    let mut v = vec![0i64; n + 1];
+    let mut p = vec![0usize; n + 1];
+    let mut way = vec![0usize; n + 1];
+    for i in 1..=n {
+        p[0] = i;
+        let mut j0 = 0usize;
+        let mut minv = vec![inf; n + 1];
+        let mut used = vec![false; n + 1];
+        loop {
+            used[j0] = true;
+            let i0 = p[j0];
+            let mut delta = inf;
+            let mut j1 = 0usize;
+            for j in 1..=n {
+                if !used[j] {
+                    let cur = cost[i0 - 1][j - 1] - u[i0] - v[j];
+                    if cur < minv[j] {
+                        minv[j] = cur;
+                        way[j] = j0;
+                    }
+                    if minv[j] < delta {
+                        delta = minv[j];
+                        j1 = j;
+                    }
+                }
+            }
+            for j in 0..=n {
+                if used[j] {
+                    u[p[j]] += delta;
+                    v[j] -= delta;
+                } else {
+                    minv[j] -= delta;
+                }
+            }
+            j0 = j1;
+            if p[j0] == 0 {
+                break;
+            }
+        }
+        loop {
+            let j1 = way[j0];
+            p[j0] = p[j1];
+            j0 = j1;
+            if j0 == 0 {
+                break;
+            }
+        }
+    }
+    let mut row_to_col = vec![0usize; n];
+    for j in 1..=n {
+        if p[j] > 0 {
+            row_to_col[p[j] - 1] = j - 1;
+        }
+    }
+    row_to_col
+}
+
+/// `BSS/TSS`: ratio of the between-cluster sum of squares to the total
+/// sum of squares (both about the grand centroid). In `[0, 1]`; larger
+/// means more compact clusters (paper §5).
+pub fn bss_tss(points: &Matrix, assign: &[u32]) -> Result<f64> {
+    if points.rows() != assign.len() {
+        return Err(Error::Shape(format!(
+            "{} points vs {} assignments",
+            points.rows(),
+            assign.len()
+        )));
+    }
+    let (n, d) = (points.rows(), points.cols());
+    if n == 0 {
+        return Ok(0.0);
+    }
+    let (assign, k) = compact_labels(assign);
+    let grand = points.col_means();
+    let mut centroids = vec![vec![0.0f64; d]; k];
+    let mut counts = vec![0usize; k];
+    for i in 0..n {
+        let c = assign[i] as usize;
+        counts[c] += 1;
+        for (acc, &x) in centroids[c].iter_mut().zip(points.row(i)) {
+            *acc += x as f64;
+        }
+    }
+    for (c, cnt) in centroids.iter_mut().zip(&counts) {
+        if *cnt > 0 {
+            for v in c.iter_mut() {
+                *v /= *cnt as f64;
+            }
+        }
+    }
+    let mut tss = 0.0f64;
+    for i in 0..n {
+        for (j, &x) in points.row(i).iter().enumerate() {
+            let dlt = x as f64 - grand[j];
+            tss += dlt * dlt;
+        }
+    }
+    let mut bss = 0.0f64;
+    for (c, cnt) in centroids.iter().zip(&counts) {
+        if *cnt == 0 {
+            continue;
+        }
+        let mut s = 0.0;
+        for (j, &g) in grand.iter().enumerate() {
+            let dlt = c[j] - g;
+            s += dlt * dlt;
+        }
+        bss += s * *cnt as f64;
+    }
+    if tss <= 0.0 {
+        return Ok(0.0);
+    }
+    Ok(bss / tss)
+}
+
+/// Within-cluster sum of squares (the k-means objective).
+pub fn wcss(points: &Matrix, assign: &[u32]) -> Result<f64> {
+    let ratio = bss_tss(points, assign)?;
+    // TSS = BSS + WCSS; recompute TSS once.
+    let grand = points.col_means();
+    let mut tss = 0.0f64;
+    for i in 0..points.rows() {
+        for (j, &x) in points.row(i).iter().enumerate() {
+            let d = x as f64 - grand[j];
+            tss += d * d;
+        }
+    }
+    Ok(tss * (1.0 - ratio))
+}
+
+/// Maximum within-cluster (Euclidean) dissimilarity — the bottleneck
+/// objective of BTPP (eq. 2). Exact `O(Σ|V|²)`; intended for validation
+/// on small-to-medium clusterings, with `sample_cap` bounding the per-
+/// cluster pair scan for big ones (pass `usize::MAX` for exact).
+pub fn bottleneck(points: &Matrix, assign: &[u32], sample_cap: usize) -> Result<f64> {
+    if points.rows() != assign.len() {
+        return Err(Error::Shape("points vs assignments".into()));
+    }
+    let (assign, k) = compact_labels(assign);
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); k];
+    for (i, &a) in assign.iter().enumerate() {
+        members[a as usize].push(i as u32);
+    }
+    let mut worst = 0.0f64;
+    for m in &members {
+        let take = m.len().min(sample_cap);
+        for a in 0..take {
+            for b in (a + 1)..take {
+                let d = sq_dist(points.row(m[a] as usize), points.row(m[b] as usize));
+                worst = worst.max(d as f64);
+            }
+        }
+    }
+    Ok(worst.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hungarian_identity() {
+        let cost = vec![vec![0, 9, 9], vec![9, 0, 9], vec![9, 9, 0]];
+        assert_eq!(hungarian(&cost), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn hungarian_permuted() {
+        let cost = vec![vec![9, 0, 9], vec![9, 9, 0], vec![0, 9, 9]];
+        assert_eq!(hungarian(&cost), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn hungarian_nontrivial() {
+        // Classic example: optimal total = 5 (r0→c1=1, r1→c0=2, r2→c2=2).
+        let cost = vec![vec![4, 1, 3], vec![2, 0, 5], vec![3, 2, 2]];
+        let m = hungarian(&cost);
+        let total: i64 = m.iter().enumerate().map(|(r, &c)| cost[r][c]).sum();
+        assert_eq!(total, 5);
+    }
+
+    #[test]
+    fn accuracy_perfect_and_relabelled() {
+        let truth = vec![0, 0, 1, 1, 2, 2];
+        assert_eq!(prediction_accuracy(&truth, &truth).unwrap(), 1.0);
+        // Same partition, different labels → still perfect.
+        let relab = vec![2, 2, 0, 0, 1, 1];
+        assert_eq!(prediction_accuracy(&truth, &relab).unwrap(), 1.0);
+    }
+
+    #[test]
+    fn accuracy_partial() {
+        let truth = vec![0, 0, 0, 1, 1, 1];
+        let pred = vec![0, 0, 1, 1, 1, 1];
+        // Best matching: 0→0, 1→1 gives 5/6 correct.
+        assert!((prediction_accuracy(&truth, &pred).unwrap() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_more_clusters_than_classes() {
+        let truth = vec![0, 0, 0, 0];
+        let pred = vec![0, 1, 2, 3];
+        // Only one cluster can match class 0 → 1/4.
+        assert!((prediction_accuracy(&truth, &pred).unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_length_mismatch() {
+        assert!(prediction_accuracy(&[0, 1], &[0]).is_err());
+    }
+
+    #[test]
+    fn bss_tss_extremes() {
+        // Two tight, far-apart clusters → ratio near 1.
+        let m = Matrix::from_vec(
+            vec![0.0, 0.0, 0.1, 0.0, 100.0, 0.0, 100.1, 0.0],
+            4,
+            2,
+        )
+        .unwrap();
+        let good = bss_tss(&m, &[0, 0, 1, 1]).unwrap();
+        assert!(good > 0.999, "{good}");
+        // Clusters that cut across → much lower.
+        let bad = bss_tss(&m, &[0, 1, 0, 1]).unwrap();
+        assert!(bad < 0.001, "{bad}");
+    }
+
+    #[test]
+    fn bss_plus_wcss_is_tss() {
+        let m = Matrix::from_vec(vec![1.0, 2.0, 4.0, 0.0, -1.0, 3.0, 2.0, 2.0], 4, 2).unwrap();
+        let assign = vec![0, 1, 0, 1];
+        let ratio = bss_tss(&m, &assign).unwrap();
+        let w = wcss(&m, &assign).unwrap();
+        let grand = m.col_means();
+        let mut tss = 0.0;
+        for i in 0..4 {
+            for j in 0..2 {
+                let d = m.get(i, j) as f64 - grand[j];
+                tss += d * d;
+            }
+        }
+        assert!((ratio * tss + w - tss).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bottleneck_known() {
+        let m = Matrix::from_vec(vec![0.0, 1.0, 3.0, 10.0], 4, 1).unwrap();
+        // Clusters {0,1,3} and {10}: max within = 3.
+        let b = bottleneck(&m, &[0, 0, 0, 1], usize::MAX).unwrap();
+        assert!((b - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn sizes_and_min() {
+        let assign = vec![0, 0, 1, 2, 2, 2];
+        assert_eq!(cluster_sizes(&assign), vec![2, 1, 3]);
+        assert_eq!(min_cluster_size(&assign), 1);
+        assert_eq!(num_clusters(&assign), 3);
+    }
+}

@@ -1,0 +1,325 @@
+//! Minimal SVG line-chart renderer for the paper's figures.
+//!
+//! Figures 3–6 and 9–11 are log-x line plots of the exact series the
+//! repro tables produce; this renderer turns those series into
+//! standalone `.svg` files (no plotting library exists offline). Output
+//! is deliberately simple: axes, ticks, one polyline + markers per
+//! series, a legend.
+
+use std::fmt::Write as _;
+
+/// One named series of (x, y) points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    /// Legend label.
+    pub label: String,
+    /// Data points (x ascending not required but typical).
+    pub points: Vec<(f64, f64)>,
+}
+
+/// Axis scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AxisScale {
+    /// Linear axis.
+    Linear,
+    /// Log10 axis (non-positive values are dropped from the plot).
+    Log10,
+}
+
+/// Chart configuration.
+#[derive(Clone, Debug)]
+pub struct Chart {
+    /// Chart title.
+    pub title: String,
+    /// X-axis label.
+    pub x_label: String,
+    /// Y-axis label.
+    pub y_label: String,
+    /// X-axis scale.
+    pub x_scale: AxisScale,
+    /// Y-axis scale.
+    pub y_scale: AxisScale,
+    /// The series to draw.
+    pub series: Vec<Series>,
+}
+
+const W: f64 = 640.0;
+const H: f64 = 420.0;
+const ML: f64 = 64.0; // margins
+const MR: f64 = 16.0;
+const MT: f64 = 36.0;
+const MB: f64 = 48.0;
+const PALETTE: &[&str] = &["#1f77b4", "#d62728", "#2ca02c", "#ff7f0e", "#9467bd", "#8c564b"];
+
+fn tx(scale: AxisScale, v: f64) -> Option<f64> {
+    match scale {
+        AxisScale::Linear => Some(v),
+        AxisScale::Log10 => {
+            if v > 0.0 {
+                Some(v.log10())
+            } else {
+                None
+            }
+        }
+    }
+}
+
+impl Chart {
+    /// Render to an SVG document string.
+    pub fn render(&self) -> String {
+        // Transformed bounds.
+        let mut xs = Vec::new();
+        let mut ys = Vec::new();
+        for s in &self.series {
+            for &(x, y) in &s.points {
+                if let (Some(a), Some(b)) = (tx(self.x_scale, x), tx(self.y_scale, y)) {
+                    xs.push(a);
+                    ys.push(b);
+                }
+            }
+        }
+        let (x0, x1) = bounds(&xs);
+        let (y0, y1) = bounds(&ys);
+        let px = |v: f64| ML + (v - x0) / (x1 - x0).max(1e-12) * (W - ML - MR);
+        let py = |v: f64| H - MB - (v - y0) / (y1 - y0).max(1e-12) * (H - MT - MB);
+
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            r#"<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" viewBox="0 0 {W} {H}"><rect width="{W}" height="{H}" fill="white"/>"#
+        );
+        let _ = write!(
+            out,
+            r#"<text x="{}" y="20" font-family="sans-serif" font-size="14" text-anchor="middle">{}</text>"#,
+            W / 2.0,
+            esc(&self.title)
+        );
+        // Axes.
+        let _ = write!(
+            out,
+            r#"<line x1="{ML}" y1="{}" x2="{}" y2="{}" stroke="black"/><line x1="{ML}" y1="{MT}" x2="{ML}" y2="{}" stroke="black"/>"#,
+            H - MB,
+            W - MR,
+            H - MB,
+            H - MB
+        );
+        // Ticks: 5 per axis at transformed-space intervals.
+        for i in 0..=4 {
+            let fx = x0 + (x1 - x0) * i as f64 / 4.0;
+            let fy = y0 + (y1 - y0) * i as f64 / 4.0;
+            let lx = match self.x_scale {
+                AxisScale::Linear => fmt_tick(fx),
+                AxisScale::Log10 => format!("1e{fx:.1}"),
+            };
+            let ly = match self.y_scale {
+                AxisScale::Linear => fmt_tick(fy),
+                AxisScale::Log10 => format!("1e{fy:.1}"),
+            };
+            let _ = write!(
+                out,
+                r#"<text x="{}" y="{}" font-family="sans-serif" font-size="10" text-anchor="middle">{lx}</text>"#,
+                px(fx),
+                H - MB + 16.0
+            );
+            let _ = write!(
+                out,
+                r#"<text x="{}" y="{}" font-family="sans-serif" font-size="10" text-anchor="end">{ly}</text>"#,
+                ML - 6.0,
+                py(fy) + 3.0
+            );
+            let _ = write!(
+                out,
+                r##"<line x1="{}" y1="{MT}" x2="{}" y2="{}" stroke="#eeeeee"/>"##,
+                px(fx),
+                px(fx),
+                H - MB
+            );
+        }
+        // Axis labels.
+        let _ = write!(
+            out,
+            r#"<text x="{}" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle">{}</text>"#,
+            W / 2.0,
+            H - 10.0,
+            esc(&self.x_label)
+        );
+        let _ = write!(
+            out,
+            r#"<text x="14" y="{}" font-family="sans-serif" font-size="12" text-anchor="middle" transform="rotate(-90 14 {})">{}</text>"#,
+            H / 2.0,
+            H / 2.0,
+            esc(&self.y_label)
+        );
+        // Series.
+        for (si, s) in self.series.iter().enumerate() {
+            let color = PALETTE[si % PALETTE.len()];
+            let mut path = String::new();
+            for &(x, y) in &s.points {
+                if let (Some(a), Some(b)) = (tx(self.x_scale, x), tx(self.y_scale, y)) {
+                    if path.is_empty() {
+                        let _ = write!(path, "M{:.1},{:.1}", px(a), py(b));
+                    } else {
+                        let _ = write!(path, " L{:.1},{:.1}", px(a), py(b));
+                    }
+                    let _ = write!(
+                        out,
+                        r#"<circle cx="{:.1}" cy="{:.1}" r="2.5" fill="{color}"/>"#,
+                        px(a),
+                        py(b)
+                    );
+                }
+            }
+            let _ = write!(out, r#"<path d="{path}" fill="none" stroke="{color}" stroke-width="1.5"/>"#);
+            // Legend entry.
+            let ly = MT + 14.0 * si as f64;
+            let _ = write!(
+                out,
+                r#"<line x1="{}" y1="{ly}" x2="{}" y2="{ly}" stroke="{color}" stroke-width="2"/><text x="{}" y="{}" font-family="sans-serif" font-size="11">{}</text>"#,
+                W - MR - 120.0,
+                W - MR - 100.0,
+                W - MR - 94.0,
+                ly + 3.0,
+                esc(&s.label)
+            );
+        }
+        out.push_str("</svg>");
+        out
+    }
+
+    /// Write the rendering to `path`.
+    pub fn save(&self, path: &std::path::Path) -> crate::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())?;
+        Ok(())
+    }
+}
+
+fn bounds(v: &[f64]) -> (f64, f64) {
+    if v.is_empty() {
+        return (0.0, 1.0);
+    }
+    let lo = v.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if (hi - lo).abs() < 1e-12 {
+        (lo - 0.5, hi + 0.5)
+    } else {
+        (lo, hi)
+    }
+}
+
+fn fmt_tick(v: f64) -> String {
+    if v.abs() >= 1000.0 || (v != 0.0 && v.abs() < 0.01) {
+        format!("{v:.1e}")
+    } else {
+        format!("{v:.2}")
+    }
+}
+
+fn esc(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// Build a figure from a long-format table (columns: group, x, y):
+/// one series per distinct `group` value.
+pub fn chart_from_long(
+    title: &str,
+    table: &super::Table,
+    group_col: usize,
+    x_col: usize,
+    y_col: usize,
+    x_label: &str,
+    y_label: &str,
+    y_scale: AxisScale,
+) -> Chart {
+    let mut series: Vec<Series> = Vec::new();
+    for row in &table.rows {
+        let group = &row[group_col];
+        let x: f64 = row[x_col].parse().unwrap_or(f64::NAN);
+        let y: f64 = row[y_col].parse().unwrap_or(f64::NAN);
+        if !x.is_finite() || !y.is_finite() {
+            continue;
+        }
+        match series.iter_mut().find(|s| s.label == *group) {
+            Some(s) => s.points.push((x, y)),
+            None => series.push(Series { label: group.clone(), points: vec![(x, y)] }),
+        }
+    }
+    Chart {
+        title: title.into(),
+        x_label: x_label.into(),
+        y_label: y_label.into(),
+        x_scale: AxisScale::Linear,
+        y_scale,
+        series,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_chart() -> Chart {
+        Chart {
+            title: "t".into(),
+            x_label: "x".into(),
+            y_label: "y".into(),
+            x_scale: AxisScale::Linear,
+            y_scale: AxisScale::Log10,
+            series: vec![
+                Series { label: "a".into(), points: vec![(0.0, 1.0), (1.0, 10.0), (2.0, 100.0)] },
+                Series { label: "b".into(), points: vec![(0.0, 5.0), (2.0, 0.5)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn renders_valid_svg_with_all_series() {
+        let svg = sample_chart().render();
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains(">a</text>"));
+        assert!(svg.contains(">b</text>"));
+        // 5 data points drawn as markers.
+        assert_eq!(svg.matches("<circle").count(), 5);
+    }
+
+    #[test]
+    fn log_scale_drops_nonpositive() {
+        let mut c = sample_chart();
+        c.series[0].points.push((3.0, 0.0)); // dropped on log axis
+        let svg = c.render();
+        assert_eq!(svg.matches("<circle").count(), 5);
+    }
+
+    #[test]
+    fn escapes_markup() {
+        let mut c = sample_chart();
+        c.title = "a<b & c>".into();
+        let svg = c.render();
+        assert!(svg.contains("a&lt;b &amp; c&gt;"));
+    }
+
+    #[test]
+    fn chart_from_long_groups_rows() {
+        let mut t = crate::report::Table::new("", &["n", "m", "seconds"]);
+        t.push_row(vec!["10000".into(), "0".into(), "1.5".into()]);
+        t.push_row(vec!["10000".into(), "1".into(), "0.7".into()]);
+        t.push_row(vec!["100000".into(), "0".into(), "15.0".into()]);
+        t.push_row(vec!["100000".into(), "bad".into(), "x".into()]); // skipped
+        let c = chart_from_long("f", &t, 0, 1, 2, "m", "s", AxisScale::Linear);
+        assert_eq!(c.series.len(), 2);
+        assert_eq!(c.series[0].points.len(), 2);
+        assert_eq!(c.series[1].points.len(), 1);
+    }
+
+    #[test]
+    fn save_writes_file() {
+        let dir = std::env::temp_dir().join("ihtc_svg_test");
+        let path = dir.join("fig.svg");
+        sample_chart().save(&path).unwrap();
+        assert!(std::fs::read_to_string(&path).unwrap().contains("</svg>"));
+    }
+}

@@ -1,0 +1,90 @@
+//! Repro harness: regenerate every table and figure of the paper.
+//!
+//! Each `table*` function sweeps the same axes the paper does and returns
+//! [`crate::report::Table`]s whose rows mirror the published ones
+//! (runtime seconds, memory MB, accuracy / BSS÷TSS, prototype counts).
+//! The figures are line plots over these exact series, so the CSV output
+//! of each table doubles as the figure data (see EXPERIMENTS.md).
+
+use crate::report::Table;
+
+/// Experiment registry entry.
+pub struct Experiment {
+    /// Identifier accepted by `ihtc repro --exp`.
+    pub id: &'static str,
+    /// What it reproduces.
+    pub description: &'static str,
+}
+
+/// All reproducible experiments.
+pub const EXPERIMENTS: &[Experiment] = &[
+    Experiment { id: "table1", description: "IHTC + k-means on the §4 GMM: time/memory/accuracy vs m (Figs 3-4)" },
+    Experiment { id: "table2", description: "IHTC + HAC on the §4 GMM: time/memory/accuracy vs m (Figs 5-6)" },
+    Experiment { id: "table3", description: "dataset roster (analogue shapes)" },
+    Experiment { id: "table4", description: "IHTC + k-means on the six dataset analogues (Fig 7)" },
+    Experiment { id: "table5", description: "IHTC + HAC on the dataset analogues, small m (Fig 8)" },
+    Experiment { id: "table6", description: "IHTC + HAC on the large analogues, large m (Fig 8)" },
+    Experiment { id: "table7", description: "t* sweep with k-means, m=1 (Figs 9, 11)" },
+    Experiment { id: "table8", description: "t* sweep with HAC, m=1 (Figs 10, 11)" },
+    Experiment { id: "table9", description: "IHTC + DBSCAN on four analogues (Appendix B)" },
+];
+
+mod runners;
+pub use runners::*;
+
+use crate::report::svg::{chart_from_long, AxisScale, Chart};
+
+/// Build the paper's figures from an experiment's long-format table
+/// (the last table emitted by the sweep runners). Returns
+/// `(file_stem, chart)` pairs; empty for experiments without figures.
+pub fn figures(id: &str, tables: &[Table]) -> Vec<(String, Chart)> {
+    // Sweep runners emit [time, memory, accuracy, long]; the long table
+    // has columns [n, m|tstar, seconds, mem_mb, accuracy, prototypes].
+    let long = match tables.last() {
+        Some(t) if t.headers.len() == 6 => t,
+        _ => return vec![],
+    };
+    let (xname, fig_time, fig_acc) = match id {
+        "table1" => ("iterations m", "fig3", "fig4"),
+        "table2" => ("iterations m", "fig5", "fig6"),
+        "table7" => ("threshold t*", "fig9", "fig11_kmeans"),
+        "table8" => ("threshold t*", "fig10", "fig11_hac"),
+        _ => return vec![],
+    };
+    let mut out = Vec::new();
+    let mk = |title: &str, y: usize, ylab: &str, scale: AxisScale| {
+        chart_from_long(title, long, 0, 1, y, xname, ylab, scale)
+    };
+    out.push((
+        format!("{fig_time}_time"),
+        mk(&format!("{id}: run time"), 2, "seconds", AxisScale::Log10),
+    ));
+    out.push((
+        format!("{fig_time}_memory"),
+        mk(&format!("{id}: peak memory"), 3, "MB", AxisScale::Log10),
+    ));
+    out.push((
+        format!("{fig_acc}_accuracy"),
+        mk(&format!("{id}: prediction accuracy"), 4, "accuracy", AxisScale::Linear),
+    ));
+    out
+}
+
+/// Dispatch an experiment id to its runner.
+pub fn run_experiment(id: &str, scale: Scale, seed: u64) -> crate::Result<Vec<Table>> {
+    match id {
+        "table1" => table1(scale, seed),
+        "table2" => table2(scale, seed),
+        "table3" => table3(),
+        "table4" => table4(scale, seed),
+        "table5" => table5(scale, seed),
+        "table6" => table6(scale, seed),
+        "table7" => table7(scale, seed),
+        "table8" => table8(scale, seed),
+        "table9" => table9(scale, seed),
+        other => Err(crate::Error::InvalidArgument(format!(
+            "unknown experiment '{other}'; known: {}",
+            EXPERIMENTS.iter().map(|e| e.id).collect::<Vec<_>>().join(", ")
+        ))),
+    }
+}

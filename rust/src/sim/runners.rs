@@ -1,0 +1,726 @@
+//! Experiment runners for every table/figure of the paper.
+
+use crate::cluster::dbscan;
+use crate::cluster::hac::Linkage;
+use crate::data::synth::{gaussian_mixture_paper, realistic, RealDatasetSpec, TABLE3};
+use crate::data::{Dataset, Preprocess};
+use crate::hybrid::{FinalClusterer, Ihtc};
+use crate::itis::{itis, ItisConfig};
+use crate::linalg::Matrix;
+use crate::memtrack;
+use crate::metrics;
+use crate::report::{fmt4, fmt_secs, Table};
+use crate::Result;
+use std::time::Instant;
+
+/// Workload scale. The paper sweeps n up to 10⁸ with 1000 replicates on a
+/// 30 GB cluster node; these presets keep the same *shape* inside this
+/// testbed's budget (see DESIGN.md §3 "Scale substitution").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Tiny — used by the integration tests.
+    Smoke,
+    /// Laptop-minutes (default): n ∈ {10⁴, 10⁵, 10⁶ (kmeans only)}.
+    Default,
+    /// Adds the next decade where feasible; several minutes per table.
+    Full,
+}
+
+impl Scale {
+    /// Parse from CLI text.
+    pub fn parse(s: &str) -> Result<Scale> {
+        match s {
+            "smoke" => Ok(Scale::Smoke),
+            "default" => Ok(Scale::Default),
+            "full" => Ok(Scale::Full),
+            other => Err(crate::Error::InvalidArgument(format!(
+                "unknown scale '{other}' (smoke|default|full)"
+            ))),
+        }
+    }
+
+    fn kmeans_sizes(&self) -> Vec<usize> {
+        match self {
+            Scale::Smoke => vec![2_000],
+            Scale::Default => vec![10_000, 100_000],
+            Scale::Full => vec![10_000, 100_000, 1_000_000],
+        }
+    }
+
+    fn hac_sizes(&self) -> Vec<usize> {
+        match self {
+            Scale::Smoke => vec![2_000],
+            Scale::Default => vec![10_000, 100_000],
+            Scale::Full => vec![10_000, 100_000, 1_000_000],
+        }
+    }
+
+    /// Stand-in for R's 65 536-point `hclust` limit, scaled to this
+    /// testbed (the paper's frontier shape is preserved: HAC is only
+    /// feasible once ITIS brings the prototype count under the cap).
+    fn hac_cap(&self) -> usize {
+        match self {
+            Scale::Smoke => 700,
+            Scale::Default => 16_384,
+            Scale::Full => 65_536,
+        }
+    }
+
+    fn analogue_target(&self) -> usize {
+        match self {
+            Scale::Smoke => 1_500,
+            Scale::Default => 30_000,
+            Scale::Full => 150_000,
+        }
+    }
+
+    fn tstar_list(&self) -> Vec<usize> {
+        match self {
+            Scale::Smoke => vec![2, 4, 8],
+            Scale::Default => vec![2, 4, 8, 16, 32, 64, 128, 256],
+            Scale::Full => vec![2, 4, 8, 16, 32, 64, 128, 256, 512, 1024],
+        }
+    }
+
+    fn max_m(&self) -> usize {
+        match self {
+            Scale::Smoke => 4,
+            _ => 12,
+        }
+    }
+}
+
+/// One measured IHTC run.
+#[derive(Clone, Debug)]
+pub struct Measured {
+    /// Wall-clock seconds (whole IHTC, matching the paper's "whole
+    /// procedure" accounting).
+    pub seconds: f64,
+    /// Peak allocation above baseline, bytes (0 without the counting
+    /// allocator installed).
+    pub peak_bytes: usize,
+    /// Accuracy vs ground truth, when labels exist.
+    pub accuracy: Option<f64>,
+    /// BSS/TSS of the final clustering.
+    pub bss_tss: f64,
+    /// Prototypes the final clusterer saw.
+    pub prototypes: usize,
+}
+
+/// Run one IHTC configuration with timing + peak-memory brackets.
+/// Returns `None` when the final clusterer is infeasible at this size
+/// (e.g. HAC above its cap) — the paper's "-" cells.
+pub fn run_measured(
+    points: &Matrix,
+    truth: Option<&[u32]>,
+    threshold: usize,
+    m: usize,
+    clusterer: FinalClusterer,
+    hac_cap: usize,
+    seed: u64,
+) -> Result<Option<Measured>> {
+    // Feasibility pre-check for HAC at m = 0 (avoid allocating n²/2).
+    if let FinalClusterer::Hac { .. } = clusterer {
+        let upper = points.rows() / 2usize.pow(m as u32).max(1);
+        if m == 0 && points.rows() > hac_cap {
+            return Ok(None);
+        }
+        // Heuristic skip: even optimistic reduction leaves it over cap.
+        if upper / 2 > hac_cap {
+            return Ok(None);
+        }
+    }
+    let t0 = Instant::now();
+    let (result, peak) = memtrack::measure(|| -> Result<_> {
+        let mut ih = Ihtc::new(threshold, m, clusterer.clone());
+        ih.seed = seed;
+        let r = ih.run(points)?;
+        // Enforce the HAC cap on what the final clusterer actually saw.
+        if matches!(clusterer, FinalClusterer::Hac { .. }) && r.num_prototypes() > hac_cap {
+            return Ok(None);
+        }
+        Ok(Some(r))
+    });
+    let seconds = t0.elapsed().as_secs_f64();
+    let r = match result? {
+        Some(r) => r,
+        None => return Ok(None),
+    };
+    let accuracy = match truth {
+        Some(t) => Some(metrics::prediction_accuracy(t, &r.assignments)?),
+        None => None,
+    };
+    let bss = metrics::bss_tss(points, &r.assignments)?;
+    Ok(Some(Measured {
+        seconds,
+        peak_bytes: peak,
+        accuracy,
+        bss_tss: bss,
+        prototypes: r.num_prototypes(),
+    }))
+}
+
+fn mb(bytes: usize) -> String {
+    memtrack::fmt_mb(bytes)
+}
+
+fn dash() -> String {
+    "-".into()
+}
+
+/// Sweep m for one clusterer over the §4 GMM; returns wide tables
+/// (time / memory / accuracy: rows = m, one column per n) plus a long
+/// CSV table for the figures.
+fn gmm_iteration_sweep(
+    title: &str,
+    stem: &str,
+    sizes: &[usize],
+    max_m: usize,
+    clusterer: impl Fn(usize) -> FinalClusterer,
+    hac_cap: usize,
+    seed: u64,
+) -> Result<Vec<Table>> {
+    let k = 3;
+    let mut headers = vec!["m".to_string()];
+    headers.extend(sizes.iter().map(|n| format!("n=1e{}", (*n as f64).log10().round() as u32)));
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t_time = Table::new(format!("{title} — run time (s)"), &hdr);
+    let mut t_mem = Table::new(format!("{title} — peak memory (MB)"), &hdr);
+    let mut t_acc = Table::new(format!("{title} — prediction accuracy"), &hdr);
+    let mut long = Table::new(
+        format!("{title} — long format (figure data)"),
+        &["n", "m", "seconds", "mem_mb", "accuracy", "prototypes"],
+    );
+
+    // Generate each dataset once and reuse across m (the sweep axis).
+    let datasets: Vec<Dataset> =
+        sizes.iter().map(|&n| gaussian_mixture_paper(n, seed)).collect();
+
+    for m in 0..=max_m {
+        // Stop the sweep once every dataset would be reduced below a
+        // meaningful prototype count (the paper's trailing "-" region).
+        let any_possible = datasets
+            .iter()
+            .any(|ds| m == 0 || ds.len() / 2usize.pow(m as u32).max(1) >= 4 * k);
+        if !any_possible {
+            break;
+        }
+        let mut row_t = vec![m.to_string()];
+        let mut row_m = vec![m.to_string()];
+        let mut row_a = vec![m.to_string()];
+        for ds in &datasets {
+            // Too few prototypes for a meaningful k-cluster fit → "-".
+            let est_protos = ds.len() / 2usize.pow(m as u32).max(1);
+            let feasible = m == 0 || est_protos >= 4 * k;
+            let cell = if feasible {
+                run_measured(
+                    &ds.points,
+                    ds.labels.as_deref(),
+                    2,
+                    m,
+                    clusterer(k),
+                    hac_cap,
+                    seed,
+                )?
+            } else {
+                None
+            };
+            match cell {
+                Some(meas) => {
+                    row_t.push(fmt_secs(meas.seconds));
+                    row_m.push(mb(meas.peak_bytes));
+                    row_a.push(meas.accuracy.map(fmt4).unwrap_or_else(dash));
+                    long.push_row(vec![
+                        ds.len().to_string(),
+                        m.to_string(),
+                        format!("{:.6}", meas.seconds),
+                        mb(meas.peak_bytes),
+                        meas.accuracy.map(fmt4).unwrap_or_else(dash),
+                        meas.prototypes.to_string(),
+                    ]);
+                }
+                None => {
+                    row_t.push(dash());
+                    row_m.push(dash());
+                    row_a.push(dash());
+                }
+            }
+        }
+        t_time.push_row(row_t);
+        t_mem.push_row(row_m);
+        t_acc.push_row(row_a);
+    }
+    let _ = stem;
+    Ok(vec![t_time, t_mem, t_acc, long])
+}
+
+/// Table 1 / Figures 3–4: IHTC with k-means on the §4 mixture.
+pub fn table1(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    gmm_iteration_sweep(
+        "Table 1: IHTC + k-means (k=3, t*=2)",
+        "table1",
+        &scale.kmeans_sizes(),
+        scale.max_m(),
+        |k| FinalClusterer::KMeans { k, restarts: 4 },
+        usize::MAX,
+        seed,
+    )
+}
+
+/// Table 2 / Figures 5–6: IHTC with HAC on the §4 mixture.
+pub fn table2(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    gmm_iteration_sweep(
+        "Table 2: IHTC + HAC (t*=2, Ward)",
+        "table2",
+        &scale.hac_sizes(),
+        scale.max_m(),
+        |k| FinalClusterer::Hac { k, linkage: Linkage::Ward },
+        scale.hac_cap(),
+        seed,
+    )
+}
+
+/// Table 3: the dataset roster (paper sizes + analogue shapes), with the
+/// elbow-selected k recomputed the way §5 chooses "Classes" — k from the
+/// elbow of the WCSS curve on a subsample of each (analogue) dataset.
+pub fn table3() -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 3: datasets (synthetic analogues; see DESIGN.md §4)",
+        &["Name", "Instances (paper)", "Attributes", "Classes (paper)", "Elbow k (measured)"],
+    );
+    for spec in TABLE3 {
+        let ds = realistic(spec, (spec.instances / 4_000).max(1), 42);
+        let prep = Preprocess { standardize: true, pca_variance: Some(0.99), max_components: None }
+            .apply(&ds)?;
+        let elbow = crate::cluster::elbow::select_k(&prep.points, 1, 10, 2_000, 42)?;
+        t.push_row(vec![
+            spec.name.to_string(),
+            spec.instances.to_string(),
+            spec.attributes.to_string(),
+            spec.classes.to_string(),
+            elbow.k.to_string(),
+        ]);
+    }
+    Ok(vec![t])
+}
+
+fn prepared_analogue(spec: &RealDatasetSpec, scale: Scale, seed: u64) -> Result<Dataset> {
+    let target = scale.analogue_target().min(spec.instances);
+    let div = (spec.instances / target).max(1);
+    let ds = realistic(spec, div, seed);
+    // Paper §5: PCA feature selection + standardized Euclidean distances.
+    Preprocess { standardize: true, pca_variance: Some(0.99), max_components: None }.apply(&ds)
+}
+
+/// Table 4 / Figure 7: IHTC + k-means on the six dataset analogues.
+pub fn table4(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 4: IHTC + k-means on dataset analogues (t*=2)",
+        &["Name", "m", "seconds", "mem_mb", "bss_tss", "prototypes", "n"],
+    );
+    let specs: &[&RealDatasetSpec] = &match scale {
+        Scale::Smoke => TABLE3.iter().take(2).collect::<Vec<_>>(),
+        _ => TABLE3.iter().collect::<Vec<_>>(),
+    };
+    for spec in specs {
+        let ds = prepared_analogue(spec, scale, seed)?;
+        for m in 0..=3 {
+            let meas = run_measured(
+                &ds.points,
+                None,
+                2,
+                m,
+                FinalClusterer::KMeans { k: spec.classes, restarts: 4 },
+                usize::MAX,
+                seed,
+            )?
+            .expect("kmeans always feasible");
+            t.push_row(vec![
+                spec.name.to_string(),
+                m.to_string(),
+                fmt_secs(meas.seconds),
+                mb(meas.peak_bytes),
+                fmt4(meas.bss_tss),
+                meas.prototypes.to_string(),
+                ds.len().to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+fn hac_analogue_rows(
+    t: &mut Table,
+    spec: &RealDatasetSpec,
+    m_values: &[usize],
+    scale: Scale,
+    seed: u64,
+) -> Result<()> {
+    let ds = prepared_analogue(spec, scale, seed)?;
+    for &m in m_values {
+        let meas = run_measured(
+            &ds.points,
+            None,
+            2,
+            m,
+            FinalClusterer::Hac { k: spec.classes, linkage: Linkage::Ward },
+            scale.hac_cap(),
+            seed,
+        )?;
+        match meas {
+            Some(meas) => t.push_row(vec![
+                spec.name.to_string(),
+                m.to_string(),
+                fmt_secs(meas.seconds),
+                mb(meas.peak_bytes),
+                fmt4(meas.bss_tss),
+                meas.prototypes.to_string(),
+                ds.len().to_string(),
+            ]),
+            None => t.push_row(vec![
+                spec.name.to_string(),
+                m.to_string(),
+                dash(),
+                dash(),
+                dash(),
+                dash(),
+                ds.len().to_string(),
+            ]),
+        }
+    }
+    Ok(())
+}
+
+/// Table 5 / Figure 8: IHTC + HAC on the three smaller analogues.
+pub fn table5(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 5: IHTC + HAC on smaller analogues (t*=2, Ward)",
+        &["Name", "m", "seconds", "mem_mb", "bss_tss", "prototypes", "n"],
+    );
+    let plan: &[(&str, &[usize])] = &[
+        ("PM 2.5", &[0, 1, 2, 3]),
+        ("Credit Score", &[0, 2, 3, 4]),
+        ("Black Friday", &[0, 1, 2, 3]),
+    ];
+    for (name, ms) in plan {
+        let spec = TABLE3.iter().find(|s| s.name == *name).unwrap();
+        hac_analogue_rows(&mut t, spec, ms, scale, seed)?;
+        if scale == Scale::Smoke {
+            break;
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Table 6 / Figure 8: IHTC + HAC on the three larger analogues.
+pub fn table6(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 6: IHTC + HAC on larger analogues (t*=2, Ward)",
+        &["Name", "m", "seconds", "mem_mb", "bss_tss", "prototypes", "n"],
+    );
+    let plan: &[(&str, &[usize])] = &[
+        ("Covertype", &[0, 4, 5, 6]),
+        ("House Price", &[0, 6, 7, 8]),
+        ("Stock", &[0, 7, 8, 9]),
+    ];
+    for (name, ms) in plan {
+        let spec = TABLE3.iter().find(|s| s.name == *name).unwrap();
+        hac_analogue_rows(&mut t, spec, ms, scale, seed)?;
+        if scale == Scale::Smoke {
+            break;
+        }
+    }
+    Ok(vec![t])
+}
+
+/// t*-sweep core shared by Tables 7 and 8 (m = 1, Appendix A).
+fn tstar_sweep(
+    title: &str,
+    sizes: &[usize],
+    tstars: &[usize],
+    clusterer: impl Fn(usize) -> FinalClusterer,
+    hac_cap: usize,
+    seed: u64,
+) -> Result<Vec<Table>> {
+    let k = 3;
+    let mut headers = vec!["t*".to_string()];
+    headers.extend(sizes.iter().map(|n| format!("n=1e{}", (*n as f64).log10().round() as u32)));
+    let hdr: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t_time = Table::new(format!("{title} — run time (s)"), &hdr);
+    let mut t_mem = Table::new(format!("{title} — peak memory (MB)"), &hdr);
+    let mut t_acc = Table::new(format!("{title} — prediction accuracy"), &hdr);
+    let mut long = Table::new(
+        format!("{title} — long format (figure data)"),
+        &["n", "tstar", "seconds", "mem_mb", "accuracy", "prototypes"],
+    );
+    let datasets: Vec<Dataset> =
+        sizes.iter().map(|&n| gaussian_mixture_paper(n, seed)).collect();
+
+    // "None" row = no pre-processing (m = 0).
+    let mut rows: Vec<(String, Option<usize>)> = vec![("None".into(), None)];
+    rows.extend(tstars.iter().map(|&t| (t.to_string(), Some(t))));
+
+    for (label, tstar) in rows {
+        let mut row_t = vec![label.clone()];
+        let mut row_m = vec![label.clone()];
+        let mut row_a = vec![label.clone()];
+        for ds in &datasets {
+            let feasible = match tstar {
+                None => true,
+                Some(t) => ds.len() / t >= 4 * k,
+            };
+            let cell = if feasible {
+                run_measured(
+                    &ds.points,
+                    ds.labels.as_deref(),
+                    tstar.unwrap_or(2),
+                    usize::from(tstar.is_some()),
+                    clusterer(k),
+                    hac_cap,
+                    seed,
+                )?
+            } else {
+                None
+            };
+            match cell {
+                Some(meas) => {
+                    row_t.push(fmt_secs(meas.seconds));
+                    row_m.push(mb(meas.peak_bytes));
+                    row_a.push(meas.accuracy.map(fmt4).unwrap_or_else(dash));
+                    long.push_row(vec![
+                        ds.len().to_string(),
+                        label.clone(),
+                        format!("{:.6}", meas.seconds),
+                        mb(meas.peak_bytes),
+                        meas.accuracy.map(fmt4).unwrap_or_else(dash),
+                        meas.prototypes.to_string(),
+                    ]);
+                }
+                None => {
+                    row_t.push(dash());
+                    row_m.push(dash());
+                    row_a.push(dash());
+                }
+            }
+        }
+        t_time.push_row(row_t);
+        t_mem.push_row(row_m);
+        t_acc.push_row(row_a);
+    }
+    Ok(vec![t_time, t_mem, t_acc, long])
+}
+
+/// Table 7 / Figures 9, 11: threshold sweep with k-means (m = 1).
+pub fn table7(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    tstar_sweep(
+        "Table 7: t* sweep, IHTC + k-means (m=1, k=3)",
+        &scale.kmeans_sizes(),
+        &scale.tstar_list(),
+        |k| FinalClusterer::KMeans { k, restarts: 4 },
+        usize::MAX,
+        seed,
+    )
+}
+
+/// Table 8 / Figures 10, 11: threshold sweep with HAC (m = 1).
+pub fn table8(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    // HAC on n/t* prototypes is O((n/t*)²): restrict to the first size
+    // tier at Default scale (the paper's own table is sparse here too).
+    let sizes: Vec<usize> = match scale {
+        Scale::Smoke => vec![2_000],
+        Scale::Default => vec![10_000],
+        Scale::Full => vec![10_000, 100_000],
+    };
+    tstar_sweep(
+        "Table 8: t* sweep, IHTC + HAC (m=1, Ward)",
+        &sizes,
+        &scale.tstar_list(),
+        |k| FinalClusterer::Hac { k, linkage: Linkage::Ward },
+        scale.hac_cap(),
+        seed,
+    )
+}
+
+/// Table 9 (Appendix B): IHTC + DBSCAN on the four smallest analogues.
+pub fn table9(scale: Scale, seed: u64) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "Table 9: IHTC + DBSCAN on analogues (t*=2)",
+        &["Name", "m", "seconds", "mem_mb", "bss_tss", "clusters", "noise_frac", "n"],
+    );
+    let names = ["PM 2.5", "Credit Score", "Black Friday", "Covertype"];
+    let take = if scale == Scale::Smoke { 2 } else { 4 };
+    for name in names.iter().take(take) {
+        let spec = TABLE3.iter().find(|s| s.name == *name).unwrap();
+        let ds = prepared_analogue(spec, scale, seed)?;
+        // Parameter selection on a subsample, as in the paper's appendix.
+        let params = dbscan::estimate_params(&ds.points, 1000, seed)?;
+        for m in 0..=2 {
+            let t0 = Instant::now();
+            let (res, peak) = memtrack::measure(|| {
+                let mut ih = Ihtc::new(
+                    2,
+                    m,
+                    FinalClusterer::Dbscan { eps: params.eps, min_pts: params.min_pts },
+                );
+                ih.seed = seed;
+                ih.run(&ds.points)
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            let r = res?;
+            let noise =
+                r.assignments.iter().filter(|&&a| a == dbscan::NOISE).count() as f64
+                    / r.assignments.len() as f64;
+            let clusters = r
+                .assignments
+                .iter()
+                .filter(|&&a| a != dbscan::NOISE)
+                .collect::<std::collections::HashSet<_>>()
+                .len();
+            let bss = metrics::bss_tss(&ds.points, &r.assignments)?;
+            t.push_row(vec![
+                spec.name.to_string(),
+                m.to_string(),
+                fmt_secs(secs),
+                mb(peak),
+                fmt4(bss),
+                clusters.to_string(),
+                fmt4(noise),
+                ds.len().to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// Ablation (DESIGN.md §Perf): seed-order and prototype-kind choices.
+pub fn ablation(seed: u64) -> Result<Vec<Table>> {
+    use crate::tc::SeedOrder;
+    let ds = gaussian_mixture_paper(20_000, seed);
+    let truth = ds.labels.as_deref();
+    let mut t = Table::new(
+        "Ablation: TC seed order × prototype kind (t*=2, m=2, k-means k=3)",
+        &["seed_order", "prototype", "seconds", "accuracy", "prototypes"],
+    );
+    for (so_name, so) in [
+        ("natural", SeedOrder::Natural),
+        ("degree_asc", SeedOrder::DegreeAscending),
+        ("degree_desc", SeedOrder::DegreeDescending),
+    ] {
+        for (pk_name, pk) in [
+            ("centroid", crate::itis::PrototypeKind::Centroid),
+            ("weighted", crate::itis::PrototypeKind::WeightedCentroid),
+            ("medoid", crate::itis::PrototypeKind::Medoid),
+        ] {
+            let t0 = Instant::now();
+            let mut ih = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 4 });
+            ih.seed_order = so;
+            ih.prototype = pk;
+            ih.seed = seed;
+            let r = ih.run(&ds.points)?;
+            let secs = t0.elapsed().as_secs_f64();
+            let acc = match truth {
+                Some(tr) => metrics::prediction_accuracy(tr, &r.assignments)?,
+                None => 0.0,
+            };
+            t.push_row(vec![
+                so_name.into(),
+                pk_name.into(),
+                fmt_secs(secs),
+                fmt4(acc),
+                r.num_prototypes().to_string(),
+            ]);
+        }
+    }
+    Ok(vec![t])
+}
+
+/// ITIS-only reduction profile (Figure 1's quantitative counterpart):
+/// prototype counts and reduction factor per iteration.
+pub fn itis_profile(n: usize, threshold: usize, seed: u64) -> Result<Table> {
+    let ds = gaussian_mixture_paper(n, seed);
+    let mut t = Table::new(
+        format!("ITIS reduction profile (n={n}, t*={threshold})"),
+        &["m", "prototypes", "reduction", "seconds"],
+    );
+    for m in 1..=8 {
+        let t0 = Instant::now();
+        let r = itis(&ds.points, &ItisConfig::iterations(threshold, m))?;
+        let secs = t0.elapsed().as_secs_f64();
+        t.push_row(vec![
+            m.to_string(),
+            r.prototypes.rows().to_string(),
+            format!("{:.1}", r.reduction_factor()),
+            fmt_secs(secs),
+        ]);
+        if r.prototypes.rows() < threshold * 4 {
+            break;
+        }
+    }
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_smoke_has_expected_shape() {
+        let tables = table1(Scale::Smoke, 3).unwrap();
+        assert_eq!(tables.len(), 4);
+        let time = &tables[0];
+        assert_eq!(time.headers.len(), 2); // m + one size
+        assert!(time.rows.len() >= 3); // m = 0, 1, 2 at least
+        // Accuracy at m=1 should be close to m=0 (the paper's headline).
+        let acc = &tables[2];
+        let a0: f64 = acc.rows[0][1].parse().unwrap();
+        let a1: f64 = acc.rows[1][1].parse().unwrap();
+        assert!(a0 > 0.85 && (a0 - a1).abs() < 0.06, "a0={a0} a1={a1}");
+    }
+
+    #[test]
+    fn table2_smoke_hac_frontier() {
+        let tables = table2(Scale::Smoke, 4).unwrap();
+        let time = &tables[0];
+        // n=2000 > smoke cap 700 → m=0 infeasible ("-"), feasible later.
+        assert_eq!(time.rows[0][1], "-");
+        assert!(time.rows.iter().any(|r| r[1] != "-"), "{:?}", time.rows);
+    }
+
+    #[test]
+    fn table3_static() {
+        let tables = table3().unwrap();
+        assert_eq!(tables[0].rows.len(), 6);
+    }
+
+    #[test]
+    fn table9_smoke_runs() {
+        let tables = table9(Scale::Smoke, 5).unwrap();
+        assert!(tables[0].rows.len() >= 6); // 2 datasets × m=0..2
+    }
+
+    #[test]
+    fn tstar_sweep_smoke() {
+        let tables = table7(Scale::Smoke, 6).unwrap();
+        let time = &tables[0];
+        assert_eq!(time.rows[0][0], "None");
+        assert!(time.rows.len() >= 3);
+    }
+
+    #[test]
+    fn itis_profile_reduces_geometrically() {
+        let t = itis_profile(4000, 2, 7).unwrap();
+        let p1: usize = t.rows[0][1].parse().unwrap();
+        let p2: usize = t.rows[1][1].parse().unwrap();
+        assert!(p1 <= 2000 && p2 <= p1 / 2 + 1, "p1={p1} p2={p2}");
+    }
+
+    #[test]
+    fn dispatch_known_ids() {
+        for exp in crate::sim::EXPERIMENTS {
+            if matches!(exp.id, "table1" | "table3") {
+                assert!(crate::sim::run_experiment(exp.id, Scale::Smoke, 1).is_ok(), "{}", exp.id);
+            }
+        }
+        assert!(crate::sim::run_experiment("nope", Scale::Smoke, 1).is_err());
+    }
+}

@@ -1,0 +1,354 @@
+//! Threshold clustering (TC) — the paper's core primitive (§2.3).
+//!
+//! TC partitions `n` units into clusters of **at least** `t*` units while
+//! 4-approximating the bottleneck threshold partitioning problem (BTPP,
+//! eq. 2): the maximum within-cluster dissimilarity is at most `4λ` where
+//! `λ` is the optimum (Higgins, Sävje & Sekhon 2016). The algorithm:
+//!
+//! 1. build the `(t*−1)`-nearest-neighbor subgraph `NG` (Definition 6);
+//! 2. greedily choose **seeds**: a maximal set with no walk of length ≤ 2
+//!    between any two seeds (a maximal independent set of `NG²`);
+//! 3. grow a cluster around each seed from its adjacent vertices;
+//! 4. attach every remaining vertex (all are within two walks of a seed)
+//!    to the candidate seed with the smallest dissimilarity `d_{ℓj}`.
+//!
+//! Outside of k-NN construction this runs in `O(t*·n)` time and space.
+//!
+//! The module is deliberately graph-first: [`threshold_cluster_graph`]
+//! takes a prebuilt [`NeighborGraph`] so the coordinator can construct
+//! the graph with sharded/PJRT k-NN and reuse it, while
+//! [`threshold_cluster`] is the one-call convenience path.
+
+pub mod refine;
+
+use crate::knn::graph::NeighborGraph;
+use crate::knn::{knn_auto, KnnLists};
+use crate::linalg::{sq_dist, Matrix};
+use crate::{Error, Result};
+
+/// Order in which vertices are considered for seed selection (step 2).
+/// Higgins et al. note seed selection is a quality lever; the ablation
+/// bench compares these.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeedOrder {
+    /// Input order — fastest, fully deterministic.
+    Natural,
+    /// Lowest-degree vertices first (tends to produce more seeds, i.e.
+    /// more and smaller clusters).
+    DegreeAscending,
+    /// Highest-degree first (fewer, larger clusters).
+    DegreeDescending,
+}
+
+/// Configuration for one TC invocation.
+#[derive(Clone, Debug)]
+pub struct TcConfig {
+    /// Minimum cluster size `t*` (≥ 2; `1` returns singletons).
+    pub threshold: usize,
+    /// Seed-selection order.
+    pub seed_order: SeedOrder,
+}
+
+impl TcConfig {
+    /// Default configuration for a given threshold.
+    pub fn new(threshold: usize) -> Self {
+        Self { threshold, seed_order: SeedOrder::Natural }
+    }
+}
+
+/// Result of a TC run.
+#[derive(Clone, Debug)]
+pub struct TcResult {
+    /// Cluster id per unit, `0..num_clusters`.
+    pub assignments: Vec<u32>,
+    /// Number of clusters formed.
+    pub num_clusters: usize,
+    /// The seed unit of each cluster (index parallel to cluster id).
+    pub seeds: Vec<u32>,
+}
+
+/// One-call TC: builds the `(t*−1)`-NN graph with the best exact backend
+/// and clusters.
+pub fn threshold_cluster(points: &Matrix, config: &TcConfig) -> Result<TcResult> {
+    let n = points.rows();
+    let t = config.threshold;
+    if t <= 1 {
+        // Degenerate: every unit its own cluster.
+        return Ok(TcResult {
+            assignments: (0..n as u32).collect(),
+            num_clusters: n,
+            seeds: (0..n as u32).collect(),
+        });
+    }
+    if n <= t {
+        // Cannot form two clusters: everything in one.
+        return Ok(TcResult { assignments: vec![0; n], num_clusters: usize::from(n > 0), seeds: if n > 0 { vec![0] } else { vec![] } });
+    }
+    let knn = knn_auto(points, t - 1)?;
+    let graph = NeighborGraph::from_knn(&knn);
+    Ok(threshold_cluster_graph(&graph, points, config))
+}
+
+/// TC over a prebuilt `(t*−1)`-NN graph. `points` is only used to break
+/// ties in step 4 by true dissimilarity `d_{ℓj}`.
+pub fn threshold_cluster_graph(
+    graph: &NeighborGraph,
+    points: &Matrix,
+    config: &TcConfig,
+) -> TcResult {
+    let n = graph.len();
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut assign = vec![UNASSIGNED; n];
+    let mut seeds: Vec<u32> = Vec::new();
+
+    // ---- Step 2: greedy maximal independent set of NG². ----
+    // `blocked[v]` = v is within a walk of length ≤ 2 of an existing seed.
+    let order: Vec<u32> = match config.seed_order {
+        SeedOrder::Natural => (0..n as u32).collect(),
+        SeedOrder::DegreeAscending | SeedOrder::DegreeDescending => {
+            let mut idx: Vec<u32> = (0..n as u32).collect();
+            idx.sort_by_key(|&v| {
+                let d = graph.degree(v as usize) as i64;
+                if config.seed_order == SeedOrder::DegreeAscending { d } else { -d }
+            });
+            idx
+        }
+    };
+    let mut blocked = vec![false; n];
+    for &v in &order {
+        let v = v as usize;
+        if blocked[v] {
+            continue;
+        }
+        let cluster_id = seeds.len() as u32;
+        seeds.push(v as u32);
+        blocked[v] = true;
+        // ---- Step 3 (fused): grow the cluster from the seed's neighbors,
+        // and block everything within two walks so future seeds satisfy
+        // the independence condition.
+        assign[v] = cluster_id;
+        for &u in graph.neighbors(v) {
+            let u = u as usize;
+            blocked[u] = true;
+            // A vertex adjacent to a seed belongs to that seed's cluster;
+            // adjacency to two seeds is impossible (their seeds would be
+            // two walks apart).
+            assign[u] = cluster_id;
+            for &w in graph.neighbors(u) {
+                blocked[w as usize] = true;
+            }
+        }
+    }
+
+    // ---- Step 4: attach the remaining vertices. Every unassigned vertex
+    // has an assigned *grow-phase* vertex among its neighbors (it is two
+    // walks from some seed); pick the candidate seed minimizing the true
+    // dissimilarity d_{ℓj}.
+    // Snapshot of grow-phase assignment: assignments made above.
+    let grow_assign = assign.clone();
+    for j in 0..n {
+        if assign[j] != UNASSIGNED {
+            continue;
+        }
+        let mut best_cluster = UNASSIGNED;
+        let mut best_d = f32::INFINITY;
+        for &u in graph.neighbors(j) {
+            let c = grow_assign[u as usize];
+            if c == UNASSIGNED {
+                continue;
+            }
+            let seed = seeds[c as usize] as usize;
+            let d = sq_dist(points.row(j), points.row(seed));
+            if d < best_d || (d == best_d && c < best_cluster) {
+                best_d = d;
+                best_cluster = c;
+            }
+        }
+        debug_assert_ne!(best_cluster, UNASSIGNED, "vertex {j} not within 2 walks of any seed");
+        assign[j] = best_cluster;
+    }
+
+    TcResult { assignments: assign, num_clusters: seeds.len(), seeds }
+}
+
+/// Verify the TC invariants on a result; used by tests and by the
+/// pipeline's (optional) self-check mode. Returns the observed maximum
+/// within-cluster squared dissimilarity.
+pub fn validate(
+    result: &TcResult,
+    graph: &NeighborGraph,
+    threshold: usize,
+) -> Result<()> {
+    let n = graph.len();
+    if result.assignments.len() != n {
+        return Err(Error::Shape("assignment length".into()));
+    }
+    // Spanning + cluster size ≥ t*.
+    let mut sizes = vec![0usize; result.num_clusters];
+    for &a in &result.assignments {
+        if a as usize >= result.num_clusters {
+            return Err(Error::InvalidArgument(format!("cluster id {a} out of range")));
+        }
+        sizes[a as usize] += 1;
+    }
+    if let Some(&min) = sizes.iter().min() {
+        if result.num_clusters > 1 && min < threshold {
+            return Err(Error::InvalidArgument(format!(
+                "cluster of size {min} < t*={threshold}"
+            )));
+        }
+    }
+    // Seed independence in NG²: no two seeds within two walks.
+    let seed_set: std::collections::HashSet<u32> = result.seeds.iter().copied().collect();
+    for &s in &result.seeds {
+        let mut bad = false;
+        graph.for_two_walk(s as usize, |v, _| {
+            if seed_set.contains(&v) {
+                bad = true;
+            }
+        });
+        if bad {
+            return Err(Error::InvalidArgument(format!("seed {s} within 2 walks of another seed")));
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: TC from precomputed k-NN lists.
+pub fn threshold_cluster_knn(
+    knn: &KnnLists,
+    points: &Matrix,
+    config: &TcConfig,
+) -> TcResult {
+    let graph = NeighborGraph::from_knn(knn);
+    threshold_cluster_graph(&graph, points, config)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+    use crate::metrics;
+    use crate::rng::Xoshiro256;
+
+    fn run_tc(points: &Matrix, t: usize) -> (TcResult, NeighborGraph) {
+        let knn = knn_brute(points, t - 1).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        let r = threshold_cluster_graph(&g, points, &TcConfig::new(t));
+        (r, g)
+    }
+
+    #[test]
+    fn all_points_assigned_and_sizes_hold() {
+        let ds = gaussian_mixture_paper(1000, 51);
+        for t in [2usize, 3, 5, 8] {
+            let (r, g) = run_tc(&ds.points, t);
+            validate(&r, &g, t).unwrap();
+            assert_eq!(metrics::cluster_sizes(&r.assignments).len(), r.num_clusters);
+            assert!(metrics::min_cluster_size(&r.assignments) >= t, "t={t}");
+        }
+    }
+
+    #[test]
+    fn reduction_factor_at_least_threshold() {
+        // n* ≤ n / t*: each cluster has ≥ t* units.
+        let ds = gaussian_mixture_paper(2000, 52);
+        for t in [2usize, 4] {
+            let (r, _) = run_tc(&ds.points, t);
+            assert!(r.num_clusters <= 2000 / t, "t={t}, n*={}", r.num_clusters);
+            assert!(r.num_clusters >= 1);
+        }
+    }
+
+    #[test]
+    fn four_approximation_bound() {
+        // Within-cluster max distance ≤ 4 × (max edge weight of NG), and the
+        // max edge weight is itself a lower bound for λ — so this checks the
+        // paper's 4λ guarantee end-to-end.
+        let ds = gaussian_mixture_paper(600, 53);
+        for t in [2usize, 3, 6] {
+            let (r, g) = run_tc(&ds.points, t);
+            let bound = 4.0 * (g.max_weight() as f64).sqrt();
+            let got = metrics::bottleneck(&ds.points, &r.assignments, usize::MAX).unwrap();
+            assert!(got <= bound + 1e-5, "t={t}: {got} > {bound}");
+        }
+    }
+
+    #[test]
+    fn threshold_one_gives_singletons() {
+        let ds = gaussian_mixture_paper(20, 54);
+        let r = threshold_cluster(&ds.points, &TcConfig::new(1)).unwrap();
+        assert_eq!(r.num_clusters, 20);
+    }
+
+    #[test]
+    fn tiny_inputs_one_cluster() {
+        let ds = gaussian_mixture_paper(3, 55);
+        let r = threshold_cluster(&ds.points, &TcConfig::new(5)).unwrap();
+        assert_eq!(r.num_clusters, 1);
+        assert_eq!(r.assignments, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn seeds_in_own_cluster() {
+        let ds = gaussian_mixture_paper(400, 56);
+        let (r, _) = run_tc(&ds.points, 3);
+        for (c, &s) in r.seeds.iter().enumerate() {
+            assert_eq!(r.assignments[s as usize], c as u32);
+        }
+    }
+
+    #[test]
+    fn well_separated_blobs_not_merged() {
+        // Two far-apart blobs of 10 points each; t*=2 must never produce a
+        // cluster spanning both blobs.
+        let mut rng = Xoshiro256::seed_from_u64(57);
+        let mut data = Vec::new();
+        for b in 0..2 {
+            for _ in 0..10 {
+                data.push((b as f32) * 1000.0 + rng.next_gaussian() as f32);
+                data.push(rng.next_gaussian() as f32);
+            }
+        }
+        let m = Matrix::from_vec(data, 20, 2).unwrap();
+        let (r, _) = run_tc(&m, 2);
+        for c in 0..r.num_clusters as u32 {
+            let members: Vec<usize> =
+                (0..20).filter(|&i| r.assignments[i] == c).collect();
+            let blob0 = members.iter().any(|&i| i < 10);
+            let blob1 = members.iter().any(|&i| i >= 10);
+            assert!(!(blob0 && blob1), "cluster {c} spans blobs: {members:?}");
+        }
+    }
+
+    #[test]
+    fn seed_orders_all_valid() {
+        let ds = gaussian_mixture_paper(500, 58);
+        let knn = knn_brute(&ds.points, 2).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        for order in [SeedOrder::Natural, SeedOrder::DegreeAscending, SeedOrder::DegreeDescending] {
+            let cfg = TcConfig { threshold: 3, seed_order: order };
+            let r = threshold_cluster_graph(&g, &ds.points, &cfg);
+            validate(&r, &g, 3).unwrap();
+        }
+    }
+
+    #[test]
+    fn property_random_workloads() {
+        // Hand-rolled property test: random n, t*, seeds — invariants hold.
+        let mut rng = Xoshiro256::seed_from_u64(59);
+        for case in 0..25 {
+            let n = 30 + (rng.next_below(400) as usize);
+            let t = 2 + (rng.next_below(5) as usize);
+            let ds = gaussian_mixture_paper(n, 1000 + case);
+            if n <= t {
+                continue;
+            }
+            let (r, g) = run_tc(&ds.points, t);
+            validate(&r, &g, t).expect("invariants");
+            // Spanning: every point in exactly one cluster (assignment total).
+            assert_eq!(r.assignments.len(), n);
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Polynomial-time refinements of a TC clustering.
+//!
+//! §2.3 of the paper: "polynomial-time improvements to this algorithm —
+//! for example, in selecting cluster seeds or splitting large clusters —
+//! may improve the performance of TC without substantially increasing
+//! its runtime." Seed-order selection lives in [`super::SeedOrder`];
+//! this module implements the other two:
+//!
+//! * [`reassign_boundary`] — one local-improvement sweep: move each
+//!   non-seed unit to the cluster with the nearest *seed* if that is
+//!   strictly closer than its current seed and the move does not break
+//!   the donor's `|V| ≥ t*` guarantee.
+//! * [`split_large_clusters`] — any cluster with `≥ 2·t*` units is split
+//!   greedily into valid-size sub-clusters seeded at its two mutually
+//!   farthest members (reduces within-cluster spread; never violates the
+//!   size threshold).
+//!
+//! Both preserve every TC invariant (validated in tests) and both are
+//! `O(t*·n)`-ish passes, honoring the "without substantially increasing
+//! its runtime" constraint.
+
+use super::TcResult;
+use crate::knn::graph::NeighborGraph;
+use crate::linalg::{sq_dist, Matrix};
+
+/// One boundary-reassignment sweep. Returns the number of moves.
+pub fn reassign_boundary(
+    result: &mut TcResult,
+    graph: &NeighborGraph,
+    points: &Matrix,
+    threshold: usize,
+) -> usize {
+    let n = result.assignments.len();
+    let mut sizes = vec![0usize; result.num_clusters];
+    for &a in &result.assignments {
+        sizes[a as usize] += 1;
+    }
+    let seed_of = |c: u32| result.seeds[c as usize] as usize;
+    let seed_set: std::collections::HashSet<u32> = result.seeds.iter().copied().collect();
+    let mut moves = 0usize;
+    for i in 0..n {
+        if seed_set.contains(&(i as u32)) {
+            continue; // seeds anchor their clusters
+        }
+        let cur = result.assignments[i];
+        if sizes[cur as usize] <= threshold {
+            continue; // donor would fall under t*
+        }
+        let d_cur = sq_dist(points.row(i), points.row(seed_of(cur)));
+        // Candidate clusters: those owning a neighbor of i (stays within
+        // the walk-≤2 structure TC's approximation bound relies on).
+        let mut best = (cur, d_cur);
+        for &u in graph.neighbors(i) {
+            let c = result.assignments[u as usize];
+            if c == cur {
+                continue;
+            }
+            let d = sq_dist(points.row(i), points.row(seed_of(c)));
+            if d < best.1 {
+                best = (c, d);
+            }
+        }
+        if best.0 != cur {
+            sizes[cur as usize] -= 1;
+            sizes[best.0 as usize] += 1;
+            result.assignments[i] = best.0;
+            moves += 1;
+        }
+    }
+    moves
+}
+
+/// Split every cluster of size ≥ `2·t*` into two valid halves around its
+/// two mutually farthest members (exact on the cluster, which TC keeps
+/// small). Returns the number of splits performed.
+pub fn split_large_clusters(
+    result: &mut TcResult,
+    points: &Matrix,
+    threshold: usize,
+) -> usize {
+    let mut members: Vec<Vec<u32>> = vec![Vec::new(); result.num_clusters];
+    for (i, &a) in result.assignments.iter().enumerate() {
+        members[a as usize].push(i as u32);
+    }
+    let mut splits = 0usize;
+    let mut queue: std::collections::VecDeque<u32> =
+        (0..result.num_clusters as u32).collect();
+    while let Some(c) = queue.pop_front() {
+        let m = std::mem::take(&mut members[c as usize]);
+        if m.len() < 2 * threshold {
+            members[c as usize] = m;
+            continue;
+        }
+        // Farthest pair (clusters are small — |V| is O(t*) in TC output,
+        // so the quadratic scan is bounded).
+        let mut far = (0usize, 1usize, -1.0f32);
+        for a in 0..m.len() {
+            for b in (a + 1)..m.len() {
+                let d = sq_dist(points.row(m[a] as usize), points.row(m[b] as usize));
+                if d > far.2 {
+                    far = (a, b, d);
+                }
+            }
+        }
+        let (pa, pb) = (m[far.0] as usize, m[far.1] as usize);
+        // Partition by nearer pole, then rebalance to keep both ≥ t*.
+        let mut part: Vec<(f32, u32, bool)> = m
+            .iter()
+            .map(|&i| {
+                let da = sq_dist(points.row(i as usize), points.row(pa));
+                let db = sq_dist(points.row(i as usize), points.row(pb));
+                (da - db, i, da <= db)
+            })
+            .collect();
+        // Sort by affinity so rebalancing moves the least-committed units.
+        part.sort_by(|x, y| x.0.partial_cmp(&y.0).unwrap());
+        let mut a_side: Vec<u32> = part.iter().filter(|p| p.2).map(|p| p.1).collect();
+        let mut b_side: Vec<u32> = part.iter().filter(|p| !p.2).map(|p| p.1).collect();
+        while a_side.len() < threshold {
+            a_side.push(b_side.remove(0));
+        }
+        while b_side.len() < threshold {
+            b_side.push(a_side.pop().unwrap());
+        }
+        // New cluster id for the b side; a side keeps c.
+        let new_id = result.num_clusters as u32;
+        result.num_clusters += 1;
+        result.seeds.push(nearest_to_centroid(points, &b_side));
+        result.seeds[c as usize] = nearest_to_centroid(points, &a_side);
+        for &i in &b_side {
+            result.assignments[i as usize] = new_id;
+        }
+        splits += 1;
+        // Either half may still be ≥ 2t*.
+        if a_side.len() >= 2 * threshold {
+            queue.push_back(c);
+        }
+        if b_side.len() >= 2 * threshold {
+            queue.push_back(new_id);
+        }
+        members[c as usize] = a_side;
+        members.push(b_side);
+    }
+    splits
+}
+
+fn nearest_to_centroid(points: &Matrix, members: &[u32]) -> u32 {
+    let d = points.cols();
+    let mut mean = vec![0.0f64; d];
+    for &i in members {
+        for (m, &x) in mean.iter_mut().zip(points.row(i as usize)) {
+            *m += x as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= members.len() as f64;
+    }
+    let meanf: Vec<f32> = mean.iter().map(|&x| x as f32).collect();
+    *members
+        .iter()
+        .min_by(|&&a, &&b| {
+            sq_dist(points.row(a as usize), &meanf)
+                .partial_cmp(&sq_dist(points.row(b as usize), &meanf))
+                .unwrap()
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+    use crate::metrics;
+    use crate::tc::{threshold_cluster_graph, TcConfig};
+
+    fn setup(n: usize, t: usize, seed: u64) -> (Matrix, NeighborGraph, TcResult) {
+        let ds = gaussian_mixture_paper(n, seed);
+        let knn = knn_brute(&ds.points, t - 1).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        let r = threshold_cluster_graph(&g, &ds.points, &TcConfig::new(t));
+        (ds.points, g, r)
+    }
+
+    #[test]
+    fn reassign_never_breaks_threshold() {
+        let (points, g, mut r) = setup(800, 3, 131);
+        let moves = reassign_boundary(&mut r, &g, &points, 3);
+        assert!(metrics::min_cluster_size(&r.assignments) >= 3, "moves={moves}");
+        assert_eq!(r.assignments.len(), 800);
+    }
+
+    #[test]
+    fn reassign_does_not_worsen_mean_seed_distance() {
+        let (points, g, mut r) = setup(600, 2, 132);
+        let seed_dist = |r: &TcResult| -> f64 {
+            (0..600)
+                .map(|i| {
+                    sq_dist(
+                        points.row(i),
+                        points.row(r.seeds[r.assignments[i] as usize] as usize),
+                    ) as f64
+                })
+                .sum::<f64>()
+        };
+        let before = seed_dist(&r);
+        reassign_boundary(&mut r, &g, &points, 2);
+        let after = seed_dist(&r);
+        assert!(after <= before + 1e-6, "{before} -> {after}");
+    }
+
+    #[test]
+    fn split_eliminates_oversized_clusters() {
+        let (points, _, mut r) = setup(1000, 2, 133);
+        let t = 2;
+        split_large_clusters(&mut r, &points, t);
+        let sizes = metrics::cluster_sizes(&r.assignments);
+        assert!(sizes.iter().all(|&s| s >= t), "{sizes:?}");
+        assert!(sizes.iter().all(|&s| s < 2 * t + t), "oversized remain: {sizes:?}");
+        // Seeds stay members of their clusters.
+        for (c, &s) in r.seeds.iter().enumerate() {
+            assert_eq!(r.assignments[s as usize], c as u32);
+        }
+    }
+
+    #[test]
+    fn split_reduces_bottleneck() {
+        let (points, _, mut r) = setup(500, 4, 134);
+        let before = metrics::bottleneck(&points, &r.assignments, usize::MAX).unwrap();
+        split_large_clusters(&mut r, &points, 4);
+        let after = metrics::bottleneck(&points, &r.assignments, usize::MAX).unwrap();
+        assert!(after <= before + 1e-9, "{before} -> {after}");
+        assert!(metrics::min_cluster_size(&r.assignments) >= 4);
+    }
+
+    #[test]
+    fn refinements_preserve_spanning() {
+        let (points, g, mut r) = setup(700, 3, 135);
+        reassign_boundary(&mut r, &g, &points, 3);
+        split_large_clusters(&mut r, &points, 3);
+        // Every unit assigned to a valid cluster id.
+        assert!(r.assignments.iter().all(|&a| (a as usize) < r.num_clusters));
+        let sizes = metrics::cluster_sizes(&r.assignments);
+        assert_eq!(sizes.iter().sum::<usize>(), 700);
+    }
+}

@@ -1,0 +1,165 @@
+//! Cross-module integration tests: IHTC invariants at realistic scale,
+//! config-file driven runs, CSV round trips, and failure injection.
+
+use ihtc::cluster::hac::Linkage;
+use ihtc::config::PipelineConfig;
+use ihtc::coordinator::driver;
+use ihtc::data::synth::{gaussian_mixture_paper, realistic, TABLE3};
+use ihtc::data::{csv, Preprocess};
+use ihtc::hybrid::{FinalClusterer, Ihtc};
+use ihtc::metrics;
+use ihtc::rng::Xoshiro256;
+
+#[test]
+fn ihtc_kmeans_accuracy_matches_paper_band() {
+    // Paper Table 1: accuracy ≈ 0.9239 at n = 10⁴, roughly flat in m.
+    let ds = gaussian_mixture_paper(10_000, 1001);
+    let truth = ds.labels.as_ref().unwrap();
+    let mut accs = Vec::new();
+    for m in 0..=4 {
+        let r = Ihtc::new(2, m, FinalClusterer::KMeans { k: 3, restarts: 6 })
+            .run(&ds.points)
+            .unwrap();
+        accs.push(metrics::prediction_accuracy(truth, &r.assignments).unwrap());
+    }
+    // The m = 0 baseline should land in the paper's band and decay by at
+    // most a couple of points over the first four iterations.
+    assert!(accs[0] > 0.90, "baseline {accs:?}");
+    for (m, &a) in accs.iter().enumerate() {
+        assert!(a > accs[0] - 0.03, "m={m}: {accs:?}");
+    }
+}
+
+#[test]
+fn ihtc_cluster_size_guarantee_large() {
+    let ds = gaussian_mixture_paper(20_000, 1002);
+    let r = Ihtc::new(2, 5, FinalClusterer::KMeans { k: 3, restarts: 2 })
+        .run(&ds.points)
+        .unwrap();
+    assert!(metrics::min_cluster_size(&r.assignments) >= 32); // 2⁵
+}
+
+#[test]
+fn itis_bottleneck_growth_is_bounded() {
+    // ITIS prototypes drift from their units, but the composed clusters'
+    // bottleneck should stay within a small factor of the one-level bound.
+    let ds = gaussian_mixture_paper(4_000, 1003);
+    let r = ihtc::itis::itis(&ds.points, &ihtc::itis::ItisConfig::iterations(2, 1)).unwrap();
+    let map = r.unit_to_prototype();
+    let bn = metrics::bottleneck(&ds.points, &map, 200).unwrap();
+    // t* = 2, m = 1: direct TC bound is 4λ where λ ≤ max 1-NN distance.
+    let knn = ihtc::knn::knn_auto(&ds.points, 1).unwrap();
+    let max_nn = (0..4000)
+        .map(|i| knn.distances(i)[0])
+        .fold(0.0f32, f32::max)
+        .sqrt() as f64;
+    assert!(bn <= 4.0 * max_nn + 1e-6, "bottleneck {bn} vs 4λ̂ {}", 4.0 * max_nn);
+}
+
+#[test]
+fn hac_hybrid_on_analogue_beats_cap() {
+    let spec = &TABLE3[0]; // PM 2.5
+    let ds = realistic(spec, 10, 1004);
+    let prep = Preprocess { standardize: true, pca_variance: Some(0.99), max_components: None }
+        .apply(&ds)
+        .unwrap();
+    let r = Ihtc::new(2, 3, FinalClusterer::Hac { k: spec.classes, linkage: Linkage::Ward })
+        .run(&prep.points)
+        .unwrap();
+    assert!(r.num_prototypes() < prep.len() / 4);
+    let ratio = metrics::bss_tss(&prep.points, &r.assignments).unwrap();
+    assert!(ratio > 0.3, "BSS/TSS {ratio}");
+}
+
+#[test]
+fn config_file_driven_run() {
+    let dir = std::env::temp_dir().join("ihtc_itest");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg_path = dir.join("run.json");
+    let out_path = dir.join("assign.csv");
+    std::fs::write(
+        &cfg_path,
+        format!(
+            r#"{{
+              "name": "itest",
+              "source": {{"kind": "paper_mixture", "n": 2500}},
+              "threshold": 2,
+              "iterations": 2,
+              "workers": 2,
+              "clusterer": {{"kind": "kmeans", "k": 3, "restarts": 2}},
+              "output": "{}"
+            }}"#,
+            out_path.display()
+        ),
+    )
+    .unwrap();
+    let cfg = PipelineConfig::from_file(cfg_path.to_str().unwrap()).unwrap();
+    let (assign, report) = driver::run(&cfg).unwrap();
+    assert_eq!(assign.len(), 2500);
+    assert_eq!(report.name, "itest");
+    let text = std::fs::read_to_string(&out_path).unwrap();
+    assert_eq!(text.lines().count(), 2501);
+}
+
+#[test]
+fn csv_source_round_trip_through_pipeline() {
+    let dir = std::env::temp_dir().join("ihtc_itest_csv");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data_path = dir.join("data.csv");
+    let ds = gaussian_mixture_paper(1200, 1005);
+    csv::write_csv(&ds, &data_path).unwrap();
+    let mut cfg = PipelineConfig::default();
+    cfg.source = ihtc::config::DataSource::Csv {
+        path: data_path.to_string_lossy().into_owned(),
+        label_column: Some(2),
+    };
+    cfg.workers = 2;
+    let (_, report) = driver::run(&cfg).unwrap();
+    assert_eq!(report.n, 1200);
+    // Labels survived the CSV hop → accuracy computable and sane.
+    assert!(report.accuracy.unwrap() > 0.8, "{:?}", report.accuracy);
+}
+
+#[test]
+fn pipeline_error_paths() {
+    // Missing CSV file.
+    let mut cfg = PipelineConfig::default();
+    cfg.source = ihtc::config::DataSource::Csv { path: "/no/such/file.csv".into(), label_column: None };
+    assert!(driver::run(&cfg).is_err());
+    // Invalid config json.
+    assert!(PipelineConfig::from_json("{not json").is_err());
+}
+
+#[test]
+fn duplicate_heavy_dataset_survives_full_stack() {
+    // Pathological input: 60% of points identical. TC, ITIS, k-means and
+    // the metrics must all cope (zero distances, degenerate clusters).
+    let mut rng = Xoshiro256::seed_from_u64(1006);
+    let n = 2000;
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        if i < 1200 {
+            data.push(5.0f32);
+            data.push(5.0f32);
+        } else {
+            data.push(rng.next_gaussian() as f32 * 3.0);
+            data.push(rng.next_gaussian() as f32 * 3.0);
+        }
+    }
+    let m = ihtc::linalg::Matrix::from_vec(data, n, 2).unwrap();
+    let r = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 2 }).run(&m).unwrap();
+    assert_eq!(r.assignments.len(), n);
+    // All duplicates must land in the same final cluster.
+    let first = r.assignments[0];
+    assert!(r.assignments[..1200].iter().all(|&a| a == first));
+}
+
+#[test]
+fn seeded_runs_are_reproducible_end_to_end() {
+    let mut cfg = PipelineConfig::default();
+    cfg.source = ihtc::config::DataSource::PaperMixture { n: 3000 };
+    cfg.workers = 3;
+    let (a1, _) = driver::run(&cfg).unwrap();
+    let (a2, _) = driver::run(&cfg).unwrap();
+    assert_eq!(a1, a2, "same seed + config must give identical clusterings");
+}

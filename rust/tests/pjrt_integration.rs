@@ -1,0 +1,112 @@
+//! Integration tests over the PJRT runtime: AOT artifacts loaded through
+//! the xla crate must agree with the native Rust implementations.
+//!
+//! These tests skip (with a message) when `artifacts/manifest.json` is
+//! missing so `cargo test` works before `make artifacts`.
+
+use ihtc::cluster::kmeans::{kmeans_with_backend, KMeansConfig, NativeAssign};
+use ihtc::data::synth::gaussian_mixture_paper;
+use ihtc::knn::{knn_auto, knn_chunked};
+use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Engine::load(dir).expect("engine load"))
+}
+
+#[test]
+fn knn_pjrt_matches_native_distances() {
+    let Some(engine) = engine() else { return };
+    let ds = gaussian_mixture_paper(3000, 71);
+    let native = knn_auto(&ds.points, 5).unwrap();
+    let pjrt = knn_chunked(
+        &ds.points,
+        5,
+        engine.tile.knn_q,
+        engine.tile.knn_r,
+        &PjrtChunks { engine: &engine },
+    )
+    .unwrap();
+    for i in 0..3000 {
+        let a = native.distances(i);
+        let b = pjrt.distances(i);
+        for (x, y) in a.iter().zip(b) {
+            assert!(
+                (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                "row {i}: {a:?} vs {b:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn knn_pjrt_handles_ragged_tail() {
+    // n not a multiple of the tile sizes exercises the padding path.
+    let Some(engine) = engine() else { return };
+    let ds = gaussian_mixture_paper(1371, 72);
+    let native = knn_auto(&ds.points, 3).unwrap();
+    let pjrt = knn_chunked(
+        &ds.points,
+        3,
+        engine.tile.knn_q,
+        engine.tile.knn_r,
+        &PjrtChunks { engine: &engine },
+    )
+    .unwrap();
+    for i in 0..1371 {
+        for (x, y) in native.distances(i).iter().zip(pjrt.distances(i)) {
+            assert!((x - y).abs() <= 1e-3 * (1.0 + x.abs()), "row {i}");
+        }
+    }
+}
+
+#[test]
+fn kmeans_pjrt_matches_native_objective() {
+    let Some(engine) = engine() else { return };
+    let ds = gaussian_mixture_paper(5000, 73);
+    let cfg = KMeansConfig { restarts: 2, ..KMeansConfig::new(3) };
+    let native = kmeans_with_backend(&ds.points, None, &cfg, &NativeAssign).unwrap();
+    let pjrt =
+        kmeans_with_backend(&ds.points, None, &cfg, &PjrtAssign { engine: &engine }).unwrap();
+    // Same seeds + same argmin semantics → identical assignments.
+    assert_eq!(native.assignments, pjrt.assignments);
+    assert!(
+        (native.wcss - pjrt.wcss).abs() < 1e-2 * (1.0 + native.wcss),
+        "{} vs {}",
+        native.wcss,
+        pjrt.wcss
+    );
+}
+
+#[test]
+fn kmeans_pjrt_rejects_weights() {
+    let Some(engine) = engine() else { return };
+    let ds = gaussian_mixture_paper(100, 74);
+    let w = vec![1.0f32; 100];
+    let cfg = KMeansConfig::new(3);
+    let res = kmeans_with_backend(&ds.points, Some(&w), &cfg, &PjrtAssign { engine: &engine });
+    assert!(res.is_err());
+}
+
+#[test]
+fn pjrt_pipeline_end_to_end() {
+    let Some(_engine) = engine() else { return };
+    // Full driver run with backend = pjrt.
+    let mut cfg = ihtc::config::PipelineConfig::default();
+    cfg.source = ihtc::config::DataSource::PaperMixture { n: 3000 };
+    cfg.backend = ihtc::config::Backend::Pjrt;
+    cfg.workers = 2;
+    // Point the engine loader at the manifest-relative dir.
+    std::env::set_var(
+        "IHTC_ARTIFACTS",
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    );
+    let (assign, report) = ihtc::coordinator::driver::run(&cfg).unwrap();
+    std::env::remove_var("IHTC_ARTIFACTS");
+    assert_eq!(assign.len(), 3000);
+    assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
+}

@@ -1,0 +1,271 @@
+//! Randomized cross-stack property suite (hand-rolled; proptest is not
+//! available offline). Each case draws a workload from a seeded PRNG and
+//! checks the system invariants the paper's guarantees rest on.
+
+use ihtc::cluster::hac::{hac_cut, HacConfig, Linkage};
+use ihtc::data::synth::{paper_mixture_spec, Component, MixtureSpec};
+use ihtc::hybrid::{FinalClusterer, Ihtc};
+use ihtc::itis::{itis, ItisConfig};
+use ihtc::knn::graph::NeighborGraph;
+use ihtc::knn::{knn_auto, knn_brute};
+use ihtc::linalg::Matrix;
+use ihtc::metrics;
+use ihtc::rng::Xoshiro256;
+use ihtc::tc::{threshold_cluster_graph, validate, TcConfig};
+
+/// Random mixture with 1–5 components in 1–6 dimensions.
+fn random_mixture(rng: &mut Xoshiro256) -> MixtureSpec {
+    let k = 1 + rng.next_below(5) as usize;
+    let d = 1 + rng.next_below(6) as usize;
+    let components = (0..k)
+        .map(|_| Component {
+            weight: 0.2 + rng.next_f64(),
+            mean: (0..d).map(|_| rng.next_gaussian() * 8.0).collect(),
+            std: (0..d).map(|_| 0.2 + rng.next_f64() * 2.0).collect(),
+            corr: if rng.next_below(3) == 0 { 0.5 } else { 0.0 },
+            skew: rng.next_below(4) == 0,
+        })
+        .collect();
+    MixtureSpec { name: "prop".into(), components, noise_frac: rng.next_f64() * 0.05 }
+}
+
+#[test]
+fn tc_invariants_hold_on_random_workloads() {
+    let mut rng = Xoshiro256::seed_from_u64(0xF00D);
+    for case in 0..30 {
+        let spec = random_mixture(&mut rng);
+        let n = 40 + rng.next_below(500) as usize;
+        let t = 2 + rng.next_below(6) as usize;
+        let ds = spec.sample(n, 5000 + case);
+        if n <= t {
+            continue;
+        }
+        let knn = knn_auto(&ds.points, t - 1).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        let r = threshold_cluster_graph(&g, &ds.points, &TcConfig::new(t));
+        validate(&r, &g, t).unwrap_or_else(|e| panic!("case {case}: {e}"));
+        // 4λ bound via the max graph edge (a lower bound on λ).
+        let bound = 4.0 * (g.max_weight() as f64).sqrt();
+        let got = metrics::bottleneck(&ds.points, &r.assignments, usize::MAX).unwrap();
+        assert!(got <= bound + 1e-5, "case {case}: {got} > {bound}");
+    }
+}
+
+#[test]
+fn itis_composition_and_mass_conservation() {
+    let mut rng = Xoshiro256::seed_from_u64(0xBEEF);
+    for case in 0..20 {
+        let spec = random_mixture(&mut rng);
+        let n = 60 + rng.next_below(800) as usize;
+        let t = 2 + rng.next_below(3) as usize;
+        let m = 1 + rng.next_below(3) as usize;
+        let ds = spec.sample(n, 6000 + case);
+        let r = itis(&ds.points, &ItisConfig::iterations(t, m)).unwrap();
+        // Mass conservation.
+        assert_eq!(r.weights.iter().map(|&w| w as u64).sum::<u64>(), n as u64);
+        // Composition consistency.
+        let map = r.unit_to_prototype();
+        let np = r.prototypes.rows();
+        assert!(map.iter().all(|&p| (p as usize) < np));
+        // Reduction guarantee per performed iteration.
+        assert!(np <= n / t.pow(r.iterations() as u32).max(1) || r.iterations() == 0);
+    }
+}
+
+#[test]
+fn ihtc_size_guarantee_random() {
+    let mut rng = Xoshiro256::seed_from_u64(0xCAFE);
+    for case in 0..12 {
+        let spec = random_mixture(&mut rng);
+        let n = 300 + rng.next_below(1200) as usize;
+        let t = 2 + rng.next_below(2) as usize;
+        let m = 1 + rng.next_below(3) as usize;
+        let k = 2 + rng.next_below(3) as usize;
+        let ds = spec.sample(n, 7000 + case);
+        let r = Ihtc::new(t, m, FinalClusterer::KMeans { k, restarts: 2 })
+            .run(&ds.points)
+            .unwrap();
+        let guarantee = t.pow(m as u32);
+        // Guarantee applies when the reduction actually ran m iterations.
+        if r.itis.iterations() == m {
+            assert!(
+                metrics::min_cluster_size(&r.assignments) >= guarantee,
+                "case {case}: t={t} m={m}"
+            );
+        }
+    }
+}
+
+#[test]
+fn knn_backends_agree_on_random_dims() {
+    let mut rng = Xoshiro256::seed_from_u64(0xD1CE);
+    for case in 0..10 {
+        let spec = random_mixture(&mut rng);
+        let n = 50 + rng.next_below(300) as usize;
+        let k = 1 + rng.next_below(6) as usize;
+        let ds = spec.sample(n, 8000 + case);
+        if k >= n {
+            continue;
+        }
+        let a = knn_brute(&ds.points, k).unwrap();
+        let b = knn_auto(&ds.points, k).unwrap();
+        for i in 0..n {
+            for (x, y) in a.distances(i).iter().zip(b.distances(i)) {
+                assert!(
+                    (x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                    "case {case} row {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn hac_cut_partition_properties() {
+    let mut rng = Xoshiro256::seed_from_u64(0xFACE);
+    for case in 0..10 {
+        let spec = random_mixture(&mut rng);
+        let n = 20 + rng.next_below(150) as usize;
+        let ds = spec.sample(n, 9000 + case);
+        let linkage = match rng.next_below(4) {
+            0 => Linkage::Ward,
+            1 => Linkage::Average,
+            2 => Linkage::Complete,
+            _ => Linkage::Single,
+        };
+        let k = 1 + rng.next_below((n as u64).min(6)) as usize;
+        let labels =
+            hac_cut(&ds.points, k, &HacConfig { linkage, ..Default::default() }).unwrap();
+        assert_eq!(labels.len(), n);
+        assert_eq!(metrics::num_clusters(&labels), k, "case {case} {linkage:?}");
+    }
+}
+
+#[test]
+fn metrics_consistency_random() {
+    let mut rng = Xoshiro256::seed_from_u64(0xAB1E);
+    for _ in 0..15 {
+        let n = 20 + rng.next_below(200) as usize;
+        let ka = 1 + rng.next_below(5) as u32;
+        let kb = 1 + rng.next_below(5) as u32;
+        let a: Vec<u32> = (0..n).map(|_| rng.next_below(ka as u64) as u32).collect();
+        let b: Vec<u32> = (0..n).map(|_| rng.next_below(kb as u64) as u32).collect();
+        // ARI/NMI symmetric; self-comparison = 1 (when not all-identical-degenerate).
+        let ab = metrics::adjusted_rand_index(&a, &b).unwrap();
+        let ba = metrics::adjusted_rand_index(&b, &a).unwrap();
+        assert!((ab - ba).abs() < 1e-9);
+        let nab = metrics::normalized_mutual_info(&a, &b).unwrap();
+        let nba = metrics::normalized_mutual_info(&b, &a).unwrap();
+        assert!((nab - nba).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&nab));
+        assert!((metrics::adjusted_rand_index(&a, &a).unwrap() - 1.0).abs() < 1e-9);
+        // Accuracy ≥ fraction of the largest truth class (majority rule).
+        let acc = metrics::prediction_accuracy(&a, &b).unwrap();
+        let sizes = metrics::cluster_sizes(&a);
+        let majority = *sizes.iter().max().unwrap() as f64 / n as f64;
+        if kb == 1 {
+            assert!(acc >= majority - 1e-9, "{acc} < {majority}");
+        }
+        assert!(acc <= 1.0 && acc >= 0.0);
+    }
+}
+
+#[test]
+fn paper_mixture_spec_matches_section4() {
+    // Pin the simulation model to the paper's exact parameters.
+    let spec = paper_mixture_spec();
+    assert_eq!(spec.components.len(), 3);
+    let w: Vec<f64> = spec.components.iter().map(|c| c.weight).collect();
+    assert_eq!(w, vec![0.5, 0.3, 0.2]);
+    assert_eq!(spec.components[0].mean, vec![1.0, 2.0]);
+    assert_eq!(spec.components[1].mean, vec![7.0, 8.0]);
+    assert_eq!(spec.components[2].mean, vec![3.0, 5.0]);
+    // Variances: diag(1,.5), diag(2,1), diag(3,4) → stds are sqrt.
+    let close = |a: f64, b: f64| (a - b).abs() < 1e-12;
+    assert!(close(spec.components[0].std[0], 1.0));
+    assert!(close(spec.components[0].std[1], 0.5f64.sqrt()));
+    assert!(close(spec.components[1].std[0], 2.0f64.sqrt()));
+    assert!(close(spec.components[2].std[1], 2.0));
+}
+
+#[test]
+fn tc_refinements_preserve_invariants_random() {
+    let mut rng = Xoshiro256::seed_from_u64(0x5EED5);
+    for case in 0..10 {
+        let spec = random_mixture(&mut rng);
+        let n = 100 + rng.next_below(400) as usize;
+        let t = 2 + rng.next_below(4) as usize;
+        let ds = spec.sample(n, 10_000 + case);
+        let knn = knn_auto(&ds.points, t - 1).unwrap();
+        let g = NeighborGraph::from_knn(&knn);
+        let mut r = threshold_cluster_graph(&g, &ds.points, &TcConfig::new(t));
+        ihtc::tc::refine::reassign_boundary(&mut r, &g, &ds.points, t);
+        ihtc::tc::refine::split_large_clusters(&mut r, &ds.points, t);
+        let sizes = metrics::cluster_sizes(&r.assignments);
+        assert!(sizes.iter().all(|&s| s >= t), "case {case}: {sizes:?}");
+        assert_eq!(sizes.iter().sum::<usize>(), n);
+    }
+}
+
+#[test]
+fn json_parser_roundtrip_fuzz() {
+    use ihtc::config::json::Json;
+    // Deterministic "fuzz": generate random JSON values, serialize by
+    // hand, reparse, compare structure.
+    let mut rng = Xoshiro256::seed_from_u64(0x15E1);
+    fn gen(rng: &mut Xoshiro256, depth: usize) -> (String, usize) {
+        match if depth > 2 { rng.next_below(4) } else { rng.next_below(6) } {
+            0 => ("null".into(), 1),
+            1 => ("true".into(), 1),
+            2 => (format!("{}", (rng.next_below(2000) as i64) - 1000), 1),
+            3 => (format!("\"s{}\"", rng.next_below(1000)), 1),
+            4 => {
+                let n = rng.next_below(4) as usize;
+                let mut items = Vec::new();
+                let mut count = 1;
+                for _ in 0..n {
+                    let (s, c) = gen(rng, depth + 1);
+                    items.push(s);
+                    count += c;
+                }
+                (format!("[{}]", items.join(",")), count)
+            }
+            _ => {
+                let n = rng.next_below(4) as usize;
+                let mut items = Vec::new();
+                let mut count = 1;
+                for i in 0..n {
+                    let (s, c) = gen(rng, depth + 1);
+                    items.push(format!("\"k{i}\":{s}"));
+                    count += c;
+                }
+                (format!("{{{}}}", items.join(",")), count)
+            }
+        }
+    }
+    for _ in 0..200 {
+        let (doc, _) = gen(&mut rng, 0);
+        let parsed = Json::parse(&doc).unwrap_or_else(|e| panic!("doc {doc}: {e}"));
+        // Reparse of a canonical re-render must be identical.
+        let rendered = render(&parsed);
+        assert_eq!(Json::parse(&rendered).unwrap(), parsed, "doc {doc}");
+    }
+    fn render(v: &Json) -> String {
+        match v {
+            Json::Null => "null".into(),
+            Json::Bool(b) => b.to_string(),
+            Json::Number(n) => format!("{n}"),
+            Json::String(s) => format!("\"{s}\""),
+            Json::Array(a) => {
+                format!("[{}]", a.iter().map(render).collect::<Vec<_>>().join(","))
+            }
+            Json::Object(o) => format!(
+                "{{{}}}",
+                o.iter()
+                    .map(|(k, v)| format!("\"{k}\":{}", render(v)))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
