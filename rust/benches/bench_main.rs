@@ -3,17 +3,23 @@
 //! and spread per benchmark, with one end-to-end bench per paper table
 //! plus the microbenches the §Perf pass iterates on.
 //!
-//! Filter by substring: `cargo bench -- knn` runs only knn benches.
-//! `IHTC_BENCH_FAST=1` shrinks workloads (used by CI-style smoke runs).
+//! Filter by substring: `cargo bench -- knn` runs only knn benches,
+//! `cargo bench -- e2e` the end-to-end ones, `cargo bench -- smoke` the
+//! tiny CI smoke run. `IHTC_BENCH_FAST=1` shrinks workloads.
+//!
+//! Every bench also writes a machine-readable `BENCH_<name>.json`
+//! (median/min/max ns + peak bytes from `memtrack`) into
+//! `$IHTC_BENCH_DIR` (default: the working directory) so the perf
+//! trajectory is tracked across PRs.
 
 use ihtc::cluster::hac::{hac, HacConfig, Linkage};
 use ihtc::cluster::kmeans::{kmeans_with_backend, KMeansConfig, NativeAssign};
 use ihtc::coordinator::{parallel_knn, WorkerPool};
 use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use ihtc::data::Preprocess;
-use ihtc::hybrid::{FinalClusterer, Ihtc};
+use ihtc::hybrid::{FinalClusterer, Ihtc, IhtcWorkspace};
 use ihtc::itis::{itis, ItisConfig};
-use ihtc::knn::{knn_brute, knn_chunked, kdtree::KdTree, NativeChunks};
+use ihtc::knn::{knn_auto, knn_brute, knn_chunked, knn_chunked_pool, kdtree::KdTree, NativeChunks};
 use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
 use ihtc::tc::{threshold_cluster, TcConfig};
 use std::time::Instant;
@@ -56,6 +62,25 @@ impl Bench {
             "bench {name:<42} median {:>10.4}s  min {:>10.4}s  max {:>10.4}s  peak {:>9} MB  ({iters} iters)",
             median, min, max, ihtc::memtrack::fmt_mb(peak)
         );
+        write_json(name, median, min, max, peak, iters);
+    }
+}
+
+/// Machine-readable result sink: one `BENCH_<name>.json` per bench in
+/// `$IHTC_BENCH_DIR` (default: working directory).
+fn write_json(name: &str, median: f64, min: f64, max: f64, peak: usize, iters: usize) {
+    let dir = std::env::var("IHTC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let file = format!("BENCH_{}.json", name.replace(['/', ' ', '(', ')', '+'], "_"));
+    let path = std::path::Path::new(&dir).join(file);
+    let to_ns = |s: f64| (s * 1e9).round() as u64;
+    let body = format!(
+        "{{\"name\":\"{name}\",\"median_ns\":{},\"min_ns\":{},\"max_ns\":{},\"peak_bytes\":{peak},\"iters\":{iters}}}\n",
+        to_ns(median),
+        to_ns(min),
+        to_ns(max)
+    );
+    if let Err(e) = std::fs::write(&path, body) {
+        eprintln!("warning: cannot write {}: {e}", path.display());
     }
 }
 
@@ -91,9 +116,30 @@ fn main() {
         3,
         || parallel_knn(&ds_big.points, 3, &pool).unwrap(),
     );
+    // Serial vs pooled construction and the default (pooled) auto path —
+    // the acceptance comparison for the §Perf parallelization pass.
+    b.run("knn/build_kdtree_serial_n1e5", 5, || KdTree::build(&ds_big.points));
+    b.run(
+        &format!("knn/build_kdtree_parallel_n1e5_w{}", pool.workers()),
+        5,
+        || KdTree::build_parallel(&ds_big.points, &pool),
+    );
+    b.run(
+        &format!("knn/auto_pooled_n1e5_k3_w{}", pool.workers()),
+        3,
+        || knn_auto(&ds_big.points, 3).unwrap(),
+    );
     b.run("micro/knn_chunked_native_n2e4_k15", 3, || {
         knn_chunked(&ds_small.points, 15, 256, 1024, &NativeChunks::default()).unwrap()
     });
+    b.run(
+        &format!("knn/chunked_pooled_n2e4_k15_w{}", pool.workers()),
+        3,
+        || {
+            knn_chunked_pool(&ds_small.points, 15, 256, 1024, &NativeChunks::default(), &pool)
+                .unwrap()
+        },
+    );
     if let Some(engine) = &engine {
         b.run("micro/knn_chunked_pjrt_n2e4_k15", 3, || {
             knn_chunked(&ds_small.points, 15, engine.tile.knn_q, engine.tile.knn_r, &PjrtChunks {
@@ -190,6 +236,20 @@ fn main() {
         });
     }
 
+    // ---------- end-to-end IHTC: fresh vs reused workspace ----------
+    // The peak column of the reuse bench versus the fresh bench is the
+    // reduced-allocation acceptance signal for `IhtcWorkspace`.
+    let ih = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 4 });
+    b.run("e2e/ihtc_fresh_n1e5_m2", 3, || ih.run(&ds_big.points).unwrap());
+    {
+        let mut ws = IhtcWorkspace::new();
+        b.run(
+            &format!("e2e/ihtc_workspace_reuse_n1e5_m2_w{}", pool.workers()),
+            3,
+            || ih.run_with(&ds_big.points, &pool, &mut ws).unwrap(),
+        );
+    }
+
     // ---------- coordinator / pipeline overhead ----------
     b.run("pipeline/e2e_native_n1e5_m2", 2, || {
         let mut cfg = ihtc::config::PipelineConfig::default();
@@ -197,5 +257,13 @@ fn main() {
         cfg.iterations = 2;
         cfg.workers = 0;
         ihtc::coordinator::driver::run(&cfg).unwrap()
+    });
+
+    // ---------- CI smoke (scripts/verify.sh filters on "smoke") ----------
+    let ds_smoke = gaussian_mixture_paper(2_000, 5);
+    b.run("smoke/e2e_n2e3_m2", 1, || {
+        Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 2 })
+            .run(&ds_smoke.points)
+            .unwrap()
     });
 }

@@ -6,9 +6,14 @@
 //! Complexity `O(n·k·L·d)` time, `O((n+k)·d)` space — the quantities the
 //! paper's Table 1 measures with and without ITIS pre-processing.
 
+use crate::coordinator::WorkerPool;
 use crate::linalg::{sq_dist, Matrix};
 use crate::rng::Xoshiro256;
 use crate::{Error, Result};
+
+/// Fixed row count per parallel assignment part. Partial sums merge in
+/// part order, so pooled results do not depend on the worker count.
+const PART: usize = 8192;
 
 /// Initialization strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,9 +125,82 @@ impl AssignBackend for NativeAssign {
     }
 }
 
+/// Reusable buffers for [`kmeans_pool`]: per-part partial accumulators,
+/// sized on demand and kept across Lloyd iterations, restarts, and whole
+/// runs (see [`crate::hybrid::IhtcWorkspace`]).
+#[derive(Debug, Default)]
+pub struct KMeansWorkspace {
+    part_sums: Vec<Vec<f64>>,
+    part_counts: Vec<Vec<f64>>,
+}
+
+impl KMeansWorkspace {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// Run k-means with the native backend.
 pub fn kmeans(points: &Matrix, config: &KMeansConfig) -> Result<KMeansResult> {
     kmeans_with_backend(points, None, config, &NativeAssign)
+}
+
+/// Pool-parallel k-means: the assignment + accumulation phase of every
+/// Lloyd iteration is sharded across the worker pool in fixed
+/// 8192-row parts whose partial sums merge in part order, so results are
+/// identical for any worker count (they may differ from the serial path
+/// in the last float bit — f64 accumulation is re-associated at part
+/// boundaries). Small inputs and single-worker pools fall through to the
+/// serial path.
+pub fn kmeans_pool<B: AssignBackend + Sync>(
+    points: &Matrix,
+    weights: Option<&[f32]>,
+    config: &KMeansConfig,
+    backend: &B,
+    pool: &WorkerPool,
+    ws: &mut KMeansWorkspace,
+) -> Result<KMeansResult> {
+    let n = points.rows();
+    let k = config.k;
+    if k == 0 || k > n {
+        return Err(Error::InvalidArgument(format!("need 0 < k ≤ n (k={k}, n={n})")));
+    }
+    if let Some(w) = weights {
+        if w.len() != n {
+            return Err(Error::Shape("weights vs points".into()));
+        }
+    }
+    if pool.workers() <= 1 || n < 2 * PART {
+        return kmeans_with_backend(points, weights, config, backend);
+    }
+    run_restarts(points, config, |centers| {
+        lloyd_pool(points, weights, centers, config, backend, pool, ws)
+    })
+}
+
+/// Shared restart driver: seed per-restart RNG streams, initialize
+/// centers, run one Lloyd pass via `lloyd_fn`, keep the best WCSS. Both
+/// the serial and the pooled entry points go through this so restart /
+/// init semantics cannot drift between them.
+fn run_restarts(
+    points: &Matrix,
+    config: &KMeansConfig,
+    mut lloyd_fn: impl FnMut(Matrix) -> Result<KMeansResult>,
+) -> Result<KMeansResult> {
+    let mut best: Option<KMeansResult> = None;
+    for restart in 0..config.restarts.max(1) {
+        let mut rng = Xoshiro256::stream(config.seed, restart as u64);
+        let centers = match config.init {
+            KMeansInit::Random => init_random(points, config.k, &mut rng),
+            KMeansInit::PlusPlus => init_plus_plus(points, config.k, &mut rng),
+        };
+        let run = lloyd_fn(centers)?;
+        if best.as_ref().map(|b| run.wcss < b.wcss).unwrap_or(true) {
+            best = Some(run);
+        }
+    }
+    Ok(best.expect("at least one restart"))
 }
 
 /// Run weighted k-means (used when clustering ITIS prototypes with their
@@ -150,19 +228,12 @@ pub fn kmeans_with_backend(
     if k == 0 || k > n {
         return Err(Error::InvalidArgument(format!("need 0 < k ≤ n (k={k}, n={n})")));
     }
-    let mut best: Option<KMeansResult> = None;
-    for restart in 0..config.restarts.max(1) {
-        let mut rng = Xoshiro256::stream(config.seed, restart as u64);
-        let centers = match config.init {
-            KMeansInit::Random => init_random(points, k, &mut rng),
-            KMeansInit::PlusPlus => init_plus_plus(points, k, &mut rng),
-        };
-        let run = lloyd(points, weights, centers, config, backend)?;
-        if best.as_ref().map(|b| run.wcss < b.wcss).unwrap_or(true) {
-            best = Some(run);
+    if let Some(w) = weights {
+        if w.len() != n {
+            return Err(Error::Shape("weights vs points".into()));
         }
     }
-    Ok(best.expect("at least one restart"))
+    run_restarts(points, config, |centers| lloyd(points, weights, centers, config, backend))
 }
 
 fn init_random(points: &Matrix, k: usize, rng: &mut Xoshiro256) -> Matrix {
@@ -205,6 +276,44 @@ fn init_plus_plus(points: &Matrix, k: usize, rng: &mut Xoshiro256) -> Matrix {
     points.select_rows(&chosen)
 }
 
+/// Lloyd update step: move centers to their accumulated weighted means;
+/// empty clusters are re-seeded to the point farthest from its assigned
+/// center (a common Lloyd fix; R restarts instead).
+fn update_centers(
+    points: &Matrix,
+    assignments: &[u32],
+    centers: &mut Matrix,
+    sums: &[f64],
+    counts: &[f64],
+) {
+    let n = points.rows();
+    let d = points.cols();
+    let k = centers.rows();
+    let mut empty: Vec<usize> = Vec::new();
+    for c in 0..k {
+        if counts[c] > 0.0 {
+            let row = centers.row_mut(c);
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = (sums[c * d + j] / counts[c]) as f32;
+            }
+        } else {
+            empty.push(c);
+        }
+    }
+    for c in empty {
+        // Farthest point from its assigned center.
+        let mut far = (0usize, -1.0f32);
+        for i in 0..n {
+            let dd = sq_dist(points.row(i), centers.row(assignments[i] as usize));
+            if dd > far.1 {
+                far = (i, dd);
+            }
+        }
+        let src = points.row(far.0).to_vec();
+        centers.row_mut(c).copy_from_slice(&src);
+    }
+}
+
 fn lloyd(
     points: &Matrix,
     weights: Option<&[f32]>,
@@ -219,11 +328,15 @@ fn lloyd(
     let mut prev_wcss = f64::INFINITY;
     let mut iterations = 0;
     const BLOCK: usize = 4096;
+    // Accumulators hoisted out of the iteration loop (§Perf: the seed
+    // allocated fresh k×d buffers every Lloyd iteration).
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
 
     for iter in 0..config.max_iters.max(1) {
         iterations = iter + 1;
-        let mut sums = vec![0.0f64; k * d];
-        let mut counts = vec![0.0f64; k];
+        sums.iter_mut().for_each(|v| *v = 0.0);
+        counts.iter_mut().for_each(|v| *v = 0.0);
         let mut wcss = 0.0f64;
         let mut p0 = 0;
         while p0 < n {
@@ -240,32 +353,82 @@ fn lloyd(
             )?;
             p0 += np;
         }
-        // Update step; empty clusters are re-seeded to the point farthest
-        // from its center (a common Lloyd fix; R restarts instead).
-        let mut empty: Vec<usize> = Vec::new();
-        for c in 0..k {
-            if counts[c] > 0.0 {
-                let row = centers.row_mut(c);
-                for (j, slot) in row.iter_mut().enumerate() {
-                    *slot = (sums[c * d + j] / counts[c]) as f32;
-                }
-            } else {
-                empty.push(c);
-            }
-        }
-        for c in empty {
-            // Farthest point from its assigned center.
-            let mut far = (0usize, -1.0f32);
-            for i in 0..n {
-                let dd = sq_dist(points.row(i), centers.row(assignments[i] as usize));
-                if dd > far.1 {
-                    far = (i, dd);
-                }
-            }
-            let src = points.row(far.0).to_vec();
-            centers.row_mut(c).copy_from_slice(&src);
-        }
+        update_centers(points, &assignments, &mut centers, &sums, &counts);
         // Convergence: relative WCSS improvement.
+        if prev_wcss.is_finite() {
+            let denom = prev_wcss.abs().max(1e-30);
+            if (prev_wcss - wcss) / denom < config.tol {
+                prev_wcss = wcss;
+                break;
+            }
+        }
+        prev_wcss = wcss;
+    }
+    Ok(KMeansResult { assignments, centers, wcss: prev_wcss, iterations })
+}
+
+/// One Lloyd run with the assignment phase sharded over the pool. Parts
+/// are a fixed [`PART`] rows; each part owns its own accumulators from
+/// the workspace and partial results merge in part order, making the
+/// outcome independent of worker count and scheduling.
+fn lloyd_pool<B: AssignBackend + Sync>(
+    points: &Matrix,
+    weights: Option<&[f32]>,
+    mut centers: Matrix,
+    config: &KMeansConfig,
+    backend: &B,
+    pool: &WorkerPool,
+    ws: &mut KMeansWorkspace,
+) -> Result<KMeansResult> {
+    let n = points.rows();
+    let d = points.cols();
+    let k = config.k;
+    let mut assignments = vec![0u32; n];
+    let mut prev_wcss = f64::INFINITY;
+    let mut iterations = 0;
+    let nparts = (n + PART - 1) / PART;
+    if ws.part_sums.len() < nparts {
+        ws.part_sums.resize_with(nparts, Vec::new);
+        ws.part_counts.resize_with(nparts, Vec::new);
+    }
+    let mut merged_sums = vec![0.0f64; k * d];
+    let mut merged_counts = vec![0.0f64; k];
+
+    for iter in 0..config.max_iters.max(1) {
+        iterations = iter + 1;
+        for p in 0..nparts {
+            ws.part_sums[p].clear();
+            ws.part_sums[p].resize(k * d, 0.0);
+            ws.part_counts[p].clear();
+            ws.part_counts[p].resize(k, 0.0);
+        }
+        let centers_ref = &centers;
+        let mut tasks: Vec<(usize, &mut [u32], &mut [f64], &mut [f64])> =
+            Vec::with_capacity(nparts);
+        for (((p, a_chunk), s), c) in assignments
+            .chunks_mut(PART)
+            .enumerate()
+            .zip(ws.part_sums.iter_mut().take(nparts))
+            .zip(ws.part_counts.iter_mut().take(nparts))
+        {
+            tasks.push((p * PART, a_chunk, s.as_mut_slice(), c.as_mut_slice()));
+        }
+        let wcss_parts = pool.run_tasks(tasks, |(p0, a_chunk, s, c)| {
+            let np = a_chunk.len();
+            backend.assign_block(points, weights, p0, np, centers_ref, a_chunk, s, c)
+        })?;
+        let wcss: f64 = wcss_parts.iter().sum();
+        merged_sums.iter_mut().for_each(|v| *v = 0.0);
+        merged_counts.iter_mut().for_each(|v| *v = 0.0);
+        for p in 0..nparts {
+            for (g, v) in merged_sums.iter_mut().zip(&ws.part_sums[p]) {
+                *g += v;
+            }
+            for (g, v) in merged_counts.iter_mut().zip(&ws.part_counts[p]) {
+                *g += v;
+            }
+        }
+        update_centers(points, &assignments, &mut centers, &merged_sums, &merged_counts);
         if prev_wcss.is_finite() {
             let denom = prev_wcss.abs().max(1e-30);
             if (prev_wcss - wcss) / denom < config.tol {
@@ -378,6 +541,30 @@ mod tests {
         let r = kmeans(&ds.points, &KMeansConfig::new(4)).unwrap();
         assert_eq!(r.assignments.len(), 700);
         assert!(r.assignments.iter().all(|&a| a < 4));
+    }
+
+    #[test]
+    fn pooled_matches_serial_and_is_worker_count_invariant() {
+        let ds = gaussian_mixture_paper(17_000, 89);
+        let cfg = KMeansConfig { restarts: 2, ..KMeansConfig::new(3) };
+        let serial = kmeans(&ds.points, &cfg).unwrap();
+        let mut results = Vec::new();
+        for workers in [2usize, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut ws = KMeansWorkspace::new();
+            let r = kmeans_pool(&ds.points, None, &cfg, &NativeAssign, &pool, &mut ws).unwrap();
+            // Same objective up to part-boundary f64 reassociation.
+            assert!(
+                (r.wcss - serial.wcss).abs() < 1e-6 * (1.0 + serial.wcss),
+                "workers={workers}: {} vs {}",
+                r.wcss,
+                serial.wcss
+            );
+            results.push(r);
+        }
+        // Fixed-part merging makes pooled results worker-count exact.
+        assert_eq!(results[0].assignments, results[1].assignments);
+        assert_eq!(results[0].wcss.to_bits(), results[1].wcss.to_bits());
     }
 
     #[test]

@@ -13,14 +13,14 @@
 //! 5. **backout** — label propagation to all `n` units, metrics, output.
 
 use super::pipeline::{collect, PipelineBuilder, StageMetrics};
-use super::{parallel_knn, WorkerPool};
+use super::{PoolKnnProvider, WorkerPool};
 use crate::cluster::kmeans::{self, NativeAssign};
 use crate::cluster::{dbscan, hac};
 use crate::config::{Backend, DataSource, PipelineConfig};
 use crate::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use crate::data::{csv, Dataset};
-use crate::hybrid::FinalClusterer;
-use crate::itis::{itis_with, ItisConfig, ItisResult, KnnProvider, StopRule};
+use crate::hybrid::{FinalClusterer, IhtcWorkspace};
+use crate::itis::{itis_with_workspace, ItisConfig, ItisResult, KnnProvider, StopRule};
 use crate::knn::KnnLists;
 use crate::linalg::{pca::Pca, Matrix};
 use crate::runtime::{Engine, PjrtAssign, PjrtChunks};
@@ -98,30 +98,19 @@ impl RunReport {
     }
 }
 
-/// k-NN provider backed by the work-stealing pool.
-struct PoolKnn<'a> {
-    pool: &'a WorkerPool,
-}
-
-impl KnnProvider for PoolKnn<'_> {
-    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
-        parallel_knn(points, k, self.pool)
-    }
-}
-
 /// k-NN provider driving the PJRT knn_chunk artifact, falling back to the
 /// pool when `k` exceeds the artifact's neighbor slots.
 struct PjrtKnn<'a> {
     engine: &'a Engine,
-    fallback: PoolKnn<'a>,
+    fallback: PoolKnnProvider<'a>,
 }
 
 impl KnnProvider for PjrtKnn<'_> {
     fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
         let t = &self.engine.tile;
         if k > t.knn_k || points.cols() > t.dim {
-            log::warn!(
-                "PJRT knn artifact cannot serve k={k}/d={}; falling back to native pool",
+            eprintln!(
+                "warning: PJRT knn artifact cannot serve k={k}/d={}; falling back to native pool",
                 points.cols()
             );
             return self.fallback.knn(points, k);
@@ -311,15 +300,19 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
         Backend::Native => None,
     };
-    let pool_knn = PoolKnn { pool: &pool };
-    let pjrt_knn = engine.as_ref().map(|e| PjrtKnn { engine: e, fallback: PoolKnn { pool: &pool } });
+    let pool_knn = PoolKnnProvider { pool: &pool };
+    let pjrt_knn = engine
+        .as_ref()
+        .map(|e| PjrtKnn { engine: e, fallback: PoolKnnProvider { pool: &pool } });
     let knn_provider: &dyn KnnProvider = match &pjrt_knn {
         Some(p) => p,
         None => &pool_knn,
     };
+    let mut ws = IhtcWorkspace::new();
 
     // Phase 3: reduce (ITIS).
     let t0 = Instant::now();
+    let ws_itis = &mut ws.itis;
     let (reduced, peak) = memtrack::measure(|| -> Result<ItisResult> {
         if config.iterations == 0 {
             return Ok(ItisResult {
@@ -341,7 +334,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
                 FinalClusterer::Dbscan { .. } => 2,
             },
         };
-        itis_with(&ds.points, &itis_cfg, knn_provider)
+        itis_with_workspace(&ds.points, &itis_cfg, knn_provider, &pool, ws_itis)
     });
     let reduction = reduced?;
     phases.push(PhaseStat {
@@ -352,6 +345,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
 
     // Phase 4: final clusterer on the prototypes.
     let t0 = Instant::now();
+    let ws_kmeans = &mut ws.kmeans;
     let (labels, peak) = memtrack::measure(|| -> Result<Vec<u32>> {
         let protos = &reduction.prototypes;
         match &config.clusterer {
@@ -362,10 +356,12 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
                     ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
                 };
                 let result = match &engine {
+                    // The PJRT assign backend is not Sync (xla handles stay
+                    // on the coordinator thread), so it runs serially.
                     Some(e) if protos.cols() <= e.tile.dim && cfg.k <= e.tile.km_k => {
                         kmeans::kmeans_with_backend(protos, None, &cfg, &PjrtAssign { engine: e })?
                     }
-                    _ => kmeans::kmeans_with_backend(protos, None, &cfg, &NativeAssign)?,
+                    _ => kmeans::kmeans_pool(protos, None, &cfg, &NativeAssign, &pool, ws_kmeans)?,
                 };
                 Ok(result.assignments)
             }

@@ -21,11 +21,12 @@
 pub mod driver;
 pub mod pipeline;
 
+use crate::itis::KnnProvider;
 use crate::knn::{kdtree::KdTree, KnnLists};
 use crate::linalg::Matrix;
 use crate::{Error, Result};
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Resolve a worker-count setting (0 = available parallelism − 1, min 1).
 pub fn resolve_workers(requested: usize) -> usize {
@@ -47,6 +48,15 @@ pub struct WorkerPool {
     workers: usize,
 }
 
+impl Default for WorkerPool {
+    /// Pool sized to the machine (available parallelism − 1, min 1) —
+    /// what `knn_auto`, `Ihtc::run`, and `itis` use when the caller does
+    /// not pass a pool explicitly.
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
 impl WorkerPool {
     /// Create a pool descriptor (threads are scoped per call).
     pub fn new(workers: usize) -> Self {
@@ -56,6 +66,71 @@ impl WorkerPool {
     /// Number of worker threads used.
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Work-stealing execution of pre-built tasks (each typically owning
+    /// disjoint `&mut` windows of a shared output buffer, so workers
+    /// write results in place — no stitch copies). Results come back in
+    /// task order; the first task error aborts the run and is returned.
+    pub fn run_tasks<T: Send, R: Send>(
+        &self,
+        tasks: Vec<T>,
+        f: impl Fn(T) -> Result<R> + Sync,
+    ) -> Result<Vec<R>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let failed = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            for _ in 0..self.workers.min(n).max(1) {
+                let cursor = &cursor;
+                let failed = &failed;
+                let slots = &slots;
+                let results = &results;
+                let f = &f;
+                scope.spawn(move || loop {
+                    if failed.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let task = slots[i].lock().unwrap().take();
+                    let Some(task) = task else { continue };
+                    let out = f(task);
+                    if out.is_err() {
+                        failed.store(true, Ordering::Relaxed);
+                    }
+                    *results[i].lock().unwrap() = Some(out);
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(n);
+        let mut first_err = None;
+        for slot in results {
+            match slot.into_inner().unwrap() {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                None => {}
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if out.len() != n {
+            return Err(Error::Coordinator("worker pool lost tasks".into()));
+        }
+        Ok(out)
     }
 
     /// Process `0..n` in chunks of `chunk`; `f(start, end)` produces a
@@ -99,27 +174,50 @@ impl WorkerPool {
 }
 
 /// Exact k-NN lists computed by sharding queries across the pool against
-/// a shared kd-tree. Identical output to [`crate::knn::knn_auto`], but
+/// a shared kd-tree (itself built in parallel over the pool). Output is
+/// byte-identical to [`crate::knn::knn_brute`] for any worker count, but
 /// wall-clock scales with workers; this is the coordinator's answer to
 /// the paper's "parallelize TC" future work (step 1 dominates).
 pub fn parallel_knn(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnLists> {
+    let mut out = KnnLists::default();
+    parallel_knn_into(points, k, pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`parallel_knn`] writing into a reusable output buffer: workers fill
+/// disjoint row windows of `out` directly (no per-shard buffers, no
+/// stitch copy), which is what the ITIS loop reuses across iterations.
+pub fn parallel_knn_into(
+    points: &Matrix,
+    k: usize,
+    pool: &WorkerPool,
+    out: &mut KnnLists,
+) -> Result<()> {
     let n = points.rows();
     if k == 0 || k >= n {
         return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
     }
-    let tree = KdTree::build(points);
-    let chunk = 512usize;
-    let parts = pool.run_chunks(n, chunk, |start, end| {
-        let lists = tree.knn_range(points, k, start, end)?;
-        Ok((start, lists.indices, lists.dists))
-    })?;
-    let mut indices = vec![0u32; n * k];
-    let mut dists = vec![0f32; n * k];
-    for (start, idx, dst) in parts {
-        indices[start * k..start * k + idx.len()].copy_from_slice(&idx);
-        dists[start * k..start * k + dst.len()].copy_from_slice(&dst);
+    let tree = KdTree::build_parallel(points, pool);
+    tree.knn_all_pool_into(points, k, pool, out)
+}
+
+/// [`KnnProvider`] backed by the worker pool — the injection point that
+/// routes the entire ITIS/IHTC reduction through pool-sharded k-NN.
+pub struct PoolKnnProvider<'a> {
+    /// The pool to shard over.
+    pub pool: &'a WorkerPool,
+}
+
+impl KnnProvider for PoolKnnProvider<'_> {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        let mut out = KnnLists::default();
+        self.knn_into(points, k, &mut out)?;
+        Ok(out)
     }
-    Ok(KnnLists { k, indices, dists })
+
+    fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
+        crate::knn::knn_auto_into(points, k, self.pool, out)
+    }
 }
 
 #[cfg(test)]
@@ -148,6 +246,46 @@ mod tests {
             }
         }
         assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn run_tasks_preserves_order_and_runs_all() {
+        let pool = WorkerPool::new(4);
+        let tasks: Vec<usize> = (0..37).collect();
+        let out = pool.run_tasks(tasks, |t| Ok(t * 2)).unwrap();
+        assert_eq!(out, (0..37).map(|t| t * 2).collect::<Vec<_>>());
+        // Empty task lists are a no-op.
+        let empty: Vec<usize> = Vec::new();
+        assert!(pool.run_tasks(empty, |t| Ok(t)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_tasks_writes_through_mut_slices() {
+        let pool = WorkerPool::new(3);
+        let mut buf = vec![0u32; 100];
+        let tasks: Vec<(usize, &mut [u32])> =
+            buf.chunks_mut(7).enumerate().map(|(i, c)| (i * 7, c)).collect();
+        pool.run_tasks(tasks, |(start, chunk)| {
+            for (o, slot) in chunk.iter_mut().enumerate() {
+                *slot = (start + o) as u32;
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(buf, (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_tasks_propagates_errors() {
+        let pool = WorkerPool::new(2);
+        let res = pool.run_tasks((0..50usize).collect(), |t| {
+            if t == 13 {
+                Err(Error::Coordinator("boom".into()))
+            } else {
+                Ok(t)
+            }
+        });
+        assert!(res.is_err());
     }
 
     #[test]

@@ -7,10 +7,31 @@
 //! algorithm's input size by the same factor.
 
 use crate::cluster::{dbscan, gmm, hac, kmeans};
-use crate::itis::{itis, ItisConfig, ItisResult, PrototypeKind};
+use crate::coordinator::{PoolKnnProvider, WorkerPool};
+use crate::itis::{itis_with_workspace, ItisConfig, ItisResult, ItisWorkspace, PrototypeKind};
 use crate::linalg::Matrix;
 use crate::tc::SeedOrder;
 use crate::Result;
+
+/// Reusable scratch arena for repeated IHTC runs: the ITIS neighbor-list
+/// and prototype buffers plus the k-means assignment accumulators. A
+/// service clustering many batches (or the repro harness sweeping `m`)
+/// holds one workspace and passes it to [`Ihtc::run_with`] so the hot
+/// path stops reallocating its large buffers per run.
+#[derive(Debug, Default)]
+pub struct IhtcWorkspace {
+    /// ITIS-level buffers (neighbor lists, prototype accumulators).
+    pub itis: ItisWorkspace,
+    /// k-means assignment-phase accumulators.
+    pub kmeans: kmeans::KMeansWorkspace,
+}
+
+impl IhtcWorkspace {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 /// The conventional ("sophisticated") algorithm applied to the prototypes.
 #[derive(Clone, Debug)]
@@ -99,8 +120,23 @@ impl Ihtc {
         }
     }
 
-    /// Run IHTC on `points`.
+    /// Run IHTC on `points` with the default worker pool and a throwaway
+    /// workspace. Use [`Self::run_with`] to reuse allocations across runs
+    /// or control the pool size.
     pub fn run(&self, points: &Matrix) -> Result<IhtcResult> {
+        self.run_with(points, &WorkerPool::default(), &mut IhtcWorkspace::new())
+    }
+
+    /// Run IHTC on `points` over an explicit worker pool, reusing the
+    /// given workspace's buffers. The whole pipeline — k-NN graph
+    /// construction, prototype reduction, and (for k-means) the
+    /// assignment phase — executes on the pool.
+    pub fn run_with(
+        &self,
+        points: &Matrix,
+        pool: &WorkerPool,
+        ws: &mut IhtcWorkspace,
+    ) -> Result<IhtcResult> {
         let itis_cfg = ItisConfig {
             threshold: self.threshold,
             stop: crate::itis::StopRule::Iterations(self.iterations),
@@ -122,7 +158,8 @@ impl Ihtc {
                 n_original: points.rows(),
             }
         } else {
-            itis(points, &itis_cfg)?
+            let provider = PoolKnnProvider { pool };
+            itis_with_workspace(points, &itis_cfg, &provider, pool, &mut ws.itis)?
         };
         let protos = &reduction.prototypes;
         let prototype_labels: Vec<u32> = match &self.clusterer {
@@ -132,7 +169,15 @@ impl Ihtc {
                     seed: self.seed,
                     ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
                 };
-                kmeans::kmeans(protos, &cfg)?.assignments
+                kmeans::kmeans_pool(
+                    protos,
+                    None,
+                    &cfg,
+                    &kmeans::NativeAssign,
+                    pool,
+                    &mut ws.kmeans,
+                )?
+                .assignments
             }
             FinalClusterer::Hac { k, linkage } => {
                 let cfg = hac::HacConfig { linkage: *linkage, ..Default::default() };
@@ -274,6 +319,21 @@ mod tests {
             let acc = metrics::prediction_accuracy(truth, &r.assignments).unwrap();
             assert!(acc > 0.85, "weighted={weighted}: {acc}");
         }
+    }
+
+    #[test]
+    fn run_with_reused_workspace_matches_run() {
+        // Workspace reuse and pool size must not change the clustering.
+        let ds = gaussian_mixture_paper(3000, 119);
+        let ih = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 2 });
+        let fresh = ih.run(&ds.points).unwrap();
+        let pool = crate::coordinator::WorkerPool::new(3);
+        let mut ws = IhtcWorkspace::new();
+        let a = ih.run_with(&ds.points, &pool, &mut ws).unwrap();
+        let b = ih.run_with(&ds.points, &pool, &mut ws).unwrap();
+        assert_eq!(a.assignments, b.assignments, "reuse changed the result");
+        assert_eq!(fresh.assignments, a.assignments, "pool size changed the result");
+        assert_eq!(fresh.num_prototypes(), a.num_prototypes());
     }
 
     #[test]

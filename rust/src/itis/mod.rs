@@ -10,6 +10,7 @@
 //! the final prototypes can be "backed out" onto the original units
 //! (IHTC step 3) by composing the maps.
 
+use crate::coordinator::WorkerPool;
 use crate::knn::graph::NeighborGraph;
 use crate::knn::KnnLists;
 use crate::linalg::Matrix;
@@ -18,18 +19,54 @@ use crate::{Error, Result};
 
 /// Pluggable k-NN backend for ITIS's inner loop: the coordinator injects
 /// its sharded/PJRT implementation here while the default goes through
-/// [`crate::knn::knn_auto`].
+/// [`crate::knn::knn_auto`] (pool-sharded itself since the §Perf pass).
 pub trait KnnProvider {
     /// Exact k-NN lists for all rows of `points`.
     fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists>;
+
+    /// Fill `out` in place, reusing its buffers across calls — the ITIS
+    /// loop's per-iteration allocation-reuse hook. Defaults to
+    /// [`Self::knn`] (which allocates); pooled providers override it.
+    fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
+        *out = self.knn(points, k)?;
+        Ok(())
+    }
 }
 
-/// Default provider: best serial exact backend.
+/// Default provider: best exact backend on the default worker pool.
 pub struct DefaultKnn;
 
 impl KnnProvider for DefaultKnn {
     fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
         crate::knn::knn_auto(points, k)
+    }
+
+    fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
+        crate::knn::knn_auto_into(points, k, &WorkerPool::default(), out)
+    }
+}
+
+/// Reusable scratch arena for the ITIS reduction loop: the step-1
+/// neighbor lists (the dominant `n×k` allocation) and the prototype
+/// accumulation buffers are reused across TC rounds — and across whole
+/// `itis` runs when the caller holds onto the workspace (see
+/// [`crate::hybrid::IhtcWorkspace`]). Level sizes shrink geometrically,
+/// so after the first iteration the loop allocates only the prototype
+/// matrices it returns.
+#[derive(Debug, Default)]
+pub struct ItisWorkspace {
+    /// Step-1 neighbor lists (`n × (t*−1)`).
+    pub knn: KnnLists,
+    /// Per-cluster weighted coordinate sums (`k × d`).
+    sums: Vec<f64>,
+    /// Per-cluster accumulation weights.
+    wsum: Vec<u64>,
+}
+
+impl ItisWorkspace {
+    /// Empty workspace; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
     }
 }
 
@@ -161,38 +198,113 @@ impl ItisResult {
     }
 }
 
-/// Compute prototypes for one TC level.
-fn make_prototypes(
+/// Accumulate prototype sums for the clusters in `[c0, c0+len)` only.
+/// The parallel reduction partitions *cluster ids* (not points) across
+/// workers: every worker scans the whole assignment vector but owns a
+/// disjoint slice of the accumulators, so there are no write conflicts,
+/// no per-worker `k×d` copies, and — because each cluster's members are
+/// visited in point order regardless of the partitioning — the result is
+/// byte-identical to the serial reduction for any worker count.
+#[allow(clippy::too_many_arguments)]
+fn accumulate_range(
     points: &Matrix,
     weights: &[u32],
-    tc: &TcResult,
+    assignments: &[u32],
     kind: PrototypeKind,
-) -> (Matrix, Vec<u32>) {
+    c0: usize,
+    len: usize,
+    sums: &mut [f64],
+    wsum: &mut [u64],
+    new_weights: &mut [u32],
+) {
     let d = points.cols();
-    let k = tc.num_clusters;
-    let mut sums = vec![0.0f64; k * d];
-    let mut wsum = vec![0u64; k];
-    let mut counts = vec![0u32; k];
-    for (i, &c) in tc.assignments.iter().enumerate() {
-        let c = c as usize;
-        counts[c] += 1;
+    for (i, &a) in assignments.iter().enumerate() {
+        let a = a as usize;
+        if a < c0 || a >= c0 + len {
+            continue;
+        }
+        let c = a - c0;
         let w = match kind {
             PrototypeKind::WeightedCentroid => weights[i] as u64,
             _ => 1,
         };
         wsum[c] += w;
+        new_weights[c] += weights[i];
         let row = points.row(i);
         let acc = &mut sums[c * d..(c + 1) * d];
-        for (a, &x) in acc.iter_mut().zip(row) {
-            *a += x as f64 * w as f64;
+        for (slot, &x) in acc.iter_mut().zip(row) {
+            *slot += x as f64 * w as f64;
         }
+    }
+}
+
+/// Compute prototypes for one TC level, accumulating in parallel over
+/// the pool (for large levels) into the workspace's reused buffers.
+fn make_prototypes(
+    points: &Matrix,
+    weights: &[u32],
+    tc: &TcResult,
+    kind: PrototypeKind,
+    pool: &WorkerPool,
+    ws: &mut ItisWorkspace,
+) -> Result<(Matrix, Vec<u32>)> {
+    let d = points.cols();
+    let k = tc.num_clusters;
+    ws.sums.clear();
+    ws.sums.resize(k * d, 0.0);
+    ws.wsum.clear();
+    ws.wsum.resize(k, 0);
+    let mut new_weights = vec![0u32; k];
+    let nparts = if pool.workers() > 1 && k >= 64 && points.rows() >= 8192 {
+        pool.workers().min(k)
+    } else {
+        1
+    };
+    if nparts <= 1 {
+        accumulate_range(
+            points,
+            weights,
+            &tc.assignments,
+            kind,
+            0,
+            k,
+            &mut ws.sums,
+            &mut ws.wsum,
+            &mut new_weights,
+        );
+    } else {
+        // Partition cluster ids into contiguous ranges; each task owns
+        // the matching accumulator windows.
+        let base = k / nparts;
+        let rem = k % nparts;
+        let mut tasks: Vec<(usize, usize, &mut [f64], &mut [u64], &mut [u32])> =
+            Vec::with_capacity(nparts);
+        let mut sums_rest: &mut [f64] = &mut ws.sums;
+        let mut wsum_rest: &mut [u64] = &mut ws.wsum;
+        let mut nw_rest: &mut [u32] = &mut new_weights;
+        let mut c0 = 0usize;
+        for p in 0..nparts {
+            let len = base + usize::from(p < rem);
+            let (s, s_tail) = std::mem::take(&mut sums_rest).split_at_mut(len * d);
+            sums_rest = s_tail;
+            let (w, w_tail) = std::mem::take(&mut wsum_rest).split_at_mut(len);
+            wsum_rest = w_tail;
+            let (nw, nw_tail) = std::mem::take(&mut nw_rest).split_at_mut(len);
+            nw_rest = nw_tail;
+            tasks.push((c0, len, s, w, nw));
+            c0 += len;
+        }
+        pool.run_tasks(tasks, |(c0, len, s, w, nw)| {
+            accumulate_range(points, weights, &tc.assignments, kind, c0, len, s, w, nw);
+            Ok(())
+        })?;
     }
     let mut protos = Matrix::zeros(k, d);
     for c in 0..k {
-        let denom = wsum[c].max(1) as f64;
+        let denom = ws.wsum[c].max(1) as f64;
         let row = protos.row_mut(c);
         for (j, slot) in row.iter_mut().enumerate() {
-            *slot = (sums[c * d + j] / denom) as f32;
+            *slot = (ws.sums[c * d + j] / denom) as f32;
         }
     }
     if kind == PrototypeKind::Medoid {
@@ -210,25 +322,44 @@ fn make_prototypes(
             protos.row_mut(c).copy_from_slice(&src);
         }
     }
-    // New weights: total original units represented per prototype.
-    let mut new_weights = vec![0u32; k];
-    for (i, &c) in tc.assignments.iter().enumerate() {
-        new_weights[c as usize] += weights[i];
-    }
-    (protos, new_weights)
+    Ok((protos, new_weights))
 }
 
-/// Run ITIS on `points` with the default serial k-NN backend.
+/// Run ITIS on `points` with the default pooled k-NN backend.
 pub fn itis(points: &Matrix, config: &ItisConfig) -> Result<ItisResult> {
     itis_with(points, config, &DefaultKnn)
 }
 
 /// Run ITIS with an injected k-NN backend (the coordinator passes its
-/// work-stealing parallel or PJRT implementation).
+/// work-stealing parallel or PJRT implementation), on the default pool
+/// with a throwaway workspace.
 pub fn itis_with(
     points: &Matrix,
     config: &ItisConfig,
     knn: &dyn KnnProvider,
+) -> Result<ItisResult> {
+    let pool = WorkerPool::default();
+    let mut ws = ItisWorkspace::new();
+    itis_with_workspace(points, config, knn, &pool, &mut ws)
+}
+
+/// Full-control ITIS: explicit k-NN backend, worker pool, and reusable
+/// workspace. Repeated calls on the same workspace (e.g. the repro
+/// harness sweeping `m`, or a service clustering many batches) reuse the
+/// `n×k` neighbor buffers and prototype accumulators across runs.
+///
+/// `pool` governs the *prototype reduction*; the k-NN phase's threading
+/// belongs to the `knn` provider. To run both phases on one pool —
+/// e.g. to cap thread count — pass
+/// [`crate::coordinator::PoolKnnProvider`]`{ pool }` as the provider
+/// (what [`crate::hybrid::Ihtc::run_with`] does). [`DefaultKnn`] always
+/// uses the machine-default pool, whatever `pool` is.
+pub fn itis_with_workspace(
+    points: &Matrix,
+    config: &ItisConfig,
+    knn: &dyn KnnProvider,
+    pool: &WorkerPool,
+    ws: &mut ItisWorkspace,
 ) -> Result<ItisResult> {
     if config.threshold < 2 {
         return Err(Error::InvalidArgument(format!(
@@ -267,14 +398,15 @@ pub fn itis_with(
         let tc = if current.rows() <= config.threshold {
             threshold_cluster(&current, &tc_cfg)?
         } else {
-            let lists = knn.knn(&current, config.threshold - 1)?;
-            let graph = NeighborGraph::from_knn(&lists);
+            knn.knn_into(&current, config.threshold - 1, &mut ws.knn)?;
+            let graph = NeighborGraph::from_knn(&ws.knn);
             threshold_cluster_graph(&graph, &current, &tc_cfg)
         };
         if tc.num_clusters >= current.rows() {
             break; // no reduction possible
         }
-        let (protos, new_weights) = make_prototypes(&current, &weights, &tc, config.prototype);
+        let (protos, new_weights) =
+            make_prototypes(&current, &weights, &tc, config.prototype, pool, ws)?;
         levels.push(ItisLevel { assignments: tc.assignments, num_prototypes: tc.num_clusters });
         current = protos;
         weights = new_weights;
@@ -432,5 +564,48 @@ mod tests {
     fn rejects_threshold_one() {
         let ds = gaussian_mixture_paper(50, 71);
         assert!(itis(&ds.points, &ItisConfig::iterations(1, 1)).is_err());
+    }
+
+    #[test]
+    fn workspace_reuse_matches_fresh() {
+        // Two runs on one workspace must equal a fresh run bit-for-bit
+        // (stale buffer contents must never leak into the next run).
+        let ds = gaussian_mixture_paper(2500, 72);
+        let cfg = ItisConfig::iterations(2, 3);
+        let fresh = itis(&ds.points, &cfg).unwrap();
+        let pool = WorkerPool::new(2);
+        let mut ws = ItisWorkspace::new();
+        let first =
+            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        let second =
+            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        for r in [&first, &second] {
+            assert_eq!(r.prototypes.data(), fresh.prototypes.data());
+            assert_eq!(r.weights, fresh.weights);
+            assert_eq!(r.levels.len(), fresh.levels.len());
+        }
+    }
+
+    #[test]
+    fn prototype_reduction_worker_count_invariant() {
+        // The cluster-range-partitioned reduction must be byte-identical
+        // across worker counts (accumulation order per cluster is point
+        // order regardless of the partitioning).
+        let ds = gaussian_mixture_paper(9000, 73);
+        let cfg = ItisConfig::iterations(2, 2);
+        let mut results = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let mut ws = ItisWorkspace::new();
+            let r =
+                itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+            results.push(r);
+        }
+        let base: Vec<u32> = results[0].prototypes.data().iter().map(|v| v.to_bits()).collect();
+        for r in &results[1..] {
+            let got: Vec<u32> = r.prototypes.data().iter().map(|v| v.to_bits()).collect();
+            assert_eq!(base, got);
+            assert_eq!(results[0].weights, r.weights);
+        }
     }
 }

@@ -12,9 +12,18 @@
 //! `select_nth_unstable`); leaves hold up to `leaf_size` points and are
 //! scanned linearly, which is both cache-friendly and what the Pallas
 //! tile kernel mirrors at L1. Batch queries reuse one [`TopK`] and one
-//! scratch buffer (`knn_range`) so the hot loop does not allocate.
+//! scratch buffer so the hot loop does not allocate.
+//!
+//! Parallel construction ([`KdTree::build_parallel`]) splits the top of
+//! the tree serially into `~8×workers` disjoint permutation windows, has
+//! the worker pool build one sub-arena per window, and splices the
+//! sub-arenas back into a single flat arena. Because the planning phase
+//! uses the same median/comparator as the serial recursion, the merged
+//! arena (nodes, boxes, permutation) is **byte-identical** to the serial
+//! build for every worker count.
 
 use super::{KnnLists, TopK};
+use crate::coordinator::WorkerPool;
 use crate::linalg::{sq_dist, Matrix};
 use crate::{Error, Result};
 
@@ -24,6 +33,182 @@ use crate::{Error, Result};
 enum Node {
     Split { axis: u16, left: u32, right: u32 },
     Leaf { start: u32, end: u32 },
+}
+
+/// Append a node and its (possibly dim-padded) bounding box to an arena.
+fn push_arena_node(
+    nodes: &mut Vec<Node>,
+    bboxes: &mut Vec<f32>,
+    dim: usize,
+    node: Node,
+    lo: &[f32],
+    hi: &[f32],
+) -> u32 {
+    let id = nodes.len() as u32;
+    nodes.push(node);
+    // Degenerate (empty-tree) boxes are padded to `dim`.
+    for j in 0..dim.max(1) {
+        bboxes.push(lo.get(j).copied().unwrap_or(f32::INFINITY));
+    }
+    for j in 0..dim.max(1) {
+        bboxes.push(hi.get(j).copied().unwrap_or(f32::NEG_INFINITY));
+    }
+    id
+}
+
+/// Bounding box of the rows indexed by `perm`.
+fn bbox_of(points: &Matrix, perm: &[u32]) -> (Vec<f32>, Vec<f32>) {
+    let d = points.cols();
+    let mut lo = vec![f32::INFINITY; d];
+    let mut hi = vec![f32::NEG_INFINITY; d];
+    for &i in perm {
+        let row = points.row(i as usize);
+        for j in 0..d {
+            lo[j] = lo[j].min(row[j]);
+            hi[j] = hi[j].max(row[j]);
+        }
+    }
+    (lo, hi)
+}
+
+/// Axis of maximum spread and that spread (`-1.0` when no axis exists).
+fn widest_axis(lo: &[f32], hi: &[f32]) -> (usize, f32) {
+    let mut axis = 0usize;
+    let mut best = -1.0f32;
+    for j in 0..lo.len() {
+        let spread = hi[j] - lo[j];
+        if spread > best {
+            best = spread;
+            axis = j;
+        }
+    }
+    (axis, best)
+}
+
+/// Median partition of `perm` on `axis` — the single comparator shared by
+/// the serial recursion and the parallel planning phase, so both produce
+/// the same permutation layout.
+fn partition_median(points: &Matrix, perm: &mut [u32], axis: usize) -> usize {
+    let mid = perm.len() / 2;
+    perm.select_nth_unstable_by(mid, |&a, &b| {
+        points
+            .get(a as usize, axis)
+            .partial_cmp(&points.get(b as usize, axis))
+            .unwrap()
+            .then(a.cmp(&b))
+    });
+    mid
+}
+
+/// Recursive arena construction over one permutation window. `offset` is
+/// the window's global position within the full permutation (leaves store
+/// global ranges). Returns the subtree root's arena id.
+fn build_arena(
+    points: &Matrix,
+    perm: &mut [u32],
+    offset: usize,
+    leaf_size: usize,
+    nodes: &mut Vec<Node>,
+    bboxes: &mut Vec<f32>,
+) -> u32 {
+    let d = points.cols();
+    let len = perm.len();
+    let (lo, hi) = bbox_of(points, perm);
+    let leaf = Node::Leaf { start: offset as u32, end: (offset + len) as u32 };
+    if len <= leaf_size {
+        return push_arena_node(nodes, bboxes, d, leaf, &lo, &hi);
+    }
+    let (axis, spread) = widest_axis(&lo, &hi);
+    if spread <= 0.0 {
+        // All points identical: force a leaf to avoid infinite recursion.
+        return push_arena_node(nodes, bboxes, d, leaf, &lo, &hi);
+    }
+    let mid = partition_median(points, perm, axis);
+    let (left_perm, right_perm) = perm.split_at_mut(mid);
+    let left = build_arena(points, left_perm, offset, leaf_size, nodes, bboxes);
+    let right = build_arena(points, right_perm, offset + mid, leaf_size, nodes, bboxes);
+    push_arena_node(nodes, bboxes, d, Node::Split { axis: axis as u16, left, right }, &lo, &hi)
+}
+
+/// Top-of-tree plan produced by the serial partitioning phase of the
+/// parallel build: internal splits plus leaf *tasks* (permutation
+/// windows) the pool builds concurrently.
+enum Plan {
+    Task { offset: usize, len: usize },
+    Split { axis: u16, lo: Vec<f32>, hi: Vec<f32>, left: Box<Plan>, right: Box<Plan> },
+}
+
+/// Serially partition `perm` until every remaining window is at most
+/// `task_len` rows (or degenerate), recording the split skeleton.
+fn make_plan(points: &Matrix, perm: &mut [u32], offset: usize, task_len: usize) -> Plan {
+    let len = perm.len();
+    if len <= task_len {
+        return Plan::Task { offset, len };
+    }
+    let (lo, hi) = bbox_of(points, perm);
+    let (axis, spread) = widest_axis(&lo, &hi);
+    if spread <= 0.0 {
+        return Plan::Task { offset, len };
+    }
+    let mid = partition_median(points, perm, axis);
+    let (left_perm, right_perm) = perm.split_at_mut(mid);
+    let left = Box::new(make_plan(points, left_perm, offset, task_len));
+    let right = Box::new(make_plan(points, right_perm, offset + mid, task_len));
+    Plan::Split { axis: axis as u16, lo, hi, left, right }
+}
+
+/// In-order task windows of a plan (ascending, disjoint, covering 0..n).
+fn plan_tasks(plan: &Plan, out: &mut Vec<(usize, usize)>) {
+    match plan {
+        Plan::Task { offset, len } => out.push((*offset, *len)),
+        Plan::Split { left, right, .. } => {
+            plan_tasks(left, out);
+            plan_tasks(right, out);
+        }
+    }
+}
+
+/// Splice the per-task sub-arenas into the final arena following the
+/// plan's post-order, rebasing child ids; returns the root id. The
+/// resulting arena layout equals the serial build's exactly.
+fn merge_plan(
+    plan: &Plan,
+    arenas: &mut [Option<(Vec<Node>, Vec<f32>, u32)>],
+    next: &mut usize,
+    nodes: &mut Vec<Node>,
+    bboxes: &mut Vec<f32>,
+    dim: usize,
+) -> u32 {
+    match plan {
+        Plan::Task { .. } => {
+            let (task_nodes, task_bboxes, task_root) =
+                arenas[*next].take().expect("each task arena spliced once");
+            *next += 1;
+            let base = nodes.len() as u32;
+            for node in task_nodes {
+                nodes.push(match node {
+                    Node::Leaf { start, end } => Node::Leaf { start, end },
+                    Node::Split { axis, left, right } => {
+                        Node::Split { axis, left: left + base, right: right + base }
+                    }
+                });
+            }
+            bboxes.extend_from_slice(&task_bboxes);
+            base + task_root
+        }
+        Plan::Split { axis, lo, hi, left, right } => {
+            let l = merge_plan(left, arenas, next, nodes, bboxes, dim);
+            let r = merge_plan(right, arenas, next, nodes, bboxes, dim);
+            push_arena_node(
+                nodes,
+                bboxes,
+                dim,
+                Node::Split { axis: *axis, left: l, right: r },
+                lo,
+                hi,
+            )
+        }
+    }
 }
 
 /// An immutable k-d tree over the rows of a [`Matrix`].
@@ -53,85 +238,79 @@ impl KdTree {
         let leaf_size = leaf_size.max(1);
         let mut perm: Vec<u32> = (0..n as u32).collect();
         let cap = 2 * (n / leaf_size + 1);
-        let mut tree = KdTree {
-            nodes: Vec::with_capacity(cap),
-            bboxes: Vec::with_capacity(cap * 2 * d),
-            perm: Vec::new(),
-            root: 0,
-            dim: d,
-            leaf_size,
-        };
+        let mut nodes = Vec::with_capacity(cap);
+        let mut bboxes = Vec::with_capacity(cap * 2 * d.max(1));
         let root = if n == 0 {
-            tree.push_node(Node::Leaf { start: 0, end: 0 }, &[f32::INFINITY], &[f32::NEG_INFINITY])
+            push_arena_node(
+                &mut nodes,
+                &mut bboxes,
+                d,
+                Node::Leaf { start: 0, end: 0 },
+                &[f32::INFINITY],
+                &[f32::NEG_INFINITY],
+            )
         } else {
-            tree.build_rec(points, &mut perm, 0, n)
+            build_arena(points, &mut perm, 0, leaf_size, &mut nodes, &mut bboxes)
         };
-        tree.root = root;
-        tree.perm = perm;
-        tree
+        KdTree { nodes, bboxes, perm, root, dim: d, leaf_size }
     }
 
-    fn push_node(&mut self, node: Node, lo: &[f32], hi: &[f32]) -> u32 {
-        let id = self.nodes.len() as u32;
-        self.nodes.push(node);
-        // Degenerate (empty-tree) boxes are padded to `dim`.
-        for j in 0..self.dim.max(1) {
-            self.bboxes.push(lo.get(j).copied().unwrap_or(f32::INFINITY));
-        }
-        for j in 0..self.dim.max(1) {
-            self.bboxes.push(hi.get(j).copied().unwrap_or(f32::NEG_INFINITY));
-        }
-        id
+    /// Build with node partitioning parallelized over the worker pool
+    /// (default leaf size). Output is byte-identical to [`Self::build`].
+    pub fn build_parallel(points: &Matrix, pool: &WorkerPool) -> Self {
+        Self::build_parallel_with_leaf_size(points, 12, pool)
     }
 
-    fn build_rec(&mut self, points: &Matrix, perm: &mut [u32], offset: usize, len: usize) -> u32 {
+    /// [`Self::build_parallel`] with an explicit leaf size. Small inputs
+    /// and single-worker pools fall back to the serial build.
+    pub fn build_parallel_with_leaf_size(
+        points: &Matrix,
+        leaf_size: usize,
+        pool: &WorkerPool,
+    ) -> Self {
+        let n = points.rows();
+        let workers = pool.workers();
+        if workers <= 1 || n < 4096 {
+            return Self::build_with_leaf_size(points, leaf_size);
+        }
         let d = points.cols();
-        let slice = &mut perm[offset..offset + len];
-        let mut lo = vec![f32::INFINITY; d];
-        let mut hi = vec![f32::NEG_INFINITY; d];
-        for &i in slice.iter() {
-            let row = points.row(i as usize);
-            for j in 0..d {
-                lo[j] = lo[j].min(row[j]);
-                hi[j] = hi[j].max(row[j]);
-            }
+        let leaf_size = leaf_size.max(1);
+        let mut perm: Vec<u32> = (0..n as u32).collect();
+        // ~8 tasks per worker so stealing evens out density skew, but
+        // never smaller than a few leaves per task.
+        let task_len = (n / (workers * 8)).max(leaf_size.max(256));
+        let plan = make_plan(points, &mut perm, 0, task_len);
+        let mut ranges = Vec::new();
+        plan_tasks(&plan, &mut ranges);
+        // Hand each task its disjoint mutable window of the permutation.
+        let mut tasks: Vec<(usize, &mut [u32])> = Vec::with_capacity(ranges.len());
+        let mut rest: &mut [u32] = &mut perm;
+        let mut consumed = 0usize;
+        for &(off, len) in &ranges {
+            debug_assert_eq!(off, consumed);
+            let window = std::mem::take(&mut rest);
+            let (head, tail) = window.split_at_mut(len);
+            tasks.push((off, head));
+            rest = tail;
+            consumed += len;
         }
-        if len <= self.leaf_size {
-            return self.push_node(
-                Node::Leaf { start: offset as u32, end: (offset + len) as u32 },
-                &lo,
-                &hi,
-            );
-        }
-        // Axis of maximum spread.
-        let mut axis = 0usize;
-        let mut best = -1.0f32;
-        for j in 0..d {
-            let spread = hi[j] - lo[j];
-            if spread > best {
-                best = spread;
-                axis = j;
-            }
-        }
-        if best <= 0.0 {
-            // All points identical: force a leaf to avoid infinite recursion.
-            return self.push_node(
-                Node::Leaf { start: offset as u32, end: (offset + len) as u32 },
-                &lo,
-                &hi,
-            );
-        }
-        let mid = len / 2;
-        slice.select_nth_unstable_by(mid, |&a, &b| {
-            points
-                .get(a as usize, axis)
-                .partial_cmp(&points.get(b as usize, axis))
-                .unwrap()
-                .then(a.cmp(&b))
-        });
-        let left = self.build_rec(points, perm, offset, mid);
-        let right = self.build_rec(points, perm, offset + mid, len - mid);
-        self.push_node(Node::Split { axis: axis as u16, left, right }, &lo, &hi)
+        debug_assert_eq!(consumed, n);
+        let arenas = pool
+            .run_tasks(tasks, |(off, window)| {
+                let mut nodes = Vec::new();
+                let mut bboxes = Vec::new();
+                let root = build_arena(points, window, off, leaf_size, &mut nodes, &mut bboxes);
+                Ok((nodes, bboxes, root))
+            })
+            .expect("kd-tree build tasks are infallible");
+        let mut arenas: Vec<Option<(Vec<Node>, Vec<f32>, u32)>> =
+            arenas.into_iter().map(Some).collect();
+        let cap = 2 * (n / leaf_size + 1);
+        let mut nodes = Vec::with_capacity(cap);
+        let mut bboxes = Vec::with_capacity(cap * 2 * d.max(1));
+        let mut next = 0usize;
+        let root = merge_plan(&plan, &mut arenas, &mut next, &mut nodes, &mut bboxes, d);
+        KdTree { nodes, bboxes, perm, root, dim: d, leaf_size }
     }
 
     /// Configured leaf size.
@@ -168,23 +347,22 @@ impl KdTree {
                     if idx == exclude {
                         continue;
                     }
-                    let d = sq_dist(q, points.row(idx as usize));
-                    if d < top.bound() {
-                        top.push(d, idx);
-                    }
+                    top.push(sq_dist(q, points.row(idx as usize)), idx);
                 }
             }
             Node::Split { axis, left, right } => {
-                // Descend into the child whose box is closer first.
+                // Descend into the child whose box is closer first. Boxes
+                // *at* the bound may still hold an index-tie winner, so
+                // only prune strictly beyond it (see `TopK::bound`).
                 let dl = self.bbox_min_dist(left, q);
                 let dr = self.bbox_min_dist(right, q);
                 let _ = axis;
                 let (near, near_d, far, far_d) =
                     if dl <= dr { (left, dl, right, dr) } else { (right, dr, left, dl) };
-                if near_d < top.bound() {
+                if near_d <= top.bound() {
                     self.search(points, q, exclude, near, top);
                 }
-                if far_d < top.bound() {
+                if far_d <= top.bound() {
                     self.search(points, q, exclude, far, top);
                 }
             }
@@ -205,12 +383,18 @@ impl KdTree {
     /// scratch buffer), and queries are issued in tree (leaf) order so
     /// consecutive queries share search paths and cache lines (§Perf).
     pub fn knn_all(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        let mut out = KnnLists::default();
+        self.knn_all_into(points, k, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Self::knn_all`] writing into a reusable output buffer.
+    pub fn knn_all_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
         let n = points.rows();
         if k == 0 || k >= n {
             return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
         }
-        let mut indices = vec![0u32; n * k];
-        let mut dists = vec![0f32; n * k];
+        out.reset(n, k);
         let mut top = TopK::new(k);
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
         for &pi in &self.perm {
@@ -220,11 +404,42 @@ impl KdTree {
             top.drain_sorted_into(&mut scratch);
             debug_assert_eq!(scratch.len(), k);
             for (slot, &(d, j)) in scratch.iter().enumerate() {
-                indices[i * k + slot] = j;
-                dists[i * k + slot] = d;
+                out.indices[i * k + slot] = j;
+                out.dists[i * k + slot] = d;
             }
         }
-        Ok(KnnLists { k, indices, dists })
+        Ok(())
+    }
+
+    /// [`Self::knn_all`] sharded across the worker pool: disjoint query
+    /// ranges are stolen chunk-by-chunk and written straight into `out`
+    /// (no per-shard buffers, no stitch copy). Byte-identical to the
+    /// serial path for any worker count.
+    pub fn knn_all_pool_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        pool: &WorkerPool,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        let n = points.rows();
+        if k == 0 || k >= n {
+            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+        }
+        out.reset(n, k);
+        const CHUNK: usize = 512;
+        let KnnLists { indices, dists, .. } = out;
+        let tasks: Vec<(usize, &mut [u32], &mut [f32])> = indices
+            .chunks_mut(CHUNK * k)
+            .zip(dists.chunks_mut(CHUNK * k))
+            .enumerate()
+            .map(|(ci, (is, ds))| (ci * CHUNK, is, ds))
+            .collect();
+        pool.run_tasks(tasks, |(start, is, ds)| {
+            let end = start + is.len() / k;
+            self.knn_range_into(points, k, start, end, is, ds)
+        })?;
+        Ok(())
     }
 
     /// [`Self::knn_all`] restricted to query rows `[start, end)` — the
@@ -242,8 +457,33 @@ impl KdTree {
         }
         assert!(start <= end && end <= n);
         let m = end - start;
-        let mut indices = vec![0u32; m * k];
-        let mut dists = vec![0f32; m * k];
+        let mut out = KnnLists { k, indices: vec![0u32; m * k], dists: vec![0f32; m * k] };
+        {
+            let KnnLists { indices, dists, .. } = &mut out;
+            self.knn_range_into(points, k, start, end, indices, dists)?;
+        }
+        Ok(out)
+    }
+
+    /// [`Self::knn_range`] writing into caller-owned slices of length
+    /// `(end - start) * k` each.
+    pub fn knn_range_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        start: usize,
+        end: usize,
+        indices: &mut [u32],
+        dists: &mut [f32],
+    ) -> Result<()> {
+        let n = points.rows();
+        if k == 0 || k >= n {
+            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+        }
+        assert!(start <= end && end <= n);
+        let m = end - start;
+        assert_eq!(indices.len(), m * k);
+        assert_eq!(dists.len(), m * k);
         let mut top = TopK::new(k);
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
         for i in start..end {
@@ -257,7 +497,7 @@ impl KdTree {
                 dists[o * k + slot] = d;
             }
         }
-        Ok(KnnLists { k, indices, dists })
+        Ok(())
     }
 
     /// All indexed points within squared radius `r2` of `q` (used by
@@ -311,6 +551,9 @@ mod tests {
         let tree = KdTree::build(&ds.points);
         let brute = knn_brute(&ds.points, 6).unwrap();
         let fast = tree.knn_all(&ds.points, 6).unwrap();
+        // Deterministic (distance, index) candidate order makes the two
+        // backends agree exactly.
+        assert_eq!(brute.indices, fast.indices);
         for i in 0..800 {
             let a = brute.distances(i);
             let b = fast.distances(i);
@@ -333,6 +576,40 @@ mod tests {
         let knn = tree.knn_all(&m, 3).unwrap();
         // A duplicated point's neighbors are other duplicates at distance 0.
         assert_eq!(knn.distances(0), &[0.0, 0.0, 0.0]);
+        // Ties resolve to the smallest indices (self excluded).
+        assert_eq!(knn.neighbors(0), &[1, 2, 3]);
+        assert_eq!(knn.neighbors(5), &[0, 1, 2]);
+    }
+
+    #[test]
+    fn parallel_build_byte_identical_to_serial() {
+        let ds = gaussian_mixture_paper(6000, 36);
+        let serial = KdTree::build(&ds.points);
+        let base = serial.knn_all(&ds.points, 4).unwrap();
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let tree = KdTree::build_parallel(&ds.points, &pool);
+            assert_eq!(tree.perm, serial.perm, "workers={workers}");
+            let got = tree.knn_all(&ds.points, 4).unwrap();
+            assert_eq!(base.indices, got.indices, "workers={workers}");
+            let bb: Vec<u32> = base.dists.iter().map(|d| d.to_bits()).collect();
+            let gb: Vec<u32> = got.dists.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(bb, gb, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn pool_queries_match_serial() {
+        let ds = gaussian_mixture_paper(3000, 37);
+        let tree = KdTree::build(&ds.points);
+        let serial = tree.knn_all(&ds.points, 5).unwrap();
+        for workers in [1usize, 3] {
+            let pool = WorkerPool::new(workers);
+            let mut pooled = KnnLists::default();
+            tree.knn_all_pool_into(&ds.points, 5, &pool, &mut pooled).unwrap();
+            assert_eq!(serial.indices, pooled.indices, "workers={workers}");
+            assert_eq!(serial.dists, pooled.dists, "workers={workers}");
+        }
     }
 
     #[test]

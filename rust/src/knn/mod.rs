@@ -11,6 +11,22 @@
 //!   the PJRT runtime plugs its AOT pairwise-distance executable into, and
 //!   the shape the coordinator shards across workers.
 //!
+//! [`knn_auto`] routes every caller — `threshold_cluster`, ITIS, the
+//! benches — through the coordinator's worker pool by default: the
+//! kd-tree is built with parallel node partitioning and queried in
+//! pool-sharded ranges, and the chunked path shards query blocks. All
+//! backends share a total candidate order (distance, then index; see
+//! [`TopK`]), so every path is deterministic and worker-count invariant;
+//! the kd-tree paths (what `knn_auto` picks for the paper's post-PCA
+//! dimensionalities) are additionally **byte-identical** to
+//! [`knn_brute`] — the parity property tests pin this down. The
+//! norm-trick chunked kernel is exact up to standard float
+//! reassociation, matching the Pallas/PJRT kernel's arithmetic instead.
+//!
+//! Allocation discipline: every backend has a `*_into` variant that
+//! writes into a caller-owned [`KnnLists`], so the ITIS reduction loop
+//! reuses its `n×k` buffers across iterations instead of reallocating.
+//!
 //! All backends produce a [`KnnLists`], which [`graph::NeighborGraph`]
 //! symmetrizes into the CSR adjacency TC consumes (Definition 6: the edge
 //! `ij` exists iff `j` is one of `i`'s k nearest **or** `i` one of `j`'s).
@@ -18,12 +34,23 @@
 pub mod graph;
 pub mod kdtree;
 
-use crate::linalg::{sq_dist, Matrix};
+use crate::coordinator::WorkerPool;
+use crate::linalg::{sq_dist, sq_norm, Matrix};
 use crate::{Error, Result};
+
+/// Below this row count the pooled paths fall back to serial execution
+/// (thread spawn overhead dominates).
+const PARALLEL_QUERY_MIN: usize = 2048;
+/// Below this row count the kd-tree is built serially.
+const PARALLEL_BUILD_MIN: usize = 8192;
+/// The norm-trick kernel pays off once the dot product amortizes the
+/// extra passes; below this dimensionality the direct difference kernel
+/// is both faster and bit-identical to [`sq_dist`].
+const NORM_TRICK_MIN_DIM: usize = 4;
 
 /// Directed k-NN lists: for each of `n` query points, its `k` nearest
 /// neighbors (by squared Euclidean distance), self excluded, ascending.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct KnnLists {
     /// Neighbors per point.
     pub k: usize,
@@ -53,11 +80,33 @@ impl KnnLists {
     pub fn distances(&self, i: usize) -> &[f32] {
         &self.dists[i * self.k..(i + 1) * self.k]
     }
+
+    /// Resize for `n` queries × `k` neighbors, keeping existing capacity —
+    /// the workspace-reuse hook the ITIS loop leans on (level sizes only
+    /// shrink, so after the first iteration this never allocates).
+    pub fn reset(&mut self, n: usize, k: usize) {
+        self.k = k;
+        self.indices.clear();
+        self.indices.resize(n * k, 0);
+        self.dists.clear();
+        self.dists.resize(n * k, 0.0);
+    }
 }
 
-/// A bounded max-heap used to keep the k smallest distances seen so far.
-/// Stored as a binary heap over (dist, idx) with the *largest* at the root
-/// so it can be evicted in O(log k).
+/// Total order on k-NN candidates: `a` is *worse* than `b` when it is
+/// farther, ties broken toward the larger index. Ordering by
+/// `(distance, index)` makes the kept set independent of visit order, so
+/// every backend (brute, kd-tree, chunked, pooled) returns identical
+/// lists — the cross-backend parity guarantees rest on this.
+#[inline]
+fn worse(a: (f32, u32), b: (f32, u32)) -> bool {
+    a.0 > b.0 || (a.0 == b.0 && a.1 > b.1)
+}
+
+/// A bounded max-heap used to keep the k smallest `(dist, idx)` pairs
+/// seen so far, under the total order of [`worse`]. Stored as a binary
+/// heap with the *worst* kept pair at the root so it can be evicted in
+/// O(log k).
 #[derive(Clone, Debug)]
 pub struct TopK {
     k: usize,
@@ -75,8 +124,8 @@ impl TopK {
         self.k
     }
 
-    /// Clear for reuse (keeps the allocation) — the kd-tree batch query
-    /// path calls this once per point instead of reallocating.
+    /// Clear for reuse (keeps the allocation) — the batch query paths
+    /// call this once per point instead of reallocating.
     pub fn reset(&mut self) {
         self.heap.clear();
     }
@@ -91,12 +140,17 @@ impl TopK {
     }
 
     /// Current worst (largest) kept distance, or +inf while under-full.
+    /// Candidates strictly beyond this bound can never enter; candidates
+    /// *at* the bound still can (smaller index wins ties), so pruning
+    /// must only skip regions strictly beyond it.
     #[inline]
     pub fn bound(&self) -> f32 {
         if self.heap.len() < self.k { f32::INFINITY } else { self.heap[0].0 }
     }
 
-    /// Offer a candidate.
+    /// Offer a candidate; keeps the k smallest under the `(dist, idx)`
+    /// total order. Rejection is handled internally — callers need no
+    /// bound pre-check.
     #[inline]
     pub fn push(&mut self, d: f32, idx: u32) {
         if self.heap.len() < self.k {
@@ -104,31 +158,31 @@ impl TopK {
             let mut i = self.heap.len() - 1;
             while i > 0 {
                 let parent = (i - 1) / 2;
-                if self.heap[parent].0 < self.heap[i].0 {
+                if worse(self.heap[i], self.heap[parent]) {
                     self.heap.swap(parent, i);
                     i = parent;
                 } else {
                     break;
                 }
             }
-        } else if d < self.heap[0].0 {
+        } else if worse(self.heap[0], (d, idx)) {
             self.heap[0] = (d, idx);
             // Sift down.
             let mut i = 0;
             loop {
                 let (l, r) = (2 * i + 1, 2 * i + 2);
-                let mut largest = i;
-                if l < self.heap.len() && self.heap[l].0 > self.heap[largest].0 {
-                    largest = l;
+                let mut worst = i;
+                if l < self.heap.len() && worse(self.heap[l], self.heap[worst]) {
+                    worst = l;
                 }
-                if r < self.heap.len() && self.heap[r].0 > self.heap[largest].0 {
-                    largest = r;
+                if r < self.heap.len() && worse(self.heap[r], self.heap[worst]) {
+                    worst = r;
                 }
-                if largest == i {
+                if worst == i {
                     break;
                 }
-                self.heap.swap(i, largest);
-                i = largest;
+                self.heap.swap(i, worst);
+                i = worst;
             }
         }
     }
@@ -158,10 +212,7 @@ pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
             if j == i {
                 continue;
             }
-            let d = sq_dist(qi, points.row(j));
-            if d < top.bound() {
-                top.push(d, j as u32);
-            }
+            top.push(sq_dist(qi, points.row(j)), j as u32);
         }
         for (slot, (d, j)) in top.into_sorted().into_iter().enumerate() {
             indices[i * k + slot] = j;
@@ -171,10 +222,32 @@ pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
     Ok(KnnLists { k, indices, dists })
 }
 
+/// Reusable per-thread scratch for chunk evaluation: one reference-block
+/// row of distances plus the reference norms of the norm-trick kernel.
+/// Thread one through [`knn_chunked_into`] (done automatically) so the
+/// hot loop stays allocation-free across blocks. A scratch belongs to a
+/// single `knn_chunked*` call (one point set): the norm cache is keyed
+/// only by row count.
+#[derive(Debug, Default)]
+pub struct ChunkScratch {
+    /// `nr` distances of the current query row against the block.
+    dist_row: Vec<f32>,
+    /// `‖r‖²` for every reference row, filled lazily on the first block
+    /// and reused by all subsequent blocks of the call.
+    rnorms: Vec<f32>,
+}
+
+impl ChunkScratch {
+    /// Empty scratch; buffers grow on first use and are then reused.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
 /// A chunk evaluator: given a block of query rows (global offset `q0`) and
 /// the full point set, fill per-query [`TopK`] collectors. The PJRT
 /// runtime implements this with the AOT pairwise+top-k executable; the
-/// native implementation tiles `pairwise_sq_dists`.
+/// native implementation tiles the norm-trick blocked kernel.
 pub trait ChunkEvaluator {
     /// Evaluate queries `[q0, q0+nq)` against references `[r0, r0+nr)`,
     /// updating `tops[q]` for each local query index `q`.
@@ -187,9 +260,32 @@ pub trait ChunkEvaluator {
         nr: usize,
         tops: &mut [TopK],
     ) -> Result<()>;
+
+    /// Workspace-aware variant: implementations that need per-block
+    /// buffers (the native norm-trick kernel) take them from `scratch`
+    /// instead of allocating. The default ignores the scratch and
+    /// delegates to [`Self::eval_block`].
+    fn eval_block_ws(
+        &self,
+        points: &Matrix,
+        q0: usize,
+        nq: usize,
+        r0: usize,
+        nr: usize,
+        tops: &mut [TopK],
+        scratch: &mut ChunkScratch,
+    ) -> Result<()> {
+        let _ = scratch;
+        self.eval_block(points, q0, nq, r0, nr, tops)
+    }
 }
 
 /// Native (pure-Rust) chunk evaluator mirroring the L1 Pallas kernel.
+///
+/// For d ≥ 4 the workspace path uses the same `‖q‖² + ‖r‖² − 2 q·r`
+/// decomposition as the kernel (reference norms precomputed once per
+/// block, dot-product inner loop); below that the direct difference
+/// kernel wins and stays bit-identical to [`sq_dist`].
 pub struct NativeChunks {
     /// Reference-block edge length.
     pub block: usize,
@@ -218,10 +314,53 @@ impl ChunkEvaluator for NativeChunks {
                 if rj == q0 + qi {
                     continue;
                 }
-                let d = sq_dist(q, points.row(rj));
-                if d < top.bound() {
-                    top.push(d, rj as u32);
+                top.push(sq_dist(q, points.row(rj)), rj as u32);
+            }
+        }
+        Ok(())
+    }
+
+    fn eval_block_ws(
+        &self,
+        points: &Matrix,
+        q0: usize,
+        nq: usize,
+        r0: usize,
+        nr: usize,
+        tops: &mut [TopK],
+        scratch: &mut ChunkScratch,
+    ) -> Result<()> {
+        let d = points.cols();
+        if d < NORM_TRICK_MIN_DIM {
+            return self.eval_block(points, q0, nq, r0, nr, tops);
+        }
+        // Fill the norm cache once per call, not once per block — every
+        // reference row is revisited n/q_block times otherwise.
+        if scratch.rnorms.len() != points.rows() {
+            scratch.rnorms.clear();
+            scratch.rnorms.extend((0..points.rows()).map(|j| sq_norm(points.row(j))));
+        }
+        scratch.dist_row.clear();
+        scratch.dist_row.resize(nr, 0.0);
+        for qi in 0..nq {
+            let q = points.row(q0 + qi);
+            let qn = sq_norm(q);
+            for (jj, slot) in scratch.dist_row.iter_mut().enumerate() {
+                let r = points.row(r0 + jj);
+                let mut dot = 0.0f32;
+                for (x, y) in q.iter().zip(r) {
+                    dot += x * y;
                 }
+                // Clamp: catastrophic cancellation can go slightly negative.
+                *slot = (qn + scratch.rnorms[r0 + jj] - 2.0 * dot).max(0.0);
+            }
+            let top = &mut tops[qi];
+            for (jj, &dd) in scratch.dist_row.iter().enumerate() {
+                let rj = r0 + jj;
+                if rj == q0 + qi {
+                    continue;
+                }
+                top.push(dd, rj as u32);
             }
         }
         Ok(())
@@ -239,41 +378,188 @@ pub fn knn_chunked(
     r_block: usize,
     eval: &dyn ChunkEvaluator,
 ) -> Result<KnnLists> {
+    let mut out = KnnLists::default();
+    knn_chunked_into(points, k, q_block, r_block, eval, &mut out)?;
+    Ok(out)
+}
+
+/// [`knn_chunked`] writing into a reusable output buffer. The per-query
+/// [`TopK`] collectors and the evaluator scratch are allocated once and
+/// reused across every query block (§Perf: the seed allocated a fresh
+/// `Vec<TopK>` per block).
+pub fn knn_chunked_into(
+    points: &Matrix,
+    k: usize,
+    q_block: usize,
+    r_block: usize,
+    eval: &dyn ChunkEvaluator,
+    out: &mut KnnLists,
+) -> Result<()> {
     let n = points.rows();
     if k == 0 || k >= n {
         return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
     }
-    let mut indices = vec![0u32; n * k];
-    let mut dists = vec![0f32; n * k];
+    let q_block = q_block.max(1);
+    let r_block = r_block.max(1);
+    out.reset(n, k);
+    let mut tops: Vec<TopK> = (0..q_block.min(n)).map(|_| TopK::new(k)).collect();
+    let mut scratch = ChunkScratch::new();
+    let mut sort_buf: Vec<(f32, u32)> = Vec::with_capacity(k);
     let mut q0 = 0;
     while q0 < n {
         let nq = q_block.min(n - q0);
-        let mut tops: Vec<TopK> = (0..nq).map(|_| TopK::new(k)).collect();
+        for t in tops[..nq].iter_mut() {
+            t.reset();
+        }
         let mut r0 = 0;
         while r0 < n {
             let nr = r_block.min(n - r0);
-            eval.eval_block(points, q0, nq, r0, nr, &mut tops)?;
+            eval.eval_block_ws(points, q0, nq, r0, nr, &mut tops[..nq], &mut scratch)?;
             r0 += nr;
         }
-        for (qi, top) in tops.into_iter().enumerate() {
+        for (qi, top) in tops[..nq].iter_mut().enumerate() {
             let i = q0 + qi;
-            for (slot, (d, j)) in top.into_sorted().into_iter().enumerate() {
-                indices[i * k + slot] = j;
-                dists[i * k + slot] = d;
+            top.drain_sorted_into(&mut sort_buf);
+            for (slot, &(d, j)) in sort_buf.iter().enumerate() {
+                out.indices[i * k + slot] = j;
+                out.dists[i * k + slot] = d;
             }
         }
         q0 += nq;
     }
-    Ok(KnnLists { k, indices, dists })
+    Ok(())
 }
 
-/// Pick the best exact backend for the given workload: kd-tree for low
-/// dimension, chunked brute force otherwise.
+/// Pool-sharded [`knn_chunked`]: contiguous runs of query blocks are
+/// distributed across the worker pool (~4 tasks per worker, so the
+/// [`TopK`] set, evaluator scratch, and norm cache amortize over many
+/// blocks instead of being rebuilt per 256-row block). Tasks are always
+/// whole multiples of `q_block`, so the (query block, reference block)
+/// decomposition — and therefore the output — is byte-identical to the
+/// serial path for any worker count.
+pub fn knn_chunked_pool(
+    points: &Matrix,
+    k: usize,
+    q_block: usize,
+    r_block: usize,
+    eval: &(dyn ChunkEvaluator + Sync),
+    pool: &WorkerPool,
+) -> Result<KnnLists> {
+    let mut out = KnnLists::default();
+    knn_chunked_pool_into(points, k, q_block, r_block, eval, pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`knn_chunked_pool`] writing into a reusable output buffer. Workers
+/// write directly into disjoint row ranges of `out` — no per-shard
+/// result buffers, no stitch copy.
+pub fn knn_chunked_pool_into(
+    points: &Matrix,
+    k: usize,
+    q_block: usize,
+    r_block: usize,
+    eval: &(dyn ChunkEvaluator + Sync),
+    pool: &WorkerPool,
+    out: &mut KnnLists,
+) -> Result<()> {
+    let n = points.rows();
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    let q_block = q_block.max(1);
+    let r_block = r_block.max(1);
+    out.reset(n, k);
+    // Task size: a whole number of q_blocks, ~4 tasks per worker.
+    let total_blocks = (n + q_block - 1) / q_block;
+    let target_tasks = pool.workers() * 4;
+    let blocks_per_task = ((total_blocks + target_tasks - 1) / target_tasks).max(1);
+    let task_rows = blocks_per_task * q_block;
+    let KnnLists { indices, dists, .. } = out;
+    let tasks: Vec<(usize, &mut [u32], &mut [f32])> = indices
+        .chunks_mut(task_rows * k)
+        .zip(dists.chunks_mut(task_rows * k))
+        .enumerate()
+        .map(|(ti, (is, ds))| (ti * task_rows, is, ds))
+        .collect();
+    pool.run_tasks(tasks, |(t0, is, ds)| {
+        let rows = is.len() / k;
+        // Per-task reusable state, amortized over every block the task
+        // owns (mirrors the serial loop's hoisting).
+        let mut tops: Vec<TopK> = (0..q_block.min(rows)).map(|_| TopK::new(k)).collect();
+        let mut scratch = ChunkScratch::new();
+        let mut sort_buf: Vec<(f32, u32)> = Vec::with_capacity(k);
+        let mut off = 0;
+        while off < rows {
+            let nq = q_block.min(rows - off);
+            let q0 = t0 + off;
+            for t in tops[..nq].iter_mut() {
+                t.reset();
+            }
+            let mut r0 = 0;
+            while r0 < n {
+                let nr = r_block.min(n - r0);
+                eval.eval_block_ws(points, q0, nq, r0, nr, &mut tops[..nq], &mut scratch)?;
+                r0 += nr;
+            }
+            for (qi, top) in tops[..nq].iter_mut().enumerate() {
+                let local = off + qi;
+                top.drain_sorted_into(&mut sort_buf);
+                for (slot, &(d, j)) in sort_buf.iter().enumerate() {
+                    is[local * k + slot] = j;
+                    ds[local * k + slot] = d;
+                }
+            }
+            off += nq;
+        }
+        Ok(())
+    })?;
+    Ok(())
+}
+
+/// Pick the best exact backend for the given workload — kd-tree for low
+/// dimension, chunked norm-trick kernel otherwise — running on the
+/// default worker pool. Every caller (TC, ITIS, benches) gets parallel
+/// k-NN without opting in; use [`knn_auto_with`] to control the pool.
 pub fn knn_auto(points: &Matrix, k: usize) -> Result<KnnLists> {
-    if points.cols() <= 12 && points.rows() > 256 {
-        kdtree::KdTree::build(points).knn_all(points, k)
+    knn_auto_with(points, k, &WorkerPool::default())
+}
+
+/// [`knn_auto`] on an explicit worker pool.
+pub fn knn_auto_with(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnLists> {
+    let mut out = KnnLists::default();
+    knn_auto_into(points, k, pool, &mut out)?;
+    Ok(out)
+}
+
+/// [`knn_auto_with`] writing into a reusable output buffer (the ITIS
+/// loop's allocation-reuse hook). Small workloads run serially — the
+/// pool only engages once thread spawn cost amortizes.
+pub fn knn_auto_into(
+    points: &Matrix,
+    k: usize,
+    pool: &WorkerPool,
+    out: &mut KnnLists,
+) -> Result<()> {
+    let n = points.rows();
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    let parallel = n >= PARALLEL_QUERY_MIN && pool.workers() > 1;
+    if points.cols() <= 12 && n > 256 {
+        let tree = if n >= PARALLEL_BUILD_MIN && pool.workers() > 1 {
+            kdtree::KdTree::build_parallel(points, pool)
+        } else {
+            kdtree::KdTree::build(points)
+        };
+        if parallel {
+            tree.knn_all_pool_into(points, k, pool, out)
+        } else {
+            tree.knn_all_into(points, k, out)
+        }
+    } else if parallel {
+        knn_chunked_pool_into(points, k, 256, 1024, &NativeChunks::default(), pool, out)
     } else {
-        knn_chunked(points, k, 256, 1024, &NativeChunks::default())
+        knn_chunked_into(points, k, 256, 1024, &NativeChunks::default(), out)
     }
 }
 
@@ -281,6 +567,7 @@ pub fn knn_auto(points: &Matrix, k: usize) -> Result<KnnLists> {
 mod tests {
     use super::*;
     use crate::data::synth::gaussian_mixture_paper;
+    use crate::rng::Xoshiro256;
 
     #[test]
     fn topk_keeps_smallest() {
@@ -301,6 +588,20 @@ mod tests {
         let out = t.into_sorted();
         assert_eq!(out.len(), 2);
         assert_eq!(out[0].1, 3);
+    }
+
+    #[test]
+    fn topk_tie_break_by_index() {
+        // Equal distances: the smaller index must win, regardless of
+        // insertion order — the cross-backend determinism guarantee.
+        for order in [[9u32, 2, 5], [5, 9, 2], [2, 5, 9]] {
+            let mut t = TopK::new(2);
+            for idx in order {
+                t.push(1.0, idx);
+            }
+            let out = t.into_sorted();
+            assert_eq!(out.iter().map(|x| x.1).collect::<Vec<_>>(), vec![2, 5], "{order:?}");
+        }
     }
 
     #[test]
@@ -332,19 +633,69 @@ mod tests {
         }
     }
 
+    /// Random matrix in `dim` dimensions (exercises the norm-trick path,
+    /// which engages at d ≥ 4).
+    fn random_points(n: usize, dim: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256::seed_from_u64(seed);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian() as f32 * 2.0).collect();
+        Matrix::from_vec(data, n, dim).unwrap()
+    }
+
+    #[test]
+    fn norm_trick_matches_brute_distances() {
+        let m = random_points(400, 8, 24);
+        let a = knn_brute(&m, 6).unwrap();
+        let b = knn_chunked(&m, 6, 64, 128, &NativeChunks::default()).unwrap();
+        for i in 0..400 {
+            for (x, y) in a.distances(i).iter().zip(b.distances(i)) {
+                assert!((x - y).abs() <= 1e-4 * (1.0 + x.abs()), "row {i}");
+            }
+            let d = b.distances(i);
+            assert!(d.windows(2).all(|w| w[0] <= w[1]), "row {i} unsorted");
+        }
+    }
+
+    #[test]
+    fn chunked_pool_byte_identical_to_serial() {
+        let m = random_points(700, 8, 25);
+        let serial = knn_chunked(&m, 4, 64, 256, &NativeChunks::default()).unwrap();
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let par =
+                knn_chunked_pool(&m, 4, 64, 256, &NativeChunks::default(), &pool).unwrap();
+            assert_eq!(serial.indices, par.indices, "workers={workers}");
+            let sb: Vec<u32> = serial.dists.iter().map(|d| d.to_bits()).collect();
+            let pb: Vec<u32> = par.dists.iter().map(|d| d.to_bits()).collect();
+            assert_eq!(sb, pb, "workers={workers}");
+        }
+    }
+
     #[test]
     fn auto_matches_brute() {
         let ds = gaussian_mixture_paper(500, 22);
         let a = knn_brute(&ds.points, 3).unwrap();
         let b = knn_auto(&ds.points, 3).unwrap();
-        // kd-tree may order equal distances differently; compare dists.
-        for i in 0..ds.len() {
-            let da = a.distances(i);
-            let db = b.distances(i);
-            for (x, y) in da.iter().zip(db) {
-                assert!((x - y).abs() < 1e-4, "row {i}: {da:?} vs {db:?}");
-            }
+        // The shared (distance, index) candidate order makes the two
+        // backends agree exactly, not just up to distance ties.
+        assert_eq!(a.indices, b.indices);
+        for (x, y) in a.dists.iter().zip(&b.dists) {
+            assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn auto_into_reuses_buffers() {
+        let ds = gaussian_mixture_paper(600, 26);
+        let pool = WorkerPool::new(2);
+        let mut out = KnnLists::default();
+        knn_auto_into(&ds.points, 5, &pool, &mut out).unwrap();
+        assert_eq!(out.len(), 600);
+        let cap_i = out.indices.capacity();
+        // A smaller follow-up query must fit in the existing allocation.
+        let half = ds.points.slice_rows(0, 300);
+        knn_auto_into(&half, 5, &pool, &mut out).unwrap();
+        assert_eq!(out.len(), 300);
+        assert_eq!(out.indices.capacity(), cap_i);
     }
 
     #[test]

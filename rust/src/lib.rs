@@ -55,32 +55,58 @@ pub mod sim;
 pub mod tc;
 
 /// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+///
+/// Implemented by hand (no `thiserror`): the offline build has no
+/// crates.io access, so the crate carries zero external dependencies.
+#[derive(Debug)]
 pub enum Error {
-    #[error("invalid argument: {0}")]
+    /// A caller-supplied argument was out of range or inconsistent.
     InvalidArgument(String),
-    #[error("shape mismatch: {0}")]
+    /// Matrix/buffer shapes disagree.
     Shape(String),
-    #[error("dataset error: {0}")]
+    /// Dataset loading or validation failed.
     Data(String),
-    #[error("config error: {0}")]
+    /// Configuration parsing or validation failed.
     Config(String),
-    #[error("runtime (PJRT) error: {0}")]
+    /// The PJRT runtime failed (or is compiled out; see the `pjrt` feature).
     Runtime(String),
-    #[error("coordinator error: {0}")]
+    /// The streaming coordinator failed.
     Coordinator(String),
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    /// An underlying I/O error.
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Data(m) => write!(f, "dataset error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime (PJRT) error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
-
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
-    }
-}
 
 /// Bail out with [`Error::InvalidArgument`].
 #[macro_export]

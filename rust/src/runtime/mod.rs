@@ -14,13 +14,26 @@
 //!
 //! Python never runs here; the binary is self-contained once
 //! `artifacts/` exists.
+//!
+//! ## The `pjrt` feature
+//!
+//! The real implementation (in `pjrt.rs`) needs the `xla` bindings crate,
+//! which is not available in the offline build environment. It is gated
+//! behind the off-by-default `pjrt` cargo feature; the default build gets
+//! an API-compatible stub whose [`Engine::load`] returns
+//! [`crate::Error::Runtime`], so every caller (coordinator driver,
+//! benches, `ihtc check-artifacts`) degrades gracefully to the native
+//! pooled path.
 
-use crate::cluster::kmeans::AssignBackend;
-use crate::config::json::Json;
-use crate::knn::{ChunkEvaluator, TopK};
-use crate::linalg::Matrix;
-use crate::{Error, Result};
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, PjrtAssign, PjrtChunks};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::{Engine, PjrtAssign, PjrtChunks};
 
 /// Tile geometry the artifacts were compiled for (mirrors `aot.py`).
 #[derive(Clone, Copy, Debug)]
@@ -43,321 +56,12 @@ pub struct TileGeometry {
 /// (mirrors `model.MASK_BIG`).
 pub const MASK_BIG: f32 = 1e30;
 
-/// A loaded PJRT engine holding the compiled executables.
-pub struct Engine {
-    #[allow(dead_code)]
-    client: xla::PjRtClient,
-    /// knn_chunk variants `(neighbor_slots, executable)`, ascending by
-    /// slot count — the top-k rounds cost a full pass over the distance
-    /// block each, so small-`t*` workloads use a small variant.
-    knn_exes: Vec<(usize, xla::PjRtLoadedExecutable)>,
-    km_exe: xla::PjRtLoadedExecutable,
-    /// Tile geometry from the manifest (`knn_k` = the largest variant).
-    pub tile: TileGeometry,
-    /// Where the artifacts came from.
-    pub dir: PathBuf,
-}
-
-impl Engine {
-    /// Default artifact directory: `$IHTC_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("IHTC_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    /// Load + compile all artifacts listed in `manifest.json`.
-    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = dir.as_ref().to_path_buf();
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
-            Error::Runtime(format!(
-                "cannot read {} (run `make artifacts` first): {e}",
-                manifest_path.display()
-            ))
-        })?;
-        let manifest = Json::parse(&text)?;
-        let tile_j = manifest
-            .get("tile")
-            .ok_or_else(|| Error::Runtime("manifest missing 'tile'".into()))?;
-        let tile = TileGeometry {
-            knn_q: tile_j.req_usize("knn_q")?,
-            knn_r: tile_j.req_usize("knn_r")?,
-            knn_k: tile_j.req_usize("knn_k")?,
-            km_n: tile_j.req_usize("km_n")?,
-            km_k: tile_j.req_usize("km_k")?,
-            dim: tile_j.req_usize("dim")?,
-        };
-        let client = xla::PjRtClient::cpu()?;
-        let mut knn_exes = Vec::new();
-        let mut km_exe = None;
-        for art in manifest
-            .get("artifacts")
-            .and_then(Json::as_array)
-            .ok_or_else(|| Error::Runtime("manifest missing 'artifacts'".into()))?
-        {
-            let name = art.req_str("name")?;
-            let file = dir.join(art.req_str("file")?);
-            let proto = xla::HloModuleProto::from_text_file(
-                file.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            if name.starts_with("knn_chunk") {
-                // Neighbor-slot count from the first output's shape [Q, k].
-                let slots = art
-                    .get("outputs")
-                    .and_then(Json::as_array)
-                    .and_then(|o| o.first())
-                    .and_then(|o| o.get("shape"))
-                    .and_then(Json::as_array)
-                    .and_then(|s| s.get(1))
-                    .and_then(Json::as_usize)
-                    .ok_or_else(|| Error::Runtime(format!("artifact '{name}' lacks output shape")))?;
-                knn_exes.push((slots, exe));
-            } else if name.starts_with("kmeans_assign") {
-                km_exe = Some(exe);
-            } else {
-                log::warn!("unknown artifact '{name}' ignored");
-            }
-        }
-        knn_exes.sort_by_key(|&(k, _)| k);
-        if knn_exes.is_empty() {
-            return Err(Error::Runtime("manifest lacks knn_chunk".into()));
-        }
-        Ok(Engine {
-            client,
-            knn_exes,
-            km_exe: km_exe
-                .ok_or_else(|| Error::Runtime("manifest lacks kmeans_assign".into()))?,
-            tile,
-            dir,
-        })
-    }
-
-    /// Smallest knn variant with ≥ `k` neighbor slots (or the largest).
-    fn knn_variant(&self, k: usize) -> (usize, &xla::PjRtLoadedExecutable) {
-        for (slots, exe) in &self.knn_exes {
-            if *slots >= k {
-                return (*slots, exe);
-            }
-        }
-        let (slots, exe) = self.knn_exes.last().expect("nonempty");
-        (*slots, exe)
-    }
-
-    /// Execute one knn tile using the smallest artifact variant with at
-    /// least `k` neighbor slots. Buffer lengths must match the tile
-    /// geometry exactly (`knn_q × dim`, `knn_r × dim`, `knn_q`, `knn_r`).
-    ///
-    /// Returns `(slots, dists, ids)` where `dists`/`ids` have shape
-    /// `knn_q × slots` (row-major); `ids[i] == -1` marks an invalid slot
-    /// (masked / padding).
-    pub fn knn_block(
-        &self,
-        k: usize,
-        q: &[f32],
-        r: &[f32],
-        q_ids: &[i32],
-        r_ids: &[i32],
-    ) -> Result<(usize, Vec<f32>, Vec<i32>)> {
-        let t = &self.tile;
-        if q.len() != t.knn_q * t.dim
-            || r.len() != t.knn_r * t.dim
-            || q_ids.len() != t.knn_q
-            || r_ids.len() != t.knn_r
-        {
-            return Err(Error::Shape("knn_block buffer sizes vs tile geometry".into()));
-        }
-        let (slots, exe) = self.knn_variant(k);
-        let ql = xla::Literal::vec1(q).reshape(&[t.knn_q as i64, t.dim as i64])?;
-        let rl = xla::Literal::vec1(r).reshape(&[t.knn_r as i64, t.dim as i64])?;
-        let qi = xla::Literal::vec1(q_ids);
-        let ri = xla::Literal::vec1(r_ids);
-        let result = exe.execute::<xla::Literal>(&[ql, rl, qi, ri])?[0][0].to_literal_sync()?;
-        let (dists, ids) = result.to_tuple2()?;
-        Ok((slots, dists.to_vec::<f32>()?, ids.to_vec::<i32>()?))
-    }
-
-    /// Execute one kmeans_assign tile. Returns
-    /// `(assign[km_n], sums[km_k×dim], counts[km_k], wcss)`.
-    pub fn kmeans_block(
-        &self,
-        x: &[f32],
-        centers: &[f32],
-        center_mask: &[f32],
-        point_mask: &[f32],
-    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>, f32)> {
-        let t = &self.tile;
-        if x.len() != t.km_n * t.dim
-            || centers.len() != t.km_k * t.dim
-            || center_mask.len() != t.km_k
-            || point_mask.len() != t.km_n
-        {
-            return Err(Error::Shape("kmeans_block buffer sizes vs tile geometry".into()));
-        }
-        let xl = xla::Literal::vec1(x).reshape(&[t.km_n as i64, t.dim as i64])?;
-        let cl = xla::Literal::vec1(centers).reshape(&[t.km_k as i64, t.dim as i64])?;
-        let cm = xla::Literal::vec1(center_mask);
-        let pm = xla::Literal::vec1(point_mask);
-        let result = self.km_exe.execute::<xla::Literal>(&[xl, cl, cm, pm])?[0][0]
-            .to_literal_sync()?;
-        let mut parts = result.to_tuple()?;
-        if parts.len() != 4 {
-            return Err(Error::Runtime(format!(
-                "kmeans artifact returned {}-tuple, expected 4",
-                parts.len()
-            )));
-        }
-        let wcss = parts.pop().unwrap().get_first_element::<f32>()?;
-        let counts = parts.pop().unwrap().to_vec::<f32>()?;
-        let sums = parts.pop().unwrap().to_vec::<f32>()?;
-        let assign = parts.pop().unwrap().to_vec::<i32>()?;
-        Ok((assign, sums, counts, wcss))
-    }
-
-    /// Pad a row block `[start, start+n)` of `points` into a
-    /// `rows × tile.dim` buffer (zero-padded in both directions).
-    fn pack_rows(&self, points: &Matrix, start: usize, n: usize, rows: usize) -> Vec<f32> {
-        let d = points.cols().min(self.tile.dim);
-        let mut out = vec![0.0f32; rows * self.tile.dim];
-        for i in 0..n {
-            let src = points.row(start + i);
-            out[i * self.tile.dim..i * self.tile.dim + d].copy_from_slice(&src[..d]);
-        }
-        out
-    }
-}
-
-/// [`ChunkEvaluator`] that routes pairwise/top-k blocks through the AOT
-/// knn artifact. Use with [`crate::knn::knn_chunked`] and block sizes
-/// equal to the tile geometry.
-pub struct PjrtChunks<'a> {
-    /// The loaded engine.
-    pub engine: &'a Engine,
-}
-
-impl ChunkEvaluator for PjrtChunks<'_> {
-    fn eval_block(
-        &self,
-        points: &Matrix,
-        q0: usize,
-        nq: usize,
-        r0: usize,
-        nr: usize,
-        tops: &mut [TopK],
-    ) -> Result<()> {
-        let t = &self.engine.tile;
-        if points.cols() > t.dim {
-            return Err(Error::Shape(format!(
-                "dataset dim {} exceeds artifact dim {} (re-run aot.py with a larger DIM)",
-                points.cols(),
-                t.dim
-            )));
-        }
-        if nq > t.knn_q || nr > t.knn_r {
-            return Err(Error::Shape("block larger than tile geometry".into()));
-        }
-        let q = self.engine.pack_rows(points, q0, nq, t.knn_q);
-        let r = self.engine.pack_rows(points, r0, nr, t.knn_r);
-        let mut q_ids = vec![-1i32; t.knn_q];
-        for (i, slot) in q_ids.iter_mut().take(nq).enumerate() {
-            *slot = (q0 + i) as i32;
-        }
-        let mut r_ids = vec![-1i32; t.knn_r];
-        for (j, slot) in r_ids.iter_mut().take(nr).enumerate() {
-            *slot = (r0 + j) as i32;
-        }
-        let k_needed = tops.first().map(|t| t.capacity()).unwrap_or(1);
-        let (slots, dists, ids) = self.engine.knn_block(k_needed, &q, &r, &q_ids, &r_ids)?;
-        for (qi, top) in tops.iter_mut().enumerate().take(nq) {
-            let row_d = &dists[qi * slots..(qi + 1) * slots];
-            let row_i = &ids[qi * slots..(qi + 1) * slots];
-            for (&d, &id) in row_d.iter().zip(row_i) {
-                if id >= 0 && d < MASK_BIG / 2.0 && d < top.bound() {
-                    top.push(d, id as u32);
-                }
-            }
-        }
-        Ok(())
-    }
-}
-
-/// [`AssignBackend`] that routes Lloyd assignment blocks through the AOT
-/// kmeans artifact.
-pub struct PjrtAssign<'a> {
-    /// The loaded engine.
-    pub engine: &'a Engine,
-}
-
-impl AssignBackend for PjrtAssign<'_> {
-    fn assign_block(
-        &self,
-        points: &Matrix,
-        weights: Option<&[f32]>,
-        p0: usize,
-        np: usize,
-        centers: &Matrix,
-        assign_out: &mut [u32],
-        sums: &mut [f64],
-        counts: &mut [f64],
-    ) -> Result<f64> {
-        let t = &self.engine.tile;
-        let d = points.cols();
-        if d > t.dim {
-            return Err(Error::Shape(format!("dim {d} exceeds artifact dim {}", t.dim)));
-        }
-        let k = centers.rows();
-        if k > t.km_k {
-            return Err(Error::Shape(format!("k={k} exceeds artifact centers {}", t.km_k)));
-        }
-        if weights.is_some() {
-            // The artifact computes unweighted sums; the weighted path
-            // (prototype masses) stays native. The paper's IHTC runs
-            // unweighted k-means, so this is not on the repro path.
-            return Err(Error::Runtime(
-                "PJRT kmeans artifact does not support per-point weights; use NativeAssign"
-                    .into(),
-            ));
-        }
-        let mut wcss_total = 0.0f64;
-        let centers_buf = self.engine.pack_rows(centers, 0, k, t.km_k);
-        let mut cmask = vec![0.0f32; t.km_k];
-        for slot in cmask.iter_mut().take(k) {
-            *slot = 1.0;
-        }
-        let mut off = 0usize;
-        while off < np {
-            let n = (np - off).min(t.km_n);
-            let x = self.engine.pack_rows(points, p0 + off, n, t.km_n);
-            let mut pmask = vec![0.0f32; t.km_n];
-            for slot in pmask.iter_mut().take(n) {
-                *slot = 1.0;
-            }
-            let (assign, bsums, bcounts, wcss) =
-                self.engine.kmeans_block(&x, &centers_buf, &cmask, &pmask)?;
-            for i in 0..n {
-                assign_out[off + i] = assign[i] as u32;
-            }
-            for c in 0..k {
-                counts[c] += bcounts[c] as f64;
-                for j in 0..d {
-                    sums[c * d + j] += bsums[c * t.dim + j] as f64;
-                }
-            }
-            wcss_total += wcss as f64;
-            off += n;
-        }
-        Ok(wcss_total)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     // The PJRT engine needs built artifacts; integration tests live in
     // rust/tests/pjrt_integration.rs and skip gracefully when
-    // artifacts/manifest.json is absent. Unit tests here cover the pure
-    // helpers only.
+    // artifacts/manifest.json is absent. Unit tests here cover the load
+    // failure path, which both the real and the stub implementation hit.
     use super::*;
 
     #[test]

@@ -1,0 +1,111 @@
+//! API-compatible stand-in for the PJRT runtime, compiled when the
+//! `pjrt` feature is off (the default — the `xla` bindings crate is not
+//! available in the offline build environment).
+//!
+//! Every entry point exists with the real signature so callers compile
+//! unchanged; [`Engine::load`] fails with [`crate::Error::Runtime`] and
+//! the adapters refuse to evaluate, which routes the driver, benches, and
+//! `ihtc check-artifacts` onto the native pooled path.
+
+use super::TileGeometry;
+use crate::cluster::kmeans::AssignBackend;
+use crate::knn::{ChunkEvaluator, TopK};
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+fn unavailable() -> Error {
+    Error::Runtime(
+        "PJRT support is compiled out (run `make artifacts`, add the `xla` \
+         dependency, and rebuild with `--features pjrt`)"
+            .into(),
+    )
+}
+
+/// Stub engine: holds the tile geometry shape but can never be loaded.
+pub struct Engine {
+    /// Tile geometry (never populated in the stub).
+    pub tile: TileGeometry,
+    /// Where the artifacts would have come from.
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    /// Default artifact directory: `$IHTC_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("IHTC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Always fails: the `pjrt` feature is off.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Engine> {
+        let _ = dir.as_ref();
+        Err(unavailable())
+    }
+
+    /// Always fails: the `pjrt` feature is off.
+    pub fn knn_block(
+        &self,
+        _k: usize,
+        _q: &[f32],
+        _r: &[f32],
+        _q_ids: &[i32],
+        _r_ids: &[i32],
+    ) -> Result<(usize, Vec<f32>, Vec<i32>)> {
+        Err(unavailable())
+    }
+
+    /// Always fails: the `pjrt` feature is off.
+    pub fn kmeans_block(
+        &self,
+        _x: &[f32],
+        _centers: &[f32],
+        _center_mask: &[f32],
+        _point_mask: &[f32],
+    ) -> Result<(Vec<i32>, Vec<f32>, Vec<f32>, f32)> {
+        Err(unavailable())
+    }
+}
+
+/// Stub [`ChunkEvaluator`]; always errors.
+pub struct PjrtChunks<'a> {
+    /// The (never-loadable) engine.
+    pub engine: &'a Engine,
+}
+
+impl ChunkEvaluator for PjrtChunks<'_> {
+    fn eval_block(
+        &self,
+        _points: &Matrix,
+        _q0: usize,
+        _nq: usize,
+        _r0: usize,
+        _nr: usize,
+        _tops: &mut [TopK],
+    ) -> Result<()> {
+        Err(unavailable())
+    }
+}
+
+/// Stub [`AssignBackend`]; always errors.
+pub struct PjrtAssign<'a> {
+    /// The (never-loadable) engine.
+    pub engine: &'a Engine,
+}
+
+impl AssignBackend for PjrtAssign<'_> {
+    fn assign_block(
+        &self,
+        _points: &Matrix,
+        _weights: Option<&[f32]>,
+        _p0: usize,
+        _np: usize,
+        _centers: &Matrix,
+        _assign_out: &mut [u32],
+        _sums: &mut [f64],
+        _counts: &mut [f64],
+    ) -> Result<f64> {
+        Err(unavailable())
+    }
+}

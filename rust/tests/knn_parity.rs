@@ -1,0 +1,82 @@
+//! Parallel/serial parity property suite: the pooled k-NN paths
+//! (`parallel_knn`, pooled `knn_auto`) must produce **byte-identical**
+//! `KnnLists` to the `knn_brute` oracle on synthetic mixtures, across
+//! worker counts 1/2/4. This pins down the deterministic
+//! `(distance, index)` candidate order every backend shares — without
+//! it, distance ties would resolve differently per backend and per
+//! worker count.
+
+use ihtc::coordinator::{parallel_knn, WorkerPool};
+use ihtc::data::synth::gaussian_mixture_paper;
+use ihtc::knn::{knn_auto_with, knn_brute, KnnLists};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_identical(got: &KnnLists, oracle: &KnnLists, what: &str) {
+    assert_eq!(got.k, oracle.k, "{what}: k");
+    assert_eq!(got.indices, oracle.indices, "{what}: neighbor indices");
+    assert_eq!(bits(&got.dists), bits(&oracle.dists), "{what}: distance bits");
+}
+
+#[test]
+fn pooled_knn_byte_identical_to_brute() {
+    // n spans the serial/parallel routing thresholds (256, 2048) and the
+    // parallel kd-build threshold region; k spans t*−1 for small and
+    // large thresholds.
+    for &(n, k) in &[(300usize, 1usize), (1000, 3), (2600, 2), (2600, 7)] {
+        let ds = gaussian_mixture_paper(n, 0xBEE5 + (n + k) as u64);
+        let oracle = knn_brute(&ds.points, k).unwrap();
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let par = parallel_knn(&ds.points, k, &pool).unwrap();
+            assert_identical(&par, &oracle, &format!("parallel_knn n={n} k={k} w={workers}"));
+            let auto = knn_auto_with(&ds.points, k, &pool).unwrap();
+            assert_identical(&auto, &oracle, &format!("knn_auto n={n} k={k} w={workers}"));
+        }
+    }
+}
+
+#[test]
+fn pooled_knn_byte_identical_past_parallel_build_threshold() {
+    // Exercise the parallel kd-tree *build* (engages at n ≥ 8192) and
+    // pool-sharded queries together against the oracle.
+    let n = 9000;
+    let ds = gaussian_mixture_paper(n, 0xFA57);
+    let oracle = knn_brute(&ds.points, 3).unwrap();
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let par = parallel_knn(&ds.points, 3, &pool).unwrap();
+        assert_identical(&par, &oracle, &format!("parallel_knn n={n} w={workers}"));
+        let auto = knn_auto_with(&ds.points, 3, &pool).unwrap();
+        assert_identical(&auto, &oracle, &format!("knn_auto n={n} w={workers}"));
+    }
+}
+
+#[test]
+fn pooled_knn_handles_duplicate_ties_identically() {
+    // Heavy exact-tie workload: 60% duplicated points. Ties are where
+    // nondeterminism would hide; the shared candidate order must keep
+    // every backend identical to the oracle.
+    let n = 1500;
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        if i % 5 < 3 {
+            data.push(1.25f32);
+            data.push(-0.5f32);
+        } else {
+            data.push((i % 97) as f32 * 0.1);
+            data.push((i % 89) as f32 * 0.2);
+        }
+    }
+    let m = ihtc::linalg::Matrix::from_vec(data, n, 2).unwrap();
+    let oracle = knn_brute(&m, 4).unwrap();
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let par = parallel_knn(&m, 4, &pool).unwrap();
+        assert_identical(&par, &oracle, &format!("duplicates parallel_knn w={workers}"));
+        let auto = knn_auto_with(&m, 4, &pool).unwrap();
+        assert_identical(&auto, &oracle, &format!("duplicates knn_auto w={workers}"));
+    }
+}

@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification + perf smoke for the ihtc crate.
+#
+#   scripts/verify.sh            # build + tests + bench smoke
+#   IHTC_BENCH_DIR=out scripts/verify.sh   # redirect BENCH_*.json
+#
+# The bench smoke runs the tiny `smoke/` benches with IHTC_BENCH_FAST=1
+# so it finishes in seconds; full perf numbers come from `cargo bench`
+# (see README).
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== perf smoke: IHTC_BENCH_FAST=1 cargo bench -- smoke =="
+IHTC_BENCH_FAST=1 cargo bench -- smoke
+
+echo "verify.sh: OK"
