@@ -18,7 +18,7 @@ use ihtc::coordinator::{parallel_knn, WorkerPool};
 use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use ihtc::data::Preprocess;
 use ihtc::hybrid::{FinalClusterer, Ihtc, IhtcWorkspace};
-use ihtc::itis::{itis, ItisConfig};
+use ihtc::itis::{itis, ItisConfig, PrototypeKind};
 use ihtc::knn::{knn_auto, knn_brute, knn_chunked, knn_chunked_pool, kdtree::KdTree, NativeChunks};
 use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
 use ihtc::tc::{threshold_cluster, TcConfig};
@@ -66,12 +66,19 @@ impl Bench {
     }
 }
 
+/// Where bench `name`'s JSON lives: `$IHTC_BENCH_DIR` (default: working
+/// directory) with the name sanitized. Shared by the writer and
+/// [`read_peak`] so the two can never drift apart.
+fn bench_json_path(name: &str) -> std::path::PathBuf {
+    let dir = std::env::var("IHTC_BENCH_DIR").unwrap_or_else(|_| ".".into());
+    let file = format!("BENCH_{}.json", name.replace(['/', ' ', '(', ')', '+'], "_"));
+    std::path::Path::new(&dir).join(file)
+}
+
 /// Machine-readable result sink: one `BENCH_<name>.json` per bench in
 /// `$IHTC_BENCH_DIR` (default: working directory).
 fn write_json(name: &str, median: f64, min: f64, max: f64, peak: usize, iters: usize) {
-    let dir = std::env::var("IHTC_BENCH_DIR").unwrap_or_else(|_| ".".into());
-    let file = format!("BENCH_{}.json", name.replace(['/', ' ', '(', ')', '+'], "_"));
-    let path = std::path::Path::new(&dir).join(file);
+    let path = bench_json_path(name);
     let to_ns = |s: f64| (s * 1e9).round() as u64;
     let body = format!(
         "{{\"name\":\"{name}\",\"median_ns\":{},\"min_ns\":{},\"max_ns\":{},\"peak_bytes\":{peak},\"iters\":{iters}}}\n",
@@ -82,6 +89,15 @@ fn write_json(name: &str, median: f64, min: f64, max: f64, peak: usize, iters: u
     if let Err(e) = std::fs::write(&path, body) {
         eprintln!("warning: cannot write {}: {e}", path.display());
     }
+}
+
+/// Read back the `peak_bytes` field of a just-written bench JSON (used
+/// by the streaming comparison to print the fused-vs-materialized ratio).
+fn read_peak(name: &str) -> Option<usize> {
+    let text = std::fs::read_to_string(bench_json_path(name)).ok()?;
+    let tail = text.split("\"peak_bytes\":").nth(1)?;
+    let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
 }
 
 fn main() {
@@ -258,6 +274,48 @@ fn main() {
         cfg.workers = 0;
         ihtc::coordinator::driver::run(&cfg).unwrap()
     });
+
+    // ---------- out-of-core streaming: fused vs materialized ----------
+    // The acceptance comparison for the fused streaming ingest: the same
+    // 1M-row synthetic source and identical clustering settings, with
+    // only the execution model switched. The fused path must show ≥2×
+    // lower peak bytes (its resident set is one shard + the prototype
+    // stream instead of the full n × d matrix and its n × k neighbor
+    // lists).
+    {
+        let nstream = if b.fast { 50_000 } else { 1_000_000 };
+        let stream_cfg = |streaming: bool| {
+            let mut cfg = ihtc::config::PipelineConfig::default();
+            cfg.name = if streaming { "fused".into() } else { "materialized".into() };
+            cfg.source = ihtc::config::DataSource::PaperMixture { n: nstream };
+            cfg.threshold = 4;
+            cfg.iterations = 2;
+            cfg.prototype = PrototypeKind::WeightedCentroid;
+            cfg.streaming = streaming;
+            cfg.shard_size = 65_536;
+            cfg.workers = 0;
+            cfg
+        };
+        b.run("stream/materialized_n1e6_t4_m2", 1, || {
+            ihtc::coordinator::driver::run(&stream_cfg(false)).unwrap()
+        });
+        b.run("stream/fused_n1e6_t4_m2", 1, || {
+            ihtc::coordinator::driver::run(&stream_cfg(true)).unwrap()
+        });
+        if let (true, Some(mat), Some(fused)) = (
+            b.matches("stream/"),
+            read_peak("stream/materialized_n1e6_t4_m2"),
+            read_peak("stream/fused_n1e6_t4_m2"),
+        ) {
+            let ratio = mat as f64 / fused.max(1) as f64;
+            println!(
+                "stream: materialized peak {} MB, fused peak {} MB → {ratio:.2}× lower{}",
+                ihtc::memtrack::fmt_mb(mat),
+                ihtc::memtrack::fmt_mb(fused),
+                if ratio >= 2.0 { "  [OK ≥2×]" } else { "  [BELOW 2× TARGET]" }
+            );
+        }
+    }
 
     // ---------- CI smoke (scripts/verify.sh filters on "smoke") ----------
     let ds_smoke = gaussian_mixture_paper(2_000, 5);

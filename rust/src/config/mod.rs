@@ -80,6 +80,12 @@ pub struct PipelineConfig {
     pub shard_size: usize,
     /// Bounded-queue capacity between stages (backpressure depth).
     pub queue_capacity: usize,
+    /// Out-of-core mode: fuse level-0 TC with ingest, so shards are
+    /// threshold-clustered into weighted prototypes as they arrive and
+    /// the full `n × d` matrix is never materialized. Requires
+    /// `iterations ≥ 1` and `prototype = "weighted"` (weighted centroids
+    /// keep the fused means exact).
+    pub streaming: bool,
     /// Write the final assignment CSV here (optional).
     pub output: Option<String>,
 }
@@ -101,6 +107,7 @@ impl Default for PipelineConfig {
             workers: 0,
             shard_size: 8_192,
             queue_capacity: 4,
+            streaming: false,
             output: None,
         }
     }
@@ -170,6 +177,9 @@ impl PipelineConfig {
         if let Some(q) = j.get("queue_capacity").and_then(Json::as_usize) {
             cfg.queue_capacity = q;
         }
+        if let Some(s) = j.get("streaming").and_then(Json::as_bool) {
+            cfg.streaming = s;
+        }
         if let Some(o) = j.get("output").and_then(Json::as_str) {
             cfg.output = Some(o.to_string());
         }
@@ -197,6 +207,21 @@ impl PipelineConfig {
         }
         if self.queue_capacity == 0 {
             return Err(Error::Config("queue_capacity must be > 0".into()));
+        }
+        if self.streaming {
+            if self.iterations == 0 {
+                return Err(Error::Config(
+                    "streaming mode fuses level-0 TC with ingest and needs iterations ≥ 1"
+                        .into(),
+                ));
+            }
+            if self.prototype != PrototypeKind::WeightedCentroid {
+                return Err(Error::Config(
+                    "streaming mode requires prototype = \"weighted\": weighted centroids \
+                     keep the fused shard-wise means exact"
+                        .into(),
+                ));
+            }
         }
         match &self.clusterer {
             FinalClusterer::KMeans { k, .. } | FinalClusterer::Hac { k, .. } if *k == 0 => {
@@ -329,6 +354,25 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("dbscan"), "{err}");
+    }
+
+    #[test]
+    fn streaming_parse_and_validation() {
+        let cfg = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "iterations": 2}"#,
+        )
+        .unwrap();
+        assert!(cfg.streaming);
+        assert!(!PipelineConfig::from_json("{}").unwrap().streaming);
+        // Streaming needs at least the fused level-0 iteration…
+        let err = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "iterations": 0}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("iterations"), "{err}");
+        // …and weighted centroids so the fused means stay exact.
+        let err = PipelineConfig::from_json(r#"{"streaming": true}"#).unwrap_err();
+        assert!(err.to_string().contains("weighted"), "{err}");
     }
 
     #[test]

@@ -11,16 +11,32 @@
 //!    kd-tree shards, or the PJRT AOT artifact when `backend = "pjrt"`).
 //! 4. **cluster** — the configured final clusterer on the prototypes.
 //! 5. **backout** — label propagation to all `n` units, metrics, output.
+//!
+//! With `streaming: true` the first phase is **fused**: every incoming
+//! shard is threshold-clustered into weighted prototypes *inside* the
+//! pipeline's reduce stage (one [`crate::itis::reduce_shard`] call per
+//! shard, reusing the stage thread's [`ItisWorkspace`]), and only the
+//! concatenated prototype stream — roughly `n / t*` rows — plus the
+//! per-row level-0 assignments are ever resident. Standardization
+//! moments fold in the same single pass; the remaining `m − 1` ITIS
+//! iterations then resume on the prototypes ([`crate::itis::itis_resume`]).
+//! The default materialized path is untouched and remains byte-identical.
 
-use super::pipeline::{collect, PipelineBuilder, StageMetrics};
+use super::pipeline::{collect, PipelineBuilder, ReducedShard, RowShard, StageMetrics};
 use super::{PoolKnnProvider, WorkerPool};
 use crate::cluster::kmeans::{self, NativeAssign};
 use crate::cluster::{dbscan, hac};
 use crate::config::{Backend, DataSource, PipelineConfig};
-use crate::data::synth::{find_spec, gaussian_mixture_paper, realistic};
+use crate::data::synth::{
+    find_spec, gaussian_mixture_paper, paper_mixture_spec, realistic, realistic_spec,
+    MixtureSampler, MixtureSpec,
+};
 use crate::data::{csv, Dataset};
 use crate::hybrid::{FinalClusterer, IhtcWorkspace};
-use crate::itis::{itis_with_workspace, ItisConfig, ItisResult, KnnProvider, StopRule};
+use crate::itis::{
+    itis_resume, itis_with_workspace, reduce_shard, ItisConfig, ItisLevel, ItisResult,
+    ItisWorkspace, KnnProvider, PrototypeKind, StopRule,
+};
 use crate::knn::KnnLists;
 use crate::linalg::{pca::Pca, Matrix};
 use crate::runtime::{Engine, PjrtAssign, PjrtChunks};
@@ -255,9 +271,228 @@ fn standardize_with(m: &mut Matrix, moments: &Moments, pool: &WorkerPool) -> Res
     Ok(())
 }
 
+/// The fused streaming ingest's output: the concatenated level-0
+/// prototype stream (roughly `n / t*` rows) plus everything needed to
+/// resume ITIS and back labels out. After [`ingest_streaming`] returns,
+/// this is the *only* dataset-sized state resident — the raw `n × d`
+/// matrix was never materialized.
+#[derive(Clone, Debug)]
+pub struct StreamedReduction {
+    /// Concatenated weighted level-0 prototypes.
+    pub prototypes: Matrix,
+    /// Original units represented by each prototype.
+    pub weights: Vec<u32>,
+    /// Original row → level-0 prototype id (length = rows streamed).
+    pub assignments: Vec<u32>,
+    /// Ground-truth labels for all streamed rows, when known.
+    pub labels: Option<Vec<u32>>,
+    /// Streaming first/second moments of the raw rows (for exact
+    /// standardization without a second pass).
+    pub moments: Moments,
+    /// Rows streamed.
+    pub n: usize,
+    /// Per-stage pipeline metrics.
+    pub stages: Vec<StageMetrics>,
+}
+
+/// The boxed producer a streaming source hands to the pipeline.
+type ShardProducer = Box<dyn FnOnce(&mut dyn FnMut(RowShard) -> Result<()>) -> Result<()> + Send>;
+
+/// Shard-by-shard synthetic source: one sampler, one RNG stream, so the
+/// emitted shards concatenate to exactly what the materialized path's
+/// one-shot `sample(n, seed)` produces.
+fn mixture_source(mix: MixtureSpec, n: usize, seed: u64, shard: usize) -> ShardProducer {
+    Box::new(move |emit| {
+        let mut sampler = MixtureSampler::new(&mix, seed);
+        let mut offset = 0usize;
+        while offset < n {
+            let rows = shard.min(n - offset);
+            let (points, labels) = sampler.next_shard(rows);
+            emit(RowShard { offset, points, labels: Some(labels) })?;
+            offset += rows;
+        }
+        Ok(())
+    })
+}
+
+/// Build the shard source for the configured input without materializing
+/// it: CSV files are read incrementally, synthetic sources are sampled
+/// shard-by-shard from the same RNG stream the materialized path uses.
+fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
+    let shard = config.shard_size.max(1);
+    Ok(match &config.source {
+        DataSource::Csv { path, label_column } => {
+            let opts = csv::CsvOptions { label_column: *label_column, ..Default::default() };
+            let path = path.clone();
+            Box::new(move |emit| {
+                let mut offset = 0usize;
+                for item in csv::read_csv_chunks(&path, &opts, shard)? {
+                    let (points, labels) = item?;
+                    let rows = points.rows();
+                    emit(RowShard { offset, points, labels })?;
+                    offset += rows;
+                }
+                Ok(())
+            })
+        }
+        DataSource::PaperMixture { n } => {
+            mixture_source(paper_mixture_spec(), *n, config.seed, shard)
+        }
+        DataSource::Analogue { name, scale_div } => {
+            let spec = find_spec(name).ok_or_else(|| {
+                Error::Config(format!("unknown analogue dataset '{name}' (see Table 3)"))
+            })?;
+            let (mix, n) = realistic_spec(spec, *scale_div, config.seed);
+            mixture_source(mix, n, config.seed, shard)
+        }
+    })
+}
+
+/// Fused out-of-core ingest: stream shards through the bounded pipeline,
+/// threshold-clustering each one into weighted prototypes in the reduce
+/// stage (level-0 TC) while folding standardization moments — a single
+/// pass over the source with only one shard plus the growing prototype
+/// stream resident. The reduce stage reuses one [`ItisWorkspace`] and
+/// [`WorkerPool`] across all shards.
+pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
+    let capacity = config.queue_capacity.max(1);
+    let produce = shard_source(config)?;
+    let itis_cfg = ItisConfig {
+        threshold: config.threshold,
+        stop: StopRule::Iterations(1),
+        prototype: PrototypeKind::WeightedCentroid,
+        seed_order: config.seed_order,
+        min_prototypes: 1,
+    };
+    let workers = config.workers;
+    let pipe = PipelineBuilder::source(
+        "source",
+        capacity,
+        move |emit: &mut dyn FnMut(RowShard) -> Result<()>| produce(emit),
+    )
+        .map_init(
+            "reduce",
+            move || (WorkerPool::new(workers), ItisWorkspace::new(), Vec::<u32>::new()),
+            move |state, shard: RowShard| {
+                let (pool, ws, ones) = state;
+                let pool: &WorkerPool = pool;
+                let mut moments = Moments::new(shard.points.cols());
+                moments.fold(&shard.points);
+                ones.clear();
+                ones.resize(shard.points.rows(), 1);
+                let provider = PoolKnnProvider { pool };
+                let red =
+                    reduce_shard(&shard.points, ones.as_slice(), &itis_cfg, &provider, pool, ws)?;
+                Ok((
+                    ReducedShard {
+                        offset: shard.offset,
+                        prototypes: red.prototypes,
+                        weights: red.weights,
+                        assignments: red.assignments,
+                        labels: shard.labels,
+                    },
+                    moments,
+                ))
+            },
+        )
+        .build();
+
+    // Concatenate the prototype stream as shards arrive (in order: the
+    // stage chain is linear, so offsets are contiguous).
+    let mut data: Vec<f32> = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+    let mut assignments: Vec<u32> = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut have_labels = true;
+    let mut moments: Option<Moments> = None;
+    let mut d = 0usize;
+    for (shard, mo) in &pipe.output {
+        debug_assert_eq!(shard.offset, assignments.len(), "shards out of order");
+        let base = weights.len() as u32;
+        assignments.extend(shard.assignments.iter().map(|&a| base + a));
+        d = shard.prototypes.cols();
+        data.extend_from_slice(shard.prototypes.data());
+        weights.extend_from_slice(&shard.weights);
+        match shard.labels {
+            Some(l) => labels.extend(l),
+            None => have_labels = false,
+        }
+        match &mut moments {
+            Some(total) => total.merge(&mo),
+            None => moments = Some(mo),
+        }
+    }
+    let stages = pipe.join()?;
+    let n = assignments.len();
+    let prototypes = Matrix::from_vec(data, weights.len(), d)?;
+    Ok(StreamedReduction {
+        prototypes,
+        weights,
+        assignments,
+        labels: if have_labels && n > 0 { Some(labels) } else { None },
+        moments: moments.unwrap_or_else(|| Moments::new(d)),
+        n,
+        stages,
+    })
+}
+
+/// Run the configured final clusterer on the reduction's prototypes
+/// (shared by the materialized and streaming paths).
+fn cluster_prototypes(
+    config: &PipelineConfig,
+    engine: Option<&Engine>,
+    pool: &WorkerPool,
+    reduction: &ItisResult,
+    ws: &mut kmeans::KMeansWorkspace,
+) -> Result<Vec<u32>> {
+    let protos = &reduction.prototypes;
+    match &config.clusterer {
+        FinalClusterer::KMeans { k, restarts } => {
+            let cfg = kmeans::KMeansConfig {
+                restarts: (*restarts).max(1),
+                seed: config.seed,
+                ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
+            };
+            let result = match engine {
+                // The PJRT assign backend is not Sync (xla handles stay
+                // on the coordinator thread), so it runs serially.
+                Some(e) if protos.cols() <= e.tile.dim && cfg.k <= e.tile.km_k => {
+                    kmeans::kmeans_with_backend(protos, None, &cfg, &PjrtAssign { engine: e })?
+                }
+                _ => kmeans::kmeans_pool(protos, None, &cfg, &NativeAssign, pool, ws)?,
+            };
+            Ok(result.assignments)
+        }
+        FinalClusterer::Hac { k, linkage } => {
+            let cfg = hac::HacConfig { linkage: *linkage, ..Default::default() };
+            hac::hac_cut(protos, (*k).min(protos.rows()), &cfg)
+        }
+        FinalClusterer::Dbscan { eps, min_pts } => {
+            dbscan::dbscan(protos, &dbscan::DbscanConfig { eps: *eps, min_pts: *min_pts })
+        }
+        FinalClusterer::Gmm { k, weighted } => {
+            let cfg = crate::cluster::gmm::GmmConfig {
+                seed: config.seed,
+                ..crate::cluster::gmm::GmmConfig::new((*k).min(protos.rows()))
+            };
+            let masses: Vec<f32>;
+            let w = if *weighted {
+                masses = reduction.weights.iter().map(|&x| x as f32).collect();
+                Some(masses.as_slice())
+            } else {
+                None
+            };
+            Ok(crate::cluster::gmm::gmm(protos, w, &cfg)?.assignments)
+        }
+    }
+}
+
 /// Run the full pipeline: returns `(assignments, report)`.
 pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     config.validate()?;
+    if config.streaming {
+        return run_streaming(config);
+    }
     let t_all = Instant::now();
     let pool = WorkerPool::new(config.workers);
     let mut phases = Vec::new();
@@ -327,12 +562,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
             stop: StopRule::Iterations(config.iterations),
             prototype: config.prototype,
             seed_order: config.seed_order,
-            min_prototypes: match &config.clusterer {
-                FinalClusterer::KMeans { k, .. }
-                | FinalClusterer::Hac { k, .. }
-                | FinalClusterer::Gmm { k, .. } => *k,
-                FinalClusterer::Dbscan { .. } => 2,
-            },
+            min_prototypes: config.clusterer.min_prototypes(),
         };
         itis_with_workspace(&ds.points, &itis_cfg, knn_provider, &pool, ws_itis)
     });
@@ -346,47 +576,8 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     // Phase 4: final clusterer on the prototypes.
     let t0 = Instant::now();
     let ws_kmeans = &mut ws.kmeans;
-    let (labels, peak) = memtrack::measure(|| -> Result<Vec<u32>> {
-        let protos = &reduction.prototypes;
-        match &config.clusterer {
-            FinalClusterer::KMeans { k, restarts } => {
-                let cfg = kmeans::KMeansConfig {
-                    restarts: (*restarts).max(1),
-                    seed: config.seed,
-                    ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
-                };
-                let result = match &engine {
-                    // The PJRT assign backend is not Sync (xla handles stay
-                    // on the coordinator thread), so it runs serially.
-                    Some(e) if protos.cols() <= e.tile.dim && cfg.k <= e.tile.km_k => {
-                        kmeans::kmeans_with_backend(protos, None, &cfg, &PjrtAssign { engine: e })?
-                    }
-                    _ => kmeans::kmeans_pool(protos, None, &cfg, &NativeAssign, &pool, ws_kmeans)?,
-                };
-                Ok(result.assignments)
-            }
-            FinalClusterer::Hac { k, linkage } => {
-                let cfg = hac::HacConfig { linkage: *linkage, ..Default::default() };
-                hac::hac_cut(protos, (*k).min(protos.rows()), &cfg)
-            }
-            FinalClusterer::Dbscan { eps, min_pts } => {
-                dbscan::dbscan(protos, &dbscan::DbscanConfig { eps: *eps, min_pts: *min_pts })
-            }
-            FinalClusterer::Gmm { k, weighted } => {
-                let cfg = crate::cluster::gmm::GmmConfig {
-                    seed: config.seed,
-                    ..crate::cluster::gmm::GmmConfig::new((*k).min(protos.rows()))
-                };
-                let masses: Vec<f32>;
-                let w = if *weighted {
-                    masses = reduction.weights.iter().map(|&x| x as f32).collect();
-                    Some(masses.as_slice())
-                } else {
-                    None
-                };
-                Ok(crate::cluster::gmm::gmm(protos, w, &cfg)?.assignments)
-            }
-        }
+    let (labels, peak) = memtrack::measure(|| {
+        cluster_prototypes(config, engine.as_ref(), &pool, &reduction, ws_kmeans)
     });
     let prototype_labels = labels?;
     phases.push(PhaseStat {
@@ -419,6 +610,161 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let report = RunReport {
         name: config.name.clone(),
         n: ds.len(),
+        dim_in,
+        dim_used,
+        iterations: reduction.iterations(),
+        prototypes: reduction.prototypes.rows(),
+        clusters: crate::metrics::num_clusters(&assignments),
+        accuracy,
+        bss_tss: ratio,
+        phases,
+        stages,
+        total_seconds: t_all.elapsed().as_secs_f64(),
+    };
+    Ok((assignments, report))
+}
+
+/// Out-of-core execution: fused ingest + level-0 reduction, then the
+/// remaining ITIS iterations, final clusterer, and back-out — with only
+/// the prototype stream (plus per-row maps) ever resident. Phase names
+/// match the materialized path so reports stay comparable;
+/// [`RunReport::bss_tss`] is computed on the prototype stream (the full
+/// matrix no longer exists by phase 5).
+fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
+    let t_all = Instant::now();
+    let pool = WorkerPool::new(config.workers);
+    let mut phases = Vec::new();
+
+    // Phase 1: fused ingest + shard-wise level-0 TC (+ streaming moments).
+    let t0 = Instant::now();
+    let (ingested, peak) = memtrack::measure(|| ingest_streaming(config));
+    let StreamedReduction { prototypes, weights, assignments: level0, labels: truth, moments, n, stages } =
+        ingested?;
+    phases.push(PhaseStat {
+        name: "ingest",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+    let dim_in = prototypes.cols();
+    let num_level0 = prototypes.rows();
+    // The materialized path discards an ITIS level that undershoots the
+    // final clusterer's floor — but the fused level 0 cannot be
+    // discarded (the raw rows are gone), so undershoot must be an
+    // explicit error rather than a silently clamped cluster count.
+    let floor = config.clusterer.min_prototypes();
+    if num_level0 < floor {
+        return Err(Error::Coordinator(format!(
+            "fused level-0 reduction left {num_level0} prototypes, below the final \
+             clusterer's floor of {floor}; lower k or t*, or use the materialized path"
+        )));
+    }
+
+    // Phase 2: preprocess the prototype stream. The level-0 partition
+    // was formed on *raw* coordinates (the materialized path clusters
+    // after standardize/PCA, so its partition can differ); what stays
+    // exact is the prototypes themselves — standardizing the weighted
+    // centroids with the streamed full-data moments equals the weighted
+    // means of the standardized rows, because the per-column affine map
+    // commutes with weighted means. PCA (when requested) is fit on the
+    // prototypes, a documented approximation of the full-data fit.
+    let t0 = Instant::now();
+    let (prep, peak) = memtrack::measure(|| -> Result<Matrix> {
+        let mut points = prototypes;
+        if config.standardize {
+            standardize_with(&mut points, &moments, &pool)?;
+        }
+        if let Some(frac) = config.pca_variance {
+            let pca = Pca::fit(&points)?;
+            let k = pca.components_for_variance(frac);
+            points = pca.transform(&points, k)?;
+        }
+        Ok(points)
+    });
+    let protos0 = prep?;
+    phases.push(PhaseStat {
+        name: "preprocess",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+    let dim_used = protos0.cols();
+
+    // Backend setup (PJRT engine lives on this thread only).
+    let engine = match config.backend {
+        Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
+        Backend::Native => None,
+    };
+    let pool_knn = PoolKnnProvider { pool: &pool };
+    let pjrt_knn = engine
+        .as_ref()
+        .map(|e| PjrtKnn { engine: e, fallback: PoolKnnProvider { pool: &pool } });
+    let knn_provider: &dyn KnnProvider = match &pjrt_knn {
+        Some(p) => p,
+        None => &pool_knn,
+    };
+    let mut ws = IhtcWorkspace::new();
+
+    // Phase 3: the remaining m − 1 ITIS iterations on the prototypes.
+    let t0 = Instant::now();
+    let ws_itis = &mut ws.itis;
+    let (reduced, peak) = memtrack::measure(|| -> Result<ItisResult> {
+        let itis_cfg = ItisConfig {
+            threshold: config.threshold,
+            stop: StopRule::Iterations(config.iterations - 1),
+            prototype: config.prototype,
+            seed_order: config.seed_order,
+            min_prototypes: config.clusterer.min_prototypes(),
+        };
+        itis_resume(protos0, weights, n, &itis_cfg, knn_provider, &pool, ws_itis)
+    });
+    let mut reduction = reduced?;
+    // Prepend the fused level 0 so back-out composes over all n rows.
+    reduction.levels.insert(
+        0,
+        ItisLevel { assignments: level0, num_prototypes: num_level0 },
+    );
+    phases.push(PhaseStat {
+        name: "reduce",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    // Phase 4: final clusterer on the prototypes.
+    let t0 = Instant::now();
+    let ws_kmeans = &mut ws.kmeans;
+    let (labels, peak) = memtrack::measure(|| {
+        cluster_prototypes(config, engine.as_ref(), &pool, &reduction, ws_kmeans)
+    });
+    let prototype_labels = labels?;
+    phases.push(PhaseStat {
+        name: "cluster",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    // Phase 5: back-out + metrics + optional output.
+    let t0 = Instant::now();
+    let (backout, peak) = memtrack::measure(|| -> Result<(Vec<u32>, Option<f64>, f64)> {
+        let assignments = reduction.back_out(&prototype_labels)?;
+        let accuracy = match &truth {
+            Some(t) => Some(crate::metrics::prediction_accuracy(t, &assignments)?),
+            None => None,
+        };
+        let ratio = crate::metrics::bss_tss(&reduction.prototypes, &prototype_labels)?;
+        if let Some(path) = &config.output {
+            write_assignments(path, &assignments)?;
+        }
+        Ok((assignments, accuracy, ratio))
+    });
+    let (assignments, accuracy, ratio) = backout?;
+    phases.push(PhaseStat {
+        name: "backout",
+        seconds: t0.elapsed().as_secs_f64(),
+        peak_bytes: peak,
+    });
+
+    let report = RunReport {
+        name: config.name.clone(),
+        n,
         dim_in,
         dim_used,
         iterations: reduction.iterations(),
@@ -528,6 +874,135 @@ mod tests {
         let mut cfg = base_config(0);
         cfg.source = DataSource::Analogue { name: "nope".into(), scale_div: 1 };
         assert!(run(&cfg).is_err());
+    }
+
+    fn streaming_config(n: usize) -> PipelineConfig {
+        PipelineConfig {
+            source: DataSource::PaperMixture { n },
+            streaming: true,
+            prototype: PrototypeKind::WeightedCentroid,
+            workers: 2,
+            shard_size: 512,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn streaming_end_to_end() {
+        let cfg = streaming_config(4000);
+        let (assign, report) = run(&cfg).unwrap();
+        assert_eq!(assign.len(), 4000);
+        assert_eq!(report.n, 4000);
+        // Fused level 0 + one resumed iteration.
+        assert_eq!(report.iterations, 2);
+        assert!(report.prototypes <= 4000 / 4 + 8, "{}", report.prototypes);
+        assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
+        assert_eq!(report.phases.len(), 5);
+        assert!(report.stages.iter().any(|s| s.name == "reduce"));
+    }
+
+    #[test]
+    fn streaming_single_iteration_is_pure_fusion() {
+        // m = 1: the fused level-0 pass is the whole reduction.
+        let mut cfg = streaming_config(2000);
+        cfg.iterations = 1;
+        let (assign, report) = run(&cfg).unwrap();
+        assert_eq!(assign.len(), 2000);
+        assert_eq!(report.iterations, 1);
+        assert!(report.prototypes <= 1000 + 4);
+        assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
+    }
+
+    #[test]
+    fn streaming_with_preprocess_runs() {
+        let mut cfg = streaming_config(3000);
+        cfg.standardize = true;
+        cfg.pca_variance = Some(0.9999);
+        let (_, report) = run(&cfg).unwrap();
+        assert!(report.dim_used <= report.dim_in);
+        assert!(report.accuracy.unwrap() > 0.80, "{report:?}");
+    }
+
+    #[test]
+    fn streaming_rejects_bad_configs() {
+        let mut cfg = streaming_config(100);
+        cfg.prototype = crate::itis::PrototypeKind::Centroid;
+        assert!(run(&cfg).is_err());
+        let mut cfg = streaming_config(100);
+        cfg.iterations = 0;
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn streaming_errors_when_floor_unreachable() {
+        // The fused level 0 cannot be discarded (raw rows are gone), so
+        // a reduction below the clusterer's floor must be an explicit
+        // error — never a silently clamped cluster count.
+        let mut cfg = streaming_config(100);
+        cfg.clusterer = FinalClusterer::KMeans { k: 80, restarts: 1 };
+        let err = run(&cfg).unwrap_err();
+        assert!(err.to_string().contains("floor"), "{err}");
+    }
+
+    #[test]
+    fn fused_ingest_matches_two_pass_shard_reduction() {
+        // The tentpole's parity contract: the fused single-pass ingest
+        // must produce byte-identical WeightedCentroid prototypes (and
+        // weights, level-0 assignments, moments) to a separate two-pass
+        // run over the same shards — pass 1 materializing each shard and
+        // reducing it, pass 2 folding moments.
+        let cfg = streaming_config(3000);
+        let stream = ingest_streaming(&cfg).unwrap();
+        assert_eq!(stream.n, 3000);
+
+        let ds = gaussian_mixture_paper(3000, cfg.seed);
+        let pool = WorkerPool::new(cfg.workers);
+        let provider = PoolKnnProvider { pool: &pool };
+        let mut ws = ItisWorkspace::new();
+        let itis_cfg = ItisConfig {
+            threshold: cfg.threshold,
+            stop: StopRule::Iterations(1),
+            prototype: PrototypeKind::WeightedCentroid,
+            seed_order: cfg.seed_order,
+            min_prototypes: 1,
+        };
+        let mut data: Vec<f32> = Vec::new();
+        let mut weights: Vec<u32> = Vec::new();
+        let mut assignments: Vec<u32> = Vec::new();
+        // Per-shard fold + merge, mirroring the fused stage's structure
+        // (f64 addition is not associative, and the parity is bitwise).
+        let mut moments = Moments::new(2);
+        let mut start = 0usize;
+        while start < 3000 {
+            let end = (start + cfg.shard_size).min(3000);
+            let shard = ds.points.slice_rows(start, end);
+            let mut mo = Moments::new(2);
+            mo.fold(&shard);
+            moments.merge(&mo);
+            let red = crate::itis::reduce_shard(
+                &shard,
+                &vec![1; end - start],
+                &itis_cfg,
+                &provider,
+                &pool,
+                &mut ws,
+            )
+            .unwrap();
+            let base = weights.len() as u32;
+            assignments.extend(red.assignments.iter().map(|&a| base + a));
+            data.extend_from_slice(red.prototypes.data());
+            weights.extend_from_slice(&red.weights);
+            start = end;
+        }
+        assert_eq!(stream.prototypes.data(), &data[..]);
+        assert_eq!(stream.weights, weights);
+        assert_eq!(stream.assignments, assignments);
+        assert_eq!(stream.labels, ds.labels);
+        assert_eq!(stream.moments.count, moments.count);
+        assert_eq!(stream.moments.sum, moments.sum);
+        assert_eq!(stream.moments.cross, moments.cross);
+        let total: u64 = stream.weights.iter().map(|&w| w as u64).sum();
+        assert_eq!(total, 3000);
     }
 
     #[test]

@@ -7,10 +7,41 @@
 //! busy time, and blocked-on-send time so the launcher can print where
 //! the pipeline is actually bottlenecked.
 
+use crate::linalg::Matrix;
 use crate::{Error, Result};
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// A contiguous block of dataset rows flowing through the ingest
+/// pipeline in streaming mode: the source emits these without ever
+/// materializing the full matrix.
+#[derive(Clone, Debug)]
+pub struct RowShard {
+    /// Index of the shard's first row in the overall stream.
+    pub offset: usize,
+    /// The shard's rows (`shard_size × d`, except possibly the tail).
+    pub points: Matrix,
+    /// Ground-truth labels for the shard's rows, when known.
+    pub labels: Option<Vec<u32>>,
+}
+
+/// A shard after the fused level-0 TC reduction: weighted prototypes
+/// plus the row → local-prototype assignment needed to back final
+/// labels out onto the original rows.
+#[derive(Clone, Debug)]
+pub struct ReducedShard {
+    /// Index of the source shard's first row in the overall stream.
+    pub offset: usize,
+    /// Weighted-centroid prototypes, one per TC cluster of the shard.
+    pub prototypes: Matrix,
+    /// Original units represented by each prototype.
+    pub weights: Vec<u32>,
+    /// Shard row → local prototype index (length = shard rows).
+    pub assignments: Vec<u32>,
+    /// Ground-truth labels carried through from the source shard.
+    pub labels: Option<Vec<u32>>,
+}
 
 /// Metrics recorded by one stage.
 #[derive(Clone, Debug, Default)]
@@ -65,12 +96,44 @@ pub struct Pipeline<T> {
     metrics: MetricsHandle,
 }
 
+/// True for the synthetic error a stage reports when its receiver
+/// disappeared — a *symptom* of a downstream failure, never the cause.
+fn is_hangup(e: &Error) -> bool {
+    matches!(e, Error::Coordinator(m) if m.contains("hung up"))
+}
+
 impl<T> Pipeline<T> {
     /// Wait for all stages; returns per-stage metrics. Errors from any
-    /// stage surface here.
+    /// stage surface here: all stage results are collected first, and
+    /// the first error that is *not* a "downstream stage hung up"
+    /// symptom wins — a failing mid-pipeline stage closes its input
+    /// channel, which makes every upstream stage report a hang-up, so
+    /// returning errors in handle (= stage) order would mask the root
+    /// cause behind the source's symptom.
     pub fn join(self) -> Result<Vec<StageMetrics>> {
+        let mut hangup: Option<Error> = None;
+        let mut root: Option<Error> = None;
         for h in self.handles {
-            h.join().map_err(|_| Error::Coordinator("stage panicked".into()))??;
+            let r = h
+                .join()
+                .map_err(|_| Error::Coordinator("stage panicked".into()))
+                .and_then(|r| r);
+            match r {
+                Ok(()) => {}
+                Err(e) if is_hangup(&e) => {
+                    if hangup.is_none() {
+                        hangup = Some(e);
+                    }
+                }
+                Err(e) => {
+                    if root.is_none() {
+                        root = Some(e);
+                    }
+                }
+            }
+        }
+        if let Some(e) = root.or(hangup) {
+            return Err(e);
         }
         let m = self.metrics.lock().map_err(|_| Error::Coordinator("metrics poisoned".into()))?;
         Ok(m.clone())
@@ -117,21 +180,37 @@ impl<T: Send + 'static> PipelineBuilder<T> {
     pub fn map<U: Send + 'static>(
         self,
         name: &str,
-        f: impl FnMut(T) -> Result<U> + Send + 'static,
+        mut f: impl FnMut(T) -> Result<U> + Send + 'static,
+    ) -> PipelineBuilder<U> {
+        self.map_init(name, || (), move |_, item| f(item))
+    }
+
+    /// Append a transform stage with thread-local state, built once on
+    /// the stage thread and handed to every invocation. This is the
+    /// pooled stage variant the fused streaming reduce uses: the state
+    /// holds a `WorkerPool` plus reusable workspaces so every shard is
+    /// processed through the same buffers with zero steady-state
+    /// allocation. The state never crosses threads, so it does not need
+    /// to be `Send` — only the initializer does.
+    pub fn map_init<S: 'static, U: Send + 'static>(
+        self,
+        name: &str,
+        init: impl FnOnce() -> S + Send + 'static,
+        mut f: impl FnMut(&mut S, T) -> Result<U> + Send + 'static,
     ) -> PipelineBuilder<U> {
         let (tx, rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
         let m = self.metrics.clone();
         let name = name.to_string();
         let upstream = self.head;
-        let mut f = f;
         let mut handles = self.handles;
         handles.push(std::thread::spawn(move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut blocked = Duration::ZERO;
+            let mut state = init();
             let mut result = Ok(());
             for item in upstream {
                 let t0 = Instant::now();
-                match f(item) {
+                match f(&mut state, item) {
                     Ok(out) => {
                         stats.busy += t0.elapsed();
                         stats.items += 1;
@@ -229,8 +308,65 @@ mod tests {
             }
         })
         .build();
+        // The root cause must surface verbatim — the upstream source's
+        // "downstream stage hung up" symptom must never mask it.
         let err = collect(p).unwrap_err();
-        assert!(err.to_string().contains("kaboom") || err.to_string().contains("hung up"));
+        assert!(err.to_string().contains("kaboom"), "{err}");
+    }
+
+    #[test]
+    fn mid_stage_error_is_root_cause() {
+        // A failure in the *middle* of a three-stage chain: the source
+        // blocks on a full queue and reports a hang-up, the downstream
+        // stage drains and finishes cleanly — join must still surface
+        // the failing stage's own error.
+        let p = PipelineBuilder::source("gen", 1, |emit| {
+            for i in 0..100u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map("pre", |x| Ok(x + 1))
+        .map("explode", |x| {
+            if x == 4 {
+                Err(Error::Data("bad shard".into()))
+            } else {
+                Ok(x)
+            }
+        })
+        .map("post", Ok)
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(err.to_string().contains("bad shard"), "{err}");
+    }
+
+    #[test]
+    fn map_init_state_persists_across_items() {
+        // The stage state is built once on the stage thread and reused
+        // for every item (running sum ⇒ order and persistence).
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in 1..=10u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map_init(
+            "acc",
+            || 0u64,
+            |acc, x| {
+                *acc += x;
+                Ok(*acc)
+            },
+        )
+        .build();
+        let (out, metrics) = collect(p).unwrap();
+        let want: Vec<u64> = (1..=10u64).scan(0, |s, x| {
+            *s += x;
+            Some(*s)
+        })
+        .collect();
+        assert_eq!(out, want);
+        assert!(metrics.iter().any(|m| m.name == "acc" && m.items == 10));
     }
 
     #[test]

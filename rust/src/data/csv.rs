@@ -41,6 +41,52 @@ pub fn read_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
     parse_csv(reader, &name, opts)
 }
 
+/// Parse one CSV line into `data`/`labels`, establishing or checking the
+/// feature-column count. Returns `Ok(true)` when the line held a data
+/// row, `Ok(false)` for blank lines. Shared by the one-shot
+/// [`parse_csv`] and the incremental [`CsvChunks`] reader so both report
+/// identical errors.
+fn parse_line(
+    line: &str,
+    lineno: usize,
+    name: &str,
+    opts: &CsvOptions,
+    cols: &mut Option<usize>,
+    data: &mut Vec<f32>,
+    labels: &mut Vec<u32>,
+) -> Result<bool> {
+    let trimmed = line.trim();
+    if trimmed.is_empty() {
+        return Ok(false);
+    }
+    let fields: Vec<&str> = trimmed.split(opts.delimiter).collect();
+    let nfeat = fields.len() - opts.label_column.map(|_| 1).unwrap_or(0);
+    match cols {
+        None => *cols = Some(nfeat),
+        Some(c) if *c != nfeat => {
+            return Err(Error::Data(format!(
+                "{name}:{}: expected {c} feature fields, found {nfeat}",
+                lineno + 1
+            )))
+        }
+        _ => {}
+    }
+    for (i, field) in fields.iter().enumerate() {
+        if Some(i) == opts.label_column {
+            let v: i64 = field.trim().parse().map_err(|_| {
+                Error::Data(format!("{name}:{}: bad label '{field}'", lineno + 1))
+            })?;
+            labels.push(v as u32);
+        } else {
+            let v: f32 = field.trim().parse().map_err(|_| {
+                Error::Data(format!("{name}:{}: bad number '{field}'", lineno + 1))
+            })?;
+            data.push(v);
+        }
+    }
+    Ok(true)
+}
+
 /// Parse CSV from any reader (exposed for tests and in-memory sources).
 pub fn parse_csv(reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<Dataset> {
     let mut data: Vec<f32> = Vec::new();
@@ -53,41 +99,129 @@ pub fn parse_csv(reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<
         if lineno == 0 && opts.has_header {
             continue;
         }
-        let trimmed = line.trim();
-        if trimmed.is_empty() {
-            continue;
+        if parse_line(&line, lineno, name, opts, &mut cols, &mut data, &mut labels)? {
+            rows += 1;
         }
-        let fields: Vec<&str> = trimmed.split(opts.delimiter).collect();
-        let nfeat = fields.len() - opts.label_column.map(|_| 1).unwrap_or(0);
-        match cols {
-            None => cols = Some(nfeat),
-            Some(c) if c != nfeat => {
-                return Err(Error::Data(format!(
-                    "{name}:{}: expected {c} feature fields, found {nfeat}",
-                    lineno + 1
-                )))
-            }
-            _ => {}
-        }
-        for (i, field) in fields.iter().enumerate() {
-            if Some(i) == opts.label_column {
-                let v: i64 = field.trim().parse().map_err(|_| {
-                    Error::Data(format!("{name}:{}: bad label '{field}'", lineno + 1))
-                })?;
-                labels.push(v as u32);
-            } else {
-                let v: f32 = field.trim().parse().map_err(|_| {
-                    Error::Data(format!("{name}:{}: bad number '{field}'", lineno + 1))
-                })?;
-                data.push(v);
-            }
-        }
-        rows += 1;
     }
     let cols = cols.unwrap_or(0);
     let points = Matrix::from_vec(data, rows, cols)?;
     let labels = if opts.label_column.is_some() { Some(labels) } else { None };
     Dataset::new(name, points, labels, opts.k_hint)
+}
+
+/// Incremental CSV reader: yields fixed-size row shards so the streaming
+/// ingest never materializes the full matrix. Each item is
+/// `(points, labels)` for up to `shard_rows` rows; concatenating all
+/// shards is equivalent to one [`parse_csv`] call on the same input.
+/// The iterator fuses on the first error.
+pub struct CsvChunks<R: BufRead> {
+    lines: std::io::Lines<R>,
+    name: String,
+    opts: CsvOptions,
+    shard_rows: usize,
+    cols: Option<usize>,
+    lineno: usize,
+    done: bool,
+}
+
+impl<R: BufRead> CsvChunks<R> {
+    /// Number of feature columns, known after the first emitted shard.
+    pub fn cols(&self) -> Option<usize> {
+        self.cols
+    }
+}
+
+impl<R: BufRead> Iterator for CsvChunks<R> {
+    type Item = Result<(Matrix, Option<Vec<u32>>)>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.done {
+            return None;
+        }
+        let mut data: Vec<f32> = Vec::new();
+        let mut labels: Vec<u32> = Vec::new();
+        let mut rows = 0usize;
+        while rows < self.shard_rows {
+            let Some(line) = self.lines.next() else { break };
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e.into()));
+                }
+            };
+            let lineno = self.lineno;
+            self.lineno += 1;
+            if lineno == 0 && self.opts.has_header {
+                continue;
+            }
+            match parse_line(
+                &line,
+                lineno,
+                &self.name,
+                &self.opts,
+                &mut self.cols,
+                &mut data,
+                &mut labels,
+            ) {
+                Ok(true) => rows += 1,
+                Ok(false) => {}
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            }
+        }
+        if rows == 0 {
+            self.done = true;
+            return None;
+        }
+        let cols = self.cols.unwrap_or(0);
+        let points = match Matrix::from_vec(data, rows, cols) {
+            Ok(m) => m,
+            Err(e) => {
+                self.done = true;
+                return Some(Err(e));
+            }
+        };
+        let labels = if self.opts.label_column.is_some() { Some(labels) } else { None };
+        Some(Ok((points, labels)))
+    }
+}
+
+/// Chunked CSV parsing from any reader (see [`CsvChunks`]).
+pub fn csv_chunks<R: BufRead>(
+    reader: R,
+    name: &str,
+    opts: &CsvOptions,
+    shard_rows: usize,
+) -> CsvChunks<R> {
+    CsvChunks {
+        lines: reader.lines(),
+        name: name.to_string(),
+        opts: opts.clone(),
+        shard_rows: shard_rows.max(1),
+        cols: None,
+        lineno: 0,
+        done: false,
+    }
+}
+
+/// Open a CSV file for chunked, out-of-core reading: at most
+/// `shard_rows` rows are resident per emitted shard.
+pub fn read_csv_chunks(
+    path: impl AsRef<Path>,
+    opts: &CsvOptions,
+    shard_rows: usize,
+) -> Result<CsvChunks<std::io::BufReader<std::fs::File>>> {
+    let path = path.as_ref();
+    let file = std::fs::File::open(path)?;
+    let reader = std::io::BufReader::new(file);
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    Ok(csv_chunks(reader, &name, opts, shard_rows))
 }
 
 /// Write a dataset to CSV (features then optional `label` column).
@@ -178,5 +312,51 @@ mod tests {
         let opts = CsvOptions { ..Default::default() };
         let ds = parse_csv(Cursor::new(src), "t", &opts).unwrap();
         assert_eq!(ds.len(), 2);
+    }
+
+    #[test]
+    fn chunked_concat_equals_one_shot() {
+        // Chunked reads of any shard size must concatenate to exactly
+        // what parse_csv produces — the streaming ingest's contract.
+        let ds = crate::data::synth::gaussian_mixture_paper(257, 10);
+        let dir = std::env::temp_dir().join("ihtc_csv_chunks_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("chunks.csv");
+        write_csv(&ds, &path).unwrap();
+        let opts = CsvOptions { label_column: Some(2), k_hint: 3, ..Default::default() };
+        let whole = read_csv(&path, &opts).unwrap();
+        for shard_rows in [1usize, 64, 100, 257, 1000] {
+            let mut data: Vec<f32> = Vec::new();
+            let mut labels: Vec<u32> = Vec::new();
+            let mut shards = 0usize;
+            for item in read_csv_chunks(&path, &opts, shard_rows).unwrap() {
+                let (m, l) = item.unwrap();
+                assert!(m.rows() <= shard_rows);
+                data.extend_from_slice(m.data());
+                labels.extend(l.unwrap());
+                shards += 1;
+            }
+            assert_eq!(shards, (257 + shard_rows - 1) / shard_rows);
+            assert_eq!(&data, whole.points.data());
+            assert_eq!(Some(labels), whole.labels);
+        }
+    }
+
+    #[test]
+    fn chunked_errors_carry_line_numbers_and_fuse() {
+        let src = "h1,h2\n1,2\n3,4\n5,oops\n7,8\n";
+        let mut it = csv_chunks(Cursor::new(src), "t", &CsvOptions::default(), 2);
+        let first = it.next().unwrap().unwrap();
+        assert_eq!(first.0.rows(), 2);
+        let err = it.next().unwrap().unwrap_err();
+        assert!(err.to_string().contains(":4:"), "{err}");
+        // Fused: no items after the error.
+        assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn chunked_empty_input_yields_nothing() {
+        let mut it = csv_chunks(Cursor::new("h1,h2\n"), "t", &CsvOptions::default(), 8);
+        assert!(it.next().is_none());
     }
 }

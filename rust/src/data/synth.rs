@@ -49,14 +49,40 @@ pub struct MixtureSpec {
 impl MixtureSpec {
     /// Sample `n` points deterministically from `seed`.
     pub fn sample(&self, n: usize, seed: u64) -> Dataset {
-        let d = self.components[0].mean.len();
-        for c in &self.components {
+        let mut sampler = MixtureSampler::new(self, seed);
+        let (points, labels) = sampler.next_shard(n);
+        Dataset::new(&self.name, points, Some(labels), self.components.len())
+            .expect("synthetic dataset")
+    }
+}
+
+/// Incremental sampler over a [`MixtureSpec`]: successive
+/// [`MixtureSampler::next_shard`] calls draw from one RNG stream, so the
+/// concatenation of any shard sequence is byte-identical to a single
+/// [`MixtureSpec::sample`] call of the same total size. This is what
+/// lets the streaming ingest generate synthetic sources shard-by-shard
+/// without changing the data the materialized path sees.
+pub struct MixtureSampler {
+    components: Vec<Component>,
+    noise_frac: f64,
+    cuts: Vec<f64>,
+    lo: Vec<f64>,
+    hi: Vec<f64>,
+    d: usize,
+    rng: Xoshiro256,
+}
+
+impl MixtureSampler {
+    /// Prepare a sampler for `spec`, seeding the point RNG with `seed`.
+    pub fn new(spec: &MixtureSpec, seed: u64) -> Self {
+        let d = spec.components[0].mean.len();
+        for c in &spec.components {
             assert_eq!(c.mean.len(), d, "component dims must agree");
             assert_eq!(c.std.len(), d, "component dims must agree");
         }
-        let total_w: f64 = self.components.iter().map(|c| c.weight).sum();
+        let total_w: f64 = spec.components.iter().map(|c| c.weight).sum();
         let mut cum = 0.0;
-        let cuts: Vec<f64> = self
+        let cuts: Vec<f64> = spec
             .components
             .iter()
             .map(|c| {
@@ -64,34 +90,51 @@ impl MixtureSpec {
                 cum
             })
             .collect();
-
-        let mut rng = Xoshiro256::seed_from_u64(seed);
-        let mut data = Vec::with_capacity(n * d);
-        let mut labels = Vec::with_capacity(n);
         // Bounding box for background noise: mean ± 4σ across components.
         let mut lo = vec![f64::INFINITY; d];
         let mut hi = vec![f64::NEG_INFINITY; d];
-        for c in &self.components {
+        for c in &spec.components {
             for j in 0..d {
                 lo[j] = lo[j].min(c.mean[j] - 4.0 * c.std[j]);
                 hi[j] = hi[j].max(c.mean[j] + 4.0 * c.std[j]);
             }
         }
+        Self {
+            components: spec.components.clone(),
+            noise_frac: spec.noise_frac,
+            cuts,
+            lo,
+            hi,
+            d,
+            rng: Xoshiro256::seed_from_u64(seed),
+        }
+    }
 
-        for _ in 0..n {
-            let u = rng.next_f64();
-            let comp_idx = cuts.iter().position(|&c| u <= c).unwrap_or(self.components.len() - 1);
+    /// Dimensionality of the sampled points.
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Draw the next `rows` points; labels are parallel to the rows.
+    pub fn next_shard(&mut self, rows: usize) -> (Matrix, Vec<u32>) {
+        let d = self.d;
+        let mut data = Vec::with_capacity(rows * d);
+        let mut labels = Vec::with_capacity(rows);
+        for _ in 0..rows {
+            let u = self.rng.next_f64();
+            let comp_idx =
+                self.cuts.iter().position(|&c| u <= c).unwrap_or(self.components.len() - 1);
             let comp = &self.components[comp_idx];
             labels.push(comp_idx as u32);
-            if self.noise_frac > 0.0 && rng.next_f64() < self.noise_frac {
+            if self.noise_frac > 0.0 && self.rng.next_f64() < self.noise_frac {
                 for j in 0..d {
-                    data.push((lo[j] + (hi[j] - lo[j]) * rng.next_f64()) as f32);
+                    data.push((self.lo[j] + (self.hi[j] - self.lo[j]) * self.rng.next_f64()) as f32);
                 }
                 continue;
             }
             let mut prev = 0.0f64;
             for j in 0..d {
-                let mut g = rng.next_gaussian();
+                let mut g = self.rng.next_gaussian();
                 if comp.corr != 0.0 && j > 0 {
                     g = comp.corr * prev + (1.0 - comp.corr * comp.corr).sqrt() * g;
                 }
@@ -104,13 +147,7 @@ impl MixtureSpec {
                 data.push(v as f32);
             }
         }
-        Dataset::new(
-            &self.name,
-            Matrix::from_vec(data, n, d).expect("sample buffer"),
-            Some(labels),
-            self.components.len(),
-        )
-        .expect("synthetic dataset")
+        (Matrix::from_vec(data, rows, d).expect("sample buffer"), labels)
     }
 }
 
@@ -179,6 +216,16 @@ pub const TABLE3: &[RealDatasetSpec] = &[
 /// `n = instances / scale_div` points (scale_div=1 reproduces the paper's
 /// size; larger divisors keep experiments within this testbed's budget).
 pub fn realistic(spec: &RealDatasetSpec, scale_div: usize, seed: u64) -> Dataset {
+    let (spec_m, n) = realistic_spec(spec, scale_div, seed);
+    spec_m.sample(n, seed)
+}
+
+/// The deterministic analogue mixture behind [`realistic`], plus its row
+/// count — split out so the streaming ingest can drive a
+/// [`MixtureSampler`] over it shard-by-shard instead of materializing
+/// the dataset. `realistic(spec, s, seed)` ≡ sampling the returned spec
+/// for the returned `n` rows with the same seed.
+pub fn realistic_spec(spec: &RealDatasetSpec, scale_div: usize, seed: u64) -> (MixtureSpec, usize) {
     let n = (spec.instances / scale_div.max(1)).max(spec.classes * 50);
     let d = spec.attributes;
     let k = spec.classes;
@@ -210,7 +257,7 @@ pub fn realistic(spec: &RealDatasetSpec, scale_div: usize, seed: u64) -> Dataset
         components,
         noise_frac: 0.02,
     };
-    spec_m.sample(n, seed)
+    (spec_m, n)
 }
 
 /// Look up a Table 3 spec by (case-insensitive, prefix) name.
@@ -279,6 +326,39 @@ mod tests {
             let distinct: std::collections::HashSet<_> = labels.iter().collect();
             assert_eq!(distinct.len(), spec.classes, "{}", spec.name);
         }
+    }
+
+    #[test]
+    fn sampler_shards_match_one_shot() {
+        // Concatenated shards from one sampler must be byte-identical to
+        // a single sample() of the total size — including across the
+        // noise branch (realistic analogues) and skew/correlation paths.
+        let (analogue, _) = realistic_spec(&TABLE3[0], 100, 11);
+        for spec in [paper_mixture_spec(), analogue] {
+            let whole = spec.sample(1000, 42);
+            let mut sampler = MixtureSampler::new(&spec, 42);
+            let mut data: Vec<f32> = Vec::new();
+            let mut labels: Vec<u32> = Vec::new();
+            for rows in [1usize, 127, 128, 500, 244] {
+                let (m, l) = sampler.next_shard(rows);
+                assert_eq!(m.rows(), rows);
+                data.extend_from_slice(m.data());
+                labels.extend(l);
+            }
+            assert_eq!(&data, whole.points.data(), "{}", spec.name);
+            assert_eq!(Some(labels), whole.labels);
+        }
+    }
+
+    #[test]
+    fn realistic_spec_matches_realistic() {
+        let spec = find_spec("covertype").unwrap();
+        let whole = realistic(spec, 200, 9);
+        let (mix, n) = realistic_spec(spec, 200, 9);
+        assert_eq!(n, whole.len());
+        let again = mix.sample(n, 9);
+        assert_eq!(again.points.data(), whole.points.data());
+        assert_eq!(again.labels, whole.labels);
     }
 
     #[test]

@@ -69,6 +69,21 @@ pub enum FinalClusterer {
     },
 }
 
+impl FinalClusterer {
+    /// Minimum number of prototypes this clusterer needs ITIS to leave
+    /// behind — the `min_prototypes` floor the reduction enforces
+    /// ([`crate::itis::ItisConfig::min_prototypes`]): `k` for the
+    /// k-seeking algorithms, 2 for DBSCAN.
+    pub fn min_prototypes(&self) -> usize {
+        match self {
+            FinalClusterer::KMeans { k, .. }
+            | FinalClusterer::Hac { k, .. }
+            | FinalClusterer::Gmm { k, .. } => *k,
+            FinalClusterer::Dbscan { .. } => 2,
+        }
+    }
+}
+
 /// IHTC configuration: `m` ITIS iterations at threshold `t*`, then a
 /// final clusterer.
 #[derive(Clone, Debug)]
@@ -142,12 +157,7 @@ impl Ihtc {
             stop: crate::itis::StopRule::Iterations(self.iterations),
             prototype: self.prototype,
             seed_order: self.seed_order,
-            min_prototypes: match &self.clusterer {
-                FinalClusterer::KMeans { k, .. }
-                | FinalClusterer::Hac { k, .. }
-                | FinalClusterer::Gmm { k, .. } => *k,
-                FinalClusterer::Dbscan { .. } => 2,
-            },
+            min_prototypes: self.clusterer.min_prototypes(),
         };
         let reduction = if self.iterations == 0 {
             // m = 0: no pre-processing; identity ITIS result.

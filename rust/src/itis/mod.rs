@@ -190,6 +190,19 @@ impl ItisResult {
                 self.prototypes.rows()
             )));
         }
+        // Guard the composition: the first level must map every original
+        // unit. A result from `itis_resume` whose caller forgot to
+        // prepend its level-0 map would otherwise panic on indexing.
+        if let Some(first) = self.levels.first() {
+            if first.assignments.len() != self.n_original {
+                return Err(Error::Shape(format!(
+                    "first level maps {} units but n_original is {} \
+                     (itis_resume callers must prepend their level-0 map)",
+                    first.assignments.len(),
+                    self.n_original
+                )));
+            }
+        }
         Ok(self
             .unit_to_prototype()
             .into_iter()
@@ -361,16 +374,62 @@ pub fn itis_with_workspace(
     pool: &WorkerPool,
     ws: &mut ItisWorkspace,
 ) -> Result<ItisResult> {
+    check_threshold(config)?;
+    let n0 = points.rows();
+    itis_core(points.clone(), vec![1; n0], n0, config, knn, pool, ws)
+}
+
+/// Resume ITIS from an already-reduced level: each row of `initial`
+/// stands for `initial_weights[row]` original units (e.g. the fused
+/// streaming ingest's concatenated shard prototypes). Stop rules and
+/// [`ItisResult::n_original`] are relative to `n_original`, so
+/// [`StopRule::ReductionFactor`] measures the reduction of the original
+/// stream, not of `initial`. The returned levels cover only the resumed
+/// iterations — the caller prepends its own level-0 map before backing
+/// labels out.
+pub fn itis_resume(
+    initial: Matrix,
+    initial_weights: Vec<u32>,
+    n_original: usize,
+    config: &ItisConfig,
+    knn: &dyn KnnProvider,
+    pool: &WorkerPool,
+    ws: &mut ItisWorkspace,
+) -> Result<ItisResult> {
+    check_threshold(config)?;
+    if initial_weights.len() != initial.rows() {
+        return Err(Error::Shape(format!(
+            "{} weights for {} initial prototypes",
+            initial_weights.len(),
+            initial.rows()
+        )));
+    }
+    itis_core(initial, initial_weights, n_original, config, knn, pool, ws)
+}
+
+fn check_threshold(config: &ItisConfig) -> Result<()> {
     if config.threshold < 2 {
         return Err(Error::InvalidArgument(format!(
             "ITIS needs t* ≥ 2, got {}",
             config.threshold
         )));
     }
-    let n0 = points.rows();
-    let mut current = points.clone();
-    let mut weights: Vec<u32> = vec![1; n0];
+    Ok(())
+}
+
+/// The shared reduction loop behind [`itis_with_workspace`] (weights all
+/// one) and [`itis_resume`] (weights from a previous reduction).
+fn itis_core(
+    mut current: Matrix,
+    mut weights: Vec<u32>,
+    n0: usize,
+    config: &ItisConfig,
+    knn: &dyn KnnProvider,
+    pool: &WorkerPool,
+    ws: &mut ItisWorkspace,
+) -> Result<ItisResult> {
     let mut levels = Vec::new();
+    let floor = config.min_prototypes.max(1);
 
     let max_iters = match config.stop {
         StopRule::Iterations(m) => m,
@@ -388,22 +447,25 @@ pub fn itis_with_workspace(
         if done {
             break;
         }
-        // Too small to keep reducing?
-        if current.rows() <= config.threshold
-            || current.rows() / config.threshold < config.min_prototypes.max(1)
-        {
+        // Too small to keep reducing? TC guarantees every cluster holds
+        // ≥ t* units, so `num_clusters ≤ rows / t*` — a level that
+        // cannot possibly reach the floor is knowable before clustering.
+        if current.rows() <= config.threshold || current.rows() / config.threshold < floor {
             break;
         }
         let tc_cfg = TcConfig { threshold: config.threshold, seed_order: config.seed_order };
-        let tc = if current.rows() <= config.threshold {
-            threshold_cluster(&current, &tc_cfg)?
-        } else {
-            knn.knn_into(&current, config.threshold - 1, &mut ws.knn)?;
-            let graph = NeighborGraph::from_knn(&ws.knn);
-            threshold_cluster_graph(&graph, &current, &tc_cfg)
-        };
+        knn.knn_into(&current, config.threshold - 1, &mut ws.knn)?;
+        let graph = NeighborGraph::from_knn(&ws.knn);
+        let tc = threshold_cluster_graph(&graph, &current, &tc_cfg);
         if tc.num_clusters >= current.rows() {
             break; // no reduction possible
+        }
+        // TC clusters can hold up to 2t*−1 units, so the realized count
+        // can undershoot the rows/t* prediction: enforce the floor on
+        // the *actual* count and discard the level when it violates it,
+        // otherwise the final clusterer is handed k > n* points.
+        if tc.num_clusters < floor {
+            break;
         }
         let (protos, new_weights) =
             make_prototypes(&current, &weights, &tc, config.prototype, pool, ws)?;
@@ -413,6 +475,62 @@ pub fn itis_with_workspace(
     }
 
     Ok(ItisResult { levels, prototypes: current, weights, n_original: n0 })
+}
+
+/// One shard's fused level-0 reduction (see [`reduce_shard`]).
+#[derive(Clone, Debug)]
+pub struct ShardReduction {
+    /// Weighted-centroid prototypes, one per TC cluster of the shard.
+    pub prototypes: Matrix,
+    /// Original units represented by each prototype.
+    pub weights: Vec<u32>,
+    /// Shard row → local prototype index (length = shard rows).
+    pub assignments: Vec<u32>,
+}
+
+/// Threshold-cluster one data shard into weighted prototypes — the
+/// streaming ingest's per-shard reduction step. Regardless of the
+/// configured [`ItisConfig::prototype`], the accumulation is always
+/// [`PrototypeKind::WeightedCentroid`]: that keeps every prototype the
+/// exact mean of the original units it represents, so concatenating
+/// shard reductions commutes with the weighted means the later pooled
+/// iterations compute. Shards of ≤ t* rows collapse to a single
+/// prototype (TC's tiny-input behavior); `weights` carries the units
+/// each incoming row already represents (all ones for raw data).
+pub fn reduce_shard(
+    points: &Matrix,
+    weights: &[u32],
+    config: &ItisConfig,
+    knn: &dyn KnnProvider,
+    pool: &WorkerPool,
+    ws: &mut ItisWorkspace,
+) -> Result<ShardReduction> {
+    check_threshold(config)?;
+    if weights.len() != points.rows() {
+        return Err(Error::Shape(format!(
+            "{} weights for {} shard rows",
+            weights.len(),
+            points.rows()
+        )));
+    }
+    if points.rows() == 0 {
+        return Ok(ShardReduction {
+            prototypes: points.clone(),
+            weights: Vec::new(),
+            assignments: Vec::new(),
+        });
+    }
+    let tc_cfg = TcConfig { threshold: config.threshold, seed_order: config.seed_order };
+    let tc = if points.rows() <= config.threshold {
+        threshold_cluster(points, &tc_cfg)?
+    } else {
+        knn.knn_into(points, config.threshold - 1, &mut ws.knn)?;
+        let graph = NeighborGraph::from_knn(&ws.knn);
+        threshold_cluster_graph(&graph, points, &tc_cfg)
+    };
+    let (prototypes, new_weights) =
+        make_prototypes(points, weights, &tc, PrototypeKind::WeightedCentroid, pool, ws)?;
+    Ok(ShardReduction { prototypes, weights: new_weights, assignments: tc.assignments })
 }
 
 #[cfg(test)]
@@ -478,6 +596,25 @@ mod tests {
         let ds = gaussian_mixture_paper(100, 65);
         let r = itis(&ds.points, &ItisConfig::iterations(2, 1)).unwrap();
         assert!(r.back_out(&[0]).is_err());
+    }
+
+    #[test]
+    fn back_out_requires_level0_coverage() {
+        // An itis_resume result whose caller forgot to prepend the
+        // level-0 map must error on back-out, not panic on indexing.
+        let ds = gaussian_mixture_paper(400, 79);
+        let pool = WorkerPool::new(1);
+        let mut ws = ItisWorkspace::new();
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 1)
+        };
+        // Pretend `initial` is a level-0 reduction of 800 original rows.
+        let r = itis_resume(ds.points.clone(), vec![2; 400], 800, &cfg, &DefaultKnn, &pool, &mut ws)
+            .unwrap();
+        let labels = vec![0u32; r.prototypes.rows()];
+        let err = r.back_out(&labels).unwrap_err();
+        assert!(err.to_string().contains("level"), "{err}");
     }
 
     #[test]
@@ -584,6 +721,126 @@ mod tests {
             assert_eq!(r.weights, fresh.weights);
             assert_eq!(r.levels.len(), fresh.levels.len());
         }
+    }
+
+    /// `blobs` far-apart tight blobs of `per_blob` points each: with
+    /// `t* ≤ per_blob ≤ 2t*−1`, TC forms exactly one cluster per blob.
+    fn blob_matrix(blobs: usize, per_blob: usize) -> Matrix {
+        let mut data = Vec::with_capacity(blobs * per_blob * 2);
+        for b in 0..blobs {
+            for i in 0..per_blob {
+                data.push(1000.0 * b as f32 + 0.01 * i as f32);
+                data.push(0.01 * (i as f32).sin());
+            }
+        }
+        Matrix::from_vec(data, blobs * per_blob, 2).unwrap()
+    }
+
+    #[test]
+    fn realized_undershoot_discards_level() {
+        // 5 blobs of 7 points, t* = 4: the prediction rows/t* = 35/4 = 8
+        // passes a floor of 6, but TC clusters can hold up to 2t*−1 = 7
+        // units, so the realized count is 5 < 6. The level must be
+        // discarded — otherwise a k-means with k = 6 would be handed
+        // only 5 prototypes.
+        let points = blob_matrix(5, 7);
+        let cfg = ItisConfig {
+            min_prototypes: 6,
+            ..ItisConfig::iterations(4, 1)
+        };
+        let r = itis(&points, &cfg).unwrap();
+        assert!(
+            r.prototypes.rows() >= cfg.min_prototypes,
+            "floor violated: {} < {}",
+            r.prototypes.rows(),
+            cfg.min_prototypes
+        );
+        // The undershooting level was discarded entirely.
+        assert!(r.levels.is_empty());
+        assert_eq!(r.prototypes.rows(), 35);
+        // Sanity: without the floor the same data does reduce to 5.
+        let free = itis(&points, &ItisConfig::iterations(4, 1)).unwrap();
+        assert_eq!(free.prototypes.rows(), 5);
+    }
+
+    #[test]
+    fn reduce_shard_matches_single_itis_level() {
+        // One shard covering the whole dataset must reproduce the first
+        // WeightedCentroid ITIS level bit-for-bit.
+        let ds = gaussian_mixture_paper(1200, 74);
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 1)
+        };
+        let level = itis(&ds.points, &cfg).unwrap();
+        let pool = WorkerPool::new(2);
+        let mut ws = ItisWorkspace::new();
+        let red = reduce_shard(&ds.points, &vec![1; 1200], &cfg, &DefaultKnn, &pool, &mut ws)
+            .unwrap();
+        assert_eq!(red.prototypes.data(), level.prototypes.data());
+        assert_eq!(red.weights, level.weights);
+        assert_eq!(red.assignments, level.levels[0].assignments);
+    }
+
+    #[test]
+    fn reduce_shard_conserves_mass_and_handles_tiny_shards() {
+        let ds = gaussian_mixture_paper(37, 75);
+        let cfg = ItisConfig::iterations(2, 1);
+        let pool = WorkerPool::new(1);
+        let mut ws = ItisWorkspace::new();
+        // Incoming rows already weighted (as on a resumed level).
+        let weights: Vec<u32> = (0..37).map(|i| 1 + (i % 3) as u32).collect();
+        let total: u64 = weights.iter().map(|&w| w as u64).sum();
+        let red = reduce_shard(&ds.points, &weights, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        let got: u64 = red.weights.iter().map(|&w| w as u64).sum();
+        assert_eq!(got, total);
+        assert_eq!(red.assignments.len(), 37);
+        // A shard of ≤ t* rows collapses to one prototype.
+        let tiny = ds.points.slice_rows(0, 2);
+        let red = reduce_shard(&tiny, &[1, 1], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        assert_eq!(red.prototypes.rows(), 1);
+        assert_eq!(red.weights, vec![2]);
+        // Mismatched weights are rejected; empty shards are a no-op.
+        assert!(reduce_shard(&tiny, &[1], &cfg, &DefaultKnn, &pool, &mut ws).is_err());
+        let empty = ds.points.slice_rows(0, 0);
+        let red = reduce_shard(&empty, &[], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        assert_eq!(red.prototypes.rows(), 0);
+    }
+
+    #[test]
+    fn itis_resume_composes_with_reduce_shard() {
+        // reduce_shard over shards + itis_resume must agree with a
+        // single itis run on stop-rule semantics: n_original governs
+        // the reduction factor, and weights stay conserved.
+        let ds = gaussian_mixture_paper(2048, 76);
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 2)
+        };
+        let pool = WorkerPool::new(2);
+        let mut ws = ItisWorkspace::new();
+        let mut data = Vec::new();
+        let mut weights = Vec::new();
+        for start in (0..2048).step_by(512) {
+            let shard = ds.points.slice_rows(start, start + 512);
+            let red =
+                reduce_shard(&shard, &vec![1; 512], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+            data.extend_from_slice(red.prototypes.data());
+            weights.extend_from_slice(&red.weights);
+        }
+        let n_level0 = weights.len();
+        let initial = Matrix::from_vec(data, n_level0, 2).unwrap();
+        let resume_cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 1)
+        };
+        let r = itis_resume(initial, weights, 2048, &resume_cfg, &DefaultKnn, &pool, &mut ws)
+            .unwrap();
+        assert_eq!(r.n_original, 2048);
+        let total: u64 = r.weights.iter().map(|&w| w as u64).sum();
+        assert_eq!(total, 2048);
+        assert!(r.prototypes.rows() <= n_level0 / 2);
+        assert!(r.reduction_factor() >= 4.0);
     }
 
     #[test]

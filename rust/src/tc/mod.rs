@@ -172,8 +172,10 @@ pub fn threshold_cluster_graph(
 }
 
 /// Verify the TC invariants on a result; used by tests and by the
-/// pipeline's (optional) self-check mode. Returns the observed maximum
-/// within-cluster squared dissimilarity.
+/// pipeline's (optional) self-check mode. Returns `Ok(())` when the
+/// spanning, minimum-cluster-size, and seed-independence invariants all
+/// hold, and a descriptive error naming the first violated invariant
+/// otherwise.
 pub fn validate(
     result: &TcResult,
     graph: &NeighborGraph,

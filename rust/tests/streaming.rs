@@ -1,0 +1,125 @@
+//! Out-of-core streaming integration tests: fused ingest parity with a
+//! two-pass shard reduction, end-to-end streaming runs against the
+//! materialized baseline, and CSV-sourced streaming.
+
+use ihtc::config::{DataSource, PipelineConfig};
+use ihtc::coordinator::driver::{self, ingest_streaming};
+use ihtc::coordinator::{PoolKnnProvider, WorkerPool};
+use ihtc::data::synth::gaussian_mixture_paper;
+use ihtc::data::{csv, Dataset};
+use ihtc::itis::{reduce_shard, ItisConfig, ItisWorkspace, PrototypeKind, StopRule};
+
+fn streaming_config(n: usize) -> PipelineConfig {
+    PipelineConfig {
+        source: DataSource::PaperMixture { n },
+        streaming: true,
+        prototype: PrototypeKind::WeightedCentroid,
+        workers: 2,
+        shard_size: 700,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn fused_prototypes_match_two_pass_run() {
+    // The acceptance contract: WeightedCentroid prototypes from the
+    // fused single-pass ingest are byte-identical to a two-pass run
+    // that materializes each shard separately and reduces it.
+    let cfg = streaming_config(5000);
+    let stream = ingest_streaming(&cfg).unwrap();
+    assert_eq!(stream.n, 5000);
+
+    let ds = gaussian_mixture_paper(5000, cfg.seed);
+    let pool = WorkerPool::new(cfg.workers);
+    let provider = PoolKnnProvider { pool: &pool };
+    let mut ws = ItisWorkspace::new();
+    let itis_cfg = ItisConfig {
+        threshold: cfg.threshold,
+        stop: StopRule::Iterations(1),
+        prototype: PrototypeKind::WeightedCentroid,
+        seed_order: cfg.seed_order,
+        min_prototypes: 1,
+    };
+    let mut data: Vec<f32> = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+    let mut start = 0usize;
+    while start < 5000 {
+        let end = (start + cfg.shard_size).min(5000);
+        let shard = ds.points.slice_rows(start, end);
+        let red = reduce_shard(&shard, &vec![1; end - start], &itis_cfg, &provider, &pool, &mut ws)
+            .unwrap();
+        data.extend_from_slice(red.prototypes.data());
+        weights.extend_from_slice(&red.weights);
+        start = end;
+    }
+    assert_eq!(stream.prototypes.data(), &data[..]);
+    assert_eq!(stream.weights, weights);
+    // Every original unit is represented exactly once.
+    let total: u64 = stream.weights.iter().map(|&w| w as u64).sum();
+    assert_eq!(total, 5000);
+    // The fused path held roughly n / t* prototypes, not n rows.
+    assert!(stream.prototypes.rows() <= 5000 / cfg.threshold);
+}
+
+#[test]
+fn streaming_accuracy_matches_materialized_band() {
+    // Shard-wise level-0 TC is a different (but equally valid) reduction
+    // from global TC — accuracy must stay in the same band.
+    let n = 8000;
+    let mut materialized = streaming_config(n);
+    materialized.streaming = false;
+    let (_, base) = driver::run(&materialized).unwrap();
+    let (assign, report) = driver::run(&streaming_config(n)).unwrap();
+    assert_eq!(assign.len(), n);
+    let base_acc = base.accuracy.unwrap();
+    let stream_acc = report.accuracy.unwrap();
+    assert!(
+        stream_acc > base_acc - 0.05,
+        "streaming accuracy dropped: {base_acc} → {stream_acc}"
+    );
+    // Both reduced by ≥ (t*)² over two iterations.
+    assert!(report.prototypes <= n / 4 + 16);
+}
+
+#[test]
+fn streaming_from_csv_source() {
+    // Round-trip: synthetic data → CSV on disk → chunked streaming run.
+    let ds = gaussian_mixture_paper(2500, 77);
+    let dir = std::env::temp_dir().join("ihtc_streaming_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream_src.csv");
+    csv::write_csv(&ds, &path).unwrap();
+
+    let mut cfg = streaming_config(0);
+    cfg.source = DataSource::Csv {
+        path: path.to_string_lossy().into_owned(),
+        label_column: Some(2),
+    };
+    cfg.shard_size = 600;
+    let out = dir.join("stream_out.csv");
+    cfg.output = Some(out.to_string_lossy().into_owned());
+    let (assign, report) = driver::run(&cfg).unwrap();
+    assert_eq!(assign.len(), 2500);
+    assert_eq!(report.n, 2500);
+    assert!(report.accuracy.is_some());
+    assert!(report.accuracy.unwrap() > 0.80, "{report:?}");
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), 2501);
+}
+
+#[test]
+fn streaming_csv_without_labels_reports_no_accuracy() {
+    let ds = gaussian_mixture_paper(900, 78);
+    let unlabeled = Dataset::new("u", ds.points.clone(), None, 3).unwrap();
+    let dir = std::env::temp_dir().join("ihtc_streaming_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("stream_nolabel.csv");
+    csv::write_csv(&unlabeled, &path).unwrap();
+    let mut cfg = streaming_config(0);
+    cfg.source = DataSource::Csv { path: path.to_string_lossy().into_owned(), label_column: None };
+    cfg.shard_size = 256;
+    let (assign, report) = driver::run(&cfg).unwrap();
+    assert_eq!(assign.len(), 900);
+    assert!(report.accuracy.is_none());
+    assert!(report.bss_tss > 0.0);
+}

@@ -1,0 +1,114 @@
+#!/usr/bin/env python3
+"""Diff BENCH_*.json files between two directories and flag regressions.
+
+The bench harness (rust/benches/bench_main.rs) writes one
+BENCH_<name>.json per benchmark with median/min/max wall-clock ns and
+peak allocated bytes. This script compares the current run against a
+baseline directory (typically the previous PR's committed numbers in
+bench_baseline/) and flags any benchmark whose median time or peak
+bytes regressed by more than --threshold percent.
+
+Usage:
+    scripts/bench_diff.py --current rust --baseline bench_baseline
+    scripts/bench_diff.py --current out --baseline base --threshold 5
+    scripts/bench_diff.py ... --warn-only     # report, always exit 0
+
+Exit status: 0 when no regressions (or --warn-only), 1 when at least
+one metric regressed past the threshold, 2 on usage errors.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+METRICS = [("median_ns", "time"), ("peak_bytes", "peak")]
+
+
+def load_dir(path: Path):
+    benches = {}
+    for f in sorted(path.glob("BENCH_*.json")):
+        try:
+            doc = json.loads(f.read_text())
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"warning: skipping unreadable {f}: {e}", file=sys.stderr)
+            continue
+        name = doc.get("name", f.stem)
+        benches[name] = doc
+    return benches
+
+
+def fmt_ns(ns):
+    if ns >= 1e9:
+        return f"{ns / 1e9:.3f}s"
+    if ns >= 1e6:
+        return f"{ns / 1e6:.2f}ms"
+    return f"{ns / 1e3:.1f}us"
+
+
+def fmt_bytes(b):
+    return f"{b / 1e6:.2f}MB"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--current", required=True, help="directory with this run's BENCH_*.json")
+    ap.add_argument("--baseline", required=True, help="directory with the previous BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=10.0,
+                    help="regression threshold in percent (default: 10)")
+    ap.add_argument("--warn-only", action="store_true",
+                    help="report regressions but exit 0 (noisy CI runners)")
+    args = ap.parse_args()
+
+    cur_dir, base_dir = Path(args.current), Path(args.baseline)
+    if not cur_dir.is_dir():
+        print(f"error: current directory {cur_dir} does not exist", file=sys.stderr)
+        return 2
+    current = load_dir(cur_dir)
+    if not current:
+        print(f"error: no BENCH_*.json in {cur_dir}", file=sys.stderr)
+        return 2
+    if not base_dir.is_dir():
+        print(f"no baseline at {base_dir} — nothing to diff (seed it by copying "
+              f"{cur_dir}/BENCH_*.json there)")
+        return 0
+    baseline = load_dir(base_dir)
+    if not baseline:
+        print(f"baseline {base_dir} is empty — nothing to diff (seed it by copying "
+              f"{cur_dir}/BENCH_*.json there)")
+        return 0
+
+    regressions = []
+    improvements = 0
+    print(f"{'benchmark':<46} {'metric':<6} {'baseline':>10} {'current':>10} {'delta':>8}")
+    for name in sorted(current):
+        if name not in baseline:
+            print(f"{name:<46} (new — no baseline)")
+            continue
+        for key, label in METRICS:
+            old, new = baseline[name].get(key), current[name].get(key)
+            if not old or new is None:
+                continue  # metric absent or zero in baseline: nothing comparable
+            delta = 100.0 * (new - old) / old
+            fmt = fmt_ns if key == "median_ns" else fmt_bytes
+            marker = ""
+            if delta > args.threshold:
+                marker = "  << REGRESSION"
+                regressions.append((name, label, delta))
+            elif delta < -args.threshold:
+                marker = "  (improved)"
+                improvements += 1
+            print(f"{name:<46} {label:<6} {fmt(old):>10} {fmt(new):>10} {delta:>+7.1f}%{marker}")
+    missing = sorted(set(baseline) - set(current))
+    for name in missing:
+        print(f"{name:<46} (missing from current run)")
+
+    print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
+          f"{improvements} improvement(s), {len(missing)} missing")
+    if regressions and not args.warn_only:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
