@@ -315,6 +315,20 @@ fn main() {
                 if ratio >= 2.0 { "  [OK ≥2×]" } else { "  [BELOW 2× TARGET]" }
             );
         }
+
+        // Parallel reduce stages: pure ingest throughput (the fused
+        // level-0 reduction is the bottleneck stage; N stages round-robin
+        // shards and the reorder buffer restores stream order, so output
+        // is byte-identical across r — only wall-clock moves).
+        // `scripts/bench_diff.py` reports the r1→rN scaling of these.
+        for r in [1usize, 2, 4] {
+            let mut cfg = stream_cfg(true);
+            cfg.name = format!("parallel_r{r}");
+            cfg.reduce_stages = r;
+            b.run(&format!("stream/parallel_r{r}_ingest_n1e6_t4"), 1, || {
+                ihtc::coordinator::driver::ingest_streaming(&cfg).unwrap()
+            });
+        }
     }
 
     // ---------- CI smoke (scripts/verify.sh filters on "smoke") ----------

@@ -98,6 +98,52 @@ impl Json {
             .and_then(Json::as_str)
             .ok_or_else(|| Error::Config(format!("missing or non-string field '{key}'")))
     }
+
+    /// Optional non-negative integer field: `Ok(None)` when absent or
+    /// explicitly `null` (the standard JSON spelling of "unset"), an
+    /// error when present with the wrong type — silently coercing (or
+    /// dropping) a typo'd config knob is worse than failing the parse.
+    pub fn opt_usize(&self, key: &str) -> Result<Option<usize>> {
+        match self.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                Error::Config(format!("field '{key}' must be a non-negative integer"))
+            }),
+        }
+    }
+
+    /// Optional boolean field, strict like [`Self::opt_usize`].
+    pub fn opt_bool(&self, key: &str) -> Result<Option<bool>> {
+        match self.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_bool()
+                .map(Some)
+                .ok_or_else(|| Error::Config(format!("field '{key}' must be a boolean"))),
+        }
+    }
+
+    /// Optional number field, strict like [`Self::opt_usize`].
+    pub fn opt_f64(&self, key: &str) -> Result<Option<f64>> {
+        match self.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_f64()
+                .map(Some)
+                .ok_or_else(|| Error::Config(format!("field '{key}' must be a number"))),
+        }
+    }
+
+    /// Optional string field, strict like [`Self::opt_usize`].
+    pub fn opt_str(&self, key: &str) -> Result<Option<&str>> {
+        match self.get(key) {
+            None | Some(Json::Null) => Ok(None),
+            Some(v) => v
+                .as_str()
+                .map(Some)
+                .ok_or_else(|| Error::Config(format!("field '{key}' must be a string"))),
+        }
+    }
 }
 
 struct Parser<'a> {
@@ -326,6 +372,24 @@ mod tests {
         assert_eq!(v.req_str("s").unwrap(), "x");
         assert!(v.req_usize("missing").is_err());
         assert!(v.req_usize("s").is_err());
+    }
+
+    #[test]
+    fn opt_usize_distinguishes_absent_from_mistyped() {
+        let v = Json::parse(r#"{"n": 3, "s": "x", "f": 2.5, "neg": -1, "nil": null}"#).unwrap();
+        assert_eq!(v.opt_usize("n").unwrap(), Some(3));
+        assert_eq!(v.opt_usize("missing").unwrap(), None);
+        assert!(v.opt_usize("s").is_err());
+        assert!(v.opt_usize("f").is_err());
+        assert!(v.opt_usize("neg").is_err());
+        // Explicit null is the JSON idiom for "unset", not a type error.
+        assert_eq!(v.opt_usize("nil").unwrap(), None);
+        assert_eq!(v.opt_bool("nil").unwrap(), None);
+        assert_eq!(v.opt_f64("nil").unwrap(), None);
+        assert_eq!(v.opt_str("nil").unwrap(), None);
+        assert!(v.opt_bool("n").is_err());
+        assert_eq!(v.opt_f64("f").unwrap(), Some(2.5));
+        assert_eq!(v.opt_str("s").unwrap(), Some("x"));
     }
 
     #[test]

@@ -86,6 +86,12 @@ pub struct PipelineConfig {
     /// `iterations ≥ 1` and `prototype = "weighted"` (weighted centroids
     /// keep the fused means exact).
     pub streaming: bool,
+    /// Concurrent reduce stages for the fused streaming ingest (fan-out
+    /// of the per-shard level-0 TC across stage threads, each with its
+    /// own pool + workspace). Results are re-ordered by shard offset
+    /// before concatenation, so every value produces byte-identical
+    /// output; values > 1 only change throughput. Must be ≥ 1.
+    pub reduce_stages: usize,
     /// Write the final assignment CSV here (optional).
     pub output: Option<String>,
 }
@@ -108,41 +114,46 @@ impl Default for PipelineConfig {
             shard_size: 8_192,
             queue_capacity: 4,
             streaming: false,
+            reduce_stages: 1,
             output: None,
         }
     }
 }
 
 impl PipelineConfig {
-    /// Parse and validate a JSON config document.
+    /// Parse and validate a JSON config document. Every scalar knob goes
+    /// through a strict typed accessor: a field that is present with the
+    /// wrong type (e.g. `"streaming": "true"` or `"workers": "four"`) is
+    /// a config error, never a silently ignored value — dropping a
+    /// typo'd knob would flip execution paths without telling the user.
     pub fn from_json(text: &str) -> Result<Self> {
         let j = Json::parse(text)?;
         let mut cfg = PipelineConfig::default();
-        if let Some(name) = j.get("name").and_then(Json::as_str) {
+        if let Some(name) = j.opt_str("name")? {
             cfg.name = name.to_string();
         }
-        if let Some(seed) = j.get("seed").and_then(Json::as_f64) {
+        if let Some(seed) = j.opt_f64("seed")? {
             cfg.seed = seed as u64;
         }
         if let Some(source) = j.get("source") {
             cfg.source = parse_source(source)?;
         }
-        if let Some(b) = j.get("standardize").and_then(Json::as_bool) {
+        if let Some(b) = j.opt_bool("standardize")? {
             cfg.standardize = b;
         }
-        if let Some(v) = j.get("pca_variance").and_then(Json::as_f64) {
+        if let Some(v) = j.opt_f64("pca_variance")? {
             if !(0.0..=1.0).contains(&v) {
                 return Err(Error::Config(format!("pca_variance must be in [0,1], got {v}")));
             }
             cfg.pca_variance = Some(v);
         }
-        if let Some(t) = j.get("threshold").and_then(Json::as_usize) {
+        if let Some(t) = j.opt_usize("threshold")? {
             cfg.threshold = t;
         }
-        if let Some(m) = j.get("iterations").and_then(Json::as_usize) {
+        if let Some(m) = j.opt_usize("iterations")? {
             cfg.iterations = m;
         }
-        if let Some(p) = j.get("prototype").and_then(Json::as_str) {
+        if let Some(p) = j.opt_str("prototype")? {
             cfg.prototype = match p {
                 "centroid" => PrototypeKind::Centroid,
                 "weighted" => PrototypeKind::WeightedCentroid,
@@ -150,7 +161,7 @@ impl PipelineConfig {
                 other => return Err(Error::Config(format!("unknown prototype '{other}'"))),
             };
         }
-        if let Some(o) = j.get("seed_order").and_then(Json::as_str) {
+        if let Some(o) = j.opt_str("seed_order")? {
             cfg.seed_order = match o {
                 "natural" => SeedOrder::Natural,
                 "degree_asc" => SeedOrder::DegreeAscending,
@@ -161,26 +172,29 @@ impl PipelineConfig {
         if let Some(c) = j.get("clusterer") {
             cfg.clusterer = parse_clusterer(c)?;
         }
-        if let Some(b) = j.get("backend").and_then(Json::as_str) {
+        if let Some(b) = j.opt_str("backend")? {
             cfg.backend = match b {
                 "native" => Backend::Native,
                 "pjrt" => Backend::Pjrt,
                 other => return Err(Error::Config(format!("unknown backend '{other}'"))),
             };
         }
-        if let Some(w) = j.get("workers").and_then(Json::as_usize) {
+        if let Some(w) = j.opt_usize("workers")? {
             cfg.workers = w;
         }
-        if let Some(s) = j.get("shard_size").and_then(Json::as_usize) {
+        if let Some(s) = j.opt_usize("shard_size")? {
             cfg.shard_size = s;
         }
-        if let Some(q) = j.get("queue_capacity").and_then(Json::as_usize) {
+        if let Some(q) = j.opt_usize("queue_capacity")? {
             cfg.queue_capacity = q;
         }
-        if let Some(s) = j.get("streaming").and_then(Json::as_bool) {
+        if let Some(s) = j.opt_bool("streaming")? {
             cfg.streaming = s;
         }
-        if let Some(o) = j.get("output").and_then(Json::as_str) {
+        if let Some(r) = j.opt_usize("reduce_stages")? {
+            cfg.reduce_stages = r;
+        }
+        if let Some(o) = j.opt_str("output")? {
             cfg.output = Some(o.to_string());
         }
         cfg.validate()?;
@@ -207,6 +221,18 @@ impl PipelineConfig {
         }
         if self.queue_capacity == 0 {
             return Err(Error::Config("queue_capacity must be > 0".into()));
+        }
+        if self.reduce_stages == 0 {
+            return Err(Error::Config(
+                "reduce_stages must be ≥ 1 (1 = single-stage reduce, the default)".into(),
+            ));
+        }
+        if self.reduce_stages > 1 && !self.streaming {
+            return Err(Error::Config(format!(
+                "reduce_stages = {} has no effect without streaming: true — the materialized \
+                 path has no reduce fan-out (set streaming, or drop the knob)",
+                self.reduce_stages
+            )));
         }
         if self.streaming {
             if self.iterations == 0 {
@@ -240,12 +266,12 @@ fn parse_source(j: &Json) -> Result<DataSource> {
     Ok(match kind {
         "csv" => DataSource::Csv {
             path: j.req_str("path")?.to_string(),
-            label_column: j.get("label_column").and_then(Json::as_usize),
+            label_column: j.opt_usize("label_column")?,
         },
         "paper_mixture" => DataSource::PaperMixture { n: j.req_usize("n")? },
         "analogue" => DataSource::Analogue {
             name: j.req_str("dataset")?.to_string(),
-            scale_div: j.get("scale_div").and_then(Json::as_usize).unwrap_or(1),
+            scale_div: j.opt_usize("scale_div")?.unwrap_or(1),
         },
         other => return Err(Error::Config(format!("unknown source kind '{other}'"))),
     })
@@ -256,11 +282,11 @@ fn parse_clusterer(j: &Json) -> Result<FinalClusterer> {
     Ok(match kind {
         "kmeans" => FinalClusterer::KMeans {
             k: j.req_usize("k")?,
-            restarts: j.get("restarts").and_then(Json::as_usize).unwrap_or(4),
+            restarts: j.opt_usize("restarts")?.unwrap_or(4),
         },
         "hac" => FinalClusterer::Hac {
             k: j.req_usize("k")?,
-            linkage: match j.get("linkage").and_then(Json::as_str).unwrap_or("ward") {
+            linkage: match j.opt_str("linkage")?.unwrap_or("ward") {
                 "ward" => Linkage::Ward,
                 "average" => Linkage::Average,
                 "complete" => Linkage::Complete,
@@ -270,14 +296,13 @@ fn parse_clusterer(j: &Json) -> Result<FinalClusterer> {
         },
         "dbscan" => FinalClusterer::Dbscan {
             eps: j
-                .get("eps")
-                .and_then(Json::as_f64)
+                .opt_f64("eps")?
                 .ok_or_else(|| Error::Config("dbscan needs 'eps'".into()))?,
             min_pts: j.req_usize("min_pts")?,
         },
         "gmm" => FinalClusterer::Gmm {
             k: j.req_usize("k")?,
-            weighted: j.get("weighted").and_then(Json::as_bool).unwrap_or(false),
+            weighted: j.opt_bool("weighted")?.unwrap_or(false),
         },
         other => return Err(Error::Config(format!("unknown clusterer '{other}'"))),
     })
@@ -373,6 +398,30 @@ mod tests {
         // …and weighted centroids so the fused means stay exact.
         let err = PipelineConfig::from_json(r#"{"streaming": true}"#).unwrap_err();
         assert!(err.to_string().contains("weighted"), "{err}");
+    }
+
+    #[test]
+    fn reduce_stages_parse_and_validation() {
+        assert_eq!(PipelineConfig::from_json("{}").unwrap().reduce_stages, 1);
+        let cfg = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.reduce_stages, 4);
+        let err = PipelineConfig::from_json(r#"{"reduce_stages": 0}"#).unwrap_err();
+        assert!(err.to_string().contains("reduce_stages"), "{err}");
+        // A fan-out on the materialized path would be silently inert —
+        // reject it instead.
+        let err = PipelineConfig::from_json(r#"{"reduce_stages": 4}"#).unwrap_err();
+        assert!(err.to_string().contains("streaming"), "{err}");
+        // Wrong-typed knobs are config errors, not silently ignored
+        // fields — a dropped "streaming" would flip the execution path.
+        assert!(PipelineConfig::from_json(r#"{"reduce_stages": "four"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"workers": "four"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"shard_size": 2.5}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"streaming": "true"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"iterations": "2"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"prototype": 3}"#).is_err());
     }
 
     #[test]

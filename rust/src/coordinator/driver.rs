@@ -34,8 +34,8 @@ use crate::data::synth::{
 use crate::data::{csv, Dataset};
 use crate::hybrid::{FinalClusterer, IhtcWorkspace};
 use crate::itis::{
-    itis_resume, itis_with_workspace, reduce_shard, ItisConfig, ItisLevel, ItisResult,
-    ItisWorkspace, KnnProvider, PrototypeKind, StopRule,
+    itis_resume, itis_with_workspace, ItisConfig, ItisLevel, ItisResult, KnnProvider,
+    PrototypeKind, StopRule,
 };
 use crate::knn::KnnLists;
 use crate::linalg::{pca::Pca, Matrix};
@@ -349,13 +349,25 @@ fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
 }
 
 /// Fused out-of-core ingest: stream shards through the bounded pipeline,
-/// threshold-clustering each one into weighted prototypes in the reduce
-/// stage (level-0 TC) while folding standardization moments — a single
-/// pass over the source with only one shard plus the growing prototype
-/// stream resident. The reduce stage reuses one [`ItisWorkspace`] and
-/// [`WorkerPool`] across all shards.
+/// threshold-clustering each one into weighted prototypes (level-0 TC)
+/// while folding standardization moments — a single pass over the source
+/// with only the in-flight shards plus the growing prototype stream
+/// resident.
+///
+/// The reduce stage fans out across `config.reduce_stages` concurrent
+/// stage threads (each owning its [`crate::itis::ShardReducer`]:
+/// one `WorkerPool` + `ItisWorkspace`, so buffers never cross threads),
+/// and a reorder stage keyed on `RowShard::offset` releases results
+/// strictly in stream order before concatenation. The ordering contract
+/// is enforced, not assumed: the collector tolerates arbitrary arrival
+/// order, but offsets must tile the stream — a gap, duplicate, or
+/// overlap is a hard [`Error::Coordinator`] in release builds. Because
+/// release order equals stream order and each shard's reduction is
+/// worker-count invariant, any `reduce_stages` value yields a
+/// byte-identical [`StreamedReduction`].
 pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
     let capacity = config.queue_capacity.max(1);
+    let stages_n = config.reduce_stages.max(1);
     let produce = shard_source(config)?;
     let itis_cfg = ItisConfig {
         threshold: config.threshold,
@@ -364,25 +376,30 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
         seed_order: config.seed_order,
         min_prototypes: 1,
     };
-    let workers = config.workers;
+    // The configured worker budget is *divided* across the reduce
+    // stages (floor, min 1): with workers=0 on an 8-core machine and
+    // reduce_stages=4, each stage gets a 1-thread pool instead of four
+    // stages × 7 threads fighting for 8 cores. Shard results are
+    // worker-count invariant, so the split never changes output bytes.
+    let workers = (super::resolve_workers(config.workers) / stages_n).max(1);
+    // Reorder bound: everything that can be in flight at once — each
+    // stage's input queue plus the item it is processing, the output
+    // funnel, and slack for the distributor/reorder hand-offs. A correct
+    // (tiling) stream can never park more than this.
+    let reorder_bound = stages_n * (capacity + 2) + capacity + 2;
     let pipe = PipelineBuilder::source(
         "source",
         capacity,
         move |emit: &mut dyn FnMut(RowShard) -> Result<()>| produce(emit),
     )
-        .map_init(
+        .map_init_parallel(
             "reduce",
-            move || (WorkerPool::new(workers), ItisWorkspace::new(), Vec::<u32>::new()),
-            move |state, shard: RowShard| {
-                let (pool, ws, ones) = state;
-                let pool: &WorkerPool = pool;
+            stages_n,
+            move || crate::itis::ShardReducer::new(workers, itis_cfg.clone()),
+            move |reducer, shard: RowShard| {
                 let mut moments = Moments::new(shard.points.cols());
                 moments.fold(&shard.points);
-                ones.clear();
-                ones.resize(shard.points.rows(), 1);
-                let provider = PoolKnnProvider { pool };
-                let red =
-                    reduce_shard(&shard.points, ones.as_slice(), &itis_cfg, &provider, pool, ws)?;
+                let red = reducer.reduce(&shard.points)?;
                 Ok((
                     ReducedShard {
                         offset: shard.offset,
@@ -395,10 +412,16 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
                 ))
             },
         )
+        .reorder("reorder", reorder_bound, |(shard, _): &(ReducedShard, Moments)| {
+            (shard.offset, shard.assignments.len())
+        })
         .build();
 
-    // Concatenate the prototype stream as shards arrive (in order: the
-    // stage chain is linear, so offsets are contiguous).
+    // Concatenate the prototype stream. The reorder stage guarantees
+    // stream order; the hard check below replaces the old
+    // debug_assert-only guard (which vanished in release builds and let
+    // an out-of-order shard silently corrupt every downstream weight and
+    // back-out label).
     let mut data: Vec<f32> = Vec::new();
     let mut weights: Vec<u32> = Vec::new();
     let mut assignments: Vec<u32> = Vec::new();
@@ -406,8 +429,20 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
     let mut have_labels = true;
     let mut moments: Option<Moments> = None;
     let mut d = 0usize;
+    let mut order_err: Option<Error> = None;
     for (shard, mo) in &pipe.output {
-        debug_assert_eq!(shard.offset, assignments.len(), "shards out of order");
+        if order_err.is_some() {
+            continue; // drain so the stages can finish; error after join
+        }
+        if shard.offset != assignments.len() {
+            order_err = Some(Error::Coordinator(format!(
+                "streaming collector: shard at offset {} arrived but the stream is only \
+                 concatenated through {} — ordering contract violated",
+                shard.offset,
+                assignments.len()
+            )));
+            continue;
+        }
         let base = weights.len() as u32;
         assignments.extend(shard.assignments.iter().map(|&a| base + a));
         d = shard.prototypes.cols();
@@ -423,13 +458,19 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
         }
     }
     let stages = pipe.join()?;
+    if let Some(e) = order_err {
+        return Err(e);
+    }
     let n = assignments.len();
+    if n == 0 {
+        return Err(Error::Data("streaming source produced no rows".into()));
+    }
     let prototypes = Matrix::from_vec(data, weights.len(), d)?;
     Ok(StreamedReduction {
         prototypes,
         weights,
         assignments,
-        labels: if have_labels && n > 0 { Some(labels) } else { None },
+        labels: if have_labels { Some(labels) } else { None },
         moments: moments.unwrap_or_else(|| Moments::new(d)),
         n,
         stages,
@@ -793,6 +834,7 @@ fn write_assignments(path: &str, assignments: &[u32]) -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::itis::{reduce_shard, ItisWorkspace};
 
     fn base_config(n: usize) -> PipelineConfig {
         PipelineConfig {
@@ -898,7 +940,13 @@ mod tests {
         assert!(report.prototypes <= 4000 / 4 + 8, "{}", report.prototypes);
         assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
         assert_eq!(report.phases.len(), 5);
-        assert!(report.stages.iter().any(|s| s.name == "reduce"));
+        // Fan-out topology: distributor + per-stage workers + reorder,
+        // reported in source→…→sink order.
+        let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names[0], "source");
+        assert_eq!(names[1], "reduce/rr");
+        assert!(names.contains(&"reduce/0"));
+        assert_eq!(*names.last().unwrap(), "reorder");
     }
 
     #[test]
@@ -931,6 +979,59 @@ mod tests {
         let mut cfg = streaming_config(100);
         cfg.iterations = 0;
         assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn streaming_empty_source_is_hard_error() {
+        // An empty stream used to fall through to a degenerate 0×0
+        // prototype matrix and Moments::new(0); it must be an explicit
+        // dataset error instead.
+        let cfg = streaming_config(0);
+        let err = ingest_streaming(&cfg).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("no rows"), "{err}");
+        // And the full run surfaces the same root cause.
+        let err = run(&streaming_config(0)).unwrap_err();
+        assert!(err.to_string().contains("no rows"), "{err}");
+    }
+
+    #[test]
+    fn reduce_stages_all_byte_identical() {
+        // The acceptance contract for the parallel fan-out: any number
+        // of concurrent reduce stages produces a byte-identical
+        // StreamedReduction — prototypes, weights, assignments, labels,
+        // and (f64-exact) moments — because the reorder buffer restores
+        // stream order before concatenation and each shard's reduction
+        // is worker-count invariant.
+        let mut base_cfg = streaming_config(3000);
+        base_cfg.reduce_stages = 1;
+        let base = ingest_streaming(&base_cfg).unwrap();
+        for r in [2usize, 4] {
+            let mut cfg = streaming_config(3000);
+            cfg.reduce_stages = r;
+            let got = ingest_streaming(&cfg).unwrap();
+            assert_eq!(got.n, base.n, "r={r}");
+            assert_eq!(got.prototypes.data(), base.prototypes.data(), "r={r}");
+            assert_eq!(got.weights, base.weights, "r={r}");
+            assert_eq!(got.assignments, base.assignments, "r={r}");
+            assert_eq!(got.labels, base.labels, "r={r}");
+            assert_eq!(got.moments.count, base.moments.count, "r={r}");
+            assert_eq!(got.moments.sum, base.moments.sum, "r={r}");
+            assert_eq!(got.moments.cross, base.moments.cross, "r={r}");
+        }
+    }
+
+    #[test]
+    fn reduce_stages_end_to_end_labels_identical() {
+        // Same seed, different fan-out: the final per-unit labels of the
+        // whole streaming run must be identical.
+        let mut cfg = streaming_config(2500);
+        cfg.reduce_stages = 1;
+        let (base, _) = run(&cfg).unwrap();
+        cfg.reduce_stages = 4;
+        let (par, report) = run(&cfg).unwrap();
+        assert_eq!(base, par);
+        assert!(report.stages.iter().any(|s| s.name == "reduce/3"));
     }
 
     #[test]
@@ -979,7 +1080,7 @@ mod tests {
             let mut mo = Moments::new(2);
             mo.fold(&shard);
             moments.merge(&mo);
-            let red = crate::itis::reduce_shard(
+            let red = reduce_shard(
                 &shard,
                 &vec![1; end - start],
                 &itis_cfg,
@@ -1003,6 +1104,15 @@ mod tests {
         assert_eq!(stream.moments.cross, moments.cross);
         let total: u64 = stream.weights.iter().map(|&w| w as u64).sum();
         assert_eq!(total, 3000);
+        // The parallel fan-out must hit the same materialized two-pass
+        // bytes, not merely agree with the single-stage fused run.
+        let mut par_cfg = streaming_config(3000);
+        par_cfg.reduce_stages = 4;
+        let par = ingest_streaming(&par_cfg).unwrap();
+        assert_eq!(par.prototypes.data(), &data[..]);
+        assert_eq!(par.weights, weights);
+        assert_eq!(par.assignments, assignments);
+        assert_eq!(par.moments.cross, moments.cross);
     }
 
     #[test]

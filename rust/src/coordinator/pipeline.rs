@@ -9,6 +9,7 @@
 
 use crate::linalg::Matrix;
 use crate::{Error, Result};
+use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -67,8 +68,26 @@ impl StageMetrics {
     }
 }
 
-/// Shared collection of per-stage metrics for a run.
+/// Shared collection of per-stage metrics for a run. Every stage
+/// registers its slot at *build* time and writes it by index on exit, so
+/// [`Pipeline::join`] always returns metrics in source→…→sink order —
+/// pushing on stage *completion* would make the bottleneck report's
+/// ordering depend on which thread happened to finish first.
 pub type MetricsHandle = Arc<Mutex<Vec<StageMetrics>>>;
+
+/// Reserve the next metrics slot for a stage; returns its index.
+fn register_stage(metrics: &MetricsHandle, name: &str) -> usize {
+    let mut m = metrics.lock().unwrap();
+    m.push(StageMetrics { name: name.to_string(), ..Default::default() });
+    m.len() - 1
+}
+
+/// Write a stage's final stats into its pre-registered slot.
+fn store_stage(metrics: &MetricsHandle, slot: usize, stats: StageMetrics) {
+    if let Ok(mut m) = metrics.lock() {
+        m[slot] = stats;
+    }
+}
 
 /// Send with blocked-time accounting: non-blocking first, then a
 /// blocking send whose wait is attributed to backpressure.
@@ -84,6 +103,122 @@ fn send_counted<T>(tx: &SyncSender<T>, item: T, blocked: &mut Duration) -> Resul
         Err(TrySendError::Disconnected(_)) => {
             Err(Error::Coordinator("downstream stage hung up".into()))
         }
+    }
+}
+
+/// Offset-keyed reorder buffer: accepts items in *any* arrival order and
+/// releases them strictly in stream order. Each item covers the
+/// half-open offset range `[offset, offset + extent)`; released items
+/// must tile the stream exactly — a duplicate, an overlap, or (at
+/// [`ReorderBuffer::finish`]) a gap is a hard [`Error::Coordinator`],
+/// never a silent mis-concatenation. `bound` caps how many out-of-order
+/// items may be parked at once, so a stream whose offsets genuinely do
+/// not tile fails fast instead of buffering without limit.
+///
+/// This is what makes N concurrent reduce stages safe: the fan-in used
+/// to *assume* in-order arrival (guarded only by a `debug_assert`, i.e.
+/// nothing in release builds); with the buffer the ordering contract is
+/// enforced, not assumed.
+#[derive(Debug)]
+pub struct ReorderBuffer<T> {
+    /// Next offset to release (the stream is contiguous below this).
+    next: usize,
+    /// Max parked items before arrival is declared non-tiling.
+    bound: usize,
+    /// Parked out-of-order items: offset → (extent, item).
+    pending: BTreeMap<usize, (usize, T)>,
+}
+
+impl<T> ReorderBuffer<T> {
+    /// Empty buffer expecting the stream to start at offset 0.
+    pub fn new(bound: usize) -> Self {
+        Self { next: 0, bound: bound.max(1), pending: BTreeMap::new() }
+    }
+
+    /// Park one arrival. Errors on a duplicate offset, an overlap with a
+    /// released or parked range, a zero extent, or buffer overflow.
+    pub fn push(&mut self, offset: usize, extent: usize, item: T) -> Result<()> {
+        if extent == 0 {
+            return Err(Error::Coordinator(format!(
+                "reorder buffer: zero-extent item at offset {offset} (offsets must tile the \
+                 stream, so every item must cover at least one row)"
+            )));
+        }
+        if offset < self.next {
+            return Err(Error::Coordinator(format!(
+                "reorder buffer: item at offset {offset} arrived after the stream was already \
+                 released through {} (duplicate or overlapping shard)",
+                self.next
+            )));
+        }
+        if let Some((&prev_off, prev)) = self.pending.range(..=offset).next_back() {
+            if prev_off == offset {
+                return Err(Error::Coordinator(format!(
+                    "reorder buffer: duplicate shard offset {offset}"
+                )));
+            }
+            if prev_off + prev.0 > offset {
+                return Err(Error::Coordinator(format!(
+                    "reorder buffer: shard at offset {offset} overlaps the shard covering \
+                     [{prev_off}, {})",
+                    prev_off + prev.0
+                )));
+            }
+        }
+        if let Some((&succ_off, _)) = self.pending.range(offset + 1..).next() {
+            if offset + extent > succ_off {
+                return Err(Error::Coordinator(format!(
+                    "reorder buffer: shard [{offset}, {}) overlaps the shard at offset {succ_off}",
+                    offset + extent
+                )));
+            }
+        }
+        // The bound caps *out-of-order* items only: the in-order arrival
+        // (offset == next) is about to be released by the caller's
+        // pop_ready loop and must never be charged against it — a
+        // tiling stream sized exactly to the cap would otherwise be
+        // spuriously rejected.
+        if offset != self.next && self.pending.len() >= self.bound {
+            return Err(Error::Coordinator(format!(
+                "reorder buffer overflow: {} items parked while waiting for offset {} — shard \
+                 offsets do not tile the stream (gap), or the buffer bound is smaller than the \
+                 pipeline's in-flight capacity",
+                self.pending.len(),
+                self.next
+            )));
+        }
+        self.pending.insert(offset, (extent, item));
+        Ok(())
+    }
+
+    /// Release the next in-order item, if it has arrived.
+    pub fn pop_ready(&mut self) -> Option<T> {
+        let off = *self.pending.keys().next()?;
+        if off != self.next {
+            return None;
+        }
+        let (extent, item) = self.pending.remove(&off).expect("first key just observed");
+        self.next += extent;
+        Some(item)
+    }
+
+    /// Offset the stream has been contiguously released through.
+    pub fn released_through(&self) -> usize {
+        self.next
+    }
+
+    /// End-of-stream check: any still-parked item means the stream had a
+    /// gap (an offset that never arrived).
+    pub fn finish(&self) -> Result<()> {
+        if let Some((&off, _)) = self.pending.iter().next() {
+            return Err(Error::Coordinator(format!(
+                "shard stream has a gap: offset {} never arrived ({} shard(s) from offset {off} \
+                 onward are stranded in the reorder buffer)",
+                self.next,
+                self.pending.len()
+            )));
+        }
+        Ok(())
     }
 }
 
@@ -156,6 +291,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         produce: impl FnOnce(&mut dyn FnMut(T) -> Result<()>) -> Result<()> + Send + 'static,
     ) -> Self {
         let metrics: MetricsHandle = Arc::new(Mutex::new(Vec::new()));
+        let slot = register_stage(&metrics, name);
         let (tx, rx) = std::sync::mpsc::sync_channel::<T>(capacity.max(1));
         let m = metrics.clone();
         let name = name.to_string();
@@ -164,13 +300,16 @@ impl<T: Send + 'static> PipelineBuilder<T> {
             let t0 = Instant::now();
             let mut blocked = Duration::ZERO;
             let mut emit = |item: T| -> Result<()> {
+                // Count only items the downstream actually accepted — a
+                // failed send must not show up as a processed item.
+                send_counted(&tx, item, &mut blocked)?;
                 stats.items += 1;
-                send_counted(&tx, item, &mut blocked)
+                Ok(())
             };
             let out = produce(&mut emit);
             stats.busy = t0.elapsed().saturating_sub(blocked);
             stats.blocked = blocked;
-            m.lock().unwrap().push(stats);
+            store_stage(&m, slot, stats);
             out
         });
         Self { capacity: capacity.max(1), metrics, head: rx, handles: vec![handle] }
@@ -199,6 +338,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         mut f: impl FnMut(&mut S, T) -> Result<U> + Send + 'static,
     ) -> PipelineBuilder<U> {
         let (tx, rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
+        let slot = register_stage(&self.metrics, name);
         let m = self.metrics.clone();
         let name = name.to_string();
         let upstream = self.head;
@@ -213,11 +353,12 @@ impl<T: Send + 'static> PipelineBuilder<T> {
                 match f(&mut state, item) {
                     Ok(out) => {
                         stats.busy += t0.elapsed();
-                        stats.items += 1;
                         if let Err(e) = send_counted(&tx, out, &mut blocked) {
                             result = Err(e);
                             break;
                         }
+                        // Counted only after the downstream accepted it.
+                        stats.items += 1;
                     }
                     Err(e) => {
                         result = Err(e);
@@ -226,7 +367,161 @@ impl<T: Send + 'static> PipelineBuilder<T> {
                 }
             }
             stats.blocked = blocked;
-            m.lock().unwrap().push(stats);
+            store_stage(&m, slot, stats);
+            result
+        }));
+        PipelineBuilder { capacity: self.capacity, metrics: self.metrics, head: rx, handles }
+    }
+
+    /// Append a fan-out/fan-in transform: `stages` concurrent stage
+    /// threads, each with its own `init()`-built state (the `map_init`
+    /// pattern — e.g. one `WorkerPool` + `ItisWorkspace` per stage), fed
+    /// round-robin by a distributor thread and funneled into one output
+    /// channel. Item completion order is **not** stream order: a slow
+    /// item on one stage lets later items overtake it, so a downstream
+    /// consumer that needs stream order must follow with [`Self::reorder`].
+    ///
+    /// Metrics: one slot per stage thread (`{name}/0` … `{name}/N-1`)
+    /// plus the distributor (`{name}/rr`), all pre-registered in
+    /// topological order. Errors from any failing sibling propagate
+    /// through [`Pipeline::join`], which keeps the first *root-cause*
+    /// error even when the siblings' hang-up symptoms race it.
+    ///
+    /// `init` and `f` run once per stage thread and are shared, so they
+    /// must be `Fn + Send + Sync` (per-item mutability lives in `S`).
+    pub fn map_init_parallel<S: 'static, U: Send + 'static>(
+        self,
+        name: &str,
+        stages: usize,
+        init: impl Fn() -> S + Send + Sync + 'static,
+        f: impl Fn(&mut S, T) -> Result<U> + Send + Sync + 'static,
+    ) -> PipelineBuilder<U> {
+        let stages = stages.max(1);
+        let (out_tx, out_rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
+        let mut handles = self.handles;
+        let metrics = self.metrics;
+        let init = Arc::new(init);
+        let f = Arc::new(f);
+        // Register the distributor before the workers so join() reports
+        // source → fan-out → workers in topological order.
+        let dist_slot = register_stage(&metrics, &format!("{name}/rr"));
+        let mut worker_txs = Vec::with_capacity(stages);
+        for i in 0..stages {
+            let (tx, rx) = std::sync::mpsc::sync_channel::<T>(self.capacity);
+            worker_txs.push(tx);
+            let worker_name = format!("{name}/{i}");
+            let slot = register_stage(&metrics, &worker_name);
+            let m = metrics.clone();
+            let out_tx = out_tx.clone();
+            let init = init.clone();
+            let f = f.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut stats = StageMetrics { name: worker_name, ..Default::default() };
+                let mut blocked = Duration::ZERO;
+                let mut state = (*init)();
+                let mut result = Ok(());
+                for item in rx {
+                    let t0 = Instant::now();
+                    match (*f)(&mut state, item) {
+                        Ok(out) => {
+                            stats.busy += t0.elapsed();
+                            if let Err(e) = send_counted(&out_tx, out, &mut blocked) {
+                                result = Err(e);
+                                break;
+                            }
+                            stats.items += 1;
+                        }
+                        Err(e) => {
+                            result = Err(e);
+                            break;
+                        }
+                    }
+                }
+                stats.blocked = blocked;
+                store_stage(&m, slot, stats);
+                result
+            }));
+        }
+        // Workers hold the only output senders: the channel closes when
+        // the last worker exits, not when the distributor does.
+        drop(out_tx);
+        let upstream = self.head;
+        let m = metrics.clone();
+        let dist_name = format!("{name}/rr");
+        handles.push(std::thread::spawn(move || {
+            let mut stats = StageMetrics { name: dist_name, ..Default::default() };
+            let mut busy = Duration::ZERO;
+            let mut blocked = Duration::ZERO;
+            let mut result = Ok(());
+            let mut next = 0usize;
+            for item in upstream {
+                // Busy covers only the hand-off itself (minus blocked
+                // backpressure) — idle recv waits on the upstream must
+                // not make the distributor look like the bottleneck.
+                let t0 = Instant::now();
+                if let Err(e) = send_counted(&worker_txs[next], item, &mut blocked) {
+                    result = Err(e);
+                    break;
+                }
+                busy += t0.elapsed();
+                stats.items += 1;
+                next = (next + 1) % worker_txs.len();
+            }
+            stats.busy = busy.saturating_sub(blocked);
+            stats.blocked = blocked;
+            store_stage(&m, dist_slot, stats);
+            result
+        }));
+        PipelineBuilder { capacity: self.capacity, metrics, head: out_rx, handles }
+    }
+
+    /// Append a reorder stage: items arriving in any order are parked in
+    /// a [`ReorderBuffer`] and released strictly in stream order. `key`
+    /// extracts `(offset, extent)` from each item; offsets must tile the
+    /// stream from 0 — a gap, duplicate, or overlap is a hard
+    /// [`Error::Coordinator`] surfaced through [`Pipeline::join`].
+    /// `bound` caps parked items (see [`ReorderBuffer::new`]); size it to
+    /// the pipeline's maximum in-flight item count.
+    pub fn reorder(
+        self,
+        name: &str,
+        bound: usize,
+        key: impl Fn(&T) -> (usize, usize) + Send + 'static,
+    ) -> PipelineBuilder<T> {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<T>(self.capacity);
+        let slot = register_stage(&self.metrics, name);
+        let m = self.metrics.clone();
+        let name = name.to_string();
+        let upstream = self.head;
+        let mut handles = self.handles;
+        handles.push(std::thread::spawn(move || {
+            let mut stats = StageMetrics { name, ..Default::default() };
+            let mut busy = Duration::ZERO;
+            let mut blocked = Duration::ZERO;
+            let mut buf = ReorderBuffer::new(bound);
+            let mut result = Ok(());
+            'recv: for item in upstream {
+                let t0 = Instant::now();
+                let (offset, extent) = key(&item);
+                if let Err(e) = buf.push(offset, extent, item) {
+                    result = Err(e);
+                    break;
+                }
+                while let Some(ready) = buf.pop_ready() {
+                    if let Err(e) = send_counted(&tx, ready, &mut blocked) {
+                        result = Err(e);
+                        break 'recv;
+                    }
+                    stats.items += 1;
+                }
+                busy += t0.elapsed();
+            }
+            if result.is_ok() {
+                result = buf.finish();
+            }
+            stats.busy = busy.saturating_sub(blocked);
+            stats.blocked = blocked;
+            store_stage(&m, slot, stats);
             result
         }));
         PipelineBuilder { capacity: self.capacity, metrics: self.metrics, head: rx, handles }
@@ -265,8 +560,257 @@ mod tests {
         .build();
         let (out, metrics) = collect(p).unwrap();
         assert_eq!(out, (0..100u64).map(|i| i * 2 + 1).collect::<Vec<_>>());
-        assert_eq!(metrics.len(), 3);
+        // Metrics come back in source→…→sink order regardless of which
+        // stage thread finished first (slots are pre-registered at build
+        // time, not pushed on completion).
+        let names: Vec<&str> = metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["gen", "double", "plus1"]);
         assert!(metrics.iter().all(|m| m.items == 100));
+    }
+
+    #[test]
+    fn source_counts_only_successful_sends() {
+        // Downstream vanishes immediately: not a single emit can land,
+        // so the source must report zero items processed — not one per
+        // attempted send.
+        let p = PipelineBuilder::source("gen", 1, |emit| {
+            for i in 0..10u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .build();
+        let Pipeline { output, handles, metrics } = p;
+        drop(output);
+        for h in handles {
+            assert!(h.join().unwrap().is_err(), "source must see the hang-up");
+        }
+        let m = metrics.lock().unwrap();
+        let gen = m.iter().find(|s| s.name == "gen").unwrap();
+        assert_eq!(gen.items, 0, "no send succeeded, so no item was processed");
+    }
+
+    #[test]
+    fn map_init_counts_only_successful_sends() {
+        // The map stage transforms one item fine but its downstream is
+        // gone — the item must not count as processed.
+        let p = PipelineBuilder::source("gen", 1, |emit| {
+            emit(1u64)?;
+            Ok(())
+        })
+        .map_init("id", || (), |_, x: u64| Ok(x))
+        .build();
+        let Pipeline { output, handles, metrics } = p;
+        drop(output);
+        for h in handles {
+            let _ = h.join().unwrap();
+        }
+        let m = metrics.lock().unwrap();
+        let id = m.iter().find(|s| s.name == "id").unwrap();
+        assert_eq!(id.items, 0, "send failed, so the item was not processed");
+    }
+
+    #[test]
+    fn map_init_parallel_processes_everything() {
+        // 3 concurrent stage threads, per-stage state counting its own
+        // items: all inputs come out (order not guaranteed), per-stage
+        // metrics are pre-registered in topological order, and the
+        // distributor's round-robin spreads items across every stage.
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in 0..99u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map_init_parallel("par", 3, || 0u64, |seen, x| {
+            *seen += 1;
+            Ok(x * 2)
+        })
+        .build();
+        let (mut out, metrics) = collect(p).unwrap();
+        out.sort_unstable();
+        assert_eq!(out, (0..99u64).map(|i| i * 2).collect::<Vec<_>>());
+        let names: Vec<&str> = metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["gen", "par/rr", "par/0", "par/1", "par/2"]);
+        let rr = metrics.iter().find(|m| m.name == "par/rr").unwrap();
+        assert_eq!(rr.items, 99);
+        let worker_total: usize =
+            metrics.iter().filter(|m| m.name.starts_with("par/") && m.name != "par/rr")
+                .map(|m| m.items)
+                .sum();
+        assert_eq!(worker_total, 99);
+        // Round-robin distribution: every stage saw exactly a third.
+        assert!(metrics
+            .iter()
+            .filter(|m| m.name.starts_with("par/") && m.name != "par/rr")
+            .all(|m| m.items == 33));
+    }
+
+    #[test]
+    fn map_init_parallel_reorder_restores_stream_order() {
+        // Workers sleep a value-dependent amount so completion order is
+        // scrambled; the reorder stage must still release items strictly
+        // in stream order (offset = item index, extent 1).
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in 0..40u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map_init_parallel("par", 4, || (), |_, x: u64| {
+            std::thread::sleep(Duration::from_millis((x * 7) % 5));
+            Ok(x)
+        })
+        .reorder("reorder", 64, |x: &u64| (*x as usize, 1))
+        .build();
+        let (out, metrics) = collect(p).unwrap();
+        assert_eq!(out, (0..40u64).collect::<Vec<_>>());
+        let ro = metrics.iter().find(|m| m.name == "reorder").unwrap();
+        assert_eq!(ro.items, 40);
+    }
+
+    #[test]
+    fn parallel_stage_error_is_root_cause() {
+        // One of several siblings fails; the distributor and source
+        // report hang-up symptoms, the surviving siblings drain cleanly —
+        // join must surface the failing sibling's own error.
+        let p = PipelineBuilder::source("gen", 1, |emit| {
+            for i in 0..50u64 {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map_init_parallel("par", 3, || (), |_, x: u64| {
+            if x == 7 {
+                Err(Error::Data("poison shard".into()))
+            } else {
+                Ok(x)
+            }
+        })
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(err.to_string().contains("poison shard"), "{err}");
+    }
+
+    #[test]
+    fn reorder_gap_is_hard_error_through_join() {
+        // Offset 5 never arrives: the stream ends with a parked shard and
+        // the reorder stage must fail join() with the gap as root cause —
+        // in a release build just as in debug (no debug_assert guards).
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            emit((0usize, 5usize))?;
+            emit((10usize, 5usize))?;
+            Ok(())
+        })
+        .reorder("reorder", 16, |x: &(usize, usize)| (x.0, x.1))
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("gap"), "{err}");
+    }
+
+    #[test]
+    fn reorder_duplicate_offset_is_hard_error_through_join() {
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            emit((0usize, 5usize))?;
+            emit((5usize, 5usize))?;
+            emit((5usize, 5usize))?;
+            Ok(())
+        })
+        .reorder("reorder", 16, |x: &(usize, usize)| (x.0, x.1))
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(
+            err.to_string().contains("duplicate") || err.to_string().contains("overlap"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn reorder_overlap_is_hard_error() {
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            emit((0usize, 8usize))?;
+            emit((4usize, 8usize))?;
+            Ok(())
+        })
+        .reorder("reorder", 16, |x: &(usize, usize)| (x.0, x.1))
+        .build();
+        let err = collect(p).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+    }
+
+    #[test]
+    fn reorder_buffer_property_shuffled_arrivals() {
+        // Property: for any seeded shuffle of a tiling shard stream, the
+        // buffer releases exactly the in-order sequence.
+        let mut rng = crate::rng::Xoshiro256::seed_from_u64(0xBEEF);
+        for trial in 0..50u64 {
+            // Random tiling: offsets 0..total in random-size steps.
+            let mut shards = Vec::new();
+            let mut off = 0usize;
+            while off < 500 {
+                let extent = 1 + (rng.next_below(9) as usize);
+                shards.push((off, extent.min(500 - off)));
+                off += extent.min(500 - off);
+            }
+            let mut shuffled = shards.clone();
+            rng.shuffle(&mut shuffled);
+            let mut buf = ReorderBuffer::new(shards.len());
+            let mut released = Vec::new();
+            for &(o, e) in &shuffled {
+                buf.push(o, e, (o, e)).unwrap_or_else(|err| {
+                    panic!("trial {trial}: push({o},{e}) failed: {err}")
+                });
+                while let Some(item) = buf.pop_ready() {
+                    released.push(item);
+                }
+            }
+            buf.finish().unwrap();
+            assert_eq!(released, shards, "trial {trial}");
+            assert_eq!(buf.released_through(), 500);
+        }
+    }
+
+    #[test]
+    fn reorder_buffer_rejects_bad_streams() {
+        // Duplicate.
+        let mut buf = ReorderBuffer::new(8);
+        buf.push(0, 4, ()).unwrap();
+        assert!(buf.push(0, 4, ()).is_err());
+        // Overlap with a parked shard.
+        let mut buf = ReorderBuffer::new(8);
+        buf.push(8, 4, ()).unwrap();
+        assert!(buf.push(6, 4, ()).is_err());
+        assert!(buf.push(10, 4, ()).is_err());
+        // Arrival below the released watermark.
+        let mut buf = ReorderBuffer::new(8);
+        buf.push(0, 4, ()).unwrap();
+        assert!(buf.pop_ready().is_some());
+        assert!(buf.push(2, 2, ()).is_err());
+        // Zero extent.
+        let mut buf = ReorderBuffer::<()>::new(8);
+        assert!(buf.push(0, 0, ()).is_err());
+        // Overflow: bound 2, three parked out-of-order items.
+        let mut buf = ReorderBuffer::new(2);
+        buf.push(10, 1, ()).unwrap();
+        buf.push(20, 1, ()).unwrap();
+        let err = buf.push(30, 1, ()).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "{err}");
+        // …but the in-order arrival is never charged against the bound:
+        // a tiling stream sized exactly to the cap must drain cleanly.
+        let mut buf = ReorderBuffer::new(1);
+        buf.push(1, 1, ()).unwrap(); // the one allowed parked item
+        buf.push(0, 1, ()).unwrap(); // in-order: releases 0 then 1
+        assert!(buf.pop_ready().is_some());
+        assert!(buf.pop_ready().is_some());
+        buf.finish().unwrap();
+        // Gap at end of stream.
+        let mut buf = ReorderBuffer::new(8);
+        buf.push(4, 4, ()).unwrap();
+        assert!(buf.pop_ready().is_none());
+        let err = buf.finish().unwrap_err();
+        assert!(err.to_string().contains("gap"), "{err}");
     }
 
     #[test]

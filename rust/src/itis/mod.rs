@@ -533,6 +533,42 @@ pub fn reduce_shard(
     Ok(ShardReduction { prototypes, weights: new_weights, assignments: tc.assignments })
 }
 
+/// Everything one streaming reduce stage owns: its worker pool, its
+/// reusable [`ItisWorkspace`], and the unit-weight scratch buffer. The
+/// fused ingest spawns one `ShardReducer` per concurrent reduce stage
+/// (via `PipelineBuilder::map_init_parallel`), so workspaces never cross
+/// stage threads and every shard is processed through the same buffers
+/// with zero steady-state allocation — the single-stage `map_init`
+/// pattern, multiplied.
+pub struct ShardReducer {
+    pool: WorkerPool,
+    ws: ItisWorkspace,
+    ones: Vec<u32>,
+    config: ItisConfig,
+}
+
+impl ShardReducer {
+    /// Stage-local state: a pool of `workers` threads (0 = machine
+    /// default) plus fresh buffers, reduced with `config`.
+    pub fn new(workers: usize, config: ItisConfig) -> Self {
+        Self {
+            pool: WorkerPool::new(workers),
+            ws: ItisWorkspace::new(),
+            ones: Vec::new(),
+            config,
+        }
+    }
+
+    /// Reduce one raw shard (every row one original unit) into weighted
+    /// prototypes via [`reduce_shard`], reusing this stage's buffers.
+    pub fn reduce(&mut self, points: &Matrix) -> Result<ShardReduction> {
+        self.ones.clear();
+        self.ones.resize(points.rows(), 1);
+        let provider = crate::coordinator::PoolKnnProvider { pool: &self.pool };
+        reduce_shard(points, &self.ones, &self.config, &provider, &self.pool, &mut self.ws)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -841,6 +877,38 @@ mod tests {
         assert_eq!(total, 2048);
         assert!(r.prototypes.rows() <= n_level0 / 2);
         assert!(r.reduction_factor() >= 4.0);
+    }
+
+    #[test]
+    fn shard_reducer_matches_bare_reduce_shard() {
+        // The stage-state wrapper must be a pure packaging change:
+        // byte-identical to calling reduce_shard with unit weights, and
+        // stable across reuse (stale buffers must never leak between
+        // shards).
+        let ds = gaussian_mixture_paper(900, 80);
+        let cfg = ItisConfig {
+            prototype: PrototypeKind::WeightedCentroid,
+            ..ItisConfig::iterations(2, 1)
+        };
+        let mut reducer = ShardReducer::new(2, cfg.clone());
+        let pool = WorkerPool::new(2);
+        let mut ws = ItisWorkspace::new();
+        for (start, end) in [(0usize, 300usize), (300, 600), (600, 900)] {
+            let shard = ds.points.slice_rows(start, end);
+            let got = reducer.reduce(&shard).unwrap();
+            let want = reduce_shard(
+                &shard,
+                &vec![1; end - start],
+                &cfg,
+                &crate::coordinator::PoolKnnProvider { pool: &pool },
+                &pool,
+                &mut ws,
+            )
+            .unwrap();
+            assert_eq!(got.prototypes.data(), want.prototypes.data());
+            assert_eq!(got.weights, want.weights);
+            assert_eq!(got.assignments, want.assignments);
+        }
     }
 
     #[test]

@@ -4,10 +4,13 @@
 
 use ihtc::config::{DataSource, PipelineConfig};
 use ihtc::coordinator::driver::{self, ingest_streaming};
+use ihtc::coordinator::pipeline::{collect, PipelineBuilder, ReducedShard};
 use ihtc::coordinator::{PoolKnnProvider, WorkerPool};
 use ihtc::data::synth::gaussian_mixture_paper;
 use ihtc::data::{csv, Dataset};
 use ihtc::itis::{reduce_shard, ItisConfig, ItisWorkspace, PrototypeKind, StopRule};
+use ihtc::rng::Xoshiro256;
+use ihtc::Error;
 
 fn streaming_config(n: usize) -> PipelineConfig {
     PipelineConfig {
@@ -59,6 +62,144 @@ fn fused_prototypes_match_two_pass_run() {
     assert_eq!(total, 5000);
     // The fused path held roughly n / t* prototypes, not n rows.
     assert!(stream.prototypes.rows() <= 5000 / cfg.threshold);
+}
+
+/// Reduce every shard of the dataset independently (the two-pass
+/// materialized reference) into `ReducedShard`s carrying their stream
+/// offsets.
+fn reference_shards(n: usize, cfg: &PipelineConfig) -> Vec<ReducedShard> {
+    let ds = gaussian_mixture_paper(n, cfg.seed);
+    let pool = WorkerPool::new(cfg.workers);
+    let provider = PoolKnnProvider { pool: &pool };
+    let mut ws = ItisWorkspace::new();
+    let itis_cfg = ItisConfig {
+        threshold: cfg.threshold,
+        stop: StopRule::Iterations(1),
+        prototype: PrototypeKind::WeightedCentroid,
+        seed_order: cfg.seed_order,
+        min_prototypes: 1,
+    };
+    let mut shards = Vec::new();
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + cfg.shard_size).min(n);
+        let shard = ds.points.slice_rows(start, end);
+        let red = reduce_shard(&shard, &vec![1; end - start], &itis_cfg, &provider, &pool, &mut ws)
+            .unwrap();
+        shards.push(ReducedShard {
+            offset: start,
+            prototypes: red.prototypes,
+            weights: red.weights,
+            assignments: red.assignments,
+            labels: ds.labels.as_ref().map(|l| l[start..end].to_vec()),
+        });
+        start = end;
+    }
+    shards
+}
+
+/// Concatenate released shards exactly the way the streaming collector
+/// does (prototype bytes, weights, offset-rebased assignments).
+fn concatenate(shards: &[ReducedShard]) -> (Vec<f32>, Vec<u32>, Vec<u32>) {
+    let mut data = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+    let mut assignments = Vec::new();
+    for s in shards {
+        let base = weights.len() as u32;
+        assignments.extend(s.assignments.iter().map(|&a| base + a));
+        data.extend_from_slice(s.prototypes.data());
+        weights.extend_from_slice(&s.weights);
+    }
+    (data, weights, assignments)
+}
+
+#[test]
+fn shuffled_shard_completions_reorder_to_in_order_bytes() {
+    // The reorder fan-in property: for any seeded shuffle of shard
+    // completion order, the released stream is byte-identical to the
+    // in-order single-stage run — prototypes, weights, and back-out
+    // assignments all land exactly where the materialized reference puts
+    // them.
+    let cfg = streaming_config(4000);
+    let in_order = reference_shards(4000, &cfg);
+    let (want_data, want_weights, want_assignments) = concatenate(&in_order);
+
+    for trial in 1..=4u64 {
+        let mut shuffled = in_order.clone();
+        Xoshiro256::seed_from_u64(trial).shuffle(&mut shuffled);
+        let p = PipelineBuilder::source("completions", 4, move |emit| {
+            for s in shuffled {
+                emit(s)?;
+            }
+            Ok(())
+        })
+        .reorder("reorder", in_order.len() + 2, |s: &ReducedShard| {
+            (s.offset, s.assignments.len())
+        })
+        .build();
+        let (released, _) = collect(p).unwrap();
+        // Released strictly in stream order…
+        let offsets: Vec<usize> = released.iter().map(|s| s.offset).collect();
+        assert_eq!(offsets, in_order.iter().map(|s| s.offset).collect::<Vec<_>>(), "trial {trial}");
+        // …and the concatenation is the reference bytes.
+        let (data, weights, assignments) = concatenate(&released);
+        assert_eq!(data, want_data, "trial {trial}");
+        assert_eq!(weights, want_weights, "trial {trial}");
+        assert_eq!(assignments, want_assignments, "trial {trial}");
+    }
+
+    // The real parallel fan-in (N concurrent reduce stages) must agree
+    // with the same reference bytes.
+    for r in [2usize, 4] {
+        let mut cfg = streaming_config(4000);
+        cfg.reduce_stages = r;
+        let stream = ingest_streaming(&cfg).unwrap();
+        assert_eq!(stream.prototypes.data(), &want_data[..], "reduce_stages={r}");
+        assert_eq!(stream.weights, want_weights, "reduce_stages={r}");
+        assert_eq!(stream.assignments, want_assignments, "reduce_stages={r}");
+    }
+}
+
+#[test]
+fn gapped_shard_stream_is_root_cause_through_join() {
+    // Drop one mid-stream shard: the reorder stage must fail the whole
+    // pipeline with the gap as the root cause (a hard error in release
+    // builds, not a debug_assert).
+    let cfg = streaming_config(3000);
+    let mut shards = reference_shards(3000, &cfg);
+    shards.remove(2);
+    let p = PipelineBuilder::source("completions", 4, move |emit| {
+        for s in shards {
+            emit(s)?;
+        }
+        Ok(())
+    })
+    .reorder("reorder", 16, |s: &ReducedShard| (s.offset, s.assignments.len()))
+    .build();
+    let err = collect(p).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("gap"), "{err}");
+}
+
+#[test]
+fn duplicate_shard_offset_is_root_cause_through_join() {
+    let cfg = streaming_config(3000);
+    let mut shards = reference_shards(3000, &cfg);
+    let dup = shards[1].clone();
+    shards.push(dup);
+    let p = PipelineBuilder::source("completions", 4, move |emit| {
+        for s in shards {
+            emit(s)?;
+        }
+        Ok(())
+    })
+    .reorder("reorder", 16, |s: &ReducedShard| (s.offset, s.assignments.len()))
+    .build();
+    let err = collect(p).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    let msg = err.to_string();
+    assert!(msg.contains("duplicate") || msg.contains("overlap") || msg.contains("released"),
+        "{msg}");
 }
 
 #[test]

@@ -12,6 +12,17 @@ Usage:
     scripts/bench_diff.py --current rust --baseline bench_baseline
     scripts/bench_diff.py --current out --baseline base --threshold 5
     scripts/bench_diff.py ... --warn-only     # report, always exit 0
+    scripts/bench_diff.py ... --seed-if-empty # copy current → empty baseline
+
+Besides the per-benchmark diff, the report includes a reduce-stage
+scaling section for the `stream/parallel_r{N}*` ingest benches: the
+speedup of every rN entry over its r1 sibling in the *current* run,
+flagging any parallel configuration that runs slower than single-stage.
+
+`--seed-if-empty` starts the perf trajectory on the first machine with a
+toolchain: when the baseline directory is missing or holds no
+BENCH_*.json, the current run's files are copied into it (commit them to
+seed the baseline — see bench_baseline/README.md).
 
 Exit status: 0 when no regressions (or --warn-only), 1 when at least
 one metric regressed past the threshold, 2 on usage errors.
@@ -19,6 +30,8 @@ one metric regressed past the threshold, 2 on usage errors.
 
 import argparse
 import json
+import re
+import shutil
 import sys
 from pathlib import Path
 
@@ -50,6 +63,55 @@ def fmt_bytes(b):
     return f"{b / 1e6:.2f}MB"
 
 
+PARALLEL_RE = re.compile(r"^(?P<family>.*?/parallel)_r(?P<r>\d+)(?P<rest>.*)$")
+
+
+def scaling_report(current):
+    """Speedup of rN over r1 for every `…/parallel_r{N}…` bench family.
+
+    Returns the number of parallel configurations slower than their r1
+    sibling (a scaling regression within the current run — no baseline
+    needed).
+    """
+    families = {}
+    for name, doc in current.items():
+        m = PARALLEL_RE.match(name)
+        if not m or not doc.get("median_ns"):
+            continue
+        key = m.group("family") + m.group("rest")
+        families.setdefault(key, {})[int(m.group("r"))] = doc["median_ns"]
+    slower = 0
+    printed_header = False
+    for key, by_r in sorted(families.items()):
+        if by_r.get(1) is None or len(by_r) < 2:
+            continue
+        if not printed_header:
+            print("\nreduce-stage scaling (current run, speedup vs r1):")
+            printed_header = True
+        r1 = by_r[1]
+        for r in sorted(by_r):
+            if r == 1:
+                print(f"  {key:<44} r1  {fmt_ns(r1):>10}  1.00x")
+                continue
+            speedup = r1 / by_r[r]
+            marker = ""
+            if speedup < 1.0:
+                marker = "  << SLOWER THAN r1"
+                slower += 1
+            print(f"  {key:<44} r{r:<2} {fmt_ns(by_r[r]):>10}  {speedup:.2f}x{marker}")
+    return slower
+
+
+def seed_baseline(cur_dir, base_dir):
+    base_dir.mkdir(parents=True, exist_ok=True)
+    copied = 0
+    for f in sorted(cur_dir.glob("BENCH_*.json")):
+        shutil.copy2(f, base_dir / f.name)
+        copied += 1
+    print(f"seeded baseline {base_dir} with {copied} BENCH_*.json file(s) — "
+          f"commit them to start the perf trajectory")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--current", required=True, help="directory with this run's BENCH_*.json")
@@ -58,6 +120,9 @@ def main():
                     help="regression threshold in percent (default: 10)")
     ap.add_argument("--warn-only", action="store_true",
                     help="report regressions but exit 0 (noisy CI runners)")
+    ap.add_argument("--seed-if-empty", action="store_true",
+                    help="when the baseline directory is missing/empty, copy the "
+                         "current BENCH_*.json there to start the trajectory")
     args = ap.parse_args()
 
     cur_dir, base_dir = Path(args.current), Path(args.baseline)
@@ -68,14 +133,14 @@ def main():
     if not current:
         print(f"error: no BENCH_*.json in {cur_dir}", file=sys.stderr)
         return 2
-    if not base_dir.is_dir():
-        print(f"no baseline at {base_dir} — nothing to diff (seed it by copying "
-              f"{cur_dir}/BENCH_*.json there)")
-        return 0
-    baseline = load_dir(base_dir)
+    baseline = load_dir(base_dir) if base_dir.is_dir() else {}
     if not baseline:
-        print(f"baseline {base_dir} is empty — nothing to diff (seed it by copying "
-              f"{cur_dir}/BENCH_*.json there)")
+        if args.seed_if_empty:
+            seed_baseline(cur_dir, base_dir)
+        else:
+            print(f"no baseline in {base_dir} — nothing to diff (seed it with "
+                  f"--seed-if-empty, or copy {cur_dir}/BENCH_*.json there)")
+        scaling_report(current)
         return 0
 
     regressions = []
@@ -103,8 +168,11 @@ def main():
     for name in missing:
         print(f"{name:<46} (missing from current run)")
 
+    slower = scaling_report(current)
+
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
-          f"{improvements} improvement(s), {len(missing)} missing")
+          f"{improvements} improvement(s), {len(missing)} missing, "
+          f"{slower} parallel config(s) slower than r1")
     if regressions and not args.warn_only:
         return 1
     return 0
