@@ -19,7 +19,10 @@ use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use ihtc::data::Preprocess;
 use ihtc::hybrid::{FinalClusterer, Ihtc, IhtcWorkspace};
 use ihtc::itis::{itis, ItisConfig, PrototypeKind};
-use ihtc::knn::{knn_auto, knn_brute, knn_chunked, knn_chunked_pool, kdtree::KdTree, NativeChunks};
+use ihtc::knn::forest::KdForest;
+use ihtc::knn::{
+    kdtree::KdTree, knn_auto, knn_brute, knn_chunked, knn_chunked_pool, KnnLists, NativeChunks,
+};
 use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
 use ihtc::tc::{threshold_cluster, TcConfig};
 use std::time::Instant;
@@ -145,6 +148,30 @@ fn main() {
         3,
         || knn_auto(&ds_big.points, 3).unwrap(),
     );
+    // Sharded kd-forest: per-shard parallel construction + merged
+    // queries. s=1 is the serial single-tree baseline; bench_diff.py
+    // reports the s1→sN scaling alongside the stream/parallel_r{N}
+    // reduce-stage section. Output is byte-identical across s (and to
+    // knn_brute), so only wall-clock and peak bytes move.
+    for s in [1usize, 2, 4] {
+        b.run(&format!("knn/forest_s{s}_build_n1e5"), 5, || {
+            let mut forest = KdForest::new();
+            forest.rebuild(&ds_big.points, s, &pool);
+            forest
+        });
+        // The query bench's index build lives outside b.run (only the
+        // queries are timed), so gate it on the filter too — a filtered
+        // `cargo bench -- stream` must not pay three 1e5-point builds.
+        let query_name = format!("knn/forest_s{s}_query_n1e5_k3");
+        if b.matches(&query_name) {
+            let mut forest = KdForest::new();
+            forest.rebuild(&ds_big.points, s, &pool);
+            let mut forest_out = KnnLists::default();
+            b.run(&query_name, 3, || {
+                forest.knn_all_pool_into(&ds_big.points, 3, &pool, &mut forest_out).unwrap()
+            });
+        }
+    }
     b.run("micro/knn_chunked_native_n2e4_k15", 3, || {
         knn_chunked(&ds_small.points, 15, 256, 1024, &NativeChunks::default()).unwrap()
     });
@@ -268,10 +295,12 @@ fn main() {
 
     // ---------- coordinator / pipeline overhead ----------
     b.run("pipeline/e2e_native_n1e5_m2", 2, || {
-        let mut cfg = ihtc::config::PipelineConfig::default();
-        cfg.source = ihtc::config::DataSource::PaperMixture { n: big };
-        cfg.iterations = 2;
-        cfg.workers = 0;
+        let cfg = ihtc::config::PipelineConfig {
+            source: ihtc::config::DataSource::PaperMixture { n: big },
+            iterations: 2,
+            workers: 0,
+            ..Default::default()
+        };
         ihtc::coordinator::driver::run(&cfg).unwrap()
     });
 
@@ -284,17 +313,16 @@ fn main() {
     // lists).
     {
         let nstream = if b.fast { 50_000 } else { 1_000_000 };
-        let stream_cfg = |streaming: bool| {
-            let mut cfg = ihtc::config::PipelineConfig::default();
-            cfg.name = if streaming { "fused".into() } else { "materialized".into() };
-            cfg.source = ihtc::config::DataSource::PaperMixture { n: nstream };
-            cfg.threshold = 4;
-            cfg.iterations = 2;
-            cfg.prototype = PrototypeKind::WeightedCentroid;
-            cfg.streaming = streaming;
-            cfg.shard_size = 65_536;
-            cfg.workers = 0;
-            cfg
+        let stream_cfg = |streaming: bool| ihtc::config::PipelineConfig {
+            name: if streaming { "fused".into() } else { "materialized".into() },
+            source: ihtc::config::DataSource::PaperMixture { n: nstream },
+            threshold: 4,
+            iterations: 2,
+            prototype: PrototypeKind::WeightedCentroid,
+            streaming,
+            shard_size: 65_536,
+            workers: 0,
+            ..Default::default()
         };
         b.run("stream/materialized_n1e6_t4_m2", 1, || {
             ihtc::coordinator::driver::run(&stream_cfg(false)).unwrap()

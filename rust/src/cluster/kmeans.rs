@@ -386,7 +386,7 @@ fn lloyd_pool<B: AssignBackend + Sync>(
     let mut assignments = vec![0u32; n];
     let mut prev_wcss = f64::INFINITY;
     let mut iterations = 0;
-    let nparts = (n + PART - 1) / PART;
+    let nparts = n.div_ceil(PART);
     if ws.part_sums.len() < nparts {
         ws.part_sums.resize_with(nparts, Vec::new);
         ws.part_counts.resize_with(nparts, Vec::new);

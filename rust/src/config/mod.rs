@@ -76,6 +76,13 @@ pub struct PipelineConfig {
     pub backend: Backend,
     /// Coordinator worker threads (0 = available parallelism).
     pub workers: usize,
+    /// kd-forest shard count for the k-NN index: partition each level's
+    /// point set into this many contiguous row shards, build one kd-tree
+    /// per shard in parallel, and merge candidates at query time through
+    /// the deterministic `(distance, index)` order. Results are
+    /// byte-identical for every value — 1 (the default) keeps the single
+    /// tree; > 1 parallelizes index construction. Must be ≥ 1.
+    pub knn_shards: usize,
     /// Rows per shard fed through the pipeline.
     pub shard_size: usize,
     /// Bounded-queue capacity between stages (backpressure depth).
@@ -111,6 +118,7 @@ impl Default for PipelineConfig {
             clusterer: FinalClusterer::KMeans { k: 3, restarts: 4 },
             backend: Backend::Native,
             workers: 0,
+            knn_shards: 1,
             shard_size: 8_192,
             queue_capacity: 4,
             streaming: false,
@@ -182,6 +190,9 @@ impl PipelineConfig {
         if let Some(w) = j.opt_usize("workers")? {
             cfg.workers = w;
         }
+        if let Some(s) = j.opt_usize("knn_shards")? {
+            cfg.knn_shards = s;
+        }
         if let Some(s) = j.opt_usize("shard_size")? {
             cfg.shard_size = s;
         }
@@ -221,6 +232,11 @@ impl PipelineConfig {
         }
         if self.queue_capacity == 0 {
             return Err(Error::Config("queue_capacity must be > 0".into()));
+        }
+        if self.knn_shards == 0 {
+            return Err(Error::Config(
+                "knn_shards must be ≥ 1 (1 = single kd-tree, the default)".into(),
+            ));
         }
         if self.reduce_stages == 0 {
             return Err(Error::Config(
@@ -422,6 +438,19 @@ mod tests {
         assert!(PipelineConfig::from_json(r#"{"streaming": "true"}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"iterations": "2"}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"prototype": 3}"#).is_err());
+    }
+
+    #[test]
+    fn knn_shards_parse_and_validation() {
+        assert_eq!(PipelineConfig::from_json("{}").unwrap().knn_shards, 1);
+        let cfg = PipelineConfig::from_json(r#"{"knn_shards": 4}"#).unwrap();
+        assert_eq!(cfg.knn_shards, 4);
+        let err = PipelineConfig::from_json(r#"{"knn_shards": 0}"#).unwrap_err();
+        assert!(err.to_string().contains("knn_shards"), "{err}");
+        // Mistyped knobs are config errors, never silently ignored.
+        assert!(PipelineConfig::from_json(r#"{"knn_shards": "four"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"knn_shards": 2.5}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"knn_shards": true}"#).is_err());
     }
 
     #[test]

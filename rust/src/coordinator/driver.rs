@@ -121,17 +121,54 @@ struct PjrtKnn<'a> {
     fallback: PoolKnnProvider<'a>,
 }
 
-impl KnnProvider for PjrtKnn<'_> {
-    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+impl PjrtKnn<'_> {
+    /// True when the AOT artifact's tile geometry can serve this
+    /// workload; warns (once per call) when it cannot.
+    fn artifact_serves(&self, points: &Matrix, k: usize) -> bool {
         let t = &self.engine.tile;
-        if k > t.knn_k || points.cols() > t.dim {
+        let ok = k <= t.knn_k && points.cols() <= t.dim;
+        if !ok {
             eprintln!(
                 "warning: PJRT knn artifact cannot serve k={k}/d={}; falling back to native pool",
                 points.cols()
             );
+        }
+        ok
+    }
+}
+
+impl KnnProvider for PjrtKnn<'_> {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        if !self.artifact_serves(points, k) {
             return self.fallback.knn(points, k);
         }
+        let t = &self.engine.tile;
         crate::knn::knn_chunked(points, k, t.knn_q, t.knn_r, &PjrtChunks { engine: self.engine })
+    }
+
+    // Forward the workspace hook so the native fallback keeps its
+    // per-level forest/buffer reuse even under backend = pjrt (the
+    // trait default would allocate a fresh KnnLists and a throwaway
+    // forest every ITIS level). Output bytes are unchanged either way.
+    fn knn_forest_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        forest: &mut crate::knn::forest::KdForest,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        if !self.artifact_serves(points, k) {
+            return self.fallback.knn_forest_into(points, k, forest, out);
+        }
+        let t = &self.engine.tile;
+        crate::knn::knn_chunked_into(
+            points,
+            k,
+            t.knn_q,
+            t.knn_r,
+            &PjrtChunks { engine: self.engine },
+            out,
+        )
     }
 }
 
@@ -382,6 +419,7 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
     // stages × 7 threads fighting for 8 cores. Shard results are
     // worker-count invariant, so the split never changes output bytes.
     let workers = (super::resolve_workers(config.workers) / stages_n).max(1);
+    let knn_shards = config.knn_shards.max(1);
     // Reorder bound: everything that can be in flight at once — each
     // stage's input queue plus the item it is processing, the output
     // funnel, and slack for the distributor/reorder hand-offs. A correct
@@ -395,7 +433,7 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
         .map_init_parallel(
             "reduce",
             stages_n,
-            move || crate::itis::ShardReducer::new(workers, itis_cfg.clone()),
+            move || crate::itis::ShardReducer::new(workers, knn_shards, itis_cfg.clone()),
             move |reducer, shard: RowShard| {
                 let mut moments = Moments::new(shard.points.cols());
                 moments.fold(&shard.points);
@@ -576,10 +614,11 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
         Backend::Native => None,
     };
-    let pool_knn = PoolKnnProvider { pool: &pool };
-    let pjrt_knn = engine
-        .as_ref()
-        .map(|e| PjrtKnn { engine: e, fallback: PoolKnnProvider { pool: &pool } });
+    let pool_knn = PoolKnnProvider { pool: &pool, shards: config.knn_shards };
+    let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
+        engine: e,
+        fallback: PoolKnnProvider { pool: &pool, shards: config.knn_shards },
+    });
     let knn_provider: &dyn KnnProvider = match &pjrt_knn {
         Some(p) => p,
         None => &pool_knn,
@@ -734,10 +773,11 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
         Backend::Native => None,
     };
-    let pool_knn = PoolKnnProvider { pool: &pool };
-    let pjrt_knn = engine
-        .as_ref()
-        .map(|e| PjrtKnn { engine: e, fallback: PoolKnnProvider { pool: &pool } });
+    let pool_knn = PoolKnnProvider { pool: &pool, shards: config.knn_shards };
+    let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
+        engine: e,
+        fallback: PoolKnnProvider { pool: &pool, shards: config.knn_shards },
+    });
     let knn_provider: &dyn KnnProvider = match &pjrt_knn {
         Some(p) => p,
         None => &pool_knn,
@@ -1058,7 +1098,7 @@ mod tests {
 
         let ds = gaussian_mixture_paper(3000, cfg.seed);
         let pool = WorkerPool::new(cfg.workers);
-        let provider = PoolKnnProvider { pool: &pool };
+        let provider = PoolKnnProvider { pool: &pool, shards: 1 };
         let mut ws = ItisWorkspace::new();
         let itis_cfg = ItisConfig {
             threshold: cfg.threshold,

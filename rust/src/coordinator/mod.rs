@@ -22,7 +22,7 @@ pub mod driver;
 pub mod pipeline;
 
 use crate::itis::KnnProvider;
-use crate::knn::{kdtree::KdTree, KnnLists};
+use crate::knn::{forest::KdForest, kdtree::KdTree, KnnLists};
 use crate::linalg::Matrix;
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -194,18 +194,22 @@ pub fn parallel_knn_into(
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
-    if k == 0 || k >= n {
-        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-    }
+    crate::knn::validate_k(n, k)?;
     let tree = KdTree::build_parallel(points, pool);
     tree.knn_all_pool_into(points, k, pool, out)
 }
 
 /// [`KnnProvider`] backed by the worker pool — the injection point that
 /// routes the entire ITIS/IHTC reduction through pool-sharded k-NN.
+/// With `shards > 1` the kd-tree regime runs on a sharded
+/// [`KdForest`] (per-shard parallel construction, merged queries);
+/// `shards: 1` is the single-tree path, byte for byte.
 pub struct PoolKnnProvider<'a> {
     /// The pool to shard over.
     pub pool: &'a WorkerPool,
+    /// kd-forest shard count for the k-NN index (1 = single tree; the
+    /// config knob `knn_shards`).
+    pub shards: usize,
 }
 
 impl KnnProvider for PoolKnnProvider<'_> {
@@ -216,7 +220,23 @@ impl KnnProvider for PoolKnnProvider<'_> {
     }
 
     fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
-        crate::knn::knn_auto_into(points, k, self.pool, out)
+        // Workspace-less path (`&self`, nowhere to keep the shard trees):
+        // the forest is built for this call and dropped. Construction is
+        // still shard-parallel, but arena reuse needs the caller-held
+        // forest of `knn_forest_into` — which is what the ITIS loop uses;
+        // this path serves one-shot callers and the PJRT fallback.
+        let mut forest = KdForest::new();
+        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.pool, &mut forest, out)
+    }
+
+    fn knn_forest_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        forest: &mut KdForest,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.pool, forest, out)
     }
 }
 

@@ -336,7 +336,7 @@ mod tests {
                 labels.extend(l.unwrap());
                 shards += 1;
             }
-            assert_eq!(shards, (257 + shard_rows - 1) / shard_rows);
+            assert_eq!(shards, 257usize.div_ceil(shard_rows));
             assert_eq!(&data, whole.points.data());
             assert_eq!(Some(labels), whole.labels);
         }

@@ -101,6 +101,10 @@ pub struct Ihtc {
     pub seed_order: SeedOrder,
     /// Base RNG seed for the final clusterer.
     pub seed: u64,
+    /// kd-forest shard count for the k-NN index (1 = single tree).
+    /// Results are byte-identical for every value; > 1 parallelizes
+    /// index construction across shard trees.
+    pub knn_shards: usize,
 }
 
 /// Full IHTC output.
@@ -132,6 +136,7 @@ impl Ihtc {
             prototype: PrototypeKind::Centroid,
             seed_order: SeedOrder::Natural,
             seed: 0x1117C,
+            knn_shards: 1,
         }
     }
 
@@ -168,7 +173,7 @@ impl Ihtc {
                 n_original: points.rows(),
             }
         } else {
-            let provider = PoolKnnProvider { pool };
+            let provider = PoolKnnProvider { pool, shards: self.knn_shards };
             itis_with_workspace(points, &itis_cfg, &provider, pool, &mut ws.itis)?
         };
         let protos = &reduction.prototypes;

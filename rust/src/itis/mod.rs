@@ -11,7 +11,8 @@
 //! (IHTC step 3) by composing the maps.
 
 use crate::coordinator::WorkerPool;
-use crate::knn::graph::NeighborGraph;
+use crate::knn::forest::KdForest;
+use crate::knn::graph::{GraphScratch, NeighborGraph};
 use crate::knn::KnnLists;
 use crate::linalg::Matrix;
 use crate::tc::{threshold_cluster, threshold_cluster_graph, TcConfig, TcResult};
@@ -31,6 +32,24 @@ pub trait KnnProvider {
         *out = self.knn(points, k)?;
         Ok(())
     }
+
+    /// Workspace-aware variant for providers with a sharded kd-forest
+    /// backend: `forest` is the caller's reusable per-shard index (the
+    /// ITIS loop passes [`ItisWorkspace::forest`], so shard trees are
+    /// rebuilt in place level after level). The default ignores the
+    /// forest and delegates to [`Self::knn_into`]; only
+    /// [`crate::coordinator::PoolKnnProvider`] with `knn_shards > 1`
+    /// actually uses it.
+    fn knn_forest_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        forest: &mut KdForest,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        let _ = forest;
+        self.knn_into(points, k, out)
+    }
 }
 
 /// Default provider: best exact backend on the default worker pool.
@@ -47,16 +66,25 @@ impl KnnProvider for DefaultKnn {
 }
 
 /// Reusable scratch arena for the ITIS reduction loop: the step-1
-/// neighbor lists (the dominant `n×k` allocation) and the prototype
-/// accumulation buffers are reused across TC rounds — and across whole
-/// `itis` runs when the caller holds onto the workspace (see
-/// [`crate::hybrid::IhtcWorkspace`]). Level sizes shrink geometrically,
-/// so after the first iteration the loop allocates only the prototype
-/// matrices it returns.
+/// neighbor lists (the dominant `n×k` allocation), the sharded kd-forest
+/// index, the symmetrized neighbor graph (edge list + CSR), and the
+/// prototype accumulation buffers are all reused across TC rounds — and
+/// across whole `itis` runs when the caller holds onto the workspace
+/// (see [`crate::hybrid::IhtcWorkspace`]). Level sizes shrink
+/// geometrically, so after the first iteration the loop allocates only
+/// the prototype matrices it returns.
 #[derive(Debug, Default)]
 pub struct ItisWorkspace {
     /// Step-1 neighbor lists (`n × (t*−1)`).
     pub knn: KnnLists,
+    /// Sharded kd-forest index (per-shard trees and their arenas),
+    /// rebuilt in place each level; only touched when the provider runs
+    /// with `knn_shards > 1`.
+    pub forest: KdForest,
+    /// Symmetrized `NG_k`, rebuilt in place each level.
+    pub graph: NeighborGraph,
+    /// Edge-list/cursor scratch for the graph rebuild.
+    graph_scratch: GraphScratch,
     /// Per-cluster weighted coordinate sums (`k × d`).
     sums: Vec<f64>,
     /// Per-cluster accumulation weights.
@@ -454,9 +482,9 @@ fn itis_core(
             break;
         }
         let tc_cfg = TcConfig { threshold: config.threshold, seed_order: config.seed_order };
-        knn.knn_into(&current, config.threshold - 1, &mut ws.knn)?;
-        let graph = NeighborGraph::from_knn(&ws.knn);
-        let tc = threshold_cluster_graph(&graph, &current, &tc_cfg);
+        knn.knn_forest_into(&current, config.threshold - 1, &mut ws.forest, &mut ws.knn)?;
+        ws.graph.rebuild_from_knn(&ws.knn, &mut ws.graph_scratch);
+        let tc = threshold_cluster_graph(&ws.graph, &current, &tc_cfg);
         if tc.num_clusters >= current.rows() {
             break; // no reduction possible
         }
@@ -524,9 +552,9 @@ pub fn reduce_shard(
     let tc = if points.rows() <= config.threshold {
         threshold_cluster(points, &tc_cfg)?
     } else {
-        knn.knn_into(points, config.threshold - 1, &mut ws.knn)?;
-        let graph = NeighborGraph::from_knn(&ws.knn);
-        threshold_cluster_graph(&graph, points, &tc_cfg)
+        knn.knn_forest_into(points, config.threshold - 1, &mut ws.forest, &mut ws.knn)?;
+        ws.graph.rebuild_from_knn(&ws.knn, &mut ws.graph_scratch);
+        threshold_cluster_graph(&ws.graph, points, &tc_cfg)
     };
     let (prototypes, new_weights) =
         make_prototypes(points, weights, &tc, PrototypeKind::WeightedCentroid, pool, ws)?;
@@ -545,17 +573,21 @@ pub struct ShardReducer {
     ws: ItisWorkspace,
     ones: Vec<u32>,
     config: ItisConfig,
+    knn_shards: usize,
 }
 
 impl ShardReducer {
     /// Stage-local state: a pool of `workers` threads (0 = machine
-    /// default) plus fresh buffers, reduced with `config`.
-    pub fn new(workers: usize, config: ItisConfig) -> Self {
+    /// default) plus fresh buffers, reduced with `config`; the per-shard
+    /// k-NN step uses a `knn_shards`-tree kd-forest (1 = single tree),
+    /// rebuilt in this stage's workspace for every data shard.
+    pub fn new(workers: usize, knn_shards: usize, config: ItisConfig) -> Self {
         Self {
             pool: WorkerPool::new(workers),
             ws: ItisWorkspace::new(),
             ones: Vec::new(),
             config,
+            knn_shards: knn_shards.max(1),
         }
     }
 
@@ -564,7 +596,8 @@ impl ShardReducer {
     pub fn reduce(&mut self, points: &Matrix) -> Result<ShardReduction> {
         self.ones.clear();
         self.ones.resize(points.rows(), 1);
-        let provider = crate::coordinator::PoolKnnProvider { pool: &self.pool };
+        let provider =
+            crate::coordinator::PoolKnnProvider { pool: &self.pool, shards: self.knn_shards };
         reduce_shard(points, &self.ones, &self.config, &provider, &self.pool, &mut self.ws)
     }
 }
@@ -890,7 +923,7 @@ mod tests {
             prototype: PrototypeKind::WeightedCentroid,
             ..ItisConfig::iterations(2, 1)
         };
-        let mut reducer = ShardReducer::new(2, cfg.clone());
+        let mut reducer = ShardReducer::new(2, 1, cfg.clone());
         let pool = WorkerPool::new(2);
         let mut ws = ItisWorkspace::new();
         for (start, end) in [(0usize, 300usize), (300, 600), (600, 900)] {
@@ -900,7 +933,7 @@ mod tests {
                 &shard,
                 &vec![1; end - start],
                 &cfg,
-                &crate::coordinator::PoolKnnProvider { pool: &pool },
+                &crate::coordinator::PoolKnnProvider { pool: &pool, shards: 1 },
                 &pool,
                 &mut ws,
             )
@@ -908,6 +941,33 @@ mod tests {
             assert_eq!(got.prototypes.data(), want.prototypes.data());
             assert_eq!(got.weights, want.weights);
             assert_eq!(got.assignments, want.assignments);
+        }
+    }
+
+    #[test]
+    fn knn_shards_invariant_through_itis() {
+        // The sharded kd-forest provider must leave every ITIS output
+        // byte unchanged for any shard count (the forest is
+        // byte-identical to the single tree, so the whole reduction is).
+        let ds = gaussian_mixture_paper(3000, 81);
+        let cfg = ItisConfig::iterations(2, 2);
+        let pool = WorkerPool::new(2);
+        let mut base: Option<ItisResult> = None;
+        for shards in [1usize, 2, 4] {
+            let provider = crate::coordinator::PoolKnnProvider { pool: &pool, shards };
+            let mut ws = ItisWorkspace::new();
+            let r = itis_with_workspace(&ds.points, &cfg, &provider, &pool, &mut ws).unwrap();
+            match &base {
+                None => base = Some(r),
+                Some(b) => {
+                    assert_eq!(b.prototypes.data(), r.prototypes.data(), "shards={shards}");
+                    assert_eq!(b.weights, r.weights, "shards={shards}");
+                    assert_eq!(b.levels.len(), r.levels.len(), "shards={shards}");
+                    for (x, y) in b.levels.iter().zip(&r.levels) {
+                        assert_eq!(x.assignments, y.assignments, "shards={shards}");
+                    }
+                }
+            }
         }
     }
 

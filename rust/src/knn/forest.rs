@@ -1,0 +1,271 @@
+//! Sharded kd-forest: one kd-tree per contiguous data shard, queried
+//! together with merged candidates.
+//!
+//! The single [`KdTree`] stops scaling at one NUMA node: construction is
+//! one recursive partition over one permutation (parallelizable only
+//! near the top of the tree), and the finished arena is a single cache
+//! footprint every worker walks. The forest splits the point set into
+//! `s` contiguous row shards, builds one independent tree per shard —
+//! embarrassingly parallel on the [`WorkerPool`], no serial planning
+//! phase, no arena splice — and answers a query by probing every shard
+//! tree into one shared [`TopK`] collector. It is also the unit of
+//! distribution the ROADMAP's TeraHAC-style graph phase will scatter
+//! across nodes: a shard tree plus its row range is self-contained.
+//!
+//! Exactness and determinism: each shard tree is exact over its shard,
+//! the shards tile the rows, and every candidate flows through the same
+//! `(distance, index)` total order all backends share — so the merged
+//! lists are **byte-identical to [`super::knn_brute`]** for every shard
+//! count and worker count (`rust/tests/knn_forest_parity.rs` pins this
+//! down). Shard boundaries depend only on `(n, s)`, never on the pool.
+//!
+//! The struct doubles as its own workspace: [`KdForest::rebuild`] reuses
+//! the per-tree node/box/permutation arenas across calls, so the ITIS
+//! loop (whose level sizes shrink geometrically) re-indexes every level
+//! without reallocating — [`crate::itis::ItisWorkspace`] holds one
+//! forest for exactly this reason.
+
+use super::kdtree::KdTree;
+use super::{KnnLists, TopK};
+use crate::coordinator::WorkerPool;
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// Leaf size for shard trees (the same §Perf sweep minimum as the
+/// single-tree default).
+const LEAF_SIZE: usize = 12;
+
+/// Query rows per pooled query task (matches the single-tree pooled
+/// query path).
+const QUERY_CHUNK: usize = 512;
+
+/// A forest of per-shard kd-trees over the rows of a [`Matrix`].
+#[derive(Debug, Default)]
+pub struct KdForest {
+    /// One tree per shard; arenas recycled across rebuilds.
+    trees: Vec<KdTree>,
+    /// Shard boundaries: shard `i` owns rows `bounds[i]..bounds[i + 1]`.
+    bounds: Vec<usize>,
+}
+
+impl KdForest {
+    /// Empty forest; [`Self::rebuild`] populates it and later calls
+    /// recycle its arenas.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of shard trees currently built.
+    pub fn shards(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// (Re)build the forest over `points` with `shards` contiguous row
+    /// shards (clamped to at least one row per shard), one kd-tree per
+    /// shard, built concurrently on `pool`. Shard boundaries are the
+    /// deterministic `n/s` split (first `n % s` shards one row longer),
+    /// and each shard tree is built by the serial single-tree recursion,
+    /// so the forest is identical for every worker count. Tree arenas
+    /// from a previous rebuild are reused (level sizes in the ITIS loop
+    /// only shrink, so steady state allocates nothing).
+    pub fn rebuild(&mut self, points: &Matrix, shards: usize, pool: &WorkerPool) {
+        let n = points.rows();
+        let s = shards.max(1).min(n.max(1));
+        let base = n / s;
+        let rem = n % s;
+        self.bounds.clear();
+        self.bounds.push(0);
+        let mut off = 0usize;
+        for i in 0..s {
+            off += base + usize::from(i < rem);
+            self.bounds.push(off);
+        }
+        debug_assert_eq!(off, n);
+        self.trees.resize_with(s, KdTree::default);
+        let bounds = &self.bounds;
+        let tasks: Vec<(usize, usize, &mut KdTree)> = self
+            .trees
+            .iter_mut()
+            .enumerate()
+            .map(|(i, tree)| (bounds[i], bounds[i + 1], tree))
+            .collect();
+        if pool.workers() > 1 && s > 1 {
+            pool.run_tasks(tasks, |(s0, s1, tree)| {
+                tree.rebuild_range(points, s0, s1, LEAF_SIZE);
+                Ok(())
+            })
+            .expect("kd-forest build tasks are infallible");
+        } else {
+            for (s0, s1, tree) in tasks {
+                tree.rebuild_range(points, s0, s1, LEAF_SIZE);
+            }
+        }
+    }
+
+    /// k-NN lists for every indexed row (self excluded), writing into a
+    /// reusable output buffer. Byte-identical to [`super::knn_brute`].
+    pub fn knn_all_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
+        let n = points.rows();
+        super::validate_k(n, k)?;
+        out.reset(n, k);
+        self.knn_range_into(points, k, 0, n, &mut out.indices, &mut out.dists)
+    }
+
+    /// [`Self::knn_all_into`] sharded across the worker pool: disjoint
+    /// query ranges are stolen chunk-by-chunk and written straight into
+    /// `out`. Byte-identical to the serial path for any worker count
+    /// (each query row's merged candidate set is independent of which
+    /// worker computes it).
+    pub fn knn_all_pool_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        pool: &WorkerPool,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        let n = points.rows();
+        super::validate_k(n, k)?;
+        out.reset(n, k);
+        let KnnLists { indices, dists, .. } = out;
+        let tasks: Vec<(usize, &mut [u32], &mut [f32])> = indices
+            .chunks_mut(QUERY_CHUNK * k)
+            .zip(dists.chunks_mut(QUERY_CHUNK * k))
+            .enumerate()
+            .map(|(ci, (is, ds))| (ci * QUERY_CHUNK, is, ds))
+            .collect();
+        pool.run_tasks(tasks, |(start, is, ds)| {
+            let end = start + is.len() / k;
+            self.knn_range_into(points, k, start, end, is, ds)
+        })?;
+        Ok(())
+    }
+
+    /// k-NN lists restricted to query rows `[start, end)`, written into
+    /// caller-owned slices of length `(end - start) * k` each — the task
+    /// unit the pooled query path distributes. Each query probes every
+    /// shard tree through one [`TopK`]; shard order cannot change the
+    /// kept set (total candidate order), it only tightens the pruning
+    /// bound earlier or later.
+    pub fn knn_range_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        start: usize,
+        end: usize,
+        indices: &mut [u32],
+        dists: &mut [f32],
+    ) -> Result<()> {
+        let n = points.rows();
+        super::validate_k(n, k)?;
+        assert!(start <= end && end <= n);
+        assert!(!self.trees.is_empty(), "rebuild the forest before querying");
+        debug_assert_eq!(*self.bounds.last().unwrap(), n, "forest built over a different matrix");
+        let m = end - start;
+        assert_eq!(indices.len(), m * k);
+        assert_eq!(dists.len(), m * k);
+        let mut top = TopK::new(k);
+        let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
+        for i in start..end {
+            top.reset();
+            let q = points.row(i);
+            for tree in &self.trees {
+                tree.knn_accumulate(points, q, i as u32, &mut top);
+            }
+            top.drain_sorted_into(&mut scratch);
+            debug_assert_eq!(scratch.len(), k);
+            let o = i - start;
+            for (slot, &(d, j)) in scratch.iter().enumerate() {
+                indices[o * k + slot] = j;
+                dists[o * k + slot] = d;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+    use crate::knn::knn_brute;
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    #[test]
+    fn forest_byte_identical_to_brute() {
+        let ds = gaussian_mixture_paper(900, 91);
+        let oracle = knn_brute(&ds.points, 5).unwrap();
+        let pool = WorkerPool::new(2);
+        for shards in [1usize, 2, 3, 7] {
+            let mut forest = KdForest::new();
+            forest.rebuild(&ds.points, shards, &pool);
+            assert_eq!(forest.shards(), shards);
+            let mut out = KnnLists::default();
+            forest.knn_all_into(&ds.points, 5, &mut out).unwrap();
+            assert_eq!(out.indices, oracle.indices, "shards={shards}");
+            assert_eq!(bits(&out.dists), bits(&oracle.dists), "shards={shards}");
+        }
+    }
+
+    #[test]
+    fn pooled_queries_match_serial_for_any_worker_count() {
+        let ds = gaussian_mixture_paper(3000, 92);
+        let build_pool = WorkerPool::new(2);
+        let mut forest = KdForest::new();
+        forest.rebuild(&ds.points, 4, &build_pool);
+        let mut serial = KnnLists::default();
+        forest.knn_all_into(&ds.points, 4, &mut serial).unwrap();
+        for workers in [1usize, 3] {
+            let pool = WorkerPool::new(workers);
+            let mut pooled = KnnLists::default();
+            forest.knn_all_pool_into(&ds.points, 4, &pool, &mut pooled).unwrap();
+            assert_eq!(serial.indices, pooled.indices, "workers={workers}");
+            assert_eq!(bits(&serial.dists), bits(&pooled.dists), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn rebuild_reuse_never_leaks_stale_state() {
+        // Alternate between two datasets of different sizes on one
+        // forest: every rebuild must give oracle-identical answers.
+        let big = gaussian_mixture_paper(2000, 93);
+        let small = gaussian_mixture_paper(700, 94);
+        let pool = WorkerPool::new(2);
+        let mut forest = KdForest::new();
+        let mut out = KnnLists::default();
+        for ds in [&big, &small, &big] {
+            forest.rebuild(&ds.points, 3, &pool);
+            forest.knn_all_into(&ds.points, 4, &mut out).unwrap();
+            let oracle = knn_brute(&ds.points, 4).unwrap();
+            assert_eq!(out.indices, oracle.indices);
+            assert_eq!(bits(&out.dists), bits(&oracle.dists));
+        }
+    }
+
+    #[test]
+    fn more_shards_than_rows_clamps() {
+        let ds = gaussian_mixture_paper(40, 95);
+        let pool = WorkerPool::new(2);
+        let mut forest = KdForest::new();
+        forest.rebuild(&ds.points, 64, &pool);
+        assert_eq!(forest.shards(), 40);
+        let mut out = KnnLists::default();
+        forest.knn_all_into(&ds.points, 3, &mut out).unwrap();
+        let oracle = knn_brute(&ds.points, 3).unwrap();
+        assert_eq!(out.indices, oracle.indices);
+    }
+
+    #[test]
+    fn rejects_degenerate_k() {
+        let ds = gaussian_mixture_paper(10, 96);
+        let pool = WorkerPool::new(1);
+        let mut forest = KdForest::new();
+        forest.rebuild(&ds.points, 2, &pool);
+        let mut out = KnnLists::default();
+        assert!(forest.knn_all_into(&ds.points, 0, &mut out).is_err());
+        assert!(forest.knn_all_into(&ds.points, 10, &mut out).is_err());
+        assert!(forest.knn_all_into(&ds.points, 11, &mut out).is_err());
+    }
+}

@@ -8,6 +8,22 @@
 
 use super::KnnLists;
 
+/// Reusable scratch for [`NeighborGraph::rebuild_from_knn`]: the
+/// directed edge list and the cursor/row-sort buffers the CSR build
+/// needs. The one-shot [`NeighborGraph::from_knn`] allocated these per
+/// call — which in the ITIS loop meant per level;
+/// [`crate::itis::ItisWorkspace`] now holds one scratch (plus the graph
+/// itself) so graph construction stops allocating once warm.
+#[derive(Clone, Debug, Default)]
+pub struct GraphScratch {
+    /// Canonicalized (`i < j`) directed edges, pre-dedup.
+    edges: Vec<(u32, u32, f32)>,
+    /// Per-vertex write cursor while scattering CSR rows.
+    cursor: Vec<u32>,
+    /// Single-row sort buffer.
+    row: Vec<(u32, f32)>,
+}
+
 /// Undirected graph in compressed-sparse-row form.
 #[derive(Clone, Debug)]
 pub struct NeighborGraph {
@@ -19,13 +35,33 @@ pub struct NeighborGraph {
     weights: Vec<f32>,
 }
 
+impl Default for NeighborGraph {
+    /// Empty graph (zero vertices) — the state a workspace slot holds
+    /// before its first [`Self::rebuild_from_knn`].
+    fn default() -> Self {
+        Self { offsets: vec![0], targets: Vec::new(), weights: Vec::new() }
+    }
+}
+
 impl NeighborGraph {
-    /// Symmetrize directed k-NN lists into `NG_k`.
+    /// Symmetrize directed k-NN lists into `NG_k` (one-shot; allocates).
     pub fn from_knn(knn: &KnnLists) -> Self {
+        let mut g = Self::default();
+        g.rebuild_from_knn(knn, &mut GraphScratch::default());
+        g
+    }
+
+    /// Rebuild this graph in place from directed k-NN lists, reusing
+    /// both the graph's CSR buffers and `scratch` across calls. The
+    /// result is identical to [`Self::from_knn`]; only the allocation
+    /// behavior differs.
+    pub fn rebuild_from_knn(&mut self, knn: &KnnLists, scratch: &mut GraphScratch) {
         let n = knn.len();
         let k = knn.k;
         // Collect both directions, dedup (i<j canonical), then build CSR.
-        let mut edges: Vec<(u32, u32, f32)> = Vec::with_capacity(n * k);
+        let edges = &mut scratch.edges;
+        edges.clear();
+        edges.reserve(n * k);
         for i in 0..n {
             let nbrs = knn.neighbors(i);
             let ds = knn.distances(i);
@@ -37,43 +73,48 @@ impl NeighborGraph {
         edges.sort_unstable_by(|x, y| x.0.cmp(&y.0).then(x.1.cmp(&y.1)));
         edges.dedup_by(|a, b| a.0 == b.0 && a.1 == b.1);
 
-        let mut degree = vec![0u32; n];
-        for &(a, b, _) in &edges {
-            degree[a as usize] += 1;
-            degree[b as usize] += 1;
+        // Count degrees straight into the (shifted) offsets, prefix-sum.
+        self.offsets.clear();
+        self.offsets.resize(n + 1, 0);
+        for &(a, b, _) in edges.iter() {
+            self.offsets[a as usize + 1] += 1;
+            self.offsets[b as usize + 1] += 1;
         }
-        let mut offsets = vec![0u32; n + 1];
         for i in 0..n {
-            offsets[i + 1] = offsets[i] + degree[i];
+            self.offsets[i + 1] += self.offsets[i];
         }
-        let m = offsets[n] as usize;
-        let mut targets = vec![0u32; m];
-        let mut weights = vec![0f32; m];
-        let mut cursor: Vec<u32> = offsets[..n].to_vec();
-        for &(a, b, d) in &edges {
-            let ca = cursor[a as usize] as usize;
-            targets[ca] = b;
-            weights[ca] = d;
-            cursor[a as usize] += 1;
-            let cb = cursor[b as usize] as usize;
-            targets[cb] = a;
-            weights[cb] = d;
-            cursor[b as usize] += 1;
+        let m = self.offsets[n] as usize;
+        self.targets.clear();
+        self.targets.resize(m, 0);
+        self.weights.clear();
+        self.weights.resize(m, 0.0);
+        scratch.cursor.clear();
+        scratch.cursor.extend_from_slice(&self.offsets[..n]);
+        for &(a, b, d) in edges.iter() {
+            let ca = scratch.cursor[a as usize] as usize;
+            self.targets[ca] = b;
+            self.weights[ca] = d;
+            scratch.cursor[a as usize] += 1;
+            let cb = scratch.cursor[b as usize] as usize;
+            self.targets[cb] = a;
+            self.weights[cb] = d;
+            scratch.cursor[b as usize] += 1;
         }
         // Rows come out sorted because edges were sorted by (a, b) and
         // reverse edges are appended in increasing a — but not guaranteed
         // for the reverse direction; sort each row for determinism.
         for i in 0..n {
-            let (s, e) = (offsets[i] as usize, offsets[i + 1] as usize);
-            let mut row: Vec<(u32, f32)> =
-                targets[s..e].iter().copied().zip(weights[s..e].iter().copied()).collect();
-            row.sort_unstable_by_key(|&(t, _)| t);
-            for (slot, (t, w)) in row.into_iter().enumerate() {
-                targets[s + slot] = t;
-                weights[s + slot] = w;
+            let (s, e) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+            scratch.row.clear();
+            scratch
+                .row
+                .extend(self.targets[s..e].iter().copied().zip(self.weights[s..e].iter().copied()));
+            scratch.row.sort_unstable_by_key(|&(t, _)| t);
+            for (slot, &(t, w)) in scratch.row.iter().enumerate() {
+                self.targets[s + slot] = t;
+                self.weights[s + slot] = w;
             }
         }
-        Self { offsets, targets, weights }
     }
 
     /// Number of vertices.
@@ -201,6 +242,27 @@ mod tests {
         let g = NeighborGraph::from_knn(&knn);
         for i in 0..300 {
             assert!(g.degree(i) >= k, "degree({i}) = {}", g.degree(i));
+        }
+    }
+
+    #[test]
+    fn rebuild_reuse_matches_from_knn() {
+        // One graph + scratch recycled across differently-sized inputs
+        // must equal a fresh from_knn every time (stale CSR/edge-list
+        // contents must never leak into the next build).
+        let mut g = NeighborGraph::default();
+        let mut scratch = GraphScratch::default();
+        assert_eq!(g.len(), 0);
+        for (n, k, seed) in [(250usize, 4usize, 44u64), (120, 2, 45), (250, 4, 44)] {
+            let ds = gaussian_mixture_paper(n, seed);
+            let knn = knn_brute(&ds.points, k).unwrap();
+            g.rebuild_from_knn(&knn, &mut scratch);
+            let fresh = NeighborGraph::from_knn(&knn);
+            assert_eq!(g.len(), fresh.len());
+            for i in 0..n {
+                assert_eq!(g.neighbors(i), fresh.neighbors(i), "row {i}");
+                assert_eq!(g.weights(i), fresh.weights(i), "row {i}");
+            }
         }
     }
 

@@ -25,7 +25,7 @@
 use super::{KnnLists, TopK};
 use crate::coordinator::WorkerPool;
 use crate::linalg::{sq_dist, Matrix};
-use crate::{Error, Result};
+use crate::Result;
 
 /// Arena node: either an internal split or a leaf range into `perm`.
 /// The node's bounding box lives at `bboxes[node_id * 2d ..]`.
@@ -212,6 +212,7 @@ fn merge_plan(
 }
 
 /// An immutable k-d tree over the rows of a [`Matrix`].
+#[derive(Debug)]
 pub struct KdTree {
     nodes: Vec<Node>,
     /// `lo[d] ++ hi[d]` per node, indexed by node id.
@@ -221,6 +222,15 @@ pub struct KdTree {
     root: u32,
     dim: usize,
     leaf_size: usize,
+}
+
+impl Default for KdTree {
+    /// Empty placeholder over zero rows — the state a
+    /// [`super::forest::KdForest`] slot holds before its first
+    /// [`Self::rebuild_range`]. Queries on it find nothing.
+    fn default() -> Self {
+        Self::build(&Matrix::zeros(0, 0))
+    }
 }
 
 impl KdTree {
@@ -318,6 +328,62 @@ impl KdTree {
         self.leaf_size
     }
 
+    /// Number of rows this tree indexes.
+    pub fn len(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// True when the tree indexes no rows.
+    pub fn is_empty(&self) -> bool {
+        self.perm.is_empty()
+    }
+
+    /// Rebuild this tree in place over the **global** row range
+    /// `[start, end)` of `points`, reusing the node/box/permutation
+    /// arenas from the previous build (capacities only grow). This is the
+    /// construction unit [`super::forest::KdForest`] parallelizes: the
+    /// permutation holds global row ids, so query results need no index
+    /// translation, and the recursion is the exact serial
+    /// [`Self::build_with_leaf_size`] algorithm — the tree over
+    /// `[start, end)` is identical however many sibling shards build
+    /// concurrently.
+    pub fn rebuild_range(&mut self, points: &Matrix, start: usize, end: usize, leaf_size: usize) {
+        debug_assert!(start <= end && end <= points.rows());
+        let d = points.cols();
+        let leaf_size = leaf_size.max(1);
+        self.nodes.clear();
+        self.bboxes.clear();
+        self.perm.clear();
+        self.perm.extend(start as u32..end as u32);
+        self.dim = d;
+        self.leaf_size = leaf_size;
+        self.root = if start == end {
+            push_arena_node(
+                &mut self.nodes,
+                &mut self.bboxes,
+                d,
+                Node::Leaf { start: 0, end: 0 },
+                &[f32::INFINITY],
+                &[f32::NEG_INFINITY],
+            )
+        } else {
+            build_arena(points, &mut self.perm, 0, leaf_size, &mut self.nodes, &mut self.bboxes)
+        };
+    }
+
+    /// Push this tree's candidates for query `q` into an existing
+    /// [`TopK`] collector (self-exclusion via `exclude`; `u32::MAX`
+    /// keeps all). [`super::forest::KdForest`] merges per-shard
+    /// candidates through one collector this way: the shared
+    /// `(distance, index)` total order makes the merged result identical
+    /// to a single tree over the union of the shards, and an already
+    /// part-filled collector tightens the pruning bound for later
+    /// shards.
+    pub fn knn_accumulate(&self, points: &Matrix, q: &[f32], exclude: u32, top: &mut TopK) {
+        debug_assert_eq!(q.len(), self.dim);
+        self.search(points, q, exclude, self.root, top);
+    }
+
     /// Minimum squared distance from `q` to a node's bounding box.
     #[inline]
     fn bbox_min_dist(&self, node: u32, q: &[f32]) -> f32 {
@@ -391,9 +457,7 @@ impl KdTree {
     /// [`Self::knn_all`] writing into a reusable output buffer.
     pub fn knn_all_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
         let n = points.rows();
-        if k == 0 || k >= n {
-            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-        }
+        super::validate_k(n, k)?;
         out.reset(n, k);
         let mut top = TopK::new(k);
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
@@ -423,9 +487,7 @@ impl KdTree {
         out: &mut KnnLists,
     ) -> Result<()> {
         let n = points.rows();
-        if k == 0 || k >= n {
-            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-        }
+        super::validate_k(n, k)?;
         out.reset(n, k);
         const CHUNK: usize = 512;
         let KnnLists { indices, dists, .. } = out;
@@ -452,9 +514,7 @@ impl KdTree {
         end: usize,
     ) -> Result<KnnLists> {
         let n = points.rows();
-        if k == 0 || k >= n {
-            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-        }
+        super::validate_k(n, k)?;
         assert!(start <= end && end <= n);
         let m = end - start;
         let mut out = KnnLists { k, indices: vec![0u32; m * k], dists: vec![0f32; m * k] };
@@ -477,9 +537,7 @@ impl KdTree {
         dists: &mut [f32],
     ) -> Result<()> {
         let n = points.rows();
-        if k == 0 || k >= n {
-            return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-        }
+        super::validate_k(n, k)?;
         assert!(start <= end && end <= n);
         let m = end - start;
         assert_eq!(indices.len(), m * k);
@@ -660,6 +718,25 @@ mod tests {
         for i in 0..150 {
             assert_eq!(all.neighbors(100 + i), mid.neighbors(i));
         }
+    }
+
+    #[test]
+    fn rebuild_range_matches_fresh_build() {
+        let ds = gaussian_mixture_paper(1200, 38);
+        let mut tree = KdTree::default();
+        tree.rebuild_range(&ds.points, 0, 1200, 12);
+        let fresh = KdTree::build(&ds.points);
+        assert_eq!(tree.perm, fresh.perm);
+        let a = tree.knn_all(&ds.points, 4).unwrap();
+        let b = fresh.knn_all(&ds.points, 4).unwrap();
+        assert_eq!(a.indices, b.indices);
+        // Arena reuse on a smaller, offset range must not leak stale
+        // state, and leaves must keep global row ids.
+        tree.rebuild_range(&ds.points, 100, 500, 12);
+        assert_eq!(tree.len(), 400);
+        let res = tree.knn_query(&ds.points, ds.points.row(0), 3, u32::MAX);
+        assert_eq!(res.len(), 3);
+        assert!(res.iter().all(|&(_, j)| (100u32..500).contains(&j)));
     }
 
     #[test]

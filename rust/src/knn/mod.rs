@@ -6,6 +6,9 @@
 //! * [`knn_brute`] — exact `O(n²·d)`, the baseline and oracle.
 //! * [`kdtree::KdTree`] — exact `O(k·n·log n)` for the low-dimensional
 //!   covariate spaces the paper targets (d ≤ 8 after PCA).
+//! * [`forest::KdForest`] — the kd-tree regime sharded: one tree per
+//!   contiguous row shard, built in parallel, queried with merged
+//!   candidates ([`knn_auto_sharded_into`], config knob `knn_shards`).
 //! * [`knn_chunked`] — exact, block-tiled queries×references evaluation
 //!   driven through an arbitrary chunk evaluator; this is the entry point
 //!   the PJRT runtime plugs its AOT pairwise-distance executable into, and
@@ -31,6 +34,7 @@
 //! symmetrizes into the CSR adjacency TC consumes (Definition 6: the edge
 //! `ij` exists iff `j` is one of `i`'s k nearest **or** `i` one of `j`'s).
 
+pub mod forest;
 pub mod graph;
 pub mod kdtree;
 
@@ -91,6 +95,17 @@ impl KnnLists {
         self.dists.clear();
         self.dists.resize(n * k, 0.0);
     }
+}
+
+/// Shared argument check for every k-NN entry point: `0 < k < n`. One
+/// helper, one error message — the backends (brute, kd-tree, forest,
+/// chunked, pooled) must reject degenerate workloads identically.
+#[inline]
+pub(crate) fn validate_k(n: usize, k: usize) -> Result<()> {
+    if k == 0 || k >= n {
+        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
+    }
+    Ok(())
 }
 
 /// Total order on k-NN candidates: `a` is *worse* than `b` when it is
@@ -200,9 +215,7 @@ impl TopK {
 /// baseline in the complexity benches.
 pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
     let n = points.rows();
-    if k == 0 || k >= n {
-        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-    }
+    validate_k(n, k)?;
     let mut indices = vec![0u32; n * k];
     let mut dists = vec![0f32; n * k];
     for i in 0..n {
@@ -396,9 +409,7 @@ pub fn knn_chunked_into(
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
-    if k == 0 || k >= n {
-        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-    }
+    validate_k(n, k)?;
     let q_block = q_block.max(1);
     let r_block = r_block.max(1);
     out.reset(n, k);
@@ -463,16 +474,14 @@ pub fn knn_chunked_pool_into(
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
-    if k == 0 || k >= n {
-        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-    }
+    validate_k(n, k)?;
     let q_block = q_block.max(1);
     let r_block = r_block.max(1);
     out.reset(n, k);
     // Task size: a whole number of q_blocks, ~4 tasks per worker.
-    let total_blocks = (n + q_block - 1) / q_block;
+    let total_blocks = n.div_ceil(q_block);
     let target_tasks = pool.workers() * 4;
-    let blocks_per_task = ((total_blocks + target_tasks - 1) / target_tasks).max(1);
+    let blocks_per_task = total_blocks.div_ceil(target_tasks).max(1);
     let task_rows = blocks_per_task * q_block;
     let KnnLists { indices, dists, .. } = out;
     let tasks: Vec<(usize, &mut [u32], &mut [f32])> = indices
@@ -541,11 +550,9 @@ pub fn knn_auto_into(
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
-    if k == 0 || k >= n {
-        return Err(Error::InvalidArgument(format!("need 0 < k < n (k={k}, n={n})")));
-    }
+    validate_k(n, k)?;
     let parallel = n >= PARALLEL_QUERY_MIN && pool.workers() > 1;
-    if points.cols() <= 12 && n > 256 {
+    if kdtree_regime(points) {
         let tree = if n >= PARALLEL_BUILD_MIN && pool.workers() > 1 {
             kdtree::KdTree::build_parallel(points, pool)
         } else {
@@ -561,6 +568,61 @@ pub fn knn_auto_into(
     } else {
         knn_chunked_into(points, k, 256, 1024, &NativeChunks::default(), out)
     }
+}
+
+/// The backend-routing predicate shared by [`knn_auto_into`] and
+/// [`knn_auto_sharded_into`]: kd-trees win for the paper's
+/// low-dimensional post-PCA spaces on non-tiny inputs; otherwise the
+/// blocked norm-trick chunked kernel takes over. One predicate, two
+/// dispatchers — so retuning the thresholds can never make the sharded
+/// and single-tree paths route the same workload differently.
+#[inline]
+fn kdtree_regime(points: &Matrix) -> bool {
+    points.cols() <= 12 && points.rows() > 256
+}
+
+/// [`knn_auto_into`] with a sharded kd-forest backend. When `shards > 1`
+/// and the workload is in the kd-tree regime (the same [`kdtree_regime`]
+/// routing as [`knn_auto_into`]), `forest` is rebuilt over `shards`
+/// contiguous row shards — construction parallel across shards, tree
+/// arenas reused across calls — and queried with merged per-shard
+/// candidates, which is byte-identical to both the single-tree path and
+/// [`knn_brute`]. With `shards <= 1`, or outside the kd-tree regime,
+/// this is exactly [`knn_auto_into`] and `forest` is left untouched —
+/// so `knn_shards: 1` cannot perturb existing output bytes.
+pub fn knn_auto_sharded_into(
+    points: &Matrix,
+    k: usize,
+    shards: usize,
+    pool: &WorkerPool,
+    forest: &mut forest::KdForest,
+    out: &mut KnnLists,
+) -> Result<()> {
+    let n = points.rows();
+    validate_k(n, k)?;
+    if shards <= 1 || !kdtree_regime(points) {
+        return knn_auto_into(points, k, pool, out);
+    }
+    forest.rebuild(points, shards, pool);
+    if n >= PARALLEL_QUERY_MIN && pool.workers() > 1 {
+        forest.knn_all_pool_into(points, k, pool, out)
+    } else {
+        forest.knn_all_into(points, k, out)
+    }
+}
+
+/// Allocating convenience over [`knn_auto_sharded_into`] for one-shot
+/// callers and tests (throwaway forest and output buffers).
+pub fn knn_auto_sharded(
+    points: &Matrix,
+    k: usize,
+    shards: usize,
+    pool: &WorkerPool,
+) -> Result<KnnLists> {
+    let mut forest = forest::KdForest::new();
+    let mut out = KnnLists::default();
+    knn_auto_sharded_into(points, k, shards, pool, &mut forest, &mut out)?;
+    Ok(out)
 }
 
 #[cfg(test)]

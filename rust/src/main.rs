@@ -124,9 +124,11 @@ fn run_cmd(args: &Args) -> Result<()> {
     let cfg = match args.get("config") {
         Some(path) => PipelineConfig::from_file(path)?,
         None => {
-            let mut cfg = PipelineConfig::default();
-            cfg.source = ihtc::config::DataSource::PaperMixture {
-                n: args.get_usize("n", 100_000)?,
+            let mut cfg = PipelineConfig {
+                source: ihtc::config::DataSource::PaperMixture {
+                    n: args.get_usize("n", 100_000)?,
+                },
+                ..Default::default()
             };
             if let Some(name) = args.get("dataset") {
                 if name != "gmm" {

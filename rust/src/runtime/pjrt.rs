@@ -1,5 +1,6 @@
 //! Real PJRT runtime implementation (requires the `xla` bindings crate;
-//! compiled only with `--features pjrt`). See the parent module docs.
+//! compiled only with `--features pjrt-runtime` after adding `xla` to
+//! `[dependencies]`). See the parent module docs.
 
 use super::{TileGeometry, MASK_BIG};
 use crate::cluster::kmeans::AssignBackend;

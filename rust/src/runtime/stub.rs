@@ -1,6 +1,8 @@
-//! API-compatible stand-in for the PJRT runtime, compiled when the
-//! `pjrt` feature is off (the default — the `xla` bindings crate is not
-//! available in the offline build environment).
+//! API-compatible stand-in for the PJRT runtime, compiled whenever the
+//! `pjrt-runtime` feature is off (the default — the `xla` bindings crate
+//! is not available in the offline build environment). The plain `pjrt`
+//! feature compiles the PJRT-gated surface against this stub, which is
+//! what CI's feature-matrix job builds.
 //!
 //! Every entry point exists with the real signature so callers compile
 //! unchanged; [`Engine::load`] fails with [`crate::Error::Runtime`] and

@@ -1,0 +1,161 @@
+//! Sharded kd-forest parity property suite: for every tested
+//! `knn_shards ∈ {1, 2, 4} × workers ∈ {1, 2, 4}` combination, the
+//! forest must produce **byte-identical** `KnnLists` to the `knn_brute`
+//! oracle, and `knn_shards: 1` must be byte-identical to the single-tree
+//! path. This pins down the tentpole contract: shard boundaries depend
+//! only on `(n, s)`, per-shard trees are exact, and candidates merge
+//! through the shared `(distance, index)` total order — so sharding and
+//! pooling can only change wall-clock, never output bytes. The final
+//! test drives the streaming coordinator end-to-end across shard counts.
+
+use ihtc::config::{DataSource, PipelineConfig};
+use ihtc::coordinator::{driver, WorkerPool};
+use ihtc::data::synth::gaussian_mixture_paper;
+use ihtc::itis::PrototypeKind;
+use ihtc::knn::forest::KdForest;
+use ihtc::knn::{knn_auto_sharded, knn_auto_sharded_into, knn_auto_with, knn_brute, KnnLists};
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+fn assert_identical(got: &KnnLists, oracle: &KnnLists, what: &str) {
+    assert_eq!(got.k, oracle.k, "{what}: k");
+    assert_eq!(got.indices, oracle.indices, "{what}: neighbor indices");
+    assert_eq!(bits(&got.dists), bits(&oracle.dists), "{what}: distance bits");
+}
+
+#[test]
+fn forest_byte_identical_to_brute_across_shards_and_workers() {
+    // n spans the serial/parallel query routing threshold (2048); k
+    // spans t*−1 for small and large thresholds.
+    for &(n, k) in &[(700usize, 3usize), (2600, 2), (2600, 7)] {
+        let ds = gaussian_mixture_paper(n, 0xF0E5 + (n + k) as u64);
+        let oracle = knn_brute(&ds.points, k).unwrap();
+        for shards in [1usize, 2, 4] {
+            for workers in [1usize, 2, 4] {
+                let pool = WorkerPool::new(workers);
+                let got = knn_auto_sharded(&ds.points, k, shards, &pool).unwrap();
+                assert_identical(
+                    &got,
+                    &oracle,
+                    &format!("n={n} k={k} shards={shards} workers={workers}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn shards_one_byte_identical_to_single_tree_path() {
+    let ds = gaussian_mixture_paper(3000, 0xA11CE);
+    for workers in [1usize, 2, 4] {
+        let pool = WorkerPool::new(workers);
+        let single = knn_auto_with(&ds.points, 4, &pool).unwrap();
+        let sharded = knn_auto_sharded(&ds.points, 4, 1, &pool).unwrap();
+        assert_identical(&sharded, &single, &format!("workers={workers}"));
+    }
+}
+
+#[test]
+fn forest_handles_duplicate_ties_identically() {
+    // Heavy exact-tie workload: 60% duplicated points, with duplicates
+    // straddling shard boundaries. Ties are where nondeterminism would
+    // hide; the shared candidate order must keep every shard count
+    // identical to the oracle.
+    let n = 1500;
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        if i % 5 < 3 {
+            data.push(1.25f32);
+            data.push(-0.5f32);
+        } else {
+            data.push((i % 97) as f32 * 0.1);
+            data.push((i % 89) as f32 * 0.2);
+        }
+    }
+    let m = ihtc::linalg::Matrix::from_vec(data, n, 2).unwrap();
+    let oracle = knn_brute(&m, 4).unwrap();
+    for shards in [1usize, 2, 4] {
+        for workers in [1usize, 2, 4] {
+            let pool = WorkerPool::new(workers);
+            let got = knn_auto_sharded(&m, 4, shards, &pool).unwrap();
+            assert_identical(&got, &oracle, &format!("dups shards={shards} workers={workers}"));
+        }
+    }
+}
+
+#[test]
+fn degenerate_k_rejected_and_shards_clamped() {
+    // n ≤ k and k = 0 are errors on every backend, forest included.
+    let tiny = gaussian_mixture_paper(5, 0xD0D0);
+    let pool = WorkerPool::new(2);
+    let mut forest = KdForest::new();
+    let mut out = KnnLists::default();
+    for k in [0usize, 5, 7] {
+        assert!(
+            knn_auto_sharded_into(&tiny.points, k, 4, &pool, &mut forest, &mut out).is_err(),
+            "k={k} must be rejected"
+        );
+    }
+    // More shards than rows clamps to one row per shard and stays exact.
+    let ds = gaussian_mixture_paper(40, 0xD0D1);
+    forest.rebuild(&ds.points, 64, &pool);
+    assert_eq!(forest.shards(), 40);
+    forest.knn_all_into(&ds.points, 3, &mut out).unwrap();
+    let oracle = knn_brute(&ds.points, 3).unwrap();
+    assert_identical(&out, &oracle, "clamped shards");
+}
+
+#[test]
+fn forest_workspace_reuse_across_levels_is_clean() {
+    // Mimic the ITIS loop: one forest + output buffer reused across
+    // shrinking levels must stay oracle-identical at every level.
+    let pool = WorkerPool::new(2);
+    let mut forest = KdForest::new();
+    let mut out = KnnLists::default();
+    for (n, seed) in [(2600usize, 7u64), (1100, 8), (400, 9)] {
+        let ds = gaussian_mixture_paper(n, seed);
+        knn_auto_sharded_into(&ds.points, 3, 4, &pool, &mut forest, &mut out).unwrap();
+        let oracle = knn_brute(&ds.points, 3).unwrap();
+        assert_identical(&out, &oracle, &format!("level n={n}"));
+    }
+}
+
+fn driver_config(n: usize, streaming: bool, knn_shards: usize) -> PipelineConfig {
+    let prototype =
+        if streaming { PrototypeKind::WeightedCentroid } else { PrototypeKind::Centroid };
+    PipelineConfig {
+        source: DataSource::PaperMixture { n },
+        streaming,
+        prototype,
+        workers: 2,
+        shard_size: 512,
+        knn_shards,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn materialized_driver_labels_identical_across_knn_shards() {
+    let (base, _) = driver::run(&driver_config(3000, false, 1)).unwrap();
+    for shards in [2usize, 4] {
+        let (got, report) = driver::run(&driver_config(3000, false, shards)).unwrap();
+        assert_eq!(base, got, "knn_shards={shards}");
+        assert_eq!(report.n, 3000);
+    }
+}
+
+#[test]
+fn streaming_driver_labels_identical_across_knn_shards() {
+    // End-to-end through the fused streaming ingest: every per-shard
+    // ShardReducer runs its level-0 k-NN on a kd-forest, and the resumed
+    // ITIS levels run on the coordinator's forest — final labels must be
+    // identical for every knn_shards value.
+    let (base, _) = driver::run(&driver_config(2500, true, 1)).unwrap();
+    for shards in [2usize, 4] {
+        let (got, report) = driver::run(&driver_config(2500, true, shards)).unwrap();
+        assert_eq!(base, got, "knn_shards={shards}");
+        assert_eq!(report.n, 2500);
+    }
+}

@@ -108,12 +108,14 @@ fn csv_source_round_trip_through_pipeline() {
     let data_path = dir.join("data.csv");
     let ds = gaussian_mixture_paper(1200, 1005);
     csv::write_csv(&ds, &data_path).unwrap();
-    let mut cfg = PipelineConfig::default();
-    cfg.source = ihtc::config::DataSource::Csv {
-        path: data_path.to_string_lossy().into_owned(),
-        label_column: Some(2),
+    let cfg = PipelineConfig {
+        source: ihtc::config::DataSource::Csv {
+            path: data_path.to_string_lossy().into_owned(),
+            label_column: Some(2),
+        },
+        workers: 2,
+        ..Default::default()
     };
-    cfg.workers = 2;
     let (_, report) = driver::run(&cfg).unwrap();
     assert_eq!(report.n, 1200);
     // Labels survived the CSV hop → accuracy computable and sane.
@@ -123,8 +125,13 @@ fn csv_source_round_trip_through_pipeline() {
 #[test]
 fn pipeline_error_paths() {
     // Missing CSV file.
-    let mut cfg = PipelineConfig::default();
-    cfg.source = ihtc::config::DataSource::Csv { path: "/no/such/file.csv".into(), label_column: None };
+    let cfg = PipelineConfig {
+        source: ihtc::config::DataSource::Csv {
+            path: "/no/such/file.csv".into(),
+            label_column: None,
+        },
+        ..Default::default()
+    };
     assert!(driver::run(&cfg).is_err());
     // Invalid config json.
     assert!(PipelineConfig::from_json("{not json").is_err());
@@ -156,9 +163,11 @@ fn duplicate_heavy_dataset_survives_full_stack() {
 
 #[test]
 fn seeded_runs_are_reproducible_end_to_end() {
-    let mut cfg = PipelineConfig::default();
-    cfg.source = ihtc::config::DataSource::PaperMixture { n: 3000 };
-    cfg.workers = 3;
+    let cfg = PipelineConfig {
+        source: ihtc::config::DataSource::PaperMixture { n: 3000 },
+        workers: 3,
+        ..Default::default()
+    };
     let (a1, _) = driver::run(&cfg).unwrap();
     let (a2, _) = driver::run(&cfg).unwrap();
     assert_eq!(a1, a2, "same seed + config must give identical clusterings");

@@ -34,7 +34,7 @@ fn fused_prototypes_match_two_pass_run() {
 
     let ds = gaussian_mixture_paper(5000, cfg.seed);
     let pool = WorkerPool::new(cfg.workers);
-    let provider = PoolKnnProvider { pool: &pool };
+    let provider = PoolKnnProvider { pool: &pool, shards: 1 };
     let mut ws = ItisWorkspace::new();
     let itis_cfg = ItisConfig {
         threshold: cfg.threshold,
@@ -70,7 +70,7 @@ fn fused_prototypes_match_two_pass_run() {
 fn reference_shards(n: usize, cfg: &PipelineConfig) -> Vec<ReducedShard> {
     let ds = gaussian_mixture_paper(n, cfg.seed);
     let pool = WorkerPool::new(cfg.workers);
-    let provider = PoolKnnProvider { pool: &pool };
+    let provider = PoolKnnProvider { pool: &pool, shards: 1 };
     let mut ws = ItisWorkspace::new();
     let itis_cfg = ItisConfig {
         threshold: cfg.threshold,

@@ -14,10 +14,11 @@ Usage:
     scripts/bench_diff.py ... --warn-only     # report, always exit 0
     scripts/bench_diff.py ... --seed-if-empty # copy current → empty baseline
 
-Besides the per-benchmark diff, the report includes a reduce-stage
-scaling section for the `stream/parallel_r{N}*` ingest benches: the
-speedup of every rN entry over its r1 sibling in the *current* run,
-flagging any parallel configuration that runs slower than single-stage.
+Besides the per-benchmark diff, the report includes scaling sections
+for the `stream/parallel_r{N}*` reduce-stage ingest benches and the
+`knn/forest_s{N}*` kd-forest shard benches: the speedup of every
+rN/sN entry over its r1/s1 sibling in the *current* run, flagging any
+sharded configuration that runs slower than its single-shard baseline.
 
 `--seed-if-empty` starts the perf trajectory on the first machine with a
 toolchain: when the baseline directory is missing or holds no
@@ -63,42 +64,52 @@ def fmt_bytes(b):
     return f"{b / 1e6:.2f}MB"
 
 
-PARALLEL_RE = re.compile(r"^(?P<family>.*?/parallel)_r(?P<r>\d+)(?P<rest>.*)$")
+# Bench families with a numbered scaling axis: reduce stages
+# (stream/parallel_r{N}_…) and kd-forest shards (knn/forest_s{N}_…).
+# Each pattern captures the axis letter so the report can label rows
+# r1/r2/… or s1/s2/… and compare against the axis-1 baseline.
+SCALING_RES = [
+    ("reduce-stage", re.compile(r"^(?P<family>.*?/parallel)_(?P<axis>r)(?P<x>\d+)(?P<rest>.*)$")),
+    ("kd-forest shard", re.compile(r"^(?P<family>.*?/forest)_(?P<axis>s)(?P<x>\d+)(?P<rest>.*)$")),
+]
 
 
 def scaling_report(current):
-    """Speedup of rN over r1 for every `…/parallel_r{N}…` bench family.
+    """Speedup of rN/sN over the r1/s1 sibling for every scaled family.
 
-    Returns the number of parallel configurations slower than their r1
-    sibling (a scaling regression within the current run — no baseline
-    needed).
+    Returns the number of scaled configurations slower than their
+    single-shard/stage sibling (a scaling regression within the current
+    run — no baseline needed).
     """
-    families = {}
-    for name, doc in current.items():
-        m = PARALLEL_RE.match(name)
-        if not m or not doc.get("median_ns"):
-            continue
-        key = m.group("family") + m.group("rest")
-        families.setdefault(key, {})[int(m.group("r"))] = doc["median_ns"]
     slower = 0
-    printed_header = False
-    for key, by_r in sorted(families.items()):
-        if by_r.get(1) is None or len(by_r) < 2:
-            continue
-        if not printed_header:
-            print("\nreduce-stage scaling (current run, speedup vs r1):")
-            printed_header = True
-        r1 = by_r[1]
-        for r in sorted(by_r):
-            if r == 1:
-                print(f"  {key:<44} r1  {fmt_ns(r1):>10}  1.00x")
+    for label, pattern in SCALING_RES:
+        families = {}
+        axis = "?"
+        for name, doc in current.items():
+            m = pattern.match(name)
+            if not m or not doc.get("median_ns"):
                 continue
-            speedup = r1 / by_r[r]
-            marker = ""
-            if speedup < 1.0:
-                marker = "  << SLOWER THAN r1"
-                slower += 1
-            print(f"  {key:<44} r{r:<2} {fmt_ns(by_r[r]):>10}  {speedup:.2f}x{marker}")
+            axis = m.group("axis")
+            key = m.group("family") + m.group("rest")
+            families.setdefault(key, {})[int(m.group("x"))] = doc["median_ns"]
+        printed_header = False
+        for key, by_x in sorted(families.items()):
+            if by_x.get(1) is None or len(by_x) < 2:
+                continue
+            if not printed_header:
+                print(f"\n{label} scaling (current run, speedup vs {axis}1):")
+                printed_header = True
+            base = by_x[1]
+            for x in sorted(by_x):
+                if x == 1:
+                    print(f"  {key:<44} {axis}1  {fmt_ns(base):>10}  1.00x")
+                    continue
+                speedup = base / by_x[x]
+                marker = ""
+                if speedup < 1.0:
+                    marker = f"  << SLOWER THAN {axis}1"
+                    slower += 1
+                print(f"  {key:<44} {axis}{x:<2} {fmt_ns(by_x[x]):>10}  {speedup:.2f}x{marker}")
     return slower
 
 
@@ -172,7 +183,7 @@ def main():
 
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
           f"{improvements} improvement(s), {len(missing)} missing, "
-          f"{slower} parallel config(s) slower than r1")
+          f"{slower} scaled config(s) slower than their r1/s1 baseline")
     if regressions and not args.warn_only:
         return 1
     return 0
