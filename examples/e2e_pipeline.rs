@@ -42,13 +42,15 @@ fn main() -> ihtc::Result<()> {
     let mut native_times: Vec<(usize, f64)> = Vec::new();
     for (bname, backend, bn) in &backends {
         for m in [0usize, 1, 2, 3] {
-            let mut cfg = PipelineConfig::default();
-            cfg.name = format!("e2e-{bname}-m{m}");
-            cfg.source = DataSource::PaperMixture { n: *bn };
-            cfg.iterations = m;
-            cfg.backend = *backend;
-            cfg.workers = 0; // auto
-            cfg.shard_size = 8_192;
+            let cfg = PipelineConfig {
+                name: format!("e2e-{bname}-m{m}"),
+                source: DataSource::PaperMixture { n: *bn },
+                iterations: m,
+                backend: *backend,
+                workers: 0, // auto
+                shard_size: 8_192,
+                ..Default::default()
+            };
             let t0 = std::time::Instant::now();
             ihtc::memtrack::reset_peak();
             let base = ihtc::memtrack::live_bytes();

@@ -63,9 +63,10 @@ fn main() -> ihtc::Result<()> {
     let single = single?;
     let secs_b = t0.elapsed().as_secs_f64();
 
+    let single_name = format!("single t*={}", alpha as usize);
     for (name, r, secs, peak) in [
         ("iterated t*=2", &iterated, secs_a, peak_a),
-        (&format!("single t*={}", alpha as usize), &single, secs_b, peak_b),
+        (single_name.as_str(), &single, secs_b, peak_b),
     ] {
         println!(
             "{name:<16} m={} prototypes={:>5} reduction=×{:>6.1} time={secs:>7.3}s \

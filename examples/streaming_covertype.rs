@@ -22,16 +22,18 @@ static ALLOC: ihtc::memtrack::CountingAllocator = ihtc::memtrack::CountingAlloca
 fn main() -> ihtc::Result<()> {
     // scale_div 8 → ~72k points: big enough that direct HAC (O(n²) memory
     // ≈ 10 GB) is genuinely out of reach, small enough for a demo run.
-    let mut cfg = PipelineConfig::default();
-    cfg.name = "covertype-hac".into();
-    cfg.source = DataSource::Analogue { name: "covertype".into(), scale_div: 8 };
-    cfg.standardize = true;
-    cfg.pca_variance = Some(0.99);
-    cfg.threshold = 2;
-    cfg.clusterer = FinalClusterer::Hac { k: 7, linkage: Linkage::Ward };
-    cfg.workers = 0;
-    cfg.shard_size = 4_096;
-    cfg.queue_capacity = 4;
+    let mut cfg = PipelineConfig {
+        name: "covertype-hac".into(),
+        source: DataSource::Analogue { name: "covertype".into(), scale_div: 8 },
+        standardize: true,
+        pca_variance: Some(0.99),
+        threshold: 2,
+        clusterer: FinalClusterer::Hac { k: 7, linkage: Linkage::Ward },
+        workers: 0,
+        shard_size: 4_096,
+        queue_capacity: 4,
+        ..Default::default()
+    };
 
     println!("Covertype-analogue through the streaming coordinator, HAC hybrid\n");
     for m in [3usize, 4, 5] {

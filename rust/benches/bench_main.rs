@@ -14,7 +14,8 @@
 
 use ihtc::cluster::hac::{hac, HacConfig, Linkage};
 use ihtc::cluster::kmeans::{kmeans_with_backend, KMeansConfig, NativeAssign};
-use ihtc::coordinator::{parallel_knn, WorkerPool};
+use ihtc::coordinator::parallel_knn;
+use ihtc::exec::Executor;
 use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use ihtc::data::Preprocess;
 use ihtc::hybrid::{FinalClusterer, Ihtc, IhtcWorkspace};
@@ -129,7 +130,7 @@ fn main() {
     b.run("micro/knn_kdtree_n1e5_k3", 3, || {
         KdTree::build(&ds_big.points).knn_all(&ds_big.points, 3).unwrap()
     });
-    let pool = WorkerPool::new(0);
+    let pool = Executor::new(0);
     b.run(
         &format!("micro/knn_parallel_n1e5_k3_w{}", pool.workers()),
         3,
@@ -150,7 +151,7 @@ fn main() {
     );
     // Sharded kd-forest: per-shard parallel construction + merged
     // queries. s=1 is the serial single-tree baseline; bench_diff.py
-    // reports the s1→sN scaling alongside the stream/parallel_r{N}
+    // reports the s1→sN scaling alongside the stream/shared_pool_r{N}
     // reduce-stage section. Output is byte-identical across s (and to
     // knn_brute), so only wall-clock and peak bytes move.
     for s in [1usize, 2, 4] {
@@ -344,16 +345,18 @@ fn main() {
             );
         }
 
-        // Parallel reduce stages: pure ingest throughput (the fused
-        // level-0 reduction is the bottleneck stage; N stages round-robin
-        // shards and the reorder buffer restores stream order, so output
-        // is byte-identical across r — only wall-clock moves).
-        // `scripts/bench_diff.py` reports the r1→rN scaling of these.
+        // Shared-executor reduce stages: pure ingest throughput (the
+        // fused level-0 reduction is the bottleneck stage; N stage
+        // threads submit into ONE work-stealing executor and the reorder
+        // buffer restores stream order, so output is byte-identical
+        // across r — only wall-clock moves). `scripts/bench_diff.py`
+        // reports the r1→rN scaling of these, plus the shared-vs-static
+        // section against any retired `stream/parallel_rN` baseline.
         for r in [1usize, 2, 4] {
             let mut cfg = stream_cfg(true);
-            cfg.name = format!("parallel_r{r}");
+            cfg.name = format!("shared_pool_r{r}");
             cfg.reduce_stages = r;
-            b.run(&format!("stream/parallel_r{r}_ingest_n1e6_t4"), 1, || {
+            b.run(&format!("stream/shared_pool_r{r}_ingest_n1e6_t4"), 1, || {
                 ihtc::coordinator::driver::ingest_streaming(&cfg).unwrap()
             });
         }

@@ -6,7 +6,7 @@
 //! Complexity `O(n·k·L·d)` time, `O((n+k)·d)` space — the quantities the
 //! paper's Table 1 measures with and without ITIS pre-processing.
 
-use crate::coordinator::WorkerPool;
+use crate::exec::Executor;
 use crate::linalg::{sq_dist, Matrix};
 use crate::rng::Xoshiro256;
 use crate::{Error, Result};
@@ -146,19 +146,19 @@ pub fn kmeans(points: &Matrix, config: &KMeansConfig) -> Result<KMeansResult> {
     kmeans_with_backend(points, None, config, &NativeAssign)
 }
 
-/// Pool-parallel k-means: the assignment + accumulation phase of every
-/// Lloyd iteration is sharded across the worker pool in fixed
+/// Executor-parallel k-means: the assignment + accumulation phase of
+/// every Lloyd iteration is sharded across the shared executor in fixed
 /// 8192-row parts whose partial sums merge in part order, so results are
 /// identical for any worker count (they may differ from the serial path
 /// in the last float bit — f64 accumulation is re-associated at part
-/// boundaries). Small inputs and single-worker pools fall through to the
-/// serial path.
+/// boundaries). Small inputs and single-worker executors fall through to
+/// the serial path.
 pub fn kmeans_pool<B: AssignBackend + Sync>(
     points: &Matrix,
     weights: Option<&[f32]>,
     config: &KMeansConfig,
     backend: &B,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut KMeansWorkspace,
 ) -> Result<KMeansResult> {
     let n = points.rows();
@@ -171,11 +171,11 @@ pub fn kmeans_pool<B: AssignBackend + Sync>(
             return Err(Error::Shape("weights vs points".into()));
         }
     }
-    if pool.workers() <= 1 || n < 2 * PART {
+    if exec.workers() <= 1 || n < 2 * PART {
         return kmeans_with_backend(points, weights, config, backend);
     }
     run_restarts(points, config, |centers| {
-        lloyd_pool(points, weights, centers, config, backend, pool, ws)
+        lloyd_pool(points, weights, centers, config, backend, exec, ws)
     })
 }
 
@@ -367,7 +367,8 @@ fn lloyd(
     Ok(KMeansResult { assignments, centers, wcss: prev_wcss, iterations })
 }
 
-/// One Lloyd run with the assignment phase sharded over the pool. Parts
+/// One Lloyd run with the assignment phase sharded over the executor.
+/// Parts
 /// are a fixed [`PART`] rows; each part owns its own accumulators from
 /// the workspace and partial results merge in part order, making the
 /// outcome independent of worker count and scheduling.
@@ -377,7 +378,7 @@ fn lloyd_pool<B: AssignBackend + Sync>(
     mut centers: Matrix,
     config: &KMeansConfig,
     backend: &B,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut KMeansWorkspace,
 ) -> Result<KMeansResult> {
     let n = points.rows();
@@ -413,7 +414,7 @@ fn lloyd_pool<B: AssignBackend + Sync>(
         {
             tasks.push((p * PART, a_chunk, s.as_mut_slice(), c.as_mut_slice()));
         }
-        let wcss_parts = pool.run_tasks(tasks, |(p0, a_chunk, s, c)| {
+        let wcss_parts = exec.run_tasks(tasks, |(p0, a_chunk, s, c)| {
             let np = a_chunk.len();
             backend.assign_block(points, weights, p0, np, centers_ref, a_chunk, s, c)
         })?;
@@ -550,9 +551,9 @@ mod tests {
         let serial = kmeans(&ds.points, &cfg).unwrap();
         let mut results = Vec::new();
         for workers in [2usize, 4] {
-            let pool = WorkerPool::new(workers);
+            let exec = Executor::new(workers);
             let mut ws = KMeansWorkspace::new();
-            let r = kmeans_pool(&ds.points, None, &cfg, &NativeAssign, &pool, &mut ws).unwrap();
+            let r = kmeans_pool(&ds.points, None, &cfg, &NativeAssign, &exec, &mut ws).unwrap();
             // Same objective up to part-boundary f64 reassociation.
             assert!(
                 (r.wcss - serial.wcss).abs() < 1e-6 * (1.0 + serial.wcss),

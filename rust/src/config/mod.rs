@@ -10,11 +10,18 @@
 pub mod json;
 
 use crate::cluster::hac::Linkage;
+use crate::exec::{ExecutorConfig, StealPolicy};
 use crate::hybrid::FinalClusterer;
 use crate::itis::PrototypeKind;
 use crate::tc::SeedOrder;
 use crate::{Error, Result};
 use json::Json;
+
+/// Sanity ceiling for the `workers` knob: the shared executor spawns
+/// `workers − 1` persistent threads, taken literally, so an absurd
+/// budget (a typo'd `100000`) must be a config error rather than an
+/// attempted hundred-thousand-thread spawn. Far above any real machine.
+const MAX_WORKERS: usize = 4096;
 
 /// Where the input data comes from.
 #[derive(Clone, Debug, PartialEq)]
@@ -99,6 +106,14 @@ pub struct PipelineConfig {
     /// before concatenation, so every value produces byte-identical
     /// output; values > 1 only change throughput. Must be ≥ 1.
     pub reduce_stages: usize,
+    /// Steal policy of the run's shared executor: which queued batch
+    /// idle workers serve first (`"fifo"`, the default, or `"lifo"`).
+    /// Scheduling-only — output bytes are identical under every policy.
+    pub steal: StealPolicy,
+    /// Reduce-stage fairness on the shared executor: cap how many tasks
+    /// a worker takes from one stage's batch before re-selecting, so no
+    /// stage starves its siblings (default true). Scheduling-only.
+    pub fair_stages: bool,
     /// Write the final assignment CSV here (optional).
     pub output: Option<String>,
 }
@@ -123,6 +138,8 @@ impl Default for PipelineConfig {
             queue_capacity: 4,
             streaming: false,
             reduce_stages: 1,
+            steal: StealPolicy::Fifo,
+            fair_stages: true,
             output: None,
         }
     }
@@ -205,6 +222,28 @@ impl PipelineConfig {
         if let Some(r) = j.opt_usize("reduce_stages")? {
             cfg.reduce_stages = r;
         }
+        if let Some(e) = j.get("executor") {
+            // The executor block groups the thread-team knobs; its
+            // `workers` is an alias for the top-level knob (the block
+            // wins when both are present).
+            if let Some(w) = e.opt_usize("workers")? {
+                cfg.workers = w;
+            }
+            if let Some(policy) = e.opt_str("steal")? {
+                cfg.steal = match policy {
+                    "fifo" => StealPolicy::Fifo,
+                    "lifo" => StealPolicy::Lifo,
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown executor steal policy '{other}' (fifo | lifo)"
+                        )))
+                    }
+                };
+            }
+            if let Some(fair) = e.opt_bool("fair_stages")? {
+                cfg.fair_stages = fair;
+            }
+        }
         if let Some(o) = j.opt_str("output")? {
             cfg.output = Some(o.to_string());
         }
@@ -219,6 +258,12 @@ impl PipelineConfig {
         Self::from_json(&text)
     }
 
+    /// The construction knobs for the run's shared executor — the one
+    /// thread team every parallel layer of this run submits into.
+    pub fn executor(&self) -> ExecutorConfig {
+        ExecutorConfig { workers: self.workers, steal: self.steal, fair_stages: self.fair_stages }
+    }
+
     /// Cross-field validation.
     pub fn validate(&self) -> Result<()> {
         if self.iterations > 0 && self.threshold < 2 {
@@ -229,6 +274,14 @@ impl PipelineConfig {
         }
         if self.shard_size == 0 {
             return Err(Error::Config("shard_size must be > 0".into()));
+        }
+        if self.workers > MAX_WORKERS {
+            return Err(Error::Config(format!(
+                "workers = {} exceeds the sanity ceiling of {MAX_WORKERS}: the executor spawns \
+                 `workers − 1` persistent OS threads, so a typo'd budget would exhaust the \
+                 process (use workers: 0 to size the team to the machine)",
+                self.workers
+            )));
         }
         if self.queue_capacity == 0 {
             return Err(Error::Config("queue_capacity must be > 0".into()));
@@ -248,6 +301,24 @@ impl PipelineConfig {
                 "reduce_stages = {} has no effect without streaming: true — the materialized \
                  path has no reduce fan-out (set streaming, or drop the knob)",
                 self.reduce_stages
+            )));
+        }
+        // Stages share ONE work-stealing executor (they no longer own
+        // thread teams), and each active stage occupies one compute
+        // thread as a submitter — so stages beyond the worker budget
+        // add threads without adding any parallel capacity (the team
+        // cannot serve more than `workers` stages at once). Reject that
+        // instead of silently oversubscribing. With workers: 0 the
+        // budget is resolved from the machine at run time, so the check
+        // cannot apply deterministically and is skipped.
+        if self.streaming && self.workers > 0 && self.reduce_stages > self.workers {
+            return Err(Error::Config(format!(
+                "reduce_stages = {} exceeds the executor's worker budget ({}): stages share one \
+                 work-stealing executor and each occupies a compute thread, so stages beyond \
+                 the budget only oversubscribe without adding parallel capacity — lower \
+                 reduce_stages, raise workers, or use workers: 0 to size the budget to the \
+                 machine",
+                self.reduce_stages, self.workers
             )));
         }
         if self.streaming {
@@ -451,6 +522,55 @@ mod tests {
         assert!(PipelineConfig::from_json(r#"{"knn_shards": "four"}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"knn_shards": 2.5}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"knn_shards": true}"#).is_err());
+    }
+
+    #[test]
+    fn executor_block_parses_and_validates() {
+        let cfg = PipelineConfig::from_json(
+            r#"{"executor": {"workers": 6, "steal": "lifo", "fair_stages": false}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.workers, 6);
+        assert_eq!(cfg.steal, StealPolicy::Lifo);
+        assert!(!cfg.fair_stages);
+        let ex = cfg.executor();
+        assert_eq!(ex.workers, 6);
+        assert_eq!(ex.steal, StealPolicy::Lifo);
+        assert!(!ex.fair_stages);
+        // Defaults.
+        let cfg = PipelineConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.steal, StealPolicy::Fifo);
+        assert!(cfg.fair_stages);
+        // Unknown policy and mistyped knobs are config errors, and so
+        // is an absurd thread budget (the executor takes it literally).
+        assert!(PipelineConfig::from_json(r#"{"executor": {"workers": 100000}}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"workers": 4096}"#).is_ok());
+        assert!(PipelineConfig::from_json(r#"{"executor": {"steal": "random"}}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"executor": {"fair_stages": "yes"}}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"executor": {"workers": "four"}}"#).is_err());
+    }
+
+    #[test]
+    fn reduce_stages_validated_against_worker_budget() {
+        // Stages share one executor and each occupies a compute thread:
+        // an explicit budget smaller than the stage count is a config
+        // error (extra stages would only oversubscribe)...
+        let err = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4, "workers": 2}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("budget"), "{err}");
+        // ...matching budgets are fine...
+        assert!(PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4, "workers": 4}"#,
+        )
+        .is_ok());
+        // ...and workers: 0 resolves at run time, so the check is
+        // skipped and any stage count is accepted.
+        assert!(PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 8}"#,
+        )
+        .is_ok());
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //!    pipeline while first/second moments are folded for standardization
 //!    and PCA (single pass; no second scan of the source).
 //! 2. **preprocess** — standardize + PCA transform, sharded across the
-//!    worker pool.
+//!    run's shared executor.
 //! 3. **reduce** — ITIS with the coordinator's k-NN backend (work-stealing
 //!    kd-tree shards, or the PJRT AOT artifact when `backend = "pjrt"`).
 //! 4. **cluster** — the configured final clusterer on the prototypes.
@@ -23,7 +23,8 @@
 //! The default materialized path is untouched and remains byte-identical.
 
 use super::pipeline::{collect, PipelineBuilder, ReducedShard, RowShard, StageMetrics};
-use super::{PoolKnnProvider, WorkerPool};
+use super::PoolKnnProvider;
+use crate::exec::Executor;
 use crate::cluster::kmeans::{self, NativeAssign};
 use crate::cluster::{dbscan, hac};
 use crate::config::{Backend, DataSource, PipelineConfig};
@@ -41,6 +42,7 @@ use crate::knn::KnnLists;
 use crate::linalg::{pca::Pca, Matrix};
 use crate::runtime::{Engine, PjrtAssign, PjrtChunks};
 use crate::{memtrack, Error, Result};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Timing + memory for one pipeline phase.
@@ -280,23 +282,81 @@ impl Moments {
             .map(|a| (self.cross[a * d + a] / n - means[a] * means[a]).max(0.0).sqrt())
             .collect()
     }
+
+    /// Sample covariance (`d × d`, row-major) of the folded rows,
+    /// derived exactly from the cross-moments:
+    /// `cov[a][b] = (Σ xₐx_b − n·μₐμ_b) / (n − 1)`. This is the same
+    /// matrix [`Pca::fit`] accumulates from the materialized rows — so
+    /// the streaming path gets the *full-data* PCA basis from its single
+    /// ingest pass, without a second scan and without the old
+    /// prototype-stream approximation. Requires `count ≥ 2`.
+    pub fn covariance(&self) -> Result<Vec<f64>> {
+        let d = self.sum.len();
+        if self.count < 2 {
+            return Err(Error::Data(format!(
+                "covariance needs ≥ 2 folded rows, have {}",
+                self.count
+            )));
+        }
+        let n = self.count as f64;
+        let means = self.means();
+        let mut cov = vec![0.0f64; d * d];
+        for a in 0..d {
+            for b in a..d {
+                let c = (self.cross[a * d + b] - n * means[a] * means[b]) / (n - 1.0);
+                cov[a * d + b] = c;
+                cov[b * d + a] = c;
+            }
+        }
+        Ok(cov)
+    }
 }
 
+/// The exact full-data PCA basis from streamed [`Moments`].
+///
+/// When `standardized` is set the prototypes being transformed have
+/// already been standardized with these same moments, so the basis must
+/// be fit in standardized coordinates: `cov'[a][b] = cov[a][b]/(sₐ·s_b)`
+/// (columns with ~zero spread stay unscaled, sharing
+/// [`STD_EPSILON`] with `standardize_with`), and the standardized
+/// means are exactly 0.
+fn pca_from_moments(moments: &Moments, standardized: bool) -> Result<Pca> {
+    let d = moments.sum.len();
+    let mut cov = moments.covariance()?;
+    if standardized {
+        let scale: Vec<f64> =
+            moments.stds().into_iter().map(|s| if s > STD_EPSILON { s } else { 1.0 }).collect();
+        for a in 0..d {
+            for b in 0..d {
+                cov[a * d + b] /= scale[a] * scale[b];
+            }
+        }
+        return Pca::from_covariance(vec![0.0; d], &cov);
+    }
+    Pca::from_covariance(moments.means(), &cov)
+}
+
+/// Columns whose population std is at or below this are treated as
+/// zero-spread and left unscaled — shared by [`standardize_with`] and
+/// [`pca_from_moments`], which MUST agree: the streaming PCA basis is
+/// fit in exactly the coordinates the standardized prototypes live in.
+const STD_EPSILON: f64 = 1e-12;
+
 /// Standardize in place using streaming moments (so no second stats pass).
-fn standardize_with(m: &mut Matrix, moments: &Moments, pool: &WorkerPool) -> Result<()> {
+fn standardize_with(m: &mut Matrix, moments: &Moments, exec: &Executor) -> Result<()> {
     let means = moments.means();
     let stds = moments.stds();
     let d = m.cols();
     let n = m.rows();
     // Sharded in-place transform: compute each shard into a fresh buffer.
-    let parts = pool.run_chunks(n, 16_384, |start, end| {
+    let parts = exec.run_chunks(n, 16_384, |start, end| {
         let mut buf = vec![0.0f32; (end - start) * d];
         for i in start..end {
             let row = m.row(i);
             for j in 0..d {
                 let c = row[j] as f64 - means[j];
                 buf[(i - start) * d + j] =
-                    if stds[j] > 1e-12 { (c / stds[j]) as f32 } else { c as f32 };
+                    if stds[j] > STD_EPSILON { (c / stds[j]) as f32 } else { c as f32 };
             }
         }
         Ok((start, buf))
@@ -393,16 +453,28 @@ fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
 ///
 /// The reduce stage fans out across `config.reduce_stages` concurrent
 /// stage threads (each owning its [`crate::itis::ShardReducer`]:
-/// one `WorkerPool` + `ItisWorkspace`, so buffers never cross threads),
-/// and a reorder stage keyed on `RowShard::offset` releases results
-/// strictly in stream order before concatenation. The ordering contract
-/// is enforced, not assumed: the collector tolerates arbitrary arrival
-/// order, but offsets must tile the stream — a gap, duplicate, or
-/// overlap is a hard [`Error::Coordinator`] in release builds. Because
-/// release order equals stream order and each shard's reduction is
-/// worker-count invariant, any `reduce_stages` value yields a
-/// byte-identical [`StreamedReduction`].
+/// a reusable `ItisWorkspace`, so buffers never cross threads), and a
+/// reorder stage keyed on `RowShard::offset` releases results strictly
+/// in stream order before concatenation. Stage threads are *task
+/// submitters* into the run's one shared work-stealing executor — the
+/// worker budget self-balances across stages (a stage that lands a hard
+/// shard pulls in the whole team) instead of being divided statically
+/// (`resolve_workers(workers) / reduce_stages` each, the retired
+/// scheme, which stranded threads on skewed shards and oversubscribed
+/// when `reduce_stages > workers`). The ordering contract is enforced,
+/// not assumed: the collector tolerates arbitrary arrival order, but
+/// offsets must tile the stream — a gap, duplicate, or overlap is a
+/// hard [`Error::Coordinator`] in release builds. Because release order
+/// equals stream order and each shard's reduction is worker-count
+/// invariant, any `reduce_stages` value yields a byte-identical
+/// [`StreamedReduction`].
 pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
+    ingest_streaming_on(config, &Arc::new(Executor::with_config(config.executor())))
+}
+
+/// [`ingest_streaming`] on the caller's shared executor (what
+/// [`run`] uses, so the whole streaming run is one thread team).
+fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<StreamedReduction> {
     let capacity = config.queue_capacity.max(1);
     let stages_n = config.reduce_stages.max(1);
     let produce = shard_source(config)?;
@@ -413,13 +485,10 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
         seed_order: config.seed_order,
         min_prototypes: 1,
     };
-    // The configured worker budget is *divided* across the reduce
-    // stages (floor, min 1): with workers=0 on an 8-core machine and
-    // reduce_stages=4, each stage gets a 1-thread pool instead of four
-    // stages × 7 threads fighting for 8 cores. Shard results are
-    // worker-count invariant, so the split never changes output bytes.
-    let workers = (super::resolve_workers(config.workers) / stages_n).max(1);
     let knn_shards = config.knn_shards.max(1);
+    // Every stage shares `exec`: stage states are built on the stage
+    // threads, so they take owning `Arc` handles to the one team.
+    let stage_exec = Arc::clone(exec);
     // Reorder bound: everything that can be in flight at once — each
     // stage's input queue plus the item it is processing, the output
     // funnel, and slack for the distributor/reorder hand-offs. A correct
@@ -433,7 +502,13 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
         .map_init_parallel(
             "reduce",
             stages_n,
-            move || crate::itis::ShardReducer::new(workers, knn_shards, itis_cfg.clone()),
+            move || {
+                crate::itis::ShardReducer::new(
+                    Arc::clone(&stage_exec),
+                    knn_shards,
+                    itis_cfg.clone(),
+                )
+            },
             move |reducer, shard: RowShard| {
                 let mut moments = Moments::new(shard.points.cols());
                 moments.fold(&shard.points);
@@ -520,7 +595,7 @@ pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
 fn cluster_prototypes(
     config: &PipelineConfig,
     engine: Option<&Engine>,
-    pool: &WorkerPool,
+    exec: &Executor,
     reduction: &ItisResult,
     ws: &mut kmeans::KMeansWorkspace,
 ) -> Result<Vec<u32>> {
@@ -538,7 +613,7 @@ fn cluster_prototypes(
                 Some(e) if protos.cols() <= e.tile.dim && cfg.k <= e.tile.km_k => {
                     kmeans::kmeans_with_backend(protos, None, &cfg, &PjrtAssign { engine: e })?
                 }
-                _ => kmeans::kmeans_pool(protos, None, &cfg, &NativeAssign, pool, ws)?,
+                _ => kmeans::kmeans_pool(protos, None, &cfg, &NativeAssign, exec, ws)?,
             };
             Ok(result.assignments)
         }
@@ -573,7 +648,11 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         return run_streaming(config);
     }
     let t_all = Instant::now();
-    let pool = WorkerPool::new(config.workers);
+    // The run's one thread team: every parallel site below — kd-tree
+    // and kd-forest builds, pooled k-NN queries, the ITIS prototype
+    // reduction, k-means assignment parts, standardization chunks —
+    // submits task batches into this executor.
+    let exec = Executor::with_config(config.executor());
     let mut phases = Vec::new();
 
     // Phase 1: ingest (+ streaming moments).
@@ -592,7 +671,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let (prep, peak) = memtrack::measure(|| -> Result<Matrix> {
         let mut points = ds.points.clone();
         if config.standardize {
-            standardize_with(&mut points, &moments, &pool)?;
+            standardize_with(&mut points, &moments, &exec)?;
         }
         if let Some(frac) = config.pca_variance {
             let pca = Pca::fit(&points)?;
@@ -614,10 +693,10 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
         Backend::Native => None,
     };
-    let pool_knn = PoolKnnProvider { pool: &pool, shards: config.knn_shards };
+    let pool_knn = PoolKnnProvider { exec: &exec, shards: config.knn_shards };
     let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
         engine: e,
-        fallback: PoolKnnProvider { pool: &pool, shards: config.knn_shards },
+        fallback: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
     });
     let knn_provider: &dyn KnnProvider = match &pjrt_knn {
         Some(p) => p,
@@ -644,7 +723,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
             seed_order: config.seed_order,
             min_prototypes: config.clusterer.min_prototypes(),
         };
-        itis_with_workspace(&ds.points, &itis_cfg, knn_provider, &pool, ws_itis)
+        itis_with_workspace(&ds.points, &itis_cfg, knn_provider, &exec, ws_itis)
     });
     let reduction = reduced?;
     phases.push(PhaseStat {
@@ -657,7 +736,7 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let t0 = Instant::now();
     let ws_kmeans = &mut ws.kmeans;
     let (labels, peak) = memtrack::measure(|| {
-        cluster_prototypes(config, engine.as_ref(), &pool, &reduction, ws_kmeans)
+        cluster_prototypes(config, engine.as_ref(), &exec, &reduction, ws_kmeans)
     });
     let prototype_labels = labels?;
     phases.push(PhaseStat {
@@ -712,12 +791,16 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
 /// matrix no longer exists by phase 5).
 fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let t_all = Instant::now();
-    let pool = WorkerPool::new(config.workers);
+    // One executor for the whole run: the ingest pipeline's reduce
+    // stages submit into it through an `Arc` (stage states are built on
+    // stage threads, so they need an owning handle), and phases 2–5 use
+    // it directly by reference.
+    let exec = Arc::new(Executor::with_config(config.executor()));
     let mut phases = Vec::new();
 
     // Phase 1: fused ingest + shard-wise level-0 TC (+ streaming moments).
     let t0 = Instant::now();
-    let (ingested, peak) = memtrack::measure(|| ingest_streaming(config));
+    let (ingested, peak) = memtrack::measure(|| ingest_streaming_on(config, &exec));
     let StreamedReduction { prototypes, weights, assignments: level0, labels: truth, moments, n, stages } =
         ingested?;
     phases.push(PhaseStat {
@@ -745,16 +828,19 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     // exact is the prototypes themselves — standardizing the weighted
     // centroids with the streamed full-data moments equals the weighted
     // means of the standardized rows, because the per-column affine map
-    // commutes with weighted means. PCA (when requested) is fit on the
-    // prototypes, a documented approximation of the full-data fit.
+    // commutes with weighted means. PCA (when requested) is likewise
+    // derived from the streamed cross-moments, so the basis is the
+    // *exact* full-data fit (the old prototype-stream fit was a
+    // documented approximation); component count is chosen from the
+    // full-data eigenvalues and the basis is applied to the prototypes.
     let t0 = Instant::now();
     let (prep, peak) = memtrack::measure(|| -> Result<Matrix> {
         let mut points = prototypes;
         if config.standardize {
-            standardize_with(&mut points, &moments, &pool)?;
+            standardize_with(&mut points, &moments, &exec)?;
         }
         if let Some(frac) = config.pca_variance {
-            let pca = Pca::fit(&points)?;
+            let pca = pca_from_moments(&moments, config.standardize)?;
             let k = pca.components_for_variance(frac);
             points = pca.transform(&points, k)?;
         }
@@ -773,10 +859,10 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Pjrt => Some(Engine::load(Engine::default_dir())?),
         Backend::Native => None,
     };
-    let pool_knn = PoolKnnProvider { pool: &pool, shards: config.knn_shards };
+    let pool_knn = PoolKnnProvider { exec: &exec, shards: config.knn_shards };
     let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
         engine: e,
-        fallback: PoolKnnProvider { pool: &pool, shards: config.knn_shards },
+        fallback: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
     });
     let knn_provider: &dyn KnnProvider = match &pjrt_knn {
         Some(p) => p,
@@ -795,7 +881,7 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
             seed_order: config.seed_order,
             min_prototypes: config.clusterer.min_prototypes(),
         };
-        itis_resume(protos0, weights, n, &itis_cfg, knn_provider, &pool, ws_itis)
+        itis_resume(protos0, weights, n, &itis_cfg, knn_provider, &exec, ws_itis)
     });
     let mut reduction = reduced?;
     // Prepend the fused level 0 so back-out composes over all n rows.
@@ -813,7 +899,7 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let t0 = Instant::now();
     let ws_kmeans = &mut ws.kmeans;
     let (labels, peak) = memtrack::measure(|| {
-        cluster_prototypes(config, engine.as_ref(), &pool, &reduction, ws_kmeans)
+        cluster_prototypes(config, engine.as_ref(), &exec, &reduction, ws_kmeans)
     });
     let prototype_labels = labels?;
     phases.push(PhaseStat {
@@ -963,7 +1049,9 @@ mod tests {
             source: DataSource::PaperMixture { n },
             streaming: true,
             prototype: PrototypeKind::WeightedCentroid,
-            workers: 2,
+            // 4 ≥ every reduce_stages value the tests sweep: stages
+            // share one executor and must fit its explicit budget.
+            workers: 4,
             shard_size: 512,
             ..Default::default()
         }
@@ -1097,8 +1185,8 @@ mod tests {
         assert_eq!(stream.n, 3000);
 
         let ds = gaussian_mixture_paper(3000, cfg.seed);
-        let pool = WorkerPool::new(cfg.workers);
-        let provider = PoolKnnProvider { pool: &pool, shards: 1 };
+        let exec = Executor::new(cfg.workers);
+        let provider = PoolKnnProvider { exec: &exec, shards: 1 };
         let mut ws = ItisWorkspace::new();
         let itis_cfg = ItisConfig {
             threshold: cfg.threshold,
@@ -1125,7 +1213,7 @@ mod tests {
                 &vec![1; end - start],
                 &itis_cfg,
                 &provider,
-                &pool,
+                &exec,
                 &mut ws,
             )
             .unwrap();
@@ -1153,6 +1241,48 @@ mod tests {
         assert_eq!(par.weights, weights);
         assert_eq!(par.assignments, assignments);
         assert_eq!(par.moments.cross, moments.cross);
+    }
+
+    #[test]
+    fn streaming_pca_basis_is_exact_full_data_fit() {
+        // The streamed cross-moments must reproduce the materialized
+        // two-pass basis: standardize the full matrix with the same
+        // moments, fit PCA on it directly, and compare eigenvalues and
+        // components (up to sign) against pca_from_moments.
+        let ds = gaussian_mixture_paper(4000, 91);
+        let mut mo = Moments::new(2);
+        mo.fold(&ds.points);
+        let exec = Executor::new(2);
+        for standardize in [false, true] {
+            let mut mat = ds.points.clone();
+            if standardize {
+                standardize_with(&mut mat, &mo, &exec).unwrap();
+            }
+            let direct = Pca::fit(&mat).unwrap();
+            let streamed = pca_from_moments(&mo, standardize).unwrap();
+            for (a, b) in direct.eigenvalues.iter().zip(&streamed.eigenvalues) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + a.abs()),
+                    "standardize={standardize}: eigenvalue {a} vs {b}"
+                );
+            }
+            for (ca, cb) in direct.components.iter().zip(&streamed.components) {
+                let dot: f64 = ca.iter().zip(cb).map(|(x, y)| x * y).sum();
+                assert!(
+                    (dot.abs() - 1.0).abs() < 1e-4,
+                    "standardize={standardize}: |dot|={}",
+                    dot.abs()
+                );
+            }
+            // Component selection agrees too.
+            assert_eq!(
+                direct.components_for_variance(0.95),
+                streamed.components_for_variance(0.95),
+                "standardize={standardize}"
+            );
+        }
+        // Degenerate moment streams are explicit errors.
+        assert!(Moments::new(2).covariance().is_err());
     }
 
     #[test]

@@ -8,179 +8,108 @@
 //! * streams the dataset through bounded-channel **stages** with real
 //!   backpressure ([`pipeline`]),
 //! * shards the k-NN graph construction — the computational bottleneck of
-//!   ITIS — across a **work-stealing worker pool** ([`WorkerPool`],
-//!   [`parallel_knn`]) with exact (not approximate) results,
+//!   ITIS — across the run's **shared work-stealing executor**
+//!   ([`crate::exec::Executor`], [`parallel_knn`]) with exact (not
+//!   approximate) results,
 //! * runs the whole IHTC flow end-to-end from a config ([`driver`]),
 //!   collecting per-stage metrics.
 //!
-//! Threading is std-only (no tokio offline): scoped threads, `sync_channel`
-//! for bounded queues, an atomic cursor for stealing. The PJRT engine is
-//! kept on the coordinator thread (the xla handles are not `Sync`);
-//! native workers absorb the parallel sections.
+//! Threading is std-only (no tokio offline): one persistent executor per
+//! run, `sync_channel` for bounded queues, an atomic cursor for
+//! stealing. The PJRT engine is kept on the coordinator thread (the xla
+//! handles are not `Sync`); executor workers absorb the parallel
+//! sections.
 
 pub mod driver;
 pub mod pipeline;
 
+use crate::exec::Executor;
 use crate::itis::KnnProvider;
 use crate::knn::{forest::KdForest, kdtree::KdTree, KnnLists};
 use crate::linalg::Matrix;
-use crate::{Error, Result};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{mpsc, Mutex};
+use crate::Result;
 
-/// Resolve a worker-count setting (0 = available parallelism − 1, min 1).
-pub fn resolve_workers(requested: usize) -> usize {
-    if requested > 0 {
-        return requested;
-    }
-    std::thread::available_parallelism()
-        .map(|p| p.get().saturating_sub(1).max(1))
-        .unwrap_or(1)
-}
+pub use crate::exec::resolve_workers;
 
-/// A work-stealing parallel-for over chunked index ranges.
+/// Deprecated shim over [`crate::exec::Executor`].
 ///
-/// Workers repeatedly claim the next chunk via an atomic cursor — cheap,
-/// contention-free rebalancing that keeps stragglers from stalling the
-/// pipeline (dense regions of the kd-tree cost more per query than
-/// sparse ones).
+/// Until the shared-executor refactor, every parallel call site spawned
+/// its own scoped thread team through this type. The executor subsumes
+/// it: one persistent work-stealing team per run, shared by every layer.
+/// The shim keeps out-of-tree `run_tasks`/`run_chunks` callers
+/// compiling for one more release — it owns a private `Executor` and
+/// forwards. Two caveats for such callers: (1) the cost model changed —
+/// the old type was a plain descriptor that spawned scoped threads per
+/// call, while constructing this shim now spawns `workers − 1`
+/// persistent threads and joins them on drop, so build one and reuse it
+/// rather than constructing per call; (2) every in-tree API that used
+/// to accept `&WorkerPool` (`parallel_knn`, `itis_with_workspace`,
+/// `kmeans_pool`, `Ihtc::run_with`, …) now takes `&Executor`, so
+/// callers of those must migrate regardless. New code should construct
+/// an [`Executor::new`] / [`Executor::with_config`] directly.
+#[deprecated(
+    note = "use crate::exec::Executor — one shared work-stealing executor per run; \
+            WorkerPool is a forwarding shim and will be removed"
+)]
 pub struct WorkerPool {
-    workers: usize,
+    exec: Executor,
 }
 
+#[allow(deprecated)]
 impl Default for WorkerPool {
-    /// Pool sized to the machine (available parallelism − 1, min 1) —
-    /// what `knn_auto`, `Ihtc::run`, and `itis` use when the caller does
-    /// not pass a pool explicitly.
+    /// Pool sized to the machine (available parallelism − 1, min 1).
     fn default() -> Self {
         Self::new(0)
     }
 }
 
+#[allow(deprecated)]
 impl WorkerPool {
-    /// Create a pool descriptor (threads are scoped per call).
+    /// Create a pool (now: a private [`Executor`]) with `workers`
+    /// threads (0 = machine default).
     pub fn new(workers: usize) -> Self {
-        Self { workers: resolve_workers(workers) }
+        Self { exec: Executor::new(workers) }
     }
 
     /// Number of worker threads used.
     pub fn workers(&self) -> usize {
-        self.workers
+        self.exec.workers()
     }
 
-    /// Work-stealing execution of pre-built tasks (each typically owning
-    /// disjoint `&mut` windows of a shared output buffer, so workers
-    /// write results in place — no stitch copies). Results come back in
-    /// task order; the first task error aborts the run and is returned.
+    /// Borrow the backing executor (migration hook for callers moving
+    /// off the shim).
+    pub fn executor(&self) -> &Executor {
+        &self.exec
+    }
+
+    /// Forwarded to [`Executor::run_tasks`].
     pub fn run_tasks<T: Send, R: Send>(
         &self,
         tasks: Vec<T>,
         f: impl Fn(T) -> Result<R> + Sync,
     ) -> Result<Vec<R>> {
-        let n = tasks.len();
-        if n == 0 {
-            return Ok(Vec::new());
-        }
-        let slots: Vec<Mutex<Option<T>>> =
-            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
-        let results: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
-        let cursor = AtomicUsize::new(0);
-        let failed = AtomicBool::new(false);
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers.min(n).max(1) {
-                let cursor = &cursor;
-                let failed = &failed;
-                let slots = &slots;
-                let results = &results;
-                let f = &f;
-                scope.spawn(move || loop {
-                    if failed.load(Ordering::Relaxed) {
-                        break;
-                    }
-                    let i = cursor.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let task = slots[i].lock().unwrap().take();
-                    let Some(task) = task else { continue };
-                    let out = f(task);
-                    if out.is_err() {
-                        failed.store(true, Ordering::Relaxed);
-                    }
-                    *results[i].lock().unwrap() = Some(out);
-                });
-            }
-        });
-        let mut out = Vec::with_capacity(n);
-        let mut first_err = None;
-        for slot in results {
-            match slot.into_inner().unwrap() {
-                Some(Ok(v)) => out.push(v),
-                Some(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                None => {}
-            }
-        }
-        if let Some(e) = first_err {
-            return Err(e);
-        }
-        if out.len() != n {
-            return Err(Error::Coordinator("worker pool lost tasks".into()));
-        }
-        Ok(out)
+        self.exec.run_tasks(tasks, f)
     }
 
-    /// Process `0..n` in chunks of `chunk`; `f(start, end)` produces a
-    /// partial result collected into the output vector (in arbitrary
-    /// order). Errors from any worker abort the call.
+    /// Forwarded to [`Executor::run_chunks`].
     pub fn run_chunks<T: Send>(
         &self,
         n: usize,
         chunk: usize,
         f: impl Fn(usize, usize) -> Result<T> + Sync,
     ) -> Result<Vec<T>> {
-        let chunk = chunk.max(1);
-        let cursor = AtomicUsize::new(0);
-        let (tx, rx) = mpsc::channel::<Result<T>>();
-        std::thread::scope(|scope| {
-            for _ in 0..self.workers {
-                let tx = tx.clone();
-                let cursor = &cursor;
-                let f = &f;
-                scope.spawn(move || loop {
-                    let start = cursor.fetch_add(chunk, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + chunk).min(n);
-                    let out = f(start, end);
-                    let failed = out.is_err();
-                    if tx.send(out).is_err() || failed {
-                        break;
-                    }
-                });
-            }
-            drop(tx);
-            let mut results = Vec::new();
-            for item in rx {
-                results.push(item?);
-            }
-            Ok(results)
-        })
+        self.exec.run_chunks(n, chunk, f)
     }
 }
 
-/// Exact k-NN lists computed by sharding queries across the pool against
-/// a shared kd-tree (itself built in parallel over the pool). Output is
-/// byte-identical to [`crate::knn::knn_brute`] for any worker count, but
-/// wall-clock scales with workers; this is the coordinator's answer to
-/// the paper's "parallelize TC" future work (step 1 dominates).
-pub fn parallel_knn(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnLists> {
+/// Exact k-NN lists computed by sharding queries across the executor
+/// against a shared kd-tree (itself built in parallel on the executor).
+/// Output is byte-identical to [`crate::knn::knn_brute`] for any worker
+/// count, but wall-clock scales with workers; this is the coordinator's
+/// answer to the paper's "parallelize TC" future work (step 1 dominates).
+pub fn parallel_knn(points: &Matrix, k: usize, exec: &Executor) -> Result<KnnLists> {
     let mut out = KnnLists::default();
-    parallel_knn_into(points, k, pool, &mut out)?;
+    parallel_knn_into(points, k, exec, &mut out)?;
     Ok(out)
 }
 
@@ -190,23 +119,23 @@ pub fn parallel_knn(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnL
 pub fn parallel_knn_into(
     points: &Matrix,
     k: usize,
-    pool: &WorkerPool,
+    exec: &Executor,
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
     crate::knn::validate_k(n, k)?;
-    let tree = KdTree::build_parallel(points, pool);
-    tree.knn_all_pool_into(points, k, pool, out)
+    let tree = KdTree::build_parallel(points, exec);
+    tree.knn_all_pool_into(points, k, exec, out)
 }
 
-/// [`KnnProvider`] backed by the worker pool — the injection point that
-/// routes the entire ITIS/IHTC reduction through pool-sharded k-NN.
-/// With `shards > 1` the kd-tree regime runs on a sharded
+/// [`KnnProvider`] backed by the shared executor — the injection point
+/// that routes the entire ITIS/IHTC reduction through executor-sharded
+/// k-NN. With `shards > 1` the kd-tree regime runs on a sharded
 /// [`KdForest`] (per-shard parallel construction, merged queries);
 /// `shards: 1` is the single-tree path, byte for byte.
 pub struct PoolKnnProvider<'a> {
-    /// The pool to shard over.
-    pub pool: &'a WorkerPool,
+    /// The run's shared executor.
+    pub exec: &'a Executor,
     /// kd-forest shard count for the k-NN index (1 = single tree; the
     /// config knob `knn_shards`).
     pub shards: usize,
@@ -226,7 +155,7 @@ impl KnnProvider for PoolKnnProvider<'_> {
         // forest of `knn_forest_into` — which is what the ITIS loop uses;
         // this path serves one-shot callers and the PJRT fallback.
         let mut forest = KdForest::new();
-        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.pool, &mut forest, out)
+        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.exec, &mut forest, out)
     }
 
     fn knn_forest_into(
@@ -236,7 +165,7 @@ impl KnnProvider for PoolKnnProvider<'_> {
         forest: &mut KdForest,
         out: &mut KnnLists,
     ) -> Result<()> {
-        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.pool, forest, out)
+        crate::knn::knn_auto_sharded_into(points, k, self.shards, self.exec, forest, out)
     }
 }
 
@@ -247,86 +176,11 @@ mod tests {
     use crate::knn::knn_brute;
 
     #[test]
-    fn resolve_workers_bounds() {
-        assert_eq!(resolve_workers(3), 3);
-        assert!(resolve_workers(0) >= 1);
-    }
-
-    #[test]
-    fn run_chunks_covers_all_indices() {
-        let pool = WorkerPool::new(4);
-        let parts = pool
-            .run_chunks(1003, 100, |s, e| Ok((s, e)))
-            .unwrap();
-        let mut covered = vec![false; 1003];
-        for (s, e) in parts {
-            for slot in covered.iter_mut().take(e).skip(s) {
-                assert!(!*slot, "overlap at {s}..{e}");
-                *slot = true;
-            }
-        }
-        assert!(covered.iter().all(|&c| c));
-    }
-
-    #[test]
-    fn run_tasks_preserves_order_and_runs_all() {
-        let pool = WorkerPool::new(4);
-        let tasks: Vec<usize> = (0..37).collect();
-        let out = pool.run_tasks(tasks, |t| Ok(t * 2)).unwrap();
-        assert_eq!(out, (0..37).map(|t| t * 2).collect::<Vec<_>>());
-        // Empty task lists are a no-op.
-        let empty: Vec<usize> = Vec::new();
-        assert!(pool.run_tasks(empty, |t| Ok(t)).unwrap().is_empty());
-    }
-
-    #[test]
-    fn run_tasks_writes_through_mut_slices() {
-        let pool = WorkerPool::new(3);
-        let mut buf = vec![0u32; 100];
-        let tasks: Vec<(usize, &mut [u32])> =
-            buf.chunks_mut(7).enumerate().map(|(i, c)| (i * 7, c)).collect();
-        pool.run_tasks(tasks, |(start, chunk)| {
-            for (o, slot) in chunk.iter_mut().enumerate() {
-                *slot = (start + o) as u32;
-            }
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(buf, (0..100u32).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn run_tasks_propagates_errors() {
-        let pool = WorkerPool::new(2);
-        let res = pool.run_tasks((0..50usize).collect(), |t| {
-            if t == 13 {
-                Err(Error::Coordinator("boom".into()))
-            } else {
-                Ok(t)
-            }
-        });
-        assert!(res.is_err());
-    }
-
-    #[test]
-    fn run_chunks_propagates_errors() {
-        let pool = WorkerPool::new(2);
-        let res: Result<Vec<()>> = pool.run_chunks(100, 10, |s, _| {
-            if s >= 50 {
-                Err(Error::Coordinator("boom".into()))
-            } else {
-                Ok(())
-            }
-        });
-        assert!(res.is_err());
-    }
-
-    #[test]
     fn parallel_knn_matches_serial() {
         let ds = gaussian_mixture_paper(1500, 201);
         let serial = knn_brute(&ds.points, 4).unwrap();
-        let pool = WorkerPool::new(4);
-        let par = parallel_knn(&ds.points, 4, &pool).unwrap();
+        let exec = Executor::new(4);
+        let par = parallel_knn(&ds.points, 4, &exec).unwrap();
         for i in 0..1500 {
             let a = serial.distances(i);
             let b = par.distances(i);
@@ -339,8 +193,31 @@ mod tests {
     #[test]
     fn parallel_knn_single_worker_ok() {
         let ds = gaussian_mixture_paper(300, 202);
-        let pool = WorkerPool::new(1);
-        let r = parallel_knn(&ds.points, 2, &pool).unwrap();
+        let exec = Executor::new(1);
+        let r = parallel_knn(&ds.points, 2, &exec).unwrap();
         assert_eq!(r.len(), 300);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn worker_pool_shim_forwards_to_the_executor() {
+        // The deprecated shim must stay a pure forwarding layer: same
+        // results, same ordering contract, same error propagation.
+        let pool = WorkerPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        assert_eq!(pool.executor().workers(), 3);
+        let out = pool.run_tasks((0..37usize).collect(), |t| Ok(t * 2)).unwrap();
+        assert_eq!(out, (0..37).map(|t| t * 2).collect::<Vec<_>>());
+        let parts = pool.run_chunks(100, 7, |s, e| Ok(e - s)).unwrap();
+        assert_eq!(parts.iter().sum::<usize>(), 100);
+        assert!(pool
+            .run_tasks((0..5usize).collect(), |t| {
+                if t == 3 {
+                    Err(crate::Error::Coordinator("boom".into()))
+                } else {
+                    Ok(t)
+                }
+            })
+            .is_err());
     }
 }

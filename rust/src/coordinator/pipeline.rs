@@ -327,9 +327,9 @@ impl<T: Send + 'static> PipelineBuilder<T> {
     /// Append a transform stage with thread-local state, built once on
     /// the stage thread and handed to every invocation. This is the
     /// pooled stage variant the fused streaming reduce uses: the state
-    /// holds a `WorkerPool` plus reusable workspaces so every shard is
-    /// processed through the same buffers with zero steady-state
-    /// allocation. The state never crosses threads, so it does not need
+    /// holds reusable workspaces (plus an `Arc` handle to the run's
+    /// shared executor) so every shard is processed through the same
+    /// buffers with zero steady-state allocation. The state never crosses threads, so it does not need
     /// to be `Send` — only the initializer does.
     pub fn map_init<S: 'static, U: Send + 'static>(
         self,
@@ -375,9 +375,10 @@ impl<T: Send + 'static> PipelineBuilder<T> {
 
     /// Append a fan-out/fan-in transform: `stages` concurrent stage
     /// threads, each with its own `init()`-built state (the `map_init`
-    /// pattern — e.g. one `WorkerPool` + `ItisWorkspace` per stage), fed
-    /// round-robin by a distributor thread and funneled into one output
-    /// channel. Item completion order is **not** stream order: a slow
+    /// pattern — e.g. one `ItisWorkspace` per stage, every stage
+    /// submitting its task batches into the run's one shared executor),
+    /// fed round-robin by a distributor thread and funneled into one
+    /// output channel. Item completion order is **not** stream order: a slow
     /// item on one stage lets later items overtake it, so a downstream
     /// consumer that needs stream order must follow with [`Self::reorder`].
     ///

@@ -1,0 +1,708 @@
+//! The shared work-stealing executor — one thread team per run.
+//!
+//! Before this module, every parallel layer spawned its own thread team:
+//! each `ShardReducer`, kd-forest build, k-means assignment pass, and
+//! ITIS prototype reduction went through a per-call `WorkerPool` (scoped
+//! threads spawned and joined per invocation), and the streaming
+//! pipeline *statically divided* the worker budget across reduce stages
+//! (`resolve_workers(workers) / reduce_stages`, min 1) — stranding
+//! threads when one stage's shard was harder than its siblings', and
+//! oversubscribing when `reduce_stages > workers`. [`Executor`] replaces
+//! all of that with a single persistent team:
+//!
+//! * **One team per run.** The driver (and `Ihtc::run_with` for the
+//!   materialized path) creates one `Executor`; every parallel site —
+//!   kd-tree builds, `KdForest` shard builds, pooled k-NN queries, the
+//!   ITIS prototype reduction, k-means assignment parts, and the
+//!   streaming reduce stages — submits task batches into it by
+//!   reference (or via a shared [`std::sync::Arc`] from the pipeline's
+//!   stage threads).
+//! * **Submitters are workers.** `Executor::new(w)` spawns `w − 1`
+//!   background threads; the thread calling [`Executor::run_tasks`]
+//!   participates in its own batch, so one active submitter runs on
+//!   exactly `w` threads (the old pool's contract), and a batch can
+//!   always make progress even if every background worker is busy
+//!   elsewhere — no deadlock, whatever the fan-out. `S` concurrent
+//!   submitters *share* the one background team instead of multiplying
+//!   it: peak compute threads are `w − 1 + S` (each submitter occupies
+//!   its own thread while active), bounded and transient, where the
+//!   per-call-pool scheme would have run `S · w`.
+//! * **Work-stealing across batches.** Batches queue in a shared
+//!   injector; idle workers claim tasks from queued batches through an
+//!   atomic cursor (the stealing granularity), so when one streaming
+//!   reduce stage hits a hard shard, the whole team converges on it
+//!   while lighter stages' submitters finish their own batches solo.
+//!   [`StealPolicy`] picks which queued batch idle workers serve first;
+//!   `fair_stages` caps how many tasks a worker takes from one batch
+//!   before re-selecting, so a giant batch cannot starve its siblings.
+//! * **Determinism.** Results are keyed by submission index and
+//!   returned in task order, and every in-tree task partitioning is
+//!   index-deterministic — so output bytes never depend on the worker
+//!   count, the steal policy, or scheduling (the byte-parity suites in
+//!   `rust/tests/` pin this down).
+//!
+//! `crate::coordinator::WorkerPool` remains as a thin deprecated shim
+//! over this module so out-of-tree callers keep compiling one more
+//! release. No in-tree code spawns ad-hoc threads anymore: the driver
+//! paths create one `Executor` per run and share it, while the
+//! workspace-less convenience entry points (`knn_auto`, `itis`,
+//! `Ihtc::run`, `DefaultKnn`) construct a short-lived machine-default
+//! `Executor` per call. Background workers spawn lazily on the first
+//! multi-task batch, so those throwaway executors cost nothing on
+//! serial-fallback workloads and one team spawn (the retired scoped
+//! pools' cost) when a parallel section engages; pass an executor
+//! explicitly to amortize the team across calls.
+
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// Resolve a worker-count setting (0 = available parallelism − 1, min 1).
+pub fn resolve_workers(requested: usize) -> usize {
+    if requested > 0 {
+        return requested;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get().saturating_sub(1).max(1))
+        .unwrap_or(1)
+}
+
+/// Which queued batch an idle worker serves first when several runs'
+/// batches are waiting. The policy can only change scheduling order —
+/// results are keyed by submission index, so output bytes are identical
+/// under every policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StealPolicy {
+    /// Oldest batch first (default): finishes earlier submissions sooner,
+    /// which keeps the streaming reorder buffer shallow.
+    Fifo,
+    /// Newest batch first: favors cache-warm work just submitted.
+    Lifo,
+}
+
+/// Executor construction knobs (the config file's `executor` block).
+#[derive(Clone, Copy, Debug)]
+pub struct ExecutorConfig {
+    /// Total thread budget (0 = available parallelism − 1, min 1). The
+    /// team is `workers − 1` background threads plus the submitting
+    /// thread itself. Taken literally — the config layer enforces a
+    /// sanity ceiling; direct API callers own their budget.
+    pub workers: usize,
+    /// Which queued batch idle workers serve first.
+    pub steal: StealPolicy,
+    /// When several batches are queued (e.g. concurrent reduce stages),
+    /// cap how many tasks a worker takes from one batch before
+    /// re-selecting, and rotate the served batch to the back of the
+    /// queue — so no stage's batch starves its siblings. Off, a worker
+    /// drains its chosen batch completely.
+    pub fair_stages: bool,
+}
+
+impl Default for ExecutorConfig {
+    fn default() -> Self {
+        Self { workers: 0, steal: StealPolicy::Fifo, fair_stages: true }
+    }
+}
+
+/// Tasks a worker takes from one batch before re-selecting under
+/// `fair_stages` (tasks are coarse — hundreds of rows — so the
+/// re-selection lock touch is noise).
+const FAIR_GRAIN: usize = 8;
+
+/// One submitted batch: `n` type-erased tasks claimed through an atomic
+/// cursor. The `ctx` pointer targets a stack frame inside the submitting
+/// `run_tasks` call; see the safety argument on [`Executor::run_tasks`].
+struct Batch {
+    n: usize,
+    /// Next unclaimed task index; claims beyond `n` mean "exhausted".
+    cursor: AtomicUsize,
+    /// Tasks not yet finished executing; 0 releases the submitter.
+    remaining: AtomicUsize,
+    /// Monomorphized trampoline executing task `i` against `ctx`;
+    /// returns true when the task failed and the batch should abort.
+    run: unsafe fn(*const (), usize) -> bool,
+    /// Borrowed batch state (slots, results, closure) on the submitter's
+    /// stack. Only dereferenced for successfully claimed indices.
+    ctx: *const (),
+    done: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: `ctx` is only dereferenced through `run` for claimed task
+// indices, and the submitter blocks until `remaining == 0`, which
+// happens strictly after the last such dereference — so the pointee
+// outlives every access. All other fields are Sync primitives.
+unsafe impl Send for Batch {}
+unsafe impl Sync for Batch {}
+
+impl Batch {
+    /// Claim the next unexecuted task index, if any.
+    fn claim(&self) -> Option<usize> {
+        // Pre-check keeps the cursor from racing far past `n` while a
+        // batch lingers in the queue.
+        if self.cursor.load(Ordering::Relaxed) >= self.n {
+            return None;
+        }
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        if i < self.n {
+            Some(i)
+        } else {
+            None
+        }
+    }
+
+    /// True once every task index has been claimed (not necessarily
+    /// finished) — the queue prunes exhausted batches.
+    fn exhausted(&self) -> bool {
+        self.cursor.load(Ordering::Relaxed) >= self.n
+    }
+
+    /// Execute claimed task `i` and publish its completion.
+    ///
+    /// # Safety
+    /// `i` must come from [`Self::claim`] on this batch (each index
+    /// executes at most once, and the submitter is still alive).
+    unsafe fn execute(&self, i: usize) {
+        // SAFETY: forwarded from the caller's contract.
+        let abort = unsafe { (self.run)(self.ctx, i) };
+        if abort {
+            // First failure: claim every not-yet-claimed index in one
+            // shot so the error returns without the submitter and
+            // workers paying a claim + slot-lock round-trip per
+            // remaining task (the retired pool's short-circuit `break`,
+            // adapted to the remaining-counter completion protocol).
+            self.abort_rest();
+        }
+        if self.remaining.fetch_sub(1, Ordering::Release) == 1 {
+            // Take the lock so a submitter between its predicate check
+            // and `wait` cannot miss this wakeup.
+            let _guard = self.done.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Bulk-claim all unclaimed indices and account for them in
+    /// `remaining`. Indices already claimed by racing workers are NOT
+    /// covered here — their claimers decrement for them — so every
+    /// index is counted exactly once whichever way the race goes.
+    fn abort_rest(&self) {
+        let prev = self.cursor.swap(self.n, Ordering::Relaxed);
+        let skipped = self.n.saturating_sub(prev);
+        if skipped > 0 && self.remaining.fetch_sub(skipped, Ordering::Release) == skipped {
+            let _guard = self.done.lock().unwrap();
+            self.done_cv.notify_all();
+        }
+    }
+
+    /// Block until every task has finished executing.
+    fn wait(&self) {
+        let mut guard = self.done.lock().unwrap();
+        while self.remaining.load(Ordering::Acquire) > 0 {
+            guard = self.done_cv.wait(guard).unwrap();
+        }
+    }
+}
+
+/// State shared between the executor handle and its background workers.
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Batch>>>,
+    available: Condvar,
+    shutdown: AtomicBool,
+    steal: StealPolicy,
+    fair: bool,
+}
+
+/// Background worker: serve queued batches until shutdown.
+fn worker_loop(shared: &Shared) {
+    loop {
+        let batch = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.shutdown.load(Ordering::Relaxed) {
+                    return;
+                }
+                q.retain(|b| !b.exhausted());
+                let picked = match shared.steal {
+                    StealPolicy::Fifo => q.pop_front(),
+                    StealPolicy::Lifo => q.pop_back(),
+                };
+                if let Some(b) = picked {
+                    // Keep the batch visible to the other workers; under
+                    // fairness it goes to the far end so the next idle
+                    // worker serves a *different* batch first.
+                    if shared.fair {
+                        match shared.steal {
+                            StealPolicy::Fifo => q.push_back(b.clone()),
+                            StealPolicy::Lifo => q.push_front(b.clone()),
+                        }
+                    } else {
+                        match shared.steal {
+                            StealPolicy::Fifo => q.push_front(b.clone()),
+                            StealPolicy::Lifo => q.push_back(b.clone()),
+                        }
+                    }
+                    break b;
+                }
+                q = shared.available.wait(q).unwrap();
+            }
+        };
+        let grain = if shared.fair { FAIR_GRAIN } else { usize::MAX };
+        let mut taken = 0usize;
+        while let Some(i) = batch.claim() {
+            // SAFETY: `i` was just claimed from `batch`.
+            unsafe { batch.execute(i) };
+            taken += 1;
+            if taken >= grain {
+                break;
+            }
+        }
+    }
+}
+
+/// Borrowed state of one `run_tasks` batch, erased behind `Batch::ctx`.
+struct BatchCtx<'a, T, R, F> {
+    slots: &'a [Mutex<Option<T>>],
+    results: &'a [Mutex<Option<Result<R>>>],
+    failed: &'a AtomicBool,
+    f: &'a F,
+}
+
+/// Monomorphized trampoline: run task `i` of the batch behind `p`.
+/// Returns true when this task failed (the batch should abort).
+///
+/// # Safety
+/// `p` must point to a live `BatchCtx<'_, T, R, F>` and `i` must be a
+/// claimed, not-yet-executed index into its slots.
+unsafe fn run_erased<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
+    p: *const (),
+    i: usize,
+) -> bool {
+    // SAFETY: forwarded from the caller's contract.
+    let ctx = unsafe { &*(p as *const BatchCtx<'_, T, R, F>) };
+    let task = ctx.slots[i].lock().unwrap().take();
+    let Some(task) = task else { return false };
+    if ctx.failed.load(Ordering::Relaxed) {
+        // A sibling already failed: drop the task unexecuted (its result
+        // stays `None`; the collector reports the recorded error).
+        return false;
+    }
+    // A panicking task must still decrement `remaining` (the caller's
+    // `execute` does) or the submitter would deadlock — convert it into
+    // an error instead of unwinding through the worker loop.
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (ctx.f)(task)))
+        .unwrap_or_else(|_| Err(Error::Coordinator("executor task panicked".into())));
+    let failed = out.is_err();
+    if failed {
+        ctx.failed.store(true, Ordering::Relaxed);
+    }
+    *ctx.results[i].lock().unwrap() = Some(out);
+    failed
+}
+
+/// The shared work-stealing thread team (see the module docs).
+///
+/// Create one per run and hand it down by reference; it is `Sync`, so
+/// pipeline stage threads can share it through an `Arc` and submit
+/// concurrently. Dropping the executor joins its background threads.
+pub struct Executor {
+    budget: usize,
+    shared: Option<Arc<Shared>>,
+    /// Background workers, spawned lazily by the first parallel batch
+    /// (`spawned` flips once). Serial-fallback workloads — and the
+    /// convenience entry points that build a throwaway executor but
+    /// never submit a multi-task batch — therefore pay no thread
+    /// spawn/join at all, matching the retired descriptor-style pool.
+    handles: Mutex<Vec<JoinHandle<()>>>,
+    spawned: AtomicBool,
+}
+
+impl Default for Executor {
+    /// Team sized to the machine (available parallelism − 1, min 1) —
+    /// what `knn_auto`, `Ihtc::run`, and `itis` use when the caller does
+    /// not pass an executor explicitly.
+    fn default() -> Self {
+        Self::new(0)
+    }
+}
+
+impl Executor {
+    /// Executor with `workers` total threads (0 = machine default) and
+    /// default steal policy/fairness.
+    pub fn new(workers: usize) -> Self {
+        Self::with_config(ExecutorConfig { workers, ..Default::default() })
+    }
+
+    /// Executor with explicit knobs. A budget of 1 never spawns
+    /// background threads: every batch runs inline on the submitting
+    /// thread, which is the exact serial path. Larger budgets spawn
+    /// their `budget − 1` background workers lazily, on the first
+    /// multi-task batch — construction itself is allocation-cheap.
+    pub fn with_config(config: ExecutorConfig) -> Self {
+        let budget = resolve_workers(config.workers);
+        let shared = (budget > 1).then(|| {
+            Arc::new(Shared {
+                queue: Mutex::new(VecDeque::new()),
+                available: Condvar::new(),
+                shutdown: AtomicBool::new(false),
+                steal: config.steal,
+                fair: config.fair_stages,
+            })
+        });
+        Self { budget, shared, handles: Mutex::new(Vec::new()), spawned: AtomicBool::new(false) }
+    }
+
+    /// Spawn the background workers if no batch has needed them yet.
+    fn ensure_spawned(&self) {
+        let Some(shared) = &self.shared else { return };
+        if self.spawned.load(Ordering::Acquire) {
+            return;
+        }
+        let mut handles = self.handles.lock().unwrap();
+        if self.spawned.load(Ordering::Relaxed) {
+            return; // lost the race; workers already up
+        }
+        for i in 0..self.budget - 1 {
+            let s = Arc::clone(shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("ihtc-exec-{i}"))
+                    .spawn(move || worker_loop(&s))
+                    .expect("spawn executor worker"),
+            );
+        }
+        self.spawned.store(true, Ordering::Release);
+    }
+
+    /// Total thread budget (background workers + the submitting thread).
+    pub fn workers(&self) -> usize {
+        self.budget
+    }
+
+    /// Work-stealing execution of pre-built tasks (each typically owning
+    /// disjoint `&mut` windows of a shared output buffer, so workers
+    /// write results in place — no stitch copies). Results come back in
+    /// task (submission-index) order regardless of which thread ran
+    /// what; the first task error aborts the batch and is returned. The
+    /// submitting thread participates in its own batch, so the call
+    /// completes even when every background worker is busy with other
+    /// submitters' batches.
+    pub fn run_tasks<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
+        &self,
+        tasks: Vec<T>,
+        f: F,
+    ) -> Result<Vec<R>> {
+        let n = tasks.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        if self.shared.is_none() || n == 1 {
+            // Serial fast path: no queue round-trip, no erasure. Panics
+            // convert to the same error as on the parallel path, so
+            // error behavior never depends on the worker count.
+            let mut out = Vec::with_capacity(n);
+            for t in tasks {
+                let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(t)))
+                    .unwrap_or_else(|_| {
+                        Err(Error::Coordinator("executor task panicked".into()))
+                    });
+                out.push(r?);
+            }
+            return Ok(out);
+        }
+        let slots: Vec<Mutex<Option<T>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let results: Vec<Mutex<Option<Result<R>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let failed = AtomicBool::new(false);
+        let ctx = BatchCtx { slots: &slots, results: &results, failed: &failed, f: &f };
+        // SAFETY of the erasure below: `batch.ctx` points at `ctx` on
+        // this stack frame. Workers dereference it only for indices
+        // obtained from `Batch::claim`, every claimed index decrements
+        // `remaining` exactly once *after* its dereferences complete,
+        // and this frame does not return before `batch.wait()` observes
+        // `remaining == 0` — so no dereference can outlive `ctx`. Late
+        // workers holding the `Arc<Batch>` after that point see the
+        // cursor exhausted and never touch `ctx` again.
+        let batch = Arc::new(Batch {
+            n,
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n),
+            run: run_erased::<T, R, F>,
+            ctx: (&ctx as *const BatchCtx<'_, T, R, F>).cast(),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        self.ensure_spawned();
+        let shared = self.shared.as_ref().expect("checked above");
+        {
+            let mut q = shared.queue.lock().unwrap();
+            q.push_back(Arc::clone(&batch));
+        }
+        shared.available.notify_all();
+        // Participate: the submitter is the batch's guaranteed worker.
+        while let Some(i) = batch.claim() {
+            // SAFETY: `i` was just claimed from `batch`.
+            unsafe { batch.execute(i) };
+        }
+        batch.wait();
+        drop(batch);
+        // Collect in submission order; first error wins (matching the
+        // retired `WorkerPool::run_tasks` contract).
+        let mut out = Vec::with_capacity(n);
+        let mut first_err = None;
+        for slot in results {
+            match slot.into_inner().unwrap() {
+                Some(Ok(v)) => out.push(v),
+                Some(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                None => {}
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if out.len() != n {
+            return Err(Error::Coordinator("executor lost tasks".into()));
+        }
+        Ok(out)
+    }
+
+    /// Process `0..n` in chunks of `chunk`; `f(start, end)` produces a
+    /// partial result. Results come back in chunk order (ascending
+    /// `start`). Errors from any worker abort the call.
+    pub fn run_chunks<T: Send>(
+        &self,
+        n: usize,
+        chunk: usize,
+        f: impl Fn(usize, usize) -> Result<T> + Sync,
+    ) -> Result<Vec<T>> {
+        let chunk = chunk.max(1);
+        let mut tasks = Vec::with_capacity(n.div_ceil(chunk.max(1)).max(1));
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            tasks.push((start, end));
+            start = end;
+        }
+        self.run_tasks(tasks, |(s, e)| f(s, e))
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        if let Some(shared) = &self.shared {
+            {
+                // Flip the flag under the queue lock so a worker between
+                // its shutdown check and `wait` cannot miss the wakeup.
+                let _guard = shared.queue.lock().unwrap();
+                shared.shutdown.store(true, Ordering::Relaxed);
+            }
+            shared.available.notify_all();
+        }
+        for handle in self.handles.get_mut().unwrap().drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_workers_bounds() {
+        assert_eq!(resolve_workers(3), 3);
+        assert!(resolve_workers(0) >= 1);
+    }
+
+    #[test]
+    fn run_tasks_preserves_order_and_runs_all() {
+        for workers in [1usize, 2, 4] {
+            let exec = Executor::new(workers);
+            let tasks: Vec<usize> = (0..137).collect();
+            let out = exec.run_tasks(tasks, |t| Ok(t * 2)).unwrap();
+            assert_eq!(out, (0..137).map(|t| t * 2).collect::<Vec<_>>(), "workers={workers}");
+            let empty: Vec<usize> = Vec::new();
+            assert!(exec.run_tasks(empty, |t| Ok(t)).unwrap().is_empty());
+        }
+    }
+
+    #[test]
+    fn run_tasks_writes_through_mut_slices() {
+        let exec = Executor::new(3);
+        let mut buf = vec![0u32; 100];
+        let tasks: Vec<(usize, &mut [u32])> =
+            buf.chunks_mut(7).enumerate().map(|(i, c)| (i * 7, c)).collect();
+        exec.run_tasks(tasks, |(start, chunk)| {
+            for (o, slot) in chunk.iter_mut().enumerate() {
+                *slot = (start + o) as u32;
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(buf, (0..100u32).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn run_tasks_propagates_errors() {
+        for workers in [1usize, 2] {
+            let exec = Executor::new(workers);
+            let res = exec.run_tasks((0..50usize).collect(), |t| {
+                if t == 13 {
+                    Err(Error::Coordinator("boom".into()))
+                } else {
+                    Ok(t)
+                }
+            });
+            let err = res.unwrap_err();
+            assert!(err.to_string().contains("boom"), "workers={workers}: {err}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_converts_panics_to_errors() {
+        // A panicking task must not deadlock the submitter (remaining
+        // must still reach 0) and must surface as a Coordinator error —
+        // on the serial fast path (workers = 1) exactly like on the
+        // parallel path, so error behavior is worker-count independent.
+        for workers in [1usize, 2] {
+            let exec = Executor::new(workers);
+            let res = exec.run_tasks((0..20usize).collect(), |t| {
+                if t == 7 {
+                    panic!("task exploded");
+                }
+                Ok(t)
+            });
+            let err = res.unwrap_err();
+            assert!(err.to_string().contains("panicked"), "workers={workers}: {err}");
+            // The executor survives for the next batch.
+            let out = exec.run_tasks((0..5usize).collect(), Ok).unwrap();
+            assert_eq!(out, vec![0, 1, 2, 3, 4], "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn run_chunks_covers_all_indices_in_order() {
+        let exec = Executor::new(4);
+        let parts = exec.run_chunks(1003, 100, |s, e| Ok((s, e))).unwrap();
+        let mut covered = vec![false; 1003];
+        let mut last_start = None;
+        for (s, e) in parts {
+            if let Some(p) = last_start {
+                assert!(s > p, "chunks out of order");
+            }
+            last_start = Some(s);
+            for slot in covered.iter_mut().take(e).skip(s) {
+                assert!(!*slot, "overlap at {s}..{e}");
+                *slot = true;
+            }
+        }
+        assert!(covered.iter().all(|&c| c));
+    }
+
+    #[test]
+    fn run_chunks_propagates_errors() {
+        let exec = Executor::new(2);
+        let res: Result<Vec<()>> = exec.run_chunks(100, 10, |s, _| {
+            if s >= 50 {
+                Err(Error::Coordinator("boom".into()))
+            } else {
+                Ok(())
+            }
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn concurrent_submitters_share_one_team() {
+        // Four submitter threads, one 3-thread executor: every batch
+        // completes with results in submission order, whatever the
+        // interleaving. This is the streaming reduce stages' usage shape.
+        let exec = Arc::new(Executor::new(3));
+        let mut joins = Vec::new();
+        for s in 0..4u64 {
+            let exec = Arc::clone(&exec);
+            joins.push(std::thread::spawn(move || {
+                for round in 0..20u64 {
+                    let tasks: Vec<u64> = (0..31).map(|i| s * 10_000 + round * 100 + i).collect();
+                    let want: Vec<u64> = tasks.iter().map(|t| t * 3 + 1).collect();
+                    let out = exec.run_tasks(tasks, |t| Ok(t * 3 + 1)).unwrap();
+                    assert_eq!(out, want, "submitter {s} round {round}");
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn skewed_batches_self_balance() {
+        // Steal-heavy smoke: one submitter's batch is 100× more
+        // expensive per task; both finish correctly while sharing the
+        // team (no static split to strand threads on the light batch).
+        let exec = Arc::new(Executor::new(4));
+        let heavy = {
+            let exec = Arc::clone(&exec);
+            std::thread::spawn(move || {
+                exec.run_tasks((0..64usize).collect(), |t| {
+                    let mut acc = 0u64;
+                    for i in 0..200_000u64 {
+                        acc = acc.wrapping_mul(31).wrapping_add(i ^ t as u64);
+                    }
+                    Ok(acc)
+                })
+                .unwrap()
+            })
+        };
+        let light = exec.run_tasks((0..64usize).collect(), |t| Ok(t + 1)).unwrap();
+        assert_eq!(light, (1..=64usize).collect::<Vec<_>>());
+        assert_eq!(heavy.join().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn policies_do_not_change_results() {
+        // Steal policy and fairness are scheduling-only: results are
+        // keyed by submission index, so every combination is identical.
+        let base: Vec<usize> = (0..200).map(|t| t * 7).collect();
+        for steal in [StealPolicy::Fifo, StealPolicy::Lifo] {
+            for fair in [false, true] {
+                let exec = Executor::with_config(ExecutorConfig {
+                    workers: 3,
+                    steal,
+                    fair_stages: fair,
+                });
+                let out = exec.run_tasks((0..200usize).collect(), |t| Ok(t * 7)).unwrap();
+                assert_eq!(out, base, "steal={steal:?} fair={fair}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let exec = Executor::new(1);
+        assert_eq!(exec.workers(), 1);
+        let out = exec.run_tasks(vec![1, 2, 3], |t| Ok(t * 10)).unwrap();
+        assert_eq!(out, vec![10, 20, 30]);
+    }
+
+    #[test]
+    fn drop_joins_cleanly_with_pending_nothing() {
+        // Construct + drop without submitting: lazily-spawned workers
+        // never come up, and drop is a no-op join.
+        for _ in 0..8 {
+            let exec = Executor::new(4);
+            assert!(!exec.spawned.load(Ordering::Relaxed), "no batch → no threads");
+            drop(exec);
+        }
+        // …and after a real batch, drop still joins cleanly.
+        let exec = Executor::new(4);
+        exec.run_tasks((0..8usize).collect(), Ok).unwrap();
+        assert!(exec.spawned.load(Ordering::Relaxed));
+        drop(exec);
+    }
+}

@@ -7,7 +7,8 @@
 //! algorithm's input size by the same factor.
 
 use crate::cluster::{dbscan, gmm, hac, kmeans};
-use crate::coordinator::{PoolKnnProvider, WorkerPool};
+use crate::coordinator::PoolKnnProvider;
+use crate::exec::Executor;
 use crate::itis::{itis_with_workspace, ItisConfig, ItisResult, ItisWorkspace, PrototypeKind};
 use crate::linalg::Matrix;
 use crate::tc::SeedOrder;
@@ -140,21 +141,21 @@ impl Ihtc {
         }
     }
 
-    /// Run IHTC on `points` with the default worker pool and a throwaway
-    /// workspace. Use [`Self::run_with`] to reuse allocations across runs
-    /// or control the pool size.
+    /// Run IHTC on `points` with a machine-default executor and a
+    /// throwaway workspace. Use [`Self::run_with`] to reuse allocations
+    /// across runs or control the team size.
     pub fn run(&self, points: &Matrix) -> Result<IhtcResult> {
-        self.run_with(points, &WorkerPool::default(), &mut IhtcWorkspace::new())
+        self.run_with(points, &Executor::default(), &mut IhtcWorkspace::new())
     }
 
-    /// Run IHTC on `points` over an explicit worker pool, reusing the
-    /// given workspace's buffers. The whole pipeline — k-NN graph
+    /// Run IHTC on `points` over an explicit shared executor, reusing
+    /// the given workspace's buffers. The whole pipeline — k-NN graph
     /// construction, prototype reduction, and (for k-means) the
-    /// assignment phase — executes on the pool.
+    /// assignment phase — executes on that one thread team.
     pub fn run_with(
         &self,
         points: &Matrix,
-        pool: &WorkerPool,
+        exec: &Executor,
         ws: &mut IhtcWorkspace,
     ) -> Result<IhtcResult> {
         let itis_cfg = ItisConfig {
@@ -173,8 +174,8 @@ impl Ihtc {
                 n_original: points.rows(),
             }
         } else {
-            let provider = PoolKnnProvider { pool, shards: self.knn_shards };
-            itis_with_workspace(points, &itis_cfg, &provider, pool, &mut ws.itis)?
+            let provider = PoolKnnProvider { exec, shards: self.knn_shards };
+            itis_with_workspace(points, &itis_cfg, &provider, exec, &mut ws.itis)?
         };
         let protos = &reduction.prototypes;
         let prototype_labels: Vec<u32> = match &self.clusterer {
@@ -189,7 +190,7 @@ impl Ihtc {
                     None,
                     &cfg,
                     &kmeans::NativeAssign,
-                    pool,
+                    exec,
                     &mut ws.kmeans,
                 )?
                 .assignments
@@ -338,16 +339,16 @@ mod tests {
 
     #[test]
     fn run_with_reused_workspace_matches_run() {
-        // Workspace reuse and pool size must not change the clustering.
+        // Workspace reuse and team size must not change the clustering.
         let ds = gaussian_mixture_paper(3000, 119);
         let ih = Ihtc::new(2, 2, FinalClusterer::KMeans { k: 3, restarts: 2 });
         let fresh = ih.run(&ds.points).unwrap();
-        let pool = crate::coordinator::WorkerPool::new(3);
+        let exec = Executor::new(3);
         let mut ws = IhtcWorkspace::new();
-        let a = ih.run_with(&ds.points, &pool, &mut ws).unwrap();
-        let b = ih.run_with(&ds.points, &pool, &mut ws).unwrap();
+        let a = ih.run_with(&ds.points, &exec, &mut ws).unwrap();
+        let b = ih.run_with(&ds.points, &exec, &mut ws).unwrap();
         assert_eq!(a.assignments, b.assignments, "reuse changed the result");
-        assert_eq!(fresh.assignments, a.assignments, "pool size changed the result");
+        assert_eq!(fresh.assignments, a.assignments, "team size changed the result");
         assert_eq!(fresh.num_prototypes(), a.num_prototypes());
     }
 

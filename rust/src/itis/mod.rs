@@ -10,7 +10,7 @@
 //! the final prototypes can be "backed out" onto the original units
 //! (IHTC step 3) by composing the maps.
 
-use crate::coordinator::WorkerPool;
+use crate::exec::Executor;
 use crate::knn::forest::KdForest;
 use crate::knn::graph::{GraphScratch, NeighborGraph};
 use crate::knn::KnnLists;
@@ -52,7 +52,7 @@ pub trait KnnProvider {
     }
 }
 
-/// Default provider: best exact backend on the default worker pool.
+/// Default provider: best exact backend on a default executor.
 pub struct DefaultKnn;
 
 impl KnnProvider for DefaultKnn {
@@ -61,7 +61,7 @@ impl KnnProvider for DefaultKnn {
     }
 
     fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
-        crate::knn::knn_auto_into(points, k, &WorkerPool::default(), out)
+        crate::knn::knn_auto_into(points, k, &Executor::default(), out)
     }
 }
 
@@ -280,13 +280,13 @@ fn accumulate_range(
 }
 
 /// Compute prototypes for one TC level, accumulating in parallel over
-/// the pool (for large levels) into the workspace's reused buffers.
+/// the executor (for large levels) into the workspace's reused buffers.
 fn make_prototypes(
     points: &Matrix,
     weights: &[u32],
     tc: &TcResult,
     kind: PrototypeKind,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut ItisWorkspace,
 ) -> Result<(Matrix, Vec<u32>)> {
     let d = points.cols();
@@ -296,8 +296,8 @@ fn make_prototypes(
     ws.wsum.clear();
     ws.wsum.resize(k, 0);
     let mut new_weights = vec![0u32; k];
-    let nparts = if pool.workers() > 1 && k >= 64 && points.rows() >= 8192 {
-        pool.workers().min(k)
+    let nparts = if exec.workers() > 1 && k >= 64 && points.rows() >= 8192 {
+        exec.workers().min(k)
     } else {
         1
     };
@@ -335,7 +335,7 @@ fn make_prototypes(
             tasks.push((c0, len, s, w, nw));
             c0 += len;
         }
-        pool.run_tasks(tasks, |(c0, len, s, w, nw)| {
+        exec.run_tasks(tasks, |(c0, len, s, w, nw)| {
             accumulate_range(points, weights, &tc.assignments, kind, c0, len, s, w, nw);
             Ok(())
         })?;
@@ -372,39 +372,39 @@ pub fn itis(points: &Matrix, config: &ItisConfig) -> Result<ItisResult> {
 }
 
 /// Run ITIS with an injected k-NN backend (the coordinator passes its
-/// work-stealing parallel or PJRT implementation), on the default pool
-/// with a throwaway workspace.
+/// work-stealing parallel or PJRT implementation), on a default
+/// executor with a throwaway workspace.
 pub fn itis_with(
     points: &Matrix,
     config: &ItisConfig,
     knn: &dyn KnnProvider,
 ) -> Result<ItisResult> {
-    let pool = WorkerPool::default();
+    let exec = Executor::default();
     let mut ws = ItisWorkspace::new();
-    itis_with_workspace(points, config, knn, &pool, &mut ws)
+    itis_with_workspace(points, config, knn, &exec, &mut ws)
 }
 
-/// Full-control ITIS: explicit k-NN backend, worker pool, and reusable
+/// Full-control ITIS: explicit k-NN backend, executor, and reusable
 /// workspace. Repeated calls on the same workspace (e.g. the repro
 /// harness sweeping `m`, or a service clustering many batches) reuse the
 /// `n×k` neighbor buffers and prototype accumulators across runs.
 ///
-/// `pool` governs the *prototype reduction*; the k-NN phase's threading
-/// belongs to the `knn` provider. To run both phases on one pool —
-/// e.g. to cap thread count — pass
-/// [`crate::coordinator::PoolKnnProvider`]`{ pool }` as the provider
+/// `exec` governs the *prototype reduction*; the k-NN phase's threading
+/// belongs to the `knn` provider. To run both phases on the one shared
+/// team — the intended shape — pass
+/// [`crate::coordinator::PoolKnnProvider`]`{ exec, .. }` as the provider
 /// (what [`crate::hybrid::Ihtc::run_with`] does). [`DefaultKnn`] always
-/// uses the machine-default pool, whatever `pool` is.
+/// spins a machine-default executor, whatever `exec` is.
 pub fn itis_with_workspace(
     points: &Matrix,
     config: &ItisConfig,
     knn: &dyn KnnProvider,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut ItisWorkspace,
 ) -> Result<ItisResult> {
     check_threshold(config)?;
     let n0 = points.rows();
-    itis_core(points.clone(), vec![1; n0], n0, config, knn, pool, ws)
+    itis_core(points.clone(), vec![1; n0], n0, config, knn, exec, ws)
 }
 
 /// Resume ITIS from an already-reduced level: each row of `initial`
@@ -421,7 +421,7 @@ pub fn itis_resume(
     n_original: usize,
     config: &ItisConfig,
     knn: &dyn KnnProvider,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut ItisWorkspace,
 ) -> Result<ItisResult> {
     check_threshold(config)?;
@@ -432,7 +432,7 @@ pub fn itis_resume(
             initial.rows()
         )));
     }
-    itis_core(initial, initial_weights, n_original, config, knn, pool, ws)
+    itis_core(initial, initial_weights, n_original, config, knn, exec, ws)
 }
 
 fn check_threshold(config: &ItisConfig) -> Result<()> {
@@ -453,7 +453,7 @@ fn itis_core(
     n0: usize,
     config: &ItisConfig,
     knn: &dyn KnnProvider,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut ItisWorkspace,
 ) -> Result<ItisResult> {
     let mut levels = Vec::new();
@@ -496,7 +496,7 @@ fn itis_core(
             break;
         }
         let (protos, new_weights) =
-            make_prototypes(&current, &weights, &tc, config.prototype, pool, ws)?;
+            make_prototypes(&current, &weights, &tc, config.prototype, exec, ws)?;
         levels.push(ItisLevel { assignments: tc.assignments, num_prototypes: tc.num_clusters });
         current = protos;
         weights = new_weights;
@@ -530,7 +530,7 @@ pub fn reduce_shard(
     weights: &[u32],
     config: &ItisConfig,
     knn: &dyn KnnProvider,
-    pool: &WorkerPool,
+    exec: &Executor,
     ws: &mut ItisWorkspace,
 ) -> Result<ShardReduction> {
     check_threshold(config)?;
@@ -557,19 +557,22 @@ pub fn reduce_shard(
         threshold_cluster_graph(&ws.graph, points, &tc_cfg)
     };
     let (prototypes, new_weights) =
-        make_prototypes(points, weights, &tc, PrototypeKind::WeightedCentroid, pool, ws)?;
+        make_prototypes(points, weights, &tc, PrototypeKind::WeightedCentroid, exec, ws)?;
     Ok(ShardReduction { prototypes, weights: new_weights, assignments: tc.assignments })
 }
 
-/// Everything one streaming reduce stage owns: its worker pool, its
-/// reusable [`ItisWorkspace`], and the unit-weight scratch buffer. The
-/// fused ingest spawns one `ShardReducer` per concurrent reduce stage
-/// (via `PipelineBuilder::map_init_parallel`), so workspaces never cross
-/// stage threads and every shard is processed through the same buffers
-/// with zero steady-state allocation — the single-stage `map_init`
-/// pattern, multiplied.
+/// Everything one streaming reduce stage owns: a handle to the run's
+/// **shared executor**, its reusable [`ItisWorkspace`], and the
+/// unit-weight scratch buffer. The fused ingest spawns one
+/// `ShardReducer` per concurrent reduce stage (via
+/// `PipelineBuilder::map_init_parallel`); workspaces never cross stage
+/// threads, but the thread team is one: every stage submits its k-NN
+/// and prototype batches into the same executor, so the worker budget
+/// self-balances across stages — a stage that lands a hard shard pulls
+/// in the whole team, instead of being confined to a statically carved
+/// `workers / reduce_stages` slice.
 pub struct ShardReducer {
-    pool: WorkerPool,
+    exec: std::sync::Arc<Executor>,
     ws: ItisWorkspace,
     ones: Vec<u32>,
     config: ItisConfig,
@@ -577,13 +580,13 @@ pub struct ShardReducer {
 }
 
 impl ShardReducer {
-    /// Stage-local state: a pool of `workers` threads (0 = machine
-    /// default) plus fresh buffers, reduced with `config`; the per-shard
-    /// k-NN step uses a `knn_shards`-tree kd-forest (1 = single tree),
-    /// rebuilt in this stage's workspace for every data shard.
-    pub fn new(workers: usize, knn_shards: usize, config: ItisConfig) -> Self {
+    /// Stage-local state around the run's shared `exec`: fresh buffers,
+    /// reduced with `config`; the per-shard k-NN step uses a
+    /// `knn_shards`-tree kd-forest (1 = single tree), rebuilt in this
+    /// stage's workspace for every data shard.
+    pub fn new(exec: std::sync::Arc<Executor>, knn_shards: usize, config: ItisConfig) -> Self {
         Self {
-            pool: WorkerPool::new(workers),
+            exec,
             ws: ItisWorkspace::new(),
             ones: Vec::new(),
             config,
@@ -597,8 +600,8 @@ impl ShardReducer {
         self.ones.clear();
         self.ones.resize(points.rows(), 1);
         let provider =
-            crate::coordinator::PoolKnnProvider { pool: &self.pool, shards: self.knn_shards };
-        reduce_shard(points, &self.ones, &self.config, &provider, &self.pool, &mut self.ws)
+            crate::coordinator::PoolKnnProvider { exec: &self.exec, shards: self.knn_shards };
+        reduce_shard(points, &self.ones, &self.config, &provider, &self.exec, &mut self.ws)
     }
 }
 
@@ -672,14 +675,14 @@ mod tests {
         // An itis_resume result whose caller forgot to prepend the
         // level-0 map must error on back-out, not panic on indexing.
         let ds = gaussian_mixture_paper(400, 79);
-        let pool = WorkerPool::new(1);
+        let exec = Executor::new(1);
         let mut ws = ItisWorkspace::new();
         let cfg = ItisConfig {
             prototype: PrototypeKind::WeightedCentroid,
             ..ItisConfig::iterations(2, 1)
         };
         // Pretend `initial` is a level-0 reduction of 800 original rows.
-        let r = itis_resume(ds.points.clone(), vec![2; 400], 800, &cfg, &DefaultKnn, &pool, &mut ws)
+        let r = itis_resume(ds.points.clone(), vec![2; 400], 800, &cfg, &DefaultKnn, &exec, &mut ws)
             .unwrap();
         let labels = vec![0u32; r.prototypes.rows()];
         let err = r.back_out(&labels).unwrap_err();
@@ -779,12 +782,12 @@ mod tests {
         let ds = gaussian_mixture_paper(2500, 72);
         let cfg = ItisConfig::iterations(2, 3);
         let fresh = itis(&ds.points, &cfg).unwrap();
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut ws = ItisWorkspace::new();
         let first =
-            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
         let second =
-            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+            itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
         for r in [&first, &second] {
             assert_eq!(r.prototypes.data(), fresh.prototypes.data());
             assert_eq!(r.weights, fresh.weights);
@@ -842,9 +845,9 @@ mod tests {
             ..ItisConfig::iterations(2, 1)
         };
         let level = itis(&ds.points, &cfg).unwrap();
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut ws = ItisWorkspace::new();
-        let red = reduce_shard(&ds.points, &vec![1; 1200], &cfg, &DefaultKnn, &pool, &mut ws)
+        let red = reduce_shard(&ds.points, &vec![1; 1200], &cfg, &DefaultKnn, &exec, &mut ws)
             .unwrap();
         assert_eq!(red.prototypes.data(), level.prototypes.data());
         assert_eq!(red.weights, level.weights);
@@ -855,24 +858,24 @@ mod tests {
     fn reduce_shard_conserves_mass_and_handles_tiny_shards() {
         let ds = gaussian_mixture_paper(37, 75);
         let cfg = ItisConfig::iterations(2, 1);
-        let pool = WorkerPool::new(1);
+        let exec = Executor::new(1);
         let mut ws = ItisWorkspace::new();
         // Incoming rows already weighted (as on a resumed level).
         let weights: Vec<u32> = (0..37).map(|i| 1 + (i % 3) as u32).collect();
         let total: u64 = weights.iter().map(|&w| w as u64).sum();
-        let red = reduce_shard(&ds.points, &weights, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        let red = reduce_shard(&ds.points, &weights, &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
         let got: u64 = red.weights.iter().map(|&w| w as u64).sum();
         assert_eq!(got, total);
         assert_eq!(red.assignments.len(), 37);
         // A shard of ≤ t* rows collapses to one prototype.
         let tiny = ds.points.slice_rows(0, 2);
-        let red = reduce_shard(&tiny, &[1, 1], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        let red = reduce_shard(&tiny, &[1, 1], &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
         assert_eq!(red.prototypes.rows(), 1);
         assert_eq!(red.weights, vec![2]);
         // Mismatched weights are rejected; empty shards are a no-op.
-        assert!(reduce_shard(&tiny, &[1], &cfg, &DefaultKnn, &pool, &mut ws).is_err());
+        assert!(reduce_shard(&tiny, &[1], &cfg, &DefaultKnn, &exec, &mut ws).is_err());
         let empty = ds.points.slice_rows(0, 0);
-        let red = reduce_shard(&empty, &[], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+        let red = reduce_shard(&empty, &[], &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
         assert_eq!(red.prototypes.rows(), 0);
     }
 
@@ -886,14 +889,14 @@ mod tests {
             prototype: PrototypeKind::WeightedCentroid,
             ..ItisConfig::iterations(2, 2)
         };
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut ws = ItisWorkspace::new();
         let mut data = Vec::new();
         let mut weights = Vec::new();
         for start in (0..2048).step_by(512) {
             let shard = ds.points.slice_rows(start, start + 512);
             let red =
-                reduce_shard(&shard, &vec![1; 512], &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+                reduce_shard(&shard, &vec![1; 512], &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
             data.extend_from_slice(red.prototypes.data());
             weights.extend_from_slice(&red.weights);
         }
@@ -903,7 +906,7 @@ mod tests {
             prototype: PrototypeKind::WeightedCentroid,
             ..ItisConfig::iterations(2, 1)
         };
-        let r = itis_resume(initial, weights, 2048, &resume_cfg, &DefaultKnn, &pool, &mut ws)
+        let r = itis_resume(initial, weights, 2048, &resume_cfg, &DefaultKnn, &exec, &mut ws)
             .unwrap();
         assert_eq!(r.n_original, 2048);
         let total: u64 = r.weights.iter().map(|&w| w as u64).sum();
@@ -923,8 +926,9 @@ mod tests {
             prototype: PrototypeKind::WeightedCentroid,
             ..ItisConfig::iterations(2, 1)
         };
-        let mut reducer = ShardReducer::new(2, 1, cfg.clone());
-        let pool = WorkerPool::new(2);
+        let shared = std::sync::Arc::new(Executor::new(2));
+        let mut reducer = ShardReducer::new(shared, 1, cfg.clone());
+        let exec = Executor::new(2);
         let mut ws = ItisWorkspace::new();
         for (start, end) in [(0usize, 300usize), (300, 600), (600, 900)] {
             let shard = ds.points.slice_rows(start, end);
@@ -933,8 +937,8 @@ mod tests {
                 &shard,
                 &vec![1; end - start],
                 &cfg,
-                &crate::coordinator::PoolKnnProvider { pool: &pool, shards: 1 },
-                &pool,
+                &crate::coordinator::PoolKnnProvider { exec: &exec, shards: 1 },
+                &exec,
                 &mut ws,
             )
             .unwrap();
@@ -951,12 +955,12 @@ mod tests {
         // byte-identical to the single tree, so the whole reduction is).
         let ds = gaussian_mixture_paper(3000, 81);
         let cfg = ItisConfig::iterations(2, 2);
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut base: Option<ItisResult> = None;
         for shards in [1usize, 2, 4] {
-            let provider = crate::coordinator::PoolKnnProvider { pool: &pool, shards };
+            let provider = crate::coordinator::PoolKnnProvider { exec: &exec, shards };
             let mut ws = ItisWorkspace::new();
-            let r = itis_with_workspace(&ds.points, &cfg, &provider, &pool, &mut ws).unwrap();
+            let r = itis_with_workspace(&ds.points, &cfg, &provider, &exec, &mut ws).unwrap();
             match &base {
                 None => base = Some(r),
                 Some(b) => {
@@ -980,10 +984,10 @@ mod tests {
         let cfg = ItisConfig::iterations(2, 2);
         let mut results = Vec::new();
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::new(workers);
+            let exec = Executor::new(workers);
             let mut ws = ItisWorkspace::new();
             let r =
-                itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &pool, &mut ws).unwrap();
+                itis_with_workspace(&ds.points, &cfg, &DefaultKnn, &exec, &mut ws).unwrap();
             results.push(r);
         }
         let base: Vec<u32> = results[0].prototypes.data().iter().map(|v| v.to_bits()).collect();

@@ -6,7 +6,7 @@
 //! near the top of the tree), and the finished arena is a single cache
 //! footprint every worker walks. The forest splits the point set into
 //! `s` contiguous row shards, builds one independent tree per shard —
-//! embarrassingly parallel on the [`WorkerPool`], no serial planning
+//! embarrassingly parallel on the shared [`Executor`], no serial planning
 //! phase, no arena splice — and answers a query by probing every shard
 //! tree into one shared [`TopK`] collector. It is also the unit of
 //! distribution the ROADMAP's TeraHAC-style graph phase will scatter
@@ -27,7 +27,7 @@
 
 use super::kdtree::KdTree;
 use super::{KnnLists, TopK};
-use crate::coordinator::WorkerPool;
+use crate::exec::Executor;
 use crate::linalg::Matrix;
 use crate::Result;
 
@@ -62,13 +62,13 @@ impl KdForest {
 
     /// (Re)build the forest over `points` with `shards` contiguous row
     /// shards (clamped to at least one row per shard), one kd-tree per
-    /// shard, built concurrently on `pool`. Shard boundaries are the
+    /// shard, built concurrently on `exec`. Shard boundaries are the
     /// deterministic `n/s` split (first `n % s` shards one row longer),
     /// and each shard tree is built by the serial single-tree recursion,
     /// so the forest is identical for every worker count. Tree arenas
     /// from a previous rebuild are reused (level sizes in the ITIS loop
     /// only shrink, so steady state allocates nothing).
-    pub fn rebuild(&mut self, points: &Matrix, shards: usize, pool: &WorkerPool) {
+    pub fn rebuild(&mut self, points: &Matrix, shards: usize, exec: &Executor) {
         let n = points.rows();
         let s = shards.max(1).min(n.max(1));
         let base = n / s;
@@ -89,8 +89,8 @@ impl KdForest {
             .enumerate()
             .map(|(i, tree)| (bounds[i], bounds[i + 1], tree))
             .collect();
-        if pool.workers() > 1 && s > 1 {
-            pool.run_tasks(tasks, |(s0, s1, tree)| {
+        if exec.workers() > 1 && s > 1 {
+            exec.run_tasks(tasks, |(s0, s1, tree)| {
                 tree.rebuild_range(points, s0, s1, LEAF_SIZE);
                 Ok(())
             })
@@ -111,7 +111,7 @@ impl KdForest {
         self.knn_range_into(points, k, 0, n, &mut out.indices, &mut out.dists)
     }
 
-    /// [`Self::knn_all_into`] sharded across the worker pool: disjoint
+    /// [`Self::knn_all_into`] sharded across the executor: disjoint
     /// query ranges are stolen chunk-by-chunk and written straight into
     /// `out`. Byte-identical to the serial path for any worker count
     /// (each query row's merged candidate set is independent of which
@@ -120,7 +120,7 @@ impl KdForest {
         &self,
         points: &Matrix,
         k: usize,
-        pool: &WorkerPool,
+        exec: &Executor,
         out: &mut KnnLists,
     ) -> Result<()> {
         let n = points.rows();
@@ -133,7 +133,7 @@ impl KdForest {
             .enumerate()
             .map(|(ci, (is, ds))| (ci * QUERY_CHUNK, is, ds))
             .collect();
-        pool.run_tasks(tasks, |(start, is, ds)| {
+        exec.run_tasks(tasks, |(start, is, ds)| {
             let end = start + is.len() / k;
             self.knn_range_into(points, k, start, end, is, ds)
         })?;
@@ -142,10 +142,18 @@ impl KdForest {
 
     /// k-NN lists restricted to query rows `[start, end)`, written into
     /// caller-owned slices of length `(end - start) * k` each — the task
-    /// unit the pooled query path distributes. Each query probes every
-    /// shard tree through one [`TopK`]; shard order cannot change the
-    /// kept set (total candidate order), it only tightens the pruning
-    /// bound earlier or later.
+    /// unit the pooled query path distributes.
+    ///
+    /// Per-shard pruning: each query first ranks the shard trees by the
+    /// minimum distance from the query to their *root* bounding box and
+    /// probes them in that order, so the nearest shards tighten the
+    /// [`TopK`] bound before farther shards are tested; a shard whose
+    /// root box lies **strictly** beyond the current bound is skipped
+    /// without descending it at all. This is the same strict-inequality
+    /// rule the in-tree descent uses (boxes *at* the bound may still
+    /// hold an index-tie winner), and the kept set is defined by the
+    /// shared `(distance, index)` total order — independent of probe
+    /// order — so pruning changes wall-clock only, never output bytes.
     pub fn knn_range_into(
         &self,
         points: &Matrix,
@@ -165,11 +173,28 @@ impl KdForest {
         assert_eq!(dists.len(), m * k);
         let mut top = TopK::new(k);
         let mut scratch: Vec<(f32, u32)> = Vec::with_capacity(k);
+        let mut order: Vec<(f32, u32)> = Vec::with_capacity(self.trees.len());
         for i in start..end {
             top.reset();
             let q = points.row(i);
-            for tree in &self.trees {
-                tree.knn_accumulate(points, q, i as u32, &mut top);
+            order.clear();
+            order.extend(
+                self.trees
+                    .iter()
+                    .enumerate()
+                    .map(|(t, tree)| (tree.root_bbox_min_dist(q), t as u32)),
+            );
+            // Deterministic near-to-far order (root distances are never
+            // NaN: finite data, or +inf for an empty tree's box).
+            order.sort_unstable_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            for &(dmin, t) in &order {
+                if dmin > top.bound() {
+                    // Sorted ascending: every remaining shard is at
+                    // least this far, and candidates strictly beyond
+                    // the bound can never enter the kept set.
+                    break;
+                }
+                self.trees[t as usize].knn_accumulate(points, q, i as u32, &mut top);
             }
             top.drain_sorted_into(&mut scratch);
             debug_assert_eq!(scratch.len(), k);
@@ -197,10 +222,10 @@ mod tests {
     fn forest_byte_identical_to_brute() {
         let ds = gaussian_mixture_paper(900, 91);
         let oracle = knn_brute(&ds.points, 5).unwrap();
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         for shards in [1usize, 2, 3, 7] {
             let mut forest = KdForest::new();
-            forest.rebuild(&ds.points, shards, &pool);
+            forest.rebuild(&ds.points, shards, &exec);
             assert_eq!(forest.shards(), shards);
             let mut out = KnnLists::default();
             forest.knn_all_into(&ds.points, 5, &mut out).unwrap();
@@ -212,13 +237,13 @@ mod tests {
     #[test]
     fn pooled_queries_match_serial_for_any_worker_count() {
         let ds = gaussian_mixture_paper(3000, 92);
-        let build_pool = WorkerPool::new(2);
+        let build_exec = Executor::new(2);
         let mut forest = KdForest::new();
-        forest.rebuild(&ds.points, 4, &build_pool);
+        forest.rebuild(&ds.points, 4, &build_exec);
         let mut serial = KnnLists::default();
         forest.knn_all_into(&ds.points, 4, &mut serial).unwrap();
         for workers in [1usize, 3] {
-            let pool = WorkerPool::new(workers);
+            let pool = Executor::new(workers);
             let mut pooled = KnnLists::default();
             forest.knn_all_pool_into(&ds.points, 4, &pool, &mut pooled).unwrap();
             assert_eq!(serial.indices, pooled.indices, "workers={workers}");
@@ -232,11 +257,11 @@ mod tests {
         // forest: every rebuild must give oracle-identical answers.
         let big = gaussian_mixture_paper(2000, 93);
         let small = gaussian_mixture_paper(700, 94);
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut forest = KdForest::new();
         let mut out = KnnLists::default();
         for ds in [&big, &small, &big] {
-            forest.rebuild(&ds.points, 3, &pool);
+            forest.rebuild(&ds.points, 3, &exec);
             forest.knn_all_into(&ds.points, 4, &mut out).unwrap();
             let oracle = knn_brute(&ds.points, 4).unwrap();
             assert_eq!(out.indices, oracle.indices);
@@ -247,9 +272,9 @@ mod tests {
     #[test]
     fn more_shards_than_rows_clamps() {
         let ds = gaussian_mixture_paper(40, 95);
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut forest = KdForest::new();
-        forest.rebuild(&ds.points, 64, &pool);
+        forest.rebuild(&ds.points, 64, &exec);
         assert_eq!(forest.shards(), 40);
         let mut out = KnnLists::default();
         forest.knn_all_into(&ds.points, 3, &mut out).unwrap();
@@ -258,11 +283,37 @@ mod tests {
     }
 
     #[test]
+    fn shard_pruning_keeps_byte_parity_on_separated_shards() {
+        // Contiguous row blocks form far-apart blobs, so each shard's
+        // root box is distant from most queries and the per-shard
+        // pruning actually skips trees; output must still be
+        // byte-identical to the oracle for every shard count.
+        let n = 600usize;
+        let mut data = Vec::with_capacity(n * 2);
+        for i in 0..n {
+            let blob = (i / 150) as f32; // 4 well-separated blobs
+            data.push(blob * 1e4 + (i % 150) as f32 * 0.01);
+            data.push(blob * -1e4 + ((i % 7) as f32).sin());
+        }
+        let m = Matrix::from_vec(data, n, 2).unwrap();
+        let oracle = knn_brute(&m, 5).unwrap();
+        let exec = Executor::new(2);
+        let mut forest = KdForest::new();
+        let mut out = KnnLists::default();
+        for shards in [2usize, 4, 8] {
+            forest.rebuild(&m, shards, &exec);
+            forest.knn_all_into(&m, 5, &mut out).unwrap();
+            assert_eq!(out.indices, oracle.indices, "shards={shards}");
+            assert_eq!(bits(&out.dists), bits(&oracle.dists), "shards={shards}");
+        }
+    }
+
+    #[test]
     fn rejects_degenerate_k() {
         let ds = gaussian_mixture_paper(10, 96);
-        let pool = WorkerPool::new(1);
+        let exec = Executor::new(1);
         let mut forest = KdForest::new();
-        forest.rebuild(&ds.points, 2, &pool);
+        forest.rebuild(&ds.points, 2, &exec);
         let mut out = KnnLists::default();
         assert!(forest.knn_all_into(&ds.points, 0, &mut out).is_err());
         assert!(forest.knn_all_into(&ds.points, 10, &mut out).is_err());

@@ -16,14 +16,14 @@
 //!
 //! Parallel construction ([`KdTree::build_parallel`]) splits the top of
 //! the tree serially into `~8×workers` disjoint permutation windows, has
-//! the worker pool build one sub-arena per window, and splices the
+//! the shared executor build one sub-arena per window, and splices the
 //! sub-arenas back into a single flat arena. Because the planning phase
 //! uses the same median/comparator as the serial recursion, the merged
 //! arena (nodes, boxes, permutation) is **byte-identical** to the serial
 //! build for every worker count.
 
 use super::{KnnLists, TopK};
-use crate::coordinator::WorkerPool;
+use crate::exec::Executor;
 use crate::linalg::{sq_dist, Matrix};
 use crate::Result;
 
@@ -132,7 +132,7 @@ fn build_arena(
 
 /// Top-of-tree plan produced by the serial partitioning phase of the
 /// parallel build: internal splits plus leaf *tasks* (permutation
-/// windows) the pool builds concurrently.
+/// windows) the executor builds concurrently.
 enum Plan {
     Task { offset: usize, len: usize },
     Split { axis: u16, lo: Vec<f32>, hi: Vec<f32>, left: Box<Plan>, right: Box<Plan> },
@@ -265,21 +265,22 @@ impl KdTree {
         KdTree { nodes, bboxes, perm, root, dim: d, leaf_size }
     }
 
-    /// Build with node partitioning parallelized over the worker pool
-    /// (default leaf size). Output is byte-identical to [`Self::build`].
-    pub fn build_parallel(points: &Matrix, pool: &WorkerPool) -> Self {
-        Self::build_parallel_with_leaf_size(points, 12, pool)
+    /// Build with node partitioning parallelized over the shared
+    /// executor (default leaf size). Output is byte-identical to
+    /// [`Self::build`].
+    pub fn build_parallel(points: &Matrix, exec: &Executor) -> Self {
+        Self::build_parallel_with_leaf_size(points, 12, exec)
     }
 
     /// [`Self::build_parallel`] with an explicit leaf size. Small inputs
-    /// and single-worker pools fall back to the serial build.
+    /// and single-worker executors fall back to the serial build.
     pub fn build_parallel_with_leaf_size(
         points: &Matrix,
         leaf_size: usize,
-        pool: &WorkerPool,
+        exec: &Executor,
     ) -> Self {
         let n = points.rows();
-        let workers = pool.workers();
+        let workers = exec.workers();
         if workers <= 1 || n < 4096 {
             return Self::build_with_leaf_size(points, leaf_size);
         }
@@ -305,7 +306,7 @@ impl KdTree {
             consumed += len;
         }
         debug_assert_eq!(consumed, n);
-        let arenas = pool
+        let arenas = exec
             .run_tasks(tasks, |(off, window)| {
                 let mut nodes = Vec::new();
                 let mut bboxes = Vec::new();
@@ -382,6 +383,17 @@ impl KdTree {
     pub fn knn_accumulate(&self, points: &Matrix, q: &[f32], exclude: u32, top: &mut TopK) {
         debug_assert_eq!(q.len(), self.dim);
         self.search(points, q, exclude, self.root, top);
+    }
+
+    /// Minimum squared distance from `q` to this tree's *root* bounding
+    /// box — the whole shard's box. [`super::forest::KdForest`] orders
+    /// shard trees by this and skips trees strictly beyond the current
+    /// [`TopK`] bound (the same strict-inequality pruning rule the
+    /// in-tree descent uses), so far shards are never descended at all.
+    /// An empty tree reports `+inf` (its degenerate box contains nothing).
+    #[inline]
+    pub fn root_bbox_min_dist(&self, q: &[f32]) -> f32 {
+        self.bbox_min_dist(self.root, q)
     }
 
     /// Minimum squared distance from `q` to a node's bounding box.
@@ -475,7 +487,7 @@ impl KdTree {
         Ok(())
     }
 
-    /// [`Self::knn_all`] sharded across the worker pool: disjoint query
+    /// [`Self::knn_all`] sharded across the executor: disjoint query
     /// ranges are stolen chunk-by-chunk and written straight into `out`
     /// (no per-shard buffers, no stitch copy). Byte-identical to the
     /// serial path for any worker count.
@@ -483,7 +495,7 @@ impl KdTree {
         &self,
         points: &Matrix,
         k: usize,
-        pool: &WorkerPool,
+        exec: &Executor,
         out: &mut KnnLists,
     ) -> Result<()> {
         let n = points.rows();
@@ -497,7 +509,7 @@ impl KdTree {
             .enumerate()
             .map(|(ci, (is, ds))| (ci * CHUNK, is, ds))
             .collect();
-        pool.run_tasks(tasks, |(start, is, ds)| {
+        exec.run_tasks(tasks, |(start, is, ds)| {
             let end = start + is.len() / k;
             self.knn_range_into(points, k, start, end, is, ds)
         })?;
@@ -505,7 +517,7 @@ impl KdTree {
     }
 
     /// [`Self::knn_all`] restricted to query rows `[start, end)` — the
-    /// shard unit the coordinator's worker pool distributes.
+    /// shard unit the coordinator's executor distributes.
     pub fn knn_range(
         &self,
         points: &Matrix,
@@ -645,8 +657,8 @@ mod tests {
         let serial = KdTree::build(&ds.points);
         let base = serial.knn_all(&ds.points, 4).unwrap();
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::new(workers);
-            let tree = KdTree::build_parallel(&ds.points, &pool);
+            let exec = Executor::new(workers);
+            let tree = KdTree::build_parallel(&ds.points, &exec);
             assert_eq!(tree.perm, serial.perm, "workers={workers}");
             let got = tree.knn_all(&ds.points, 4).unwrap();
             assert_eq!(base.indices, got.indices, "workers={workers}");
@@ -662,9 +674,9 @@ mod tests {
         let tree = KdTree::build(&ds.points);
         let serial = tree.knn_all(&ds.points, 5).unwrap();
         for workers in [1usize, 3] {
-            let pool = WorkerPool::new(workers);
+            let exec = Executor::new(workers);
             let mut pooled = KnnLists::default();
-            tree.knn_all_pool_into(&ds.points, 5, &pool, &mut pooled).unwrap();
+            tree.knn_all_pool_into(&ds.points, 5, &exec, &mut pooled).unwrap();
             assert_eq!(serial.indices, pooled.indices, "workers={workers}");
             assert_eq!(serial.dists, pooled.dists, "workers={workers}");
         }

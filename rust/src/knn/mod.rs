@@ -15,7 +15,7 @@
 //!   the shape the coordinator shards across workers.
 //!
 //! [`knn_auto`] routes every caller — `threshold_cluster`, ITIS, the
-//! benches — through the coordinator's worker pool by default: the
+//! benches — through a shared work-stealing executor by default: the
 //! kd-tree is built with parallel node partitioning and queried in
 //! pool-sharded ranges, and the chunked path shards query blocks. All
 //! backends share a total candidate order (distance, then index; see
@@ -38,7 +38,7 @@ pub mod forest;
 pub mod graph;
 pub mod kdtree;
 
-use crate::coordinator::WorkerPool;
+use crate::exec::Executor;
 use crate::linalg::{sq_dist, sq_norm, Matrix};
 use crate::{Error, Result};
 
@@ -442,7 +442,7 @@ pub fn knn_chunked_into(
 }
 
 /// Pool-sharded [`knn_chunked`]: contiguous runs of query blocks are
-/// distributed across the worker pool (~4 tasks per worker, so the
+/// distributed across the executor (~4 tasks per worker, so the
 /// [`TopK`] set, evaluator scratch, and norm cache amortize over many
 /// blocks instead of being rebuilt per 256-row block). Tasks are always
 /// whole multiples of `q_block`, so the (query block, reference block)
@@ -454,10 +454,10 @@ pub fn knn_chunked_pool(
     q_block: usize,
     r_block: usize,
     eval: &(dyn ChunkEvaluator + Sync),
-    pool: &WorkerPool,
+    exec: &Executor,
 ) -> Result<KnnLists> {
     let mut out = KnnLists::default();
-    knn_chunked_pool_into(points, k, q_block, r_block, eval, pool, &mut out)?;
+    knn_chunked_pool_into(points, k, q_block, r_block, eval, exec, &mut out)?;
     Ok(out)
 }
 
@@ -470,7 +470,7 @@ pub fn knn_chunked_pool_into(
     q_block: usize,
     r_block: usize,
     eval: &(dyn ChunkEvaluator + Sync),
-    pool: &WorkerPool,
+    exec: &Executor,
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
@@ -480,7 +480,7 @@ pub fn knn_chunked_pool_into(
     out.reset(n, k);
     // Task size: a whole number of q_blocks, ~4 tasks per worker.
     let total_blocks = n.div_ceil(q_block);
-    let target_tasks = pool.workers() * 4;
+    let target_tasks = exec.workers() * 4;
     let blocks_per_task = total_blocks.div_ceil(target_tasks).max(1);
     let task_rows = blocks_per_task * q_block;
     let KnnLists { indices, dists, .. } = out;
@@ -490,7 +490,7 @@ pub fn knn_chunked_pool_into(
         .enumerate()
         .map(|(ti, (is, ds))| (ti * task_rows, is, ds))
         .collect();
-    pool.run_tasks(tasks, |(t0, is, ds)| {
+    exec.run_tasks(tasks, |(t0, is, ds)| {
         let rows = is.len() / k;
         // Per-task reusable state, amortized over every block the task
         // owns (mirrors the serial loop's hoisting).
@@ -527,44 +527,44 @@ pub fn knn_chunked_pool_into(
 
 /// Pick the best exact backend for the given workload — kd-tree for low
 /// dimension, chunked norm-trick kernel otherwise — running on the
-/// default worker pool. Every caller (TC, ITIS, benches) gets parallel
-/// k-NN without opting in; use [`knn_auto_with`] to control the pool.
+/// default executor. Every caller (TC, ITIS, benches) gets parallel
+/// k-NN without opting in; use [`knn_auto_with`] to control the executor.
 pub fn knn_auto(points: &Matrix, k: usize) -> Result<KnnLists> {
-    knn_auto_with(points, k, &WorkerPool::default())
+    knn_auto_with(points, k, &Executor::default())
 }
 
-/// [`knn_auto`] on an explicit worker pool.
-pub fn knn_auto_with(points: &Matrix, k: usize, pool: &WorkerPool) -> Result<KnnLists> {
+/// [`knn_auto`] on an explicit executor.
+pub fn knn_auto_with(points: &Matrix, k: usize, exec: &Executor) -> Result<KnnLists> {
     let mut out = KnnLists::default();
-    knn_auto_into(points, k, pool, &mut out)?;
+    knn_auto_into(points, k, exec, &mut out)?;
     Ok(out)
 }
 
 /// [`knn_auto_with`] writing into a reusable output buffer (the ITIS
 /// loop's allocation-reuse hook). Small workloads run serially — the
-/// pool only engages once thread spawn cost amortizes.
+/// executor only engages once the task fan-out amortizes.
 pub fn knn_auto_into(
     points: &Matrix,
     k: usize,
-    pool: &WorkerPool,
+    exec: &Executor,
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
     validate_k(n, k)?;
-    let parallel = n >= PARALLEL_QUERY_MIN && pool.workers() > 1;
+    let parallel = n >= PARALLEL_QUERY_MIN && exec.workers() > 1;
     if kdtree_regime(points) {
-        let tree = if n >= PARALLEL_BUILD_MIN && pool.workers() > 1 {
-            kdtree::KdTree::build_parallel(points, pool)
+        let tree = if n >= PARALLEL_BUILD_MIN && exec.workers() > 1 {
+            kdtree::KdTree::build_parallel(points, exec)
         } else {
             kdtree::KdTree::build(points)
         };
         if parallel {
-            tree.knn_all_pool_into(points, k, pool, out)
+            tree.knn_all_pool_into(points, k, exec, out)
         } else {
             tree.knn_all_into(points, k, out)
         }
     } else if parallel {
-        knn_chunked_pool_into(points, k, 256, 1024, &NativeChunks::default(), pool, out)
+        knn_chunked_pool_into(points, k, 256, 1024, &NativeChunks::default(), exec, out)
     } else {
         knn_chunked_into(points, k, 256, 1024, &NativeChunks::default(), out)
     }
@@ -594,18 +594,18 @@ pub fn knn_auto_sharded_into(
     points: &Matrix,
     k: usize,
     shards: usize,
-    pool: &WorkerPool,
+    exec: &Executor,
     forest: &mut forest::KdForest,
     out: &mut KnnLists,
 ) -> Result<()> {
     let n = points.rows();
     validate_k(n, k)?;
     if shards <= 1 || !kdtree_regime(points) {
-        return knn_auto_into(points, k, pool, out);
+        return knn_auto_into(points, k, exec, out);
     }
-    forest.rebuild(points, shards, pool);
-    if n >= PARALLEL_QUERY_MIN && pool.workers() > 1 {
-        forest.knn_all_pool_into(points, k, pool, out)
+    forest.rebuild(points, shards, exec);
+    if n >= PARALLEL_QUERY_MIN && exec.workers() > 1 {
+        forest.knn_all_pool_into(points, k, exec, out)
     } else {
         forest.knn_all_into(points, k, out)
     }
@@ -617,11 +617,11 @@ pub fn knn_auto_sharded(
     points: &Matrix,
     k: usize,
     shards: usize,
-    pool: &WorkerPool,
+    exec: &Executor,
 ) -> Result<KnnLists> {
     let mut forest = forest::KdForest::new();
     let mut out = KnnLists::default();
-    knn_auto_sharded_into(points, k, shards, pool, &mut forest, &mut out)?;
+    knn_auto_sharded_into(points, k, shards, exec, &mut forest, &mut out)?;
     Ok(out)
 }
 
@@ -722,9 +722,9 @@ mod tests {
         let m = random_points(700, 8, 25);
         let serial = knn_chunked(&m, 4, 64, 256, &NativeChunks::default()).unwrap();
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::new(workers);
+            let exec = Executor::new(workers);
             let par =
-                knn_chunked_pool(&m, 4, 64, 256, &NativeChunks::default(), &pool).unwrap();
+                knn_chunked_pool(&m, 4, 64, 256, &NativeChunks::default(), &exec).unwrap();
             assert_eq!(serial.indices, par.indices, "workers={workers}");
             let sb: Vec<u32> = serial.dists.iter().map(|d| d.to_bits()).collect();
             let pb: Vec<u32> = par.dists.iter().map(|d| d.to_bits()).collect();
@@ -748,14 +748,14 @@ mod tests {
     #[test]
     fn auto_into_reuses_buffers() {
         let ds = gaussian_mixture_paper(600, 26);
-        let pool = WorkerPool::new(2);
+        let exec = Executor::new(2);
         let mut out = KnnLists::default();
-        knn_auto_into(&ds.points, 5, &pool, &mut out).unwrap();
+        knn_auto_into(&ds.points, 5, &exec, &mut out).unwrap();
         assert_eq!(out.len(), 600);
         let cap_i = out.indices.capacity();
         // A smaller follow-up query must fit in the existing allocation.
         let half = ds.points.slice_rows(0, 300);
-        knn_auto_into(&half, 5, &pool, &mut out).unwrap();
+        knn_auto_into(&half, 5, &exec, &mut out).unwrap();
         assert_eq!(out.len(), 300);
         assert_eq!(out.indices.capacity(), cap_i);
     }

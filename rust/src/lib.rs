@@ -42,6 +42,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod exec;
 pub mod hybrid;
 pub mod itis;
 pub mod knn;

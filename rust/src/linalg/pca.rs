@@ -47,13 +47,40 @@ impl Pca {
                 cov[b][a] = cov[a][b];
             }
         }
+        Ok(Self::from_eigen(means, cov))
+    }
+
+    /// Fit from a precomputed `d × d` covariance matrix (row-major) and
+    /// the matching column means. The streaming driver derives both
+    /// *exactly* from the single-pass cross-moments folded during
+    /// ingest, so the resulting basis is the full-data PCA — no second
+    /// pass over the source, and no prototype-stream approximation.
+    pub fn from_covariance(means: Vec<f64>, cov: &[f64]) -> Result<Pca> {
+        let d = means.len();
+        if cov.len() != d * d {
+            return Err(Error::Shape(format!(
+                "covariance has {} entries for d={d} (need d²)",
+                cov.len()
+            )));
+        }
+        if d == 0 {
+            return Err(Error::InvalidArgument("PCA needs at least 1 column".into()));
+        }
+        let grid: Vec<Vec<f64>> = (0..d).map(|a| cov[a * d..(a + 1) * d].to_vec()).collect();
+        Ok(Self::from_eigen(means, grid))
+    }
+
+    /// Shared eigendecompose-and-sort tail of [`Self::fit`] and
+    /// [`Self::from_covariance`].
+    fn from_eigen(means: Vec<f64>, mut cov: Vec<Vec<f64>>) -> Pca {
+        let d = cov.len();
         let (mut eigvals, mut eigvecs) = jacobi_eigen(&mut cov, 100, 1e-12);
         // Sort descending by eigenvalue.
         let mut order: Vec<usize> = (0..d).collect();
         order.sort_by(|&a, &b| eigvals[b].partial_cmp(&eigvals[a]).unwrap());
         eigvals = order.iter().map(|&i| eigvals[i]).collect();
         eigvecs = order.iter().map(|&i| eigvecs[i].clone()).collect();
-        Ok(Pca { means, eigenvalues: eigvals, components: eigvecs })
+        Pca { means, eigenvalues: eigvals, components: eigvecs }
     }
 
     /// Project `data` onto the top `k` components.
@@ -230,6 +257,59 @@ mod tests {
         let pca = Pca::fit(&m).unwrap();
         assert_eq!(pca.components_for_variance(0.95), 1);
         assert_eq!(pca.components_for_variance(0.9999), 2);
+    }
+
+    #[test]
+    fn from_covariance_matches_fit() {
+        // Build the sample covariance by hand from the raw cross-moments
+        // (the streaming driver's formula) and check the basis equals a
+        // direct fit on the data, up to eigenvector sign.
+        let mut r = Xoshiro256::seed_from_u64(15);
+        let n = 4_000usize;
+        let d = 3usize;
+        let mut data = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            let x = r.next_gaussian() * 4.0;
+            let y = 0.6 * x + r.next_gaussian();
+            let z = r.next_gaussian() * 0.3;
+            data.extend_from_slice(&[x as f32, y as f32, z as f32]);
+        }
+        let m = Matrix::from_vec(data, n, d).unwrap();
+        let direct = Pca::fit(&m).unwrap();
+        // Cross-moments Σxᵢxⱼ and sums, f64 (what Moments folds).
+        let mut sum = vec![0.0f64; d];
+        let mut cross = vec![0.0f64; d * d];
+        for i in 0..n {
+            let row = m.row(i);
+            for a in 0..d {
+                sum[a] += row[a] as f64;
+                for b in 0..d {
+                    cross[a * d + b] += row[a] as f64 * row[b] as f64;
+                }
+            }
+        }
+        let means: Vec<f64> = sum.iter().map(|s| s / n as f64).collect();
+        let mut cov = vec![0.0f64; d * d];
+        for a in 0..d {
+            for b in 0..d {
+                cov[a * d + b] =
+                    (cross[a * d + b] - n as f64 * means[a] * means[b]) / (n as f64 - 1.0);
+            }
+        }
+        let streamed = Pca::from_covariance(means, &cov).unwrap();
+        for (ev_a, ev_b) in direct.eigenvalues.iter().zip(&streamed.eigenvalues) {
+            assert!((ev_a - ev_b).abs() < 1e-6 * (1.0 + ev_a.abs()), "{ev_a} vs {ev_b}");
+        }
+        for (ca, cb) in direct.components.iter().zip(&streamed.components) {
+            let dot: f64 = ca.iter().zip(cb).map(|(x, y)| x * y).sum();
+            assert!((dot.abs() - 1.0).abs() < 1e-6, "components differ: |dot|={}", dot.abs());
+        }
+    }
+
+    #[test]
+    fn from_covariance_rejects_bad_shapes() {
+        assert!(Pca::from_covariance(vec![0.0; 2], &[0.0; 3]).is_err());
+        assert!(Pca::from_covariance(Vec::new(), &[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,169 @@
+//! Shared-executor determinism suite: the one work-stealing thread team
+//! that now backs every parallel layer must never change output bytes —
+//! not under worker-count changes, not under reduce-stage fan-out, not
+//! under kd-forest sharding, not under steal-policy/fairness knobs, and
+//! not when one reduce stage is adversarially skewed so the stealing
+//! actually rebalances the budget mid-stream.
+
+use ihtc::config::{DataSource, PipelineConfig};
+use ihtc::coordinator::driver::{ingest_streaming, StreamedReduction};
+use ihtc::coordinator::parallel_knn;
+use ihtc::exec::{Executor, ExecutorConfig, StealPolicy};
+use ihtc::itis::PrototypeKind;
+use ihtc::knn::knn_brute;
+use std::io::Write;
+use std::sync::Arc;
+
+/// Write a deliberately *skewed* CSV: the first source shard
+/// (rows `0..shard`) is a dense near-duplicate clump — its level-0 TC
+/// and k-NN are far more expensive than its siblings' — while the rest
+/// of the stream is an easy well-separated grid. Under the retired
+/// static split (`workers / reduce_stages` threads per stage), the
+/// stage unlucky enough to draw the clump ran it on a sliver of the
+/// budget while its siblings idled; with the shared executor the whole
+/// team converges on it. Either way the bytes must be identical — this
+/// source exists so the property is exercised where stealing matters.
+fn write_skewed_csv(n: usize, shard: usize) -> String {
+    let dir = std::env::temp_dir().join("ihtc_exec_determinism");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("skewed_{n}_{shard}.csv"));
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+    writeln!(w, "x,y").unwrap();
+    for i in 0..n {
+        if i < shard {
+            // Hard block: thousands of points inside a 0.01-wide clump
+            // (near-ties everywhere — worst case for kd-tree descent).
+            let j = i as f64;
+            writeln!(w, "{:.6},{:.6}", 1e-4 * (j % 97.0), 1e-4 * (j % 89.0)).unwrap();
+        } else {
+            // Easy tail: well-separated lattice.
+            let j = (i - shard) as f64;
+            writeln!(w, "{:.6},{:.6}", 10.0 + (j % 50.0) * 3.0, (j / 50.0).floor() * 3.0)
+                .unwrap();
+        }
+    }
+    w.flush().unwrap();
+    path.to_string_lossy().into_owned()
+}
+
+fn skewed_config(path: &str, workers: usize, stages: usize, knn_shards: usize) -> PipelineConfig {
+    PipelineConfig {
+        source: DataSource::Csv { path: path.into(), label_column: None },
+        streaming: true,
+        prototype: PrototypeKind::WeightedCentroid,
+        threshold: 3,
+        workers,
+        reduce_stages: stages,
+        knn_shards,
+        shard_size: 500,
+        ..Default::default()
+    }
+}
+
+fn assert_reductions_identical(got: &StreamedReduction, base: &StreamedReduction, what: &str) {
+    assert_eq!(got.n, base.n, "{what}: n");
+    let gb: Vec<u32> = got.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = base.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, bb, "{what}: prototype bytes");
+    assert_eq!(got.weights, base.weights, "{what}: weights");
+    assert_eq!(got.assignments, base.assignments, "{what}: assignments");
+    assert_eq!(got.labels, base.labels, "{what}: labels");
+    assert_eq!(got.moments.count, base.moments.count, "{what}: moment count");
+    assert_eq!(got.moments.sum, base.moments.sum, "{what}: moment sums");
+    assert_eq!(got.moments.cross, base.moments.cross, "{what}: moment cross");
+}
+
+#[test]
+fn skewed_stage_byte_identical_across_workers_stages_knn_shards() {
+    // The acceptance grid: one stage's shards are deliberately harder,
+    // and every workers × reduce_stages × knn_shards combination (with
+    // stages ≤ workers, the validated contract) must produce a
+    // byte-identical StreamedReduction while sharing one executor.
+    let path = write_skewed_csv(4000, 500);
+    let base = ingest_streaming(&skewed_config(&path, 1, 1, 1)).unwrap();
+    assert_eq!(base.n, 4000);
+    for workers in [1usize, 2, 4] {
+        for stages in [1usize, 2, 4] {
+            if stages > workers {
+                // Rejected by config validation (each stage occupies a
+                // compute thread; covered in config/mod.rs tests).
+                continue;
+            }
+            for knn_shards in [1usize, 2] {
+                let cfg = skewed_config(&path, workers, stages, knn_shards);
+                cfg.validate().unwrap();
+                let got = ingest_streaming(&cfg).unwrap();
+                assert_reductions_identical(
+                    &got,
+                    &base,
+                    &format!("workers={workers} stages={stages} knn_shards={knn_shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn steal_policy_and_fairness_never_change_bytes() {
+    // Scheduling knobs are scheduling-only: all four combinations give
+    // the byte-identical reduction on the skewed stream.
+    let path = write_skewed_csv(3000, 500);
+    let base = ingest_streaming(&skewed_config(&path, 1, 1, 1)).unwrap();
+    for steal in [StealPolicy::Fifo, StealPolicy::Lifo] {
+        for fair in [false, true] {
+            let mut cfg = skewed_config(&path, 4, 4, 1);
+            cfg.steal = steal;
+            cfg.fair_stages = fair;
+            let got = ingest_streaming(&cfg).unwrap();
+            assert_reductions_identical(&got, &base, &format!("steal={steal:?} fair={fair}"));
+        }
+    }
+}
+
+#[test]
+fn steal_heavy_concurrent_submitters_keep_knn_byte_parity() {
+    // Cross-layer steal-heavy smoke: several threads submit pooled k-NN
+    // batches into ONE executor concurrently (the reduce-stage usage
+    // shape), racing a deliberately expensive competing batch. Every
+    // submitter's output must stay byte-identical to the serial oracle.
+    let ds = ihtc::data::synth::gaussian_mixture_paper(3000, 0xEC5EED);
+    let oracle = knn_brute(&ds.points, 4).unwrap();
+    let exec = Arc::new(Executor::with_config(ExecutorConfig {
+        workers: 4,
+        steal: StealPolicy::Fifo,
+        fair_stages: true,
+    }));
+    // Competing load: keep the team busy while the k-NN batches run.
+    let load = {
+        let exec = Arc::clone(&exec);
+        std::thread::spawn(move || {
+            exec.run_tasks((0..32usize).collect(), |t| {
+                let mut acc = 0u64;
+                for i in 0..500_000u64 {
+                    acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i ^ t as u64);
+                }
+                Ok(acc)
+            })
+            .unwrap()
+        })
+    };
+    let mut joins = Vec::new();
+    for s in 0..3 {
+        let exec = Arc::clone(&exec);
+        let points = ds.points.clone();
+        let want_idx = oracle.indices.clone();
+        let want_bits: Vec<u32> = oracle.dists.iter().map(|v| v.to_bits()).collect();
+        joins.push(std::thread::spawn(move || {
+            for round in 0..3 {
+                let got = parallel_knn(&points, 4, &exec).unwrap();
+                assert_eq!(got.indices, want_idx, "submitter {s} round {round}");
+                let bits: Vec<u32> = got.dists.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits, want_bits, "submitter {s} round {round}");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(load.join().unwrap().len(), 32);
+}

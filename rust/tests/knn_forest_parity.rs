@@ -9,7 +9,8 @@
 //! test drives the streaming coordinator end-to-end across shard counts.
 
 use ihtc::config::{DataSource, PipelineConfig};
-use ihtc::coordinator::{driver, WorkerPool};
+use ihtc::coordinator::driver;
+use ihtc::exec::Executor;
 use ihtc::data::synth::gaussian_mixture_paper;
 use ihtc::itis::PrototypeKind;
 use ihtc::knn::forest::KdForest;
@@ -34,7 +35,7 @@ fn forest_byte_identical_to_brute_across_shards_and_workers() {
         let oracle = knn_brute(&ds.points, k).unwrap();
         for shards in [1usize, 2, 4] {
             for workers in [1usize, 2, 4] {
-                let pool = WorkerPool::new(workers);
+                let pool = Executor::new(workers);
                 let got = knn_auto_sharded(&ds.points, k, shards, &pool).unwrap();
                 assert_identical(
                     &got,
@@ -50,7 +51,7 @@ fn forest_byte_identical_to_brute_across_shards_and_workers() {
 fn shards_one_byte_identical_to_single_tree_path() {
     let ds = gaussian_mixture_paper(3000, 0xA11CE);
     for workers in [1usize, 2, 4] {
-        let pool = WorkerPool::new(workers);
+        let pool = Executor::new(workers);
         let single = knn_auto_with(&ds.points, 4, &pool).unwrap();
         let sharded = knn_auto_sharded(&ds.points, 4, 1, &pool).unwrap();
         assert_identical(&sharded, &single, &format!("workers={workers}"));
@@ -78,9 +79,48 @@ fn forest_handles_duplicate_ties_identically() {
     let oracle = knn_brute(&m, 4).unwrap();
     for shards in [1usize, 2, 4] {
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::new(workers);
+            let pool = Executor::new(workers);
             let got = knn_auto_sharded(&m, 4, shards, &pool).unwrap();
             assert_identical(&got, &oracle, &format!("dups shards={shards} workers={workers}"));
+        }
+    }
+}
+
+#[test]
+fn shard_pruning_handles_boundary_ties_identically() {
+    // The per-shard pruning case: far-apart blobs aligned with shard
+    // boundaries (so whole shard trees sit strictly beyond the TopK
+    // bound and are skipped) *plus* duplicated points whose distance
+    // ties sit exactly AT the bound across a shard boundary — the
+    // strict-inequality skip rule must keep tie candidates from pruned-
+    // looking shards eligible, exactly like the in-tree descent. Byte
+    // parity with the oracle pins it for every shard × worker count.
+    let n = 1200usize;
+    let mut data = Vec::with_capacity(n * 2);
+    for i in 0..n {
+        let blob = (i / 300) as f32; // 4 far-apart blobs, 300 rows each
+        if i % 3 == 0 {
+            // Duplicates at the blob center: exact zero-distance ties,
+            // including across the 300-row shard boundary when the
+            // forest uses 2 or 4 shards (rows 299/300 both duplicates).
+            data.push(blob * 5e3);
+            data.push(blob * -5e3);
+        } else {
+            data.push(blob * 5e3 + (i % 13) as f32 * 0.25);
+            data.push(blob * -5e3 + (i % 11) as f32 * 0.5);
+        }
+    }
+    let m = ihtc::linalg::Matrix::from_vec(data, n, 2).unwrap();
+    let oracle = knn_brute(&m, 6).unwrap();
+    for shards in [1usize, 2, 4, 8] {
+        for workers in [1usize, 2, 4] {
+            let pool = Executor::new(workers);
+            let got = knn_auto_sharded(&m, 6, shards, &pool).unwrap();
+            assert_identical(
+                &got,
+                &oracle,
+                &format!("pruning ties shards={shards} workers={workers}"),
+            );
         }
     }
 }
@@ -89,7 +129,7 @@ fn forest_handles_duplicate_ties_identically() {
 fn degenerate_k_rejected_and_shards_clamped() {
     // n ≤ k and k = 0 are errors on every backend, forest included.
     let tiny = gaussian_mixture_paper(5, 0xD0D0);
-    let pool = WorkerPool::new(2);
+    let pool = Executor::new(2);
     let mut forest = KdForest::new();
     let mut out = KnnLists::default();
     for k in [0usize, 5, 7] {
@@ -111,7 +151,7 @@ fn degenerate_k_rejected_and_shards_clamped() {
 fn forest_workspace_reuse_across_levels_is_clean() {
     // Mimic the ITIS loop: one forest + output buffer reused across
     // shrinking levels must stay oracle-identical at every level.
-    let pool = WorkerPool::new(2);
+    let pool = Executor::new(2);
     let mut forest = KdForest::new();
     let mut out = KnnLists::default();
     for (n, seed) in [(2600usize, 7u64), (1100, 8), (400, 9)] {

@@ -6,7 +6,8 @@
 //! it, distance ties would resolve differently per backend and per
 //! worker count.
 
-use ihtc::coordinator::{parallel_knn, WorkerPool};
+use ihtc::coordinator::parallel_knn;
+use ihtc::exec::Executor;
 use ihtc::data::synth::gaussian_mixture_paper;
 use ihtc::knn::{knn_auto_with, knn_brute, KnnLists};
 
@@ -29,7 +30,7 @@ fn pooled_knn_byte_identical_to_brute() {
         let ds = gaussian_mixture_paper(n, 0xBEE5 + (n + k) as u64);
         let oracle = knn_brute(&ds.points, k).unwrap();
         for workers in [1usize, 2, 4] {
-            let pool = WorkerPool::new(workers);
+            let pool = Executor::new(workers);
             let par = parallel_knn(&ds.points, k, &pool).unwrap();
             assert_identical(&par, &oracle, &format!("parallel_knn n={n} k={k} w={workers}"));
             let auto = knn_auto_with(&ds.points, k, &pool).unwrap();
@@ -46,7 +47,7 @@ fn pooled_knn_byte_identical_past_parallel_build_threshold() {
     let ds = gaussian_mixture_paper(n, 0xFA57);
     let oracle = knn_brute(&ds.points, 3).unwrap();
     for workers in [1usize, 2, 4] {
-        let pool = WorkerPool::new(workers);
+        let pool = Executor::new(workers);
         let par = parallel_knn(&ds.points, 3, &pool).unwrap();
         assert_identical(&par, &oracle, &format!("parallel_knn n={n} w={workers}"));
         let auto = knn_auto_with(&ds.points, 3, &pool).unwrap();
@@ -73,7 +74,7 @@ fn pooled_knn_handles_duplicate_ties_identically() {
     let m = ihtc::linalg::Matrix::from_vec(data, n, 2).unwrap();
     let oracle = knn_brute(&m, 4).unwrap();
     for workers in [1usize, 2, 4] {
-        let pool = WorkerPool::new(workers);
+        let pool = Executor::new(workers);
         let par = parallel_knn(&m, 4, &pool).unwrap();
         assert_identical(&par, &oracle, &format!("duplicates parallel_knn w={workers}"));
         let auto = knn_auto_with(&m, 4, &pool).unwrap();

@@ -5,7 +5,8 @@
 use ihtc::config::{DataSource, PipelineConfig};
 use ihtc::coordinator::driver::{self, ingest_streaming};
 use ihtc::coordinator::pipeline::{collect, PipelineBuilder, ReducedShard};
-use ihtc::coordinator::{PoolKnnProvider, WorkerPool};
+use ihtc::coordinator::PoolKnnProvider;
+use ihtc::exec::Executor;
 use ihtc::data::synth::gaussian_mixture_paper;
 use ihtc::data::{csv, Dataset};
 use ihtc::itis::{reduce_shard, ItisConfig, ItisWorkspace, PrototypeKind, StopRule};
@@ -17,7 +18,9 @@ fn streaming_config(n: usize) -> PipelineConfig {
         source: DataSource::PaperMixture { n },
         streaming: true,
         prototype: PrototypeKind::WeightedCentroid,
-        workers: 2,
+        // 4 ≥ every reduce_stages value swept below: stages share one
+        // executor and must fit an explicit worker budget.
+        workers: 4,
         shard_size: 700,
         ..Default::default()
     }
@@ -33,8 +36,8 @@ fn fused_prototypes_match_two_pass_run() {
     assert_eq!(stream.n, 5000);
 
     let ds = gaussian_mixture_paper(5000, cfg.seed);
-    let pool = WorkerPool::new(cfg.workers);
-    let provider = PoolKnnProvider { pool: &pool, shards: 1 };
+    let pool = Executor::new(cfg.workers);
+    let provider = PoolKnnProvider { exec: &pool, shards: 1 };
     let mut ws = ItisWorkspace::new();
     let itis_cfg = ItisConfig {
         threshold: cfg.threshold,
@@ -69,8 +72,8 @@ fn fused_prototypes_match_two_pass_run() {
 /// offsets.
 fn reference_shards(n: usize, cfg: &PipelineConfig) -> Vec<ReducedShard> {
     let ds = gaussian_mixture_paper(n, cfg.seed);
-    let pool = WorkerPool::new(cfg.workers);
-    let provider = PoolKnnProvider { pool: &pool, shards: 1 };
+    let pool = Executor::new(cfg.workers);
+    let provider = PoolKnnProvider { exec: &pool, shards: 1 };
     let mut ws = ItisWorkspace::new();
     let itis_cfg = ItisConfig {
         threshold: cfg.threshold,

@@ -68,8 +68,12 @@ def fmt_bytes(b):
 # (stream/parallel_r{N}_…) and kd-forest shards (knn/forest_s{N}_…).
 # Each pattern captures the axis letter so the report can label rows
 # r1/r2/… or s1/s2/… and compare against the axis-1 baseline.
+# (The retired `stream/parallel_rN` static-split names are matched only
+# against the *baseline* by shared_vs_static_report below — the current
+# run never emits them anymore.)
 SCALING_RES = [
-    ("reduce-stage", re.compile(r"^(?P<family>.*?/parallel)_(?P<axis>r)(?P<x>\d+)(?P<rest>.*)$")),
+    ("shared-pool reduce-stage",
+     re.compile(r"^(?P<family>.*?/shared_pool)_(?P<axis>r)(?P<x>\d+)(?P<rest>.*)$")),
     ("kd-forest shard", re.compile(r"^(?P<family>.*?/forest)_(?P<axis>s)(?P<x>\d+)(?P<rest>.*)$")),
 ]
 
@@ -112,6 +116,40 @@ def scaling_report(current):
                 print(f"  {key:<44} {axis}{x:<2} {fmt_ns(by_x[x]):>10}  {speedup:.2f}x{marker}")
     return slower
 
+
+def shared_vs_static_report(current, baseline):
+    '''Speedup of the shared-executor reduce benches over the retired
+    static-split ones.
+
+    The `stream/shared_pool_rN_*` benches replaced `stream/parallel_rN_*`
+    when the reduce stages moved from statically divided per-stage pools
+    onto one work-stealing executor. While a baseline directory still
+    holds the old names, print the per-rN speedup of shared over static
+    next to the r1-to-rN scaling section, matched by rN and name suffix.
+    '''
+    pat_new = re.compile(r"^stream/shared_pool_r(\d+)(.*)$")
+    pat_old = re.compile(r"^stream/parallel_r(\d+)(.*)$")
+    old = {}
+    for name, doc in baseline.items():
+        m = pat_old.match(name)
+        if m and doc.get("median_ns"):
+            old[(m.group(1), m.group(2))] = doc["median_ns"]
+    printed = False
+    for name, doc in sorted(current.items()):
+        m = pat_new.match(name)
+        if not m or not doc.get("median_ns"):
+            continue
+        key = (m.group(1), m.group(2))
+        if key not in old:
+            continue
+        if not printed:
+            print("\nshared vs static reduce "
+                  "(current shared_pool_rN vs baseline parallel_rN):")
+            printed = True
+        speedup = old[key] / doc["median_ns"]
+        label = "r" + key[0] + key[1]
+        print(f"  {label:<46} static {fmt_ns(old[key]):>10}  shared "
+              f"{fmt_ns(doc['median_ns']):>10}  {speedup:.2f}x")
 
 def seed_baseline(cur_dir, base_dir):
     base_dir.mkdir(parents=True, exist_ok=True)
@@ -180,6 +218,7 @@ def main():
         print(f"{name:<46} (missing from current run)")
 
     slower = scaling_report(current)
+    shared_vs_static_report(current, baseline)
 
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
           f"{improvements} improvement(s), {len(missing)} missing, "
