@@ -104,6 +104,15 @@ fn read_peak(name: &str) -> Option<usize> {
     digits.parse().ok()
 }
 
+/// Read back the `median_ns` field of a just-written bench JSON (used
+/// by the checkpoint-overhead printout).
+fn read_median(name: &str) -> Option<u64> {
+    let text = std::fs::read_to_string(bench_json_path(name)).ok()?;
+    let tail = text.split("\"median_ns\":").nth(1)?;
+    let digits: String = tail.chars().take_while(|c| c.is_ascii_digit()).collect();
+    digits.parse().ok()
+}
+
 fn main() {
     // `cargo bench` passes `--bench`; everything else is a filter.
     let filter: Vec<String> = std::env::args()
@@ -359,6 +368,37 @@ fn main() {
             b.run(&format!("stream/shared_pool_r{r}_ingest_n1e6_t4"), 1, || {
                 ihtc::coordinator::driver::ingest_streaming(&cfg).unwrap()
             });
+        }
+
+        // Durable checkpointing: the same fused r1 ingest with the
+        // CRC-framed checkpoint sink armed at its worst-case durability
+        // cadence (one fsync per shard). The delta against
+        // stream/shared_pool_r1 is the whole crash-safety tax (target
+        // ≤ 10%); the peak-bytes column of every stream/ ingest bench
+        // meanwhile excludes the old O(n) resident level-0 map, which
+        // now lives in this file (or an anonymous spill) instead of RAM.
+        {
+            let ckpt = std::env::temp_dir().join("ihtc_bench_checkpoint.ckpt");
+            let mut cfg = stream_cfg(true);
+            cfg.name = "checkpointed".into();
+            cfg.checkpoint_path = Some(ckpt.to_string_lossy().into_owned());
+            b.run("stream/checkpointed_ingest_n1e6", 1, || {
+                ihtc::coordinator::driver::ingest_streaming(&cfg).unwrap()
+            });
+            let _ = std::fs::remove_file(&ckpt);
+            let _ = std::fs::remove_file(ihtc::checkpoint::tmp_path(&ckpt));
+            if let (true, Some(plain), Some(ckpted)) = (
+                b.matches("stream/"),
+                read_median("stream/shared_pool_r1_ingest_n1e6_t4"),
+                read_median("stream/checkpointed_ingest_n1e6"),
+            ) {
+                let overhead = ckpted as f64 / plain.max(1) as f64 - 1.0;
+                println!(
+                    "stream: checkpointed ingest overhead {:+.1}% vs un-checkpointed{}",
+                    overhead * 100.0,
+                    if overhead <= 0.10 { "  [OK ≤10%]" } else { "  [ABOVE 10% TARGET]" }
+                );
+            }
         }
     }
 

@@ -1,0 +1,907 @@
+//! Crash-safe checkpointing for the fused streaming ingest.
+//!
+//! Long out-of-core runs die for mundane reasons — OOM kills, node
+//! preemption, torn disks — and restarting a million-row ingest from
+//! row zero forfeits everything the run already paid for. This module
+//! makes the per-shard level-0 reduction durable: every
+//! [`ReducedShard`] released by the pipeline's reorder stage is
+//! appended to the checkpoint file as one length-prefixed,
+//! CRC32-checked frame keyed by its stream offset — prototype rows,
+//! weights, the shard's local assignment segment, optional ground-truth
+//! labels, and the shard's standardization moments. Offsets must tile
+//! the stream (the reorder contract), so the longest valid frame prefix
+//! identifies an exact resume point: replay the frames, seek the source
+//! to the first missing row, continue. Because each shard's reduction
+//! is worker/stage invariant and moments merge in stream order, an
+//! interrupted-then-resumed run is byte-identical to an uninterrupted
+//! one.
+//!
+//! The same file doubles as the **disk-spilled level-0 map**: the
+//! per-row `row → level-0 prototype` assignments are only ever read
+//! once, sequentially, during back-out — so they live in the frames
+//! instead of RAM ([`Level0Map`]), removing the last O(n) resident
+//! buffer from streaming ingest. Runs without a configured
+//! `checkpoint_path` spill to an anonymous temp file that is deleted
+//! when the map drops.
+//!
+//! Durability protocol: frames append to `<path>.tmp`, fsynced at the
+//! configured row cadence; a completed run fsyncs and atomically
+//! renames the tmp onto `<path>`. On open, the reader CRC-verifies
+//! every frame and truncates the file to the last valid one — a torn or
+//! corrupted tail is recomputed from the source, never silently
+//! consumed. [`FaultPlan`] threads deterministic failures (source
+//! death, stage kill, sink write failure) through the driver so the
+//! whole crash/recovery cycle is exercised in-tree, not hoped for.
+
+use crate::coordinator::driver::Moments;
+use crate::coordinator::pipeline::ReducedShard;
+use crate::{Error, Result};
+use std::fs::{self, File, OpenOptions};
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// File magic: "IHTC checkpoint, format 1".
+const MAGIC: [u8; 8] = *b"IHTCCKP1";
+/// Header bytes: magic + u32 column count.
+const HEADER_LEN: u64 = 12;
+/// Sanity ceiling for one frame's payload: a corrupted length field
+/// must read as a torn tail, not trigger a multi-gigabyte allocation.
+const MAX_FRAME_BYTES: u64 = 1 << 32;
+
+// ---------------------------------------------------------------------
+// CRC32 (IEEE 802.3 reflected polynomial, the zlib/PNG variant) —
+// hand-rolled because the crate has no external dependencies.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32 of `bytes` (IEEE, reflected — matches zlib's `crc32`).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------
+// Fault injection
+
+/// Deterministic fault injection for the streaming driver. Each field
+/// names one crash site; `Default` injects nothing. Threaded through
+/// [`crate::coordinator::driver::ingest_streaming_with_faults`] so the
+/// crash/recovery cycle is pinned by tests rather than hoped for.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Fail the source with [`Error::Data`] before emitting the shard
+    /// containing this row (shards entirely below it stream normally,
+    /// so boundary and mid-shard crash points both reduce to "rows
+    /// before the failing shard are durable").
+    pub fail_source_at_row: Option<usize>,
+    /// Panic the reduce stage handling the shard at this stream offset
+    /// — a killed stage thread rather than a clean error, exercising
+    /// the pipeline's panic-to-root-cause path.
+    pub kill_reduce_at_offset: Option<usize>,
+    /// Fail the checkpoint sink with [`Error::Coordinator`] instead of
+    /// writing this frame index.
+    pub fail_sink_at_frame: Option<usize>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (the normal production path).
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Frame encoding
+
+/// One decoded checkpoint frame: a released [`ReducedShard`] plus the
+/// shard's standardization moments.
+#[derive(Debug)]
+pub struct Frame {
+    /// Stream row offset of the shard (frames must tile the stream).
+    pub offset: usize,
+    /// Level-0 prototype rows (`proto_rows × d`, row-major).
+    pub prototypes: Vec<f32>,
+    /// Original units represented by each prototype.
+    pub weights: Vec<u32>,
+    /// Shard row → *local* prototype index (length = shard rows).
+    pub assignments: Vec<u32>,
+    /// Ground-truth labels for the shard's rows, when known.
+    pub labels: Option<Vec<u32>>,
+    /// The shard's first/second moments.
+    pub moments: Moments,
+}
+
+fn encode_frame(shard: &ReducedShard, moments: &Moments) -> Vec<u8> {
+    let d = shard.prototypes.cols();
+    let proto_rows = shard.prototypes.rows();
+    let rows = shard.assignments.len();
+    debug_assert_eq!(moments.sum.len(), d);
+    let labels_bytes = if shard.labels.is_some() { 4 * rows } else { 0 };
+    let mut buf = Vec::with_capacity(
+        25 + 8 * d + 8 * d * d + 4 * proto_rows * d + 4 * proto_rows + 4 * rows + labels_bytes,
+    );
+    buf.extend_from_slice(&(shard.offset as u64).to_le_bytes());
+    buf.extend_from_slice(&(rows as u32).to_le_bytes());
+    buf.extend_from_slice(&(proto_rows as u32).to_le_bytes());
+    buf.push(u8::from(shard.labels.is_some()));
+    buf.extend_from_slice(&(moments.count as u64).to_le_bytes());
+    for v in &moments.sum {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &moments.cross {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in shard.prototypes.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &shard.weights {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    for v in &shard.assignments {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    if let Some(labels) = &shard.labels {
+        for v in labels {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    buf
+}
+
+/// Little-endian field reader over one frame payload.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> &'a [u8] {
+        // decode_frame pre-validates the total payload length, so a
+        // short take here is unreachable; slice indexing keeps it loud.
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        s
+    }
+
+    fn u8(&mut self) -> u8 {
+        self.take(1)[0]
+    }
+
+    fn u32(&mut self) -> u32 {
+        u32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    fn u64(&mut self) -> u64 {
+        u64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+
+    fn f32(&mut self) -> f32 {
+        f32::from_le_bytes(self.take(4).try_into().unwrap())
+    }
+
+    fn f64(&mut self) -> f64 {
+        f64::from_le_bytes(self.take(8).try_into().unwrap())
+    }
+}
+
+/// Decode one CRC-verified payload. A structural mismatch after a CRC
+/// pass means version skew or a writer bug, so it is a hard error — not
+/// a torn tail to truncate.
+fn decode_frame(payload: &[u8], d: usize) -> Result<Frame> {
+    const FIXED: usize = 8 + 4 + 4 + 1 + 8; // offset, rows, proto_rows, flag, count
+    if payload.len() < FIXED {
+        return Err(Error::Data(
+            "checkpoint frame: payload shorter than its fixed fields".into(),
+        ));
+    }
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let offset = c.u64() as usize;
+    let rows = c.u32() as usize;
+    let proto_rows = c.u32() as usize;
+    let has_labels = c.u8() != 0;
+    let count = c.u64() as usize;
+    let expect = FIXED
+        + 8 * d
+        + 8 * d * d
+        + 4 * proto_rows * d
+        + 4 * proto_rows
+        + 4 * rows
+        + if has_labels { 4 * rows } else { 0 };
+    if payload.len() != expect {
+        return Err(Error::Data(format!(
+            "checkpoint frame at offset {offset}: payload is {} bytes but its declared shape \
+             ({rows} rows, {proto_rows} prototypes, d={d}) needs {expect}",
+            payload.len()
+        )));
+    }
+    let mut moments = Moments::new(d);
+    moments.count = count;
+    for slot in moments.sum.iter_mut() {
+        *slot = c.f64();
+    }
+    for slot in moments.cross.iter_mut() {
+        *slot = c.f64();
+    }
+    let prototypes: Vec<f32> = (0..proto_rows * d).map(|_| c.f32()).collect();
+    let weights: Vec<u32> = (0..proto_rows).map(|_| c.u32()).collect();
+    let assignments: Vec<u32> = (0..rows).map(|_| c.u32()).collect();
+    let labels = has_labels.then(|| (0..rows).map(|_| c.u32()).collect::<Vec<u32>>());
+    Ok(Frame { offset, prototypes, weights, assignments, labels, moments })
+}
+
+// ---------------------------------------------------------------------
+// Reader
+
+/// Fill `buf` from `r`, tolerating EOF: returns the number of bytes
+/// actually read (0 = clean EOF at a frame boundary).
+fn read_up_to(r: &mut impl Read, buf: &mut [u8]) -> Result<usize> {
+    let mut got = 0;
+    while got < buf.len() {
+        let n = r.read(&mut buf[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    Ok(got)
+}
+
+/// Iterate the valid frame prefix of `path`, calling `on_frame` for
+/// each CRC-verified frame in file order. Returns `(d, valid_bytes,
+/// clean)`: `valid_bytes` covers the header plus every valid frame, and
+/// `clean` is false when a torn or corrupted tail was detected after
+/// it. A missing/short header or wrong magic is a hard error (the
+/// caller decides whether that means "fresh file" or "wrong file").
+fn scan(path: &Path, mut on_frame: impl FnMut(Frame) -> Result<()>) -> Result<(usize, u64, bool)> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut header = [0u8; HEADER_LEN as usize];
+    if read_up_to(&mut r, &mut header)? < header.len() {
+        return Err(Error::Data(format!(
+            "checkpoint {}: file too short for a header",
+            path.display()
+        )));
+    }
+    if header[..8] != MAGIC {
+        return Err(Error::Data(format!(
+            "checkpoint {}: bad magic — not an ihtc checkpoint file",
+            path.display()
+        )));
+    }
+    let d = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+    let mut valid = HEADER_LEN;
+    loop {
+        let mut len_buf = [0u8; 8];
+        let got = read_up_to(&mut r, &mut len_buf)?;
+        if got == 0 {
+            return Ok((d, valid, true)); // clean EOF on a frame boundary
+        }
+        if got < len_buf.len() {
+            return Ok((d, valid, false)); // torn length field
+        }
+        let len = u64::from_le_bytes(len_buf);
+        if len == 0 || len > MAX_FRAME_BYTES {
+            return Ok((d, valid, false)); // corrupted length
+        }
+        let mut payload = vec![0u8; len as usize];
+        if read_up_to(&mut r, &mut payload)? < payload.len() {
+            return Ok((d, valid, false)); // torn payload
+        }
+        let mut crc_buf = [0u8; 4];
+        if read_up_to(&mut r, &mut crc_buf)? < crc_buf.len() {
+            return Ok((d, valid, false)); // torn checksum
+        }
+        if crc32(&payload) != u32::from_le_bytes(crc_buf) {
+            return Ok((d, valid, false)); // corrupted frame
+        }
+        on_frame(decode_frame(&payload, d)?)?;
+        valid += 8 + len + 4;
+    }
+}
+
+/// Everything a resumed run reconstructs from the valid frame prefix —
+/// exactly the state the streaming collector would hold after folding
+/// the same shards live (concatenation order, label flag semantics, and
+/// the left-to-right f64 moment merge all mirror the collector, so the
+/// replayed state is bit-identical).
+#[derive(Debug)]
+pub struct Replay {
+    /// Column count (from the file header).
+    pub d: usize,
+    /// Stream rows covered by the valid prefix (= the first row the
+    /// source must re-produce).
+    pub rows: usize,
+    /// Valid frames replayed.
+    pub frames: usize,
+    /// Concatenated prototype rows (`Σ proto_rows × d`).
+    pub prototypes: Vec<f32>,
+    /// Concatenated prototype weights.
+    pub weights: Vec<u32>,
+    /// Concatenated ground-truth labels (meaningful iff `have_labels`).
+    pub labels: Vec<u32>,
+    /// False as soon as any frame lacked labels.
+    pub have_labels: bool,
+    /// Moments merged in stream order (None when no frames replayed).
+    pub moments: Option<Moments>,
+    /// File length covered by the header + valid frames.
+    valid_bytes: u64,
+}
+
+/// Replay the valid frame prefix of `path` into collector state,
+/// verifying that frame offsets tile the stream from row 0.
+pub fn replay(path: &Path) -> Result<Replay> {
+    let mut rows = 0usize;
+    let mut frames = 0usize;
+    let mut prototypes: Vec<f32> = Vec::new();
+    let mut weights: Vec<u32> = Vec::new();
+    let mut labels: Vec<u32> = Vec::new();
+    let mut have_labels = true;
+    let mut moments: Option<Moments> = None;
+    let (d, valid_bytes, _clean) = scan(path, |f| {
+        if f.offset != rows {
+            return Err(Error::Data(format!(
+                "checkpoint {}: frame at offset {} does not tile the stream (expected {})",
+                path.display(),
+                f.offset,
+                rows
+            )));
+        }
+        rows += f.assignments.len();
+        frames += 1;
+        prototypes.extend_from_slice(&f.prototypes);
+        weights.extend_from_slice(&f.weights);
+        match f.labels {
+            Some(l) => labels.extend(l),
+            None => have_labels = false,
+        }
+        match &mut moments {
+            Some(total) => total.merge(&f.moments),
+            None => moments = Some(f.moments),
+        }
+        Ok(())
+    })?;
+    Ok(Replay { d, rows, frames, prototypes, weights, labels, have_labels, moments, valid_bytes })
+}
+
+/// Resolve the on-disk state of `dest` for a resuming run: prefer the
+/// in-progress `<dest>.tmp` (a crashed run), fall back to a completed
+/// `<dest>` (renamed back to tmp so the run can extend and re-finish
+/// it), and report `None` when neither exists (fresh start). The
+/// returned replay covers the longest valid frame prefix, and the tmp
+/// file is physically truncated to it — a torn or corrupted tail is
+/// recomputed from the source, never silently consumed.
+pub fn prepare_resume(dest: &Path) -> Result<Option<Replay>> {
+    let tmp = tmp_path(dest);
+    if !tmp.exists() {
+        if dest.exists() {
+            fs::rename(dest, &tmp)?;
+        } else {
+            return Ok(None);
+        }
+    }
+    if fs::metadata(&tmp)?.len() < HEADER_LEN {
+        // Crashed before the header landed: nothing to replay. (A wrong
+        // magic, by contrast, stays a hard error — never truncate a
+        // file that was not ours.)
+        fs::remove_file(&tmp)?;
+        return Ok(None);
+    }
+    let rep = replay(&tmp)?;
+    let f = OpenOptions::new().write(true).open(&tmp)?;
+    f.set_len(rep.valid_bytes)?;
+    f.sync_all()?;
+    Ok(Some(rep))
+}
+
+/// The in-progress twin of a checkpoint destination (`<path>.tmp`).
+pub fn tmp_path(dest: &Path) -> PathBuf {
+    let mut os = dest.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+static SPILL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh anonymous spill path in the system temp directory — used
+/// when no `checkpoint_path` is configured, so the level-0 map still
+/// leaves RAM. The file is deleted when its [`Level0Map`] drops.
+pub fn spill_path() -> PathBuf {
+    let seq = SPILL_SEQ.fetch_add(1, Ordering::Relaxed);
+    std::env::temp_dir().join(format!("ihtc_spill_{}_{seq}.ckpt", std::process::id()))
+}
+
+// ---------------------------------------------------------------------
+// Writer
+
+/// Append-only checkpoint writer. Durable writers (`create`/`resume`)
+/// target `<dest>.tmp`, fsync at the configured row cadence, and
+/// atomically rename onto `dest` at [`finish`](Self::finish); spill
+/// writers (`create_spill`) skip every durability step — their only job
+/// is evicting the level-0 map from RAM.
+pub struct CheckpointWriter {
+    file: BufWriter<File>,
+    /// Where bytes are currently going (the tmp file for durable runs).
+    path: PathBuf,
+    /// Durable rename target; `None` marks an anonymous spill.
+    dest: Option<PathBuf>,
+    d: usize,
+    rows: usize,
+    frames: usize,
+    sync_every_rows: usize,
+    rows_since_sync: usize,
+}
+
+impl CheckpointWriter {
+    /// Durable writer for a fresh run: truncates any stale
+    /// `<dest>.tmp`, writes the header, fsyncs every `sync_every_rows`
+    /// appended rows (0 = after every frame).
+    pub fn create(dest: &Path, d: usize, sync_every_rows: usize) -> Result<Self> {
+        Self::open_new(tmp_path(dest), Some(dest.to_path_buf()), d, sync_every_rows)
+    }
+
+    /// Non-durable spill writer: frames go straight to `path` with no
+    /// fsync and no rename.
+    pub fn create_spill(path: &Path, d: usize) -> Result<Self> {
+        Self::open_new(path.to_path_buf(), None, d, usize::MAX)
+    }
+
+    fn open_new(
+        path: PathBuf,
+        dest: Option<PathBuf>,
+        d: usize,
+        sync_every_rows: usize,
+    ) -> Result<Self> {
+        let mut file = BufWriter::new(File::create(&path)?);
+        file.write_all(&MAGIC)?;
+        file.write_all(&(d as u32).to_le_bytes())?;
+        Ok(Self { file, path, dest, d, rows: 0, frames: 0, sync_every_rows, rows_since_sync: 0 })
+    }
+
+    /// Reopen the tmp file [`prepare_resume`] truncated and append
+    /// after its last valid frame.
+    pub fn resume(dest: &Path, rep: &Replay, sync_every_rows: usize) -> Result<Self> {
+        let tmp = tmp_path(dest);
+        let mut f = OpenOptions::new().write(true).open(&tmp)?;
+        f.seek(SeekFrom::End(0))?;
+        Ok(Self {
+            file: BufWriter::new(f),
+            path: tmp,
+            dest: Some(dest.to_path_buf()),
+            d: rep.d,
+            rows: rep.rows,
+            frames: rep.frames,
+            sync_every_rows,
+            rows_since_sync: 0,
+        })
+    }
+
+    /// Stream rows covered by the frames written (and replayed) so far.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Frames written (and replayed) so far.
+    pub fn frames(&self) -> usize {
+        self.frames
+    }
+
+    /// Append one released shard (plus its moments) as a frame. Frames
+    /// must tile the stream: `shard.offset` must equal the rows already
+    /// covered, mirroring the reorder stage's release contract.
+    pub fn append(&mut self, shard: &ReducedShard, moments: &Moments) -> Result<()> {
+        if shard.offset != self.rows {
+            return Err(Error::Coordinator(format!(
+                "checkpoint frames must tile the stream: shard at offset {} arrived after only \
+                 {} checkpointed rows",
+                shard.offset, self.rows
+            )));
+        }
+        if shard.prototypes.cols() != self.d {
+            return Err(Error::Coordinator(format!(
+                "checkpoint dimensionality changed mid-stream: shard has d={} but the file \
+                 header says d={}",
+                shard.prototypes.cols(),
+                self.d
+            )));
+        }
+        let payload = encode_frame(shard, moments);
+        self.file.write_all(&(payload.len() as u64).to_le_bytes())?;
+        self.file.write_all(&payload)?;
+        self.file.write_all(&crc32(&payload).to_le_bytes())?;
+        self.rows += shard.assignments.len();
+        self.frames += 1;
+        if self.dest.is_some() {
+            self.rows_since_sync += shard.assignments.len();
+            if self.sync_every_rows == 0 || self.rows_since_sync >= self.sync_every_rows {
+                self.file.flush()?;
+                self.file.get_ref().sync_data()?;
+                self.rows_since_sync = 0;
+            }
+        }
+        Ok(())
+    }
+
+    /// Seal the checkpoint and hand the file over as the run's spilled
+    /// level-0 map. Durable writers fsync and atomically rename the tmp
+    /// onto the destination (plus a best-effort directory fsync); spill
+    /// writers just flush and mark the file for deletion on drop.
+    pub fn finish(mut self) -> Result<Level0Map> {
+        self.file.flush()?;
+        let rows = self.rows;
+        match self.dest {
+            Some(dest) => {
+                self.file.get_ref().sync_all()?;
+                drop(self.file);
+                fs::rename(&self.path, &dest)?;
+                sync_parent_dir(&dest);
+                Ok(Level0Map { path: dest, rows, owned: false })
+            }
+            None => {
+                drop(self.file);
+                Ok(Level0Map { path: self.path, rows, owned: true })
+            }
+        }
+    }
+
+    /// Salvage on a failed run: flush + fsync whatever was appended so
+    /// a later `resume: true` can replay it; anonymous spills are
+    /// deleted instead. Errors are swallowed — this runs on a path that
+    /// is already failing.
+    pub fn abort(mut self) {
+        let durable = self.dest.is_some();
+        let _ = self.file.flush();
+        if durable {
+            let _ = self.file.get_ref().sync_all();
+        }
+        drop(self.file);
+        if !durable {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// fsync the directory containing `path` so a completed rename survives
+/// power loss. Best effort — not every platform lets a directory be
+/// opened as a file.
+fn sync_parent_dir(path: &Path) {
+    if let Some(parent) = path.parent() {
+        if let Ok(dir) = File::open(parent) {
+            let _ = dir.sync_all();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spilled level-0 map
+
+/// Handle to the disk-spilled level-0 assignment map: the checkpoint
+/// file itself, read once, sequentially, during back-out — the O(n)
+/// vector the streaming collector used to hold in RAM. Anonymous spills
+/// own their file and delete it on drop; user-configured checkpoints
+/// are left on disk.
+#[derive(Debug)]
+pub struct Level0Map {
+    path: PathBuf,
+    rows: usize,
+    owned: bool,
+}
+
+impl Level0Map {
+    /// Open an existing finished checkpoint as a level-0 map (full
+    /// CRC-verifying scan to count rows). The file is not deleted on
+    /// drop.
+    pub fn open(path: &Path) -> Result<Self> {
+        let rep = replay(path)?;
+        Ok(Self { path: path.to_path_buf(), rows: rep.rows, owned: false })
+    }
+
+    /// Stream rows covered by the map.
+    pub fn len(&self) -> usize {
+        self.rows
+    }
+
+    /// True when the map covers no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// The backing file.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Materialize every row's *global* level-0 prototype id (each
+    /// frame's local ids rebased by the prototypes before it) — the
+    /// vector the collector used to hold resident. Intended for tests
+    /// and small runs; back-out streams the file instead.
+    pub fn read_assignments(&self) -> Result<Vec<u32>> {
+        self.fold(None)
+    }
+
+    /// IHTC back-out over the spilled map: `lookup` maps global level-0
+    /// prototype id → final cluster label; returns one label per
+    /// original row, in stream order, from a single sequential read.
+    pub fn back_out(&self, lookup: &[u32]) -> Result<Vec<u32>> {
+        self.fold(Some(lookup))
+    }
+
+    fn fold(&self, lookup: Option<&[u32]>) -> Result<Vec<u32>> {
+        let mut out: Vec<u32> = Vec::with_capacity(self.rows);
+        let mut base = 0u64;
+        let mut rows = 0usize;
+        let (_d, _valid, clean) = scan(&self.path, |f| {
+            if f.offset != rows {
+                return Err(Error::Data(format!(
+                    "level-0 map {}: frame at offset {} does not tile the stream (expected {})",
+                    self.path.display(),
+                    f.offset,
+                    rows
+                )));
+            }
+            rows += f.assignments.len();
+            for &a in &f.assignments {
+                let g = base + a as u64;
+                match lookup {
+                    Some(l) => {
+                        let label = l.get(g as usize).ok_or_else(|| {
+                            Error::Shape(format!(
+                                "level-0 map {}: prototype id {g} out of range for {} labels",
+                                self.path.display(),
+                                l.len()
+                            ))
+                        })?;
+                        out.push(*label);
+                    }
+                    None => out.push(g as u32),
+                }
+            }
+            base += f.weights.len() as u64;
+            Ok(())
+        })?;
+        if !clean || rows != self.rows {
+            return Err(Error::Data(format!(
+                "level-0 map {}: expected {} rows but only {} replay cleanly — the spill file \
+                 changed under the run",
+                self.path.display(),
+                self.rows,
+                rows
+            )));
+        }
+        Ok(out)
+    }
+}
+
+impl Drop for Level0Map {
+    fn drop(&mut self) {
+        if self.owned {
+            let _ = fs::remove_file(&self.path);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn test_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("ihtc_ckpt_unit").join(name);
+        fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// Two tiny deterministic shards (d = 2) tiling rows [0, 5).
+    fn fixture_shards() -> Vec<(ReducedShard, Moments)> {
+        let mut out = Vec::new();
+        let specs: [(usize, usize, usize); 2] = [(0, 3, 2), (3, 2, 1)];
+        for (offset, rows, protos) in specs {
+            let data: Vec<f32> = (0..protos * 2).map(|i| (offset + i) as f32 * 0.5).collect();
+            let prototypes = Matrix::from_vec(data, protos, 2).unwrap();
+            let shard = ReducedShard {
+                offset,
+                prototypes,
+                weights: (0..protos as u32).map(|w| w + 1).collect(),
+                assignments: (0..rows as u32).map(|r| r % protos as u32).collect(),
+                labels: Some((0..rows as u32).map(|r| r % 3).collect()),
+            };
+            let mut moments = Moments::new(2);
+            moments.count = rows;
+            moments.sum = vec![offset as f64, rows as f64];
+            moments.cross = vec![1.0, 2.0, 3.0, 4.0];
+            out.push((shard, moments));
+        }
+        out
+    }
+
+    fn write_fixture(dest: &Path) -> CheckpointWriter {
+        let mut w = CheckpointWriter::create(dest, 2, 0).unwrap();
+        for (shard, mo) in fixture_shards() {
+            w.append(&shard, &mo).unwrap();
+        }
+        w
+    }
+
+    #[test]
+    fn crc32_matches_the_standard_vector() {
+        // The classic IEEE-802.3 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn roundtrip_replay_reconstructs_collector_state() {
+        let dest = test_dir("roundtrip").join("run.ckpt");
+        let map = write_fixture(&dest).finish().unwrap();
+        assert_eq!(map.len(), 5);
+        assert_eq!(map.path(), dest.as_path());
+
+        let rep = replay(&dest).unwrap();
+        assert_eq!(rep.d, 2);
+        assert_eq!(rep.rows, 5);
+        assert_eq!(rep.frames, 2);
+        let shards = fixture_shards();
+        let want_protos: Vec<f32> = shards
+            .iter()
+            .flat_map(|(s, _)| s.prototypes.data().to_vec())
+            .collect();
+        assert_eq!(rep.prototypes, want_protos);
+        assert_eq!(rep.weights, vec![1, 2, 1]);
+        assert!(rep.have_labels);
+        assert_eq!(rep.labels, vec![0, 1, 2, 0, 1]);
+        let mo = rep.moments.unwrap();
+        assert_eq!(mo.count, 5);
+        assert_eq!(mo.sum, vec![3.0, 5.0]);
+        assert_eq!(mo.cross, vec![2.0, 4.0, 6.0, 8.0]);
+
+        // Global rebasing: frame 2's local ids shift by frame 1's 2
+        // prototypes.
+        assert_eq!(map.read_assignments().unwrap(), vec![0, 1, 0, 2, 2]);
+        // Back-out maps global prototype ids through the lookup.
+        assert_eq!(map.back_out(&[7, 8, 9]).unwrap(), vec![7, 8, 7, 9, 9]);
+        assert!(map.back_out(&[7]).is_err());
+    }
+
+    #[test]
+    fn frames_must_tile_the_stream() {
+        let dest = test_dir("tiling").join("run.ckpt");
+        let mut w = CheckpointWriter::create(&dest, 2, 0).unwrap();
+        let (mut shard, mo) = fixture_shards().remove(1);
+        shard.offset = 7; // first frame must start at row 0
+        let err = w.append(&shard, &mo).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "{err}");
+        assert!(err.to_string().contains("tile"), "{err}");
+        w.abort();
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_to_last_valid_frame() {
+        let dest = test_dir("torn").join("run.ckpt");
+        write_fixture(&dest).abort(); // durable abort keeps the tmp
+        let tmp = tmp_path(&dest);
+        let whole = fs::metadata(&tmp).unwrap().len();
+
+        // Garbage appended after the last frame: both frames survive.
+        let mut f = OpenOptions::new().append(true).open(&tmp).unwrap();
+        f.write_all(&[0xAB; 11]).unwrap();
+        drop(f);
+        let rep = prepare_resume(&dest).unwrap().unwrap();
+        assert_eq!((rep.rows, rep.frames), (5, 2));
+        assert_eq!(fs::metadata(&tmp).unwrap().len(), whole);
+
+        // Tear the last frame's checksum off: frame 2 is dropped.
+        let f = OpenOptions::new().write(true).open(&tmp).unwrap();
+        f.set_len(whole - 2).unwrap();
+        drop(f);
+        let rep = prepare_resume(&dest).unwrap().unwrap();
+        assert_eq!((rep.rows, rep.frames), (3, 1));
+        assert!(fs::metadata(&tmp).unwrap().len() < whole - 2);
+    }
+
+    #[test]
+    fn corrupted_tail_is_detected_never_silently_consumed() {
+        let dest = test_dir("corrupt").join("run.ckpt");
+        write_fixture(&dest).abort();
+        let tmp = tmp_path(&dest);
+        // Flip one byte inside the last frame's payload.
+        let mut bytes = fs::read(&tmp).unwrap();
+        let n = bytes.len();
+        bytes[n - 10] ^= 0xFF;
+        fs::write(&tmp, &bytes).unwrap();
+        let rep = prepare_resume(&dest).unwrap().unwrap();
+        assert_eq!((rep.rows, rep.frames), (3, 1));
+        // And the resumed writer appends cleanly after the good frame.
+        let mut w = CheckpointWriter::resume(&dest, &rep, 0).unwrap();
+        let (mut shard, mo) = fixture_shards().remove(1);
+        shard.offset = 3;
+        w.append(&shard, &mo).unwrap();
+        let map = w.finish().unwrap();
+        assert_eq!(map.len(), 5);
+        assert_eq!(map.read_assignments().unwrap(), vec![0, 1, 0, 2, 2]);
+    }
+
+    #[test]
+    fn wrong_magic_is_a_hard_error() {
+        let dir = test_dir("magic");
+        let path = dir.join("not_a_checkpoint.ckpt");
+        fs::write(&path, b"definitely,not,a,checkpoint,file").unwrap();
+        let err = replay(&path).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // prepare_resume must refuse to truncate a foreign file too.
+        fs::write(tmp_path(&path), b"also definitely not a checkpoint").unwrap();
+        assert!(prepare_resume(&path).is_err());
+    }
+
+    #[test]
+    fn header_only_crash_restarts_fresh() {
+        let dest = test_dir("headercrash").join("run.ckpt");
+        let tmp = tmp_path(&dest);
+        fs::write(&tmp, &MAGIC[..4]).unwrap(); // died mid-header
+        assert!(prepare_resume(&dest).unwrap().is_none());
+        assert!(!tmp.exists());
+        assert!(prepare_resume(&dest).unwrap().is_none()); // nothing at all
+    }
+
+    #[test]
+    fn finished_checkpoint_resumes_via_rename() {
+        let dest = test_dir("finished").join("run.ckpt");
+        write_fixture(&dest).finish().unwrap();
+        assert!(dest.exists());
+        let rep = prepare_resume(&dest).unwrap().unwrap();
+        assert_eq!((rep.rows, rep.frames), (5, 2));
+        assert!(!dest.exists());
+        assert!(tmp_path(&dest).exists());
+        // Re-finishing restores the durable file.
+        let map = CheckpointWriter::resume(&dest, &rep, 0).unwrap().finish().unwrap();
+        assert!(dest.exists());
+        assert_eq!(map.len(), 5);
+    }
+
+    #[test]
+    fn anonymous_spill_is_deleted_on_drop() {
+        let path = spill_path();
+        let mut w = CheckpointWriter::create_spill(&path, 2).unwrap();
+        for (shard, mo) in fixture_shards() {
+            w.append(&shard, &mo).unwrap();
+        }
+        let map = w.finish().unwrap();
+        assert!(path.exists());
+        assert_eq!(map.read_assignments().unwrap(), vec![0, 1, 0, 2, 2]);
+        drop(map);
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn labelless_frames_clear_the_label_flag() {
+        let dest = test_dir("labels").join("run.ckpt");
+        let mut w = CheckpointWriter::create(&dest, 2, 0).unwrap();
+        let mut shards = fixture_shards();
+        let (mut shard1, mo1) = shards.pop().unwrap();
+        let (shard0, mo0) = shards.pop().unwrap();
+        w.append(&shard0, &mo0).unwrap();
+        shard1.labels = None;
+        w.append(&shard1, &mo1).unwrap();
+        w.finish().unwrap();
+        let rep = replay(&dest).unwrap();
+        assert!(!rep.have_labels);
+        assert_eq!(rep.labels, vec![0, 1, 2]); // frame 1's labels only
+    }
+}

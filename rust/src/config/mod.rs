@@ -106,6 +106,25 @@ pub struct PipelineConfig {
     /// before concatenation, so every value produces byte-identical
     /// output; values > 1 only change throughput. Must be ≥ 1.
     pub reduce_stages: usize,
+    /// Durable checkpoint file for streaming runs (optional). When set,
+    /// every reduced shard is appended to this file as a CRC32-checked
+    /// frame behind the reorder stage, so the file always holds an
+    /// offset-tiled prefix of the stream and a crash can resume from
+    /// the last fsynced frame. When unset, streaming runs still spill
+    /// the level-0 assignment map to an anonymous temp file (deleted on
+    /// drop) so the O(n) map is never resident — but nothing survives
+    /// a crash.
+    pub checkpoint_path: Option<String>,
+    /// Fsync cadence for the durable checkpoint: flush + fsync after at
+    /// least this many rows have been appended since the last sync.
+    /// 0 (the default) syncs after every frame — maximum durability,
+    /// one fsync per shard. Ignored without `checkpoint_path`.
+    pub checkpoint_every_rows: usize,
+    /// Resume an interrupted streaming run from `checkpoint_path`:
+    /// replay the valid frames, seek the source to the first missing
+    /// row, and continue. The resumed run is byte-identical to an
+    /// uninterrupted one as long as the config is unchanged.
+    pub resume: bool,
     /// Steal policy of the run's shared executor: which queued batch
     /// idle workers serve first (`"fifo"`, the default, or `"lifo"`).
     /// Scheduling-only — output bytes are identical under every policy.
@@ -138,6 +157,9 @@ impl Default for PipelineConfig {
             queue_capacity: 4,
             streaming: false,
             reduce_stages: 1,
+            checkpoint_path: None,
+            checkpoint_every_rows: 0,
+            resume: false,
             steal: StealPolicy::Fifo,
             fair_stages: true,
             output: None,
@@ -222,6 +244,15 @@ impl PipelineConfig {
         if let Some(r) = j.opt_usize("reduce_stages")? {
             cfg.reduce_stages = r;
         }
+        if let Some(p) = j.opt_str("checkpoint_path")? {
+            cfg.checkpoint_path = Some(p.to_string());
+        }
+        if let Some(e) = j.opt_usize("checkpoint_every_rows")? {
+            cfg.checkpoint_every_rows = e;
+        }
+        if let Some(r) = j.opt_bool("resume")? {
+            cfg.resume = r;
+        }
         if let Some(e) = j.get("executor") {
             // The executor block groups the thread-team knobs; its
             // `workers` is an alias for the top-level knob (the block
@@ -301,6 +332,29 @@ impl PipelineConfig {
                 "reduce_stages = {} has no effect without streaming: true — the materialized \
                  path has no reduce fan-out (set streaming, or drop the knob)",
                 self.reduce_stages
+            )));
+        }
+        // The checkpoint knobs only govern the streaming ingest; on the
+        // materialized path they would be silently inert, and a `resume`
+        // or cadence knob without a file to act on is a contradiction —
+        // reject all three instead of dropping them.
+        if self.checkpoint_path.is_some() && !self.streaming {
+            return Err(Error::Config(
+                "checkpoint_path has no effect without streaming: true — only the fused \
+                 streaming ingest writes offset-keyed frames (set streaming, or drop the knob)"
+                    .into(),
+            ));
+        }
+        if self.resume && self.checkpoint_path.is_none() {
+            return Err(Error::Config(
+                "resume: true needs a checkpoint_path to replay from".into(),
+            ));
+        }
+        if self.checkpoint_every_rows > 0 && self.checkpoint_path.is_none() {
+            return Err(Error::Config(format!(
+                "checkpoint_every_rows = {} has no effect without checkpoint_path — the \
+                 anonymous level-0 spill never fsyncs (set checkpoint_path, or drop the knob)",
+                self.checkpoint_every_rows
             )));
         }
         // Stages share ONE work-stealing executor (they no longer own
@@ -509,6 +563,44 @@ mod tests {
         assert!(PipelineConfig::from_json(r#"{"streaming": "true"}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"iterations": "2"}"#).is_err());
         assert!(PipelineConfig::from_json(r#"{"prototype": 3}"#).is_err());
+    }
+
+    #[test]
+    fn checkpoint_parse_and_validation() {
+        let cfg = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted",
+                "checkpoint_path": "/tmp/run.ckpt", "checkpoint_every_rows": 100000,
+                "resume": true}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.checkpoint_path.as_deref(), Some("/tmp/run.ckpt"));
+        assert_eq!(cfg.checkpoint_every_rows, 100_000);
+        assert!(cfg.resume);
+        // Defaults: no checkpoint, fsync-every-frame cadence, no resume.
+        let cfg = PipelineConfig::from_json("{}").unwrap();
+        assert!(cfg.checkpoint_path.is_none());
+        assert_eq!(cfg.checkpoint_every_rows, 0);
+        assert!(!cfg.resume);
+        // A checkpoint on the materialized path would be silently inert.
+        let err =
+            PipelineConfig::from_json(r#"{"checkpoint_path": "/tmp/run.ckpt"}"#).unwrap_err();
+        assert!(err.to_string().contains("streaming"), "{err}");
+        // Resume without a file to replay from is a contradiction…
+        let err = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "resume": true}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint_path"), "{err}");
+        // …and so is a sync cadence with nothing durable to sync.
+        let err = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "checkpoint_every_rows": 512}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("checkpoint_every_rows"), "{err}");
+        // Mistyped knobs are config errors, never silently ignored.
+        assert!(PipelineConfig::from_json(r#"{"checkpoint_path": 3}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"resume": "yes"}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"checkpoint_every_rows": "many"}"#).is_err());
     }
 
     #[test]

@@ -16,15 +16,20 @@
 //! shard is threshold-clustered into weighted prototypes *inside* the
 //! pipeline's reduce stage (one [`crate::itis::reduce_shard`] call per
 //! shard, reusing the stage thread's [`ItisWorkspace`]), and only the
-//! concatenated prototype stream — roughly `n / t*` rows — plus the
-//! per-row level-0 assignments are ever resident. Standardization
+//! concatenated prototype stream — roughly `n / t*` rows — is ever
+//! resident: the per-row level-0 assignment map is spilled to disk by a
+//! checkpoint sink stage ([`crate::checkpoint`]) and read back once,
+//! sequentially, during back-out. With `checkpoint_path` set the spill
+//! file doubles as a durable, CRC-framed checkpoint, and `resume: true`
+//! replays it after a crash and continues the stream from the first
+//! missing row — byte-identical to an uninterrupted run. Standardization
 //! moments fold in the same single pass; the remaining `m − 1` ITIS
 //! iterations then resume on the prototypes ([`crate::itis::itis_resume`]).
 //! The default materialized path is untouched and remains byte-identical.
 
 use super::pipeline::{collect, PipelineBuilder, ReducedShard, RowShard, StageMetrics};
 use super::PoolKnnProvider;
-use crate::exec::Executor;
+use crate::checkpoint::{self, CheckpointWriter, FaultPlan, Level0Map};
 use crate::cluster::kmeans::{self, NativeAssign};
 use crate::cluster::{dbscan, hac};
 use crate::config::{Backend, DataSource, PipelineConfig};
@@ -33,16 +38,17 @@ use crate::data::synth::{
     MixtureSampler, MixtureSpec,
 };
 use crate::data::{csv, Dataset};
+use crate::exec::Executor;
 use crate::hybrid::{FinalClusterer, IhtcWorkspace};
 use crate::itis::{
-    itis_resume, itis_with_workspace, ItisConfig, ItisLevel, ItisResult, KnnProvider,
-    PrototypeKind, StopRule,
+    itis_resume, itis_with_workspace, ItisConfig, ItisResult, KnnProvider, PrototypeKind, StopRule,
 };
 use crate::knn::KnnLists;
 use crate::linalg::{pca::Pca, Matrix};
 use crate::runtime::{Engine, PjrtAssign, PjrtChunks};
 use crate::{memtrack, Error, Result};
-use std::sync::Arc;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Timing + memory for one pipeline phase.
@@ -371,16 +377,19 @@ fn standardize_with(m: &mut Matrix, moments: &Moments, exec: &Executor) -> Resul
 /// The fused streaming ingest's output: the concatenated level-0
 /// prototype stream (roughly `n / t*` rows) plus everything needed to
 /// resume ITIS and back labels out. After [`ingest_streaming`] returns,
-/// this is the *only* dataset-sized state resident — the raw `n × d`
-/// matrix was never materialized.
-#[derive(Clone, Debug)]
+/// the prototype stream is the *only* dataset-sized state resident —
+/// the raw `n × d` matrix was never materialized, and the per-row
+/// level-0 assignment map lives on disk ([`Level0Map`]), read back
+/// once, sequentially, during back-out.
+#[derive(Debug)]
 pub struct StreamedReduction {
     /// Concatenated weighted level-0 prototypes.
     pub prototypes: Matrix,
     /// Original units represented by each prototype.
     pub weights: Vec<u32>,
-    /// Original row → level-0 prototype id (length = rows streamed).
-    pub assignments: Vec<u32>,
+    /// Disk-spilled map: original row → level-0 prototype id (covers
+    /// every streamed row, in stream order).
+    pub level0: Level0Map,
     /// Ground-truth labels for all streamed rows, when known.
     pub labels: Option<Vec<u32>>,
     /// Streaming first/second moments of the raw rows (for exact
@@ -397,11 +406,20 @@ type ShardProducer = Box<dyn FnOnce(&mut dyn FnMut(RowShard) -> Result<()>) -> R
 
 /// Shard-by-shard synthetic source: one sampler, one RNG stream, so the
 /// emitted shards concatenate to exactly what the materialized path's
-/// one-shot `sample(n, seed)` produces.
-fn mixture_source(mix: MixtureSpec, n: usize, seed: u64, shard: usize) -> ShardProducer {
+/// one-shot `sample(n, seed)` produces. A non-zero `start` seeks the
+/// sampler past the rows a checkpoint already covers, so a resumed
+/// stream emits exactly the missing suffix.
+fn mixture_source(
+    mix: MixtureSpec,
+    n: usize,
+    seed: u64,
+    shard: usize,
+    start: usize,
+) -> ShardProducer {
     Box::new(move |emit| {
         let mut sampler = MixtureSampler::new(&mix, seed);
-        let mut offset = 0usize;
+        let mut offset = start.min(n);
+        sampler.seek(offset);
         while offset < n {
             let rows = shard.min(n - offset);
             let (points, labels) = sampler.next_shard(rows);
@@ -415,15 +433,18 @@ fn mixture_source(mix: MixtureSpec, n: usize, seed: u64, shard: usize) -> ShardP
 /// Build the shard source for the configured input without materializing
 /// it: CSV files are read incrementally, synthetic sources are sampled
 /// shard-by-shard from the same RNG stream the materialized path uses.
-fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
+/// `start_row` is the first row to emit (0 for a fresh run; the replayed
+/// checkpoint's row count on resume) — always a multiple of the shard
+/// size, so the resumed stream's shard tiling matches the original's.
+fn shard_source(config: &PipelineConfig, start_row: usize) -> Result<ShardProducer> {
     let shard = config.shard_size.max(1);
     Ok(match &config.source {
         DataSource::Csv { path, label_column } => {
             let opts = csv::CsvOptions { label_column: *label_column, ..Default::default() };
             let path = path.clone();
             Box::new(move |emit| {
-                let mut offset = 0usize;
-                for item in csv::read_csv_chunks(&path, &opts, shard)? {
+                let mut offset = start_row;
+                for item in csv::read_csv_chunks_from(&path, &opts, shard, start_row)? {
                     let (points, labels) = item?;
                     let rows = points.rows();
                     emit(RowShard { offset, points, labels })?;
@@ -433,14 +454,14 @@ fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
             })
         }
         DataSource::PaperMixture { n } => {
-            mixture_source(paper_mixture_spec(), *n, config.seed, shard)
+            mixture_source(paper_mixture_spec(), *n, config.seed, shard, start_row)
         }
         DataSource::Analogue { name, scale_div } => {
             let spec = find_spec(name).ok_or_else(|| {
                 Error::Config(format!("unknown analogue dataset '{name}' (see Table 3)"))
             })?;
             let (mix, n) = realistic_spec(spec, *scale_div, config.seed);
-            mixture_source(mix, n, config.seed, shard)
+            mixture_source(mix, n, config.seed, shard, start_row)
         }
     })
 }
@@ -469,15 +490,51 @@ fn shard_source(config: &PipelineConfig) -> Result<ShardProducer> {
 /// invariant, any `reduce_stages` value yields a byte-identical
 /// [`StreamedReduction`].
 pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
-    ingest_streaming_on(config, &Arc::new(Executor::with_config(config.executor())))
+    ingest_streaming_with_faults(config, &FaultPlan::none())
+}
+
+/// [`ingest_streaming`] with a deterministic fault plan threaded through
+/// the pipeline — the crash/recovery harness's entry point. The plan
+/// injects failures (source abort at an exact row, reduce-stage kill at
+/// an exact shard offset, checkpoint-sink write error at an exact frame)
+/// at reproducible points, so the resume contract is exercised in-tree
+/// rather than hoped for. `FaultPlan::none()` makes this identical to
+/// [`ingest_streaming`].
+pub fn ingest_streaming_with_faults(
+    config: &PipelineConfig,
+    faults: &FaultPlan,
+) -> Result<StreamedReduction> {
+    ingest_streaming_on(config, &Arc::new(Executor::with_config(config.executor())), faults)
+}
+
+/// Reclaim the sink's writer from its shared slot. A poisoned lock maps
+/// to `None`: poisoning means a stage thread panicked mid-append, and
+/// every caller is already on an error path where the tmp file's frames
+/// up to the last fsync remain valid for resume.
+fn take_writer(slot: &Mutex<Option<CheckpointWriter>>) -> Option<CheckpointWriter> {
+    slot.lock().ok().and_then(|mut s| s.take())
 }
 
 /// [`ingest_streaming`] on the caller's shared executor (what
 /// [`run`] uses, so the whole streaming run is one thread team).
-fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<StreamedReduction> {
+fn ingest_streaming_on(
+    config: &PipelineConfig,
+    exec: &Arc<Executor>,
+    faults: &FaultPlan,
+) -> Result<StreamedReduction> {
     let capacity = config.queue_capacity.max(1);
     let stages_n = config.reduce_stages.max(1);
-    let produce = shard_source(config)?;
+    // Resume: replay the durable checkpoint's valid frames (physically
+    // truncating a torn tail to the last CRC-clean frame) and start the
+    // source at the first row the file does not cover. No checkpoint on
+    // disk yet means a fresh start — `prepare_resume` returns None.
+    let ckpt_dest = config.checkpoint_path.as_ref().map(PathBuf::from);
+    let replayed = match &ckpt_dest {
+        Some(dest) if config.resume => checkpoint::prepare_resume(dest)?,
+        _ => None,
+    };
+    let start_row = replayed.as_ref().map_or(0, |r| r.rows);
+    let produce = shard_source(config, start_row)?;
     let itis_cfg = ItisConfig {
         threshold: config.threshold,
         stop: StopRule::Iterations(1),
@@ -489,6 +546,23 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
     // Every stage shares `exec`: stage states are built on the stage
     // threads, so they take owning `Arc` handles to the one team.
     let stage_exec = Arc::clone(exec);
+    // Shared slot for the checkpoint writer. The sink stage owns the
+    // writer while the pipeline runs; the collector reclaims it after
+    // `join` to finish (fsync + rename into place) or abort. On resume
+    // the slot is pre-seeded with a writer positioned after the last
+    // replayed frame, so the sink appends where the dead run stopped.
+    let writer_slot: Arc<Mutex<Option<CheckpointWriter>>> = Arc::new(Mutex::new(None));
+    if let Some(rep) = &replayed {
+        let dest = ckpt_dest.as_ref().expect("resume implies checkpoint_path");
+        let resumed = CheckpointWriter::resume(dest, rep, config.checkpoint_every_rows)?;
+        *writer_slot.lock().expect("no other thread holds the fresh slot") = Some(resumed);
+    }
+    let fail_source = faults.fail_source_at_row;
+    let kill_reduce = faults.kill_reduce_at_offset;
+    let fail_sink = faults.fail_sink_at_frame;
+    let sink_slot = Arc::clone(&writer_slot);
+    let sink_dest = ckpt_dest.clone();
+    let sync_every = config.checkpoint_every_rows;
     // Reorder bound: everything that can be in flight at once — each
     // stage's input queue plus the item it is processing, the output
     // funnel, and slack for the distributor/reorder hand-offs. A correct
@@ -497,7 +571,19 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
     let pipe = PipelineBuilder::source(
         "source",
         capacity,
-        move |emit: &mut dyn FnMut(RowShard) -> Result<()>| produce(emit),
+        move |emit: &mut dyn FnMut(RowShard) -> Result<()>| {
+            let mut guarded = |shard: RowShard| {
+                if let Some(k) = fail_source {
+                    if shard.offset + shard.points.rows() > k {
+                        return Err(Error::Data(format!(
+                            "fault injection: source failed at row {k}"
+                        )));
+                    }
+                }
+                emit(shard)
+            };
+            produce(&mut guarded)
+        },
     )
         .map_init_parallel(
             "reduce",
@@ -510,6 +596,9 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
                 )
             },
             move |reducer, shard: RowShard| {
+                if kill_reduce == Some(shard.offset) {
+                    panic!("fault injection: reduce stage killed at offset {}", shard.offset);
+                }
                 let mut moments = Moments::new(shard.points.cols());
                 moments.fold(&shard.points);
                 let red = reducer.reduce(&shard.points)?;
@@ -525,8 +614,37 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
                 ))
             },
         )
-        .reorder("reorder", reorder_bound, |(shard, _): &(ReducedShard, Moments)| {
+        .reorder_from("reorder", reorder_bound, start_row, |(shard, _): &(ReducedShard, Moments)| {
             (shard.offset, shard.assignments.len())
+        })
+        // Checkpoint sink, strictly behind the reorder stage: frames hit
+        // the file in stream order, so the file always holds an
+        // offset-tiled prefix of the stream — exactly the resume
+        // contract. Without `checkpoint_path` the writer is an anonymous
+        // spill (no fsync, deleted on drop) that only serves back-out.
+        .map("checkpoint", move |(shard, mo): (ReducedShard, Moments)| {
+            let mut slot = sink_slot
+                .lock()
+                .map_err(|_| Error::Coordinator("checkpoint sink: writer lock poisoned".into()))?;
+            if slot.is_none() {
+                let d = shard.prototypes.cols();
+                *slot = Some(match &sink_dest {
+                    Some(dest) => CheckpointWriter::create(dest, d, sync_every)?,
+                    None => CheckpointWriter::create_spill(&checkpoint::spill_path(), d)?,
+                });
+            }
+            let writer = slot.as_mut().expect("just initialized");
+            if fail_sink == Some(writer.frames()) {
+                return Err(Error::Coordinator(format!(
+                    "fault injection: checkpoint sink write failed at frame {}",
+                    writer.frames()
+                )));
+            }
+            writer.append(&shard, &mo).map_err(|e| match e {
+                Error::Coordinator(m) => Error::Coordinator(m),
+                e => Error::Coordinator(format!("checkpoint sink: {e}")),
+            })?;
+            Ok((shard, mo))
         })
         .build();
 
@@ -534,30 +652,44 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
     // stream order; the hard check below replaces the old
     // debug_assert-only guard (which vanished in release builds and let
     // an out-of-order shard silently corrupt every downstream weight and
-    // back-out label).
+    // back-out label). The per-row assignments are NOT accumulated here
+    // — the checkpoint sink already spilled them to disk, so the last
+    // resident O(n) buffer is gone.
     let mut data: Vec<f32> = Vec::new();
     let mut weights: Vec<u32> = Vec::new();
-    let mut assignments: Vec<u32> = Vec::new();
     let mut labels: Vec<u32> = Vec::new();
     let mut have_labels = true;
     let mut moments: Option<Moments> = None;
+    let mut rows_total = 0usize;
     let mut d = 0usize;
+    if let Some(rep) = replayed {
+        // Seed the concatenation with the replayed prefix: frames were
+        // appended in stream order, so this is exactly the state the
+        // collector had reached when the interrupted run last fsynced
+        // (including the moments fold order — resumed output stays
+        // f64-bit-identical).
+        d = rep.d;
+        data = rep.prototypes;
+        weights = rep.weights;
+        labels = rep.labels;
+        have_labels = rep.have_labels;
+        moments = rep.moments;
+        rows_total = rep.rows;
+    }
     let mut order_err: Option<Error> = None;
     for (shard, mo) in &pipe.output {
         if order_err.is_some() {
             continue; // drain so the stages can finish; error after join
         }
-        if shard.offset != assignments.len() {
+        if shard.offset != rows_total {
             order_err = Some(Error::Coordinator(format!(
                 "streaming collector: shard at offset {} arrived but the stream is only \
-                 concatenated through {} — ordering contract violated",
+                 concatenated through {rows_total} — ordering contract violated",
                 shard.offset,
-                assignments.len()
             )));
             continue;
         }
-        let base = weights.len() as u32;
-        assignments.extend(shard.assignments.iter().map(|&a| base + a));
+        rows_total += shard.assignments.len();
         d = shard.prototypes.cols();
         data.extend_from_slice(shard.prototypes.data());
         weights.extend_from_slice(&shard.weights);
@@ -570,19 +702,52 @@ fn ingest_streaming_on(config: &PipelineConfig, exec: &Arc<Executor>) -> Result<
             None => moments = Some(mo),
         }
     }
-    let stages = pipe.join()?;
+    // Every error path below must reclaim and abort the writer: abort
+    // keeps a durable tmp file's fsynced frames on disk for resume and
+    // deletes an anonymous spill.
+    let stages = match pipe.join() {
+        Ok(stages) => stages,
+        Err(e) => {
+            if let Some(w) = take_writer(&writer_slot) {
+                w.abort();
+            }
+            return Err(e);
+        }
+    };
     if let Some(e) = order_err {
+        if let Some(w) = take_writer(&writer_slot) {
+            w.abort();
+        }
         return Err(e);
     }
-    let n = assignments.len();
+    let n = rows_total;
     if n == 0 {
+        if let Some(w) = take_writer(&writer_slot) {
+            w.abort();
+        }
         return Err(Error::Data("streaming source produced no rows".into()));
     }
+    let writer = match take_writer(&writer_slot) {
+        Some(w) => w,
+        None => {
+            return Err(Error::Coordinator(
+                "checkpoint sink produced no writer despite streamed rows".into(),
+            ))
+        }
+    };
+    let wrote = writer.rows();
+    if wrote != n {
+        writer.abort();
+        return Err(Error::Coordinator(format!(
+            "checkpoint covers {wrote} rows but the stream delivered {n}"
+        )));
+    }
+    let level0 = writer.finish()?;
     let prototypes = Matrix::from_vec(data, weights.len(), d)?;
     Ok(StreamedReduction {
         prototypes,
         weights,
-        assignments,
+        level0,
         labels: if have_labels { Some(labels) } else { None },
         moments: moments.unwrap_or_else(|| Moments::new(d)),
         n,
@@ -800,8 +965,9 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
 
     // Phase 1: fused ingest + shard-wise level-0 TC (+ streaming moments).
     let t0 = Instant::now();
-    let (ingested, peak) = memtrack::measure(|| ingest_streaming_on(config, &exec));
-    let StreamedReduction { prototypes, weights, assignments: level0, labels: truth, moments, n, stages } =
+    let (ingested, peak) =
+        memtrack::measure(|| ingest_streaming_on(config, &exec, &FaultPlan::none()));
+    let StreamedReduction { prototypes, weights, level0, labels: truth, moments, n, stages } =
         ingested?;
     phases.push(PhaseStat {
         name: "ingest",
@@ -883,12 +1049,7 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         };
         itis_resume(protos0, weights, n, &itis_cfg, knn_provider, &exec, ws_itis)
     });
-    let mut reduction = reduced?;
-    // Prepend the fused level 0 so back-out composes over all n rows.
-    reduction.levels.insert(
-        0,
-        ItisLevel { assignments: level0, num_prototypes: num_level0 },
-    );
+    let reduction = reduced?;
     phases.push(PhaseStat {
         name: "reduce",
         seconds: t0.elapsed().as_secs_f64(),
@@ -908,10 +1069,32 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         peak_bytes: peak,
     });
 
-    // Phase 5: back-out + metrics + optional output.
+    // Phase 5: back-out + metrics + optional output. The fused level-0
+    // map lives on disk, so the composition runs in two steps: fold the
+    // in-RAM levels (each ≤ num_level0 entries) plus the final labels
+    // into one level-0-prototype-id → cluster-label lookup, then stream
+    // the spilled per-row map through it once, sequentially — the O(n)
+    // assignment vector below is the run's *output*, the only
+    // dataset-sized allocation of the whole streaming path.
     let t0 = Instant::now();
     let (backout, peak) = memtrack::measure(|| -> Result<(Vec<u32>, Option<f64>, f64)> {
-        let assignments = reduction.back_out(&prototype_labels)?;
+        if prototype_labels.len() != reduction.prototypes.rows() {
+            return Err(Error::Shape(format!(
+                "{} prototype labels for {} prototypes",
+                prototype_labels.len(),
+                reduction.prototypes.rows()
+            )));
+        }
+        let mut lookup: Vec<u32> = (0..num_level0 as u32).collect();
+        for level in &reduction.levels {
+            for slot in lookup.iter_mut() {
+                *slot = level.assignments[*slot as usize];
+            }
+        }
+        for slot in lookup.iter_mut() {
+            *slot = prototype_labels[*slot as usize];
+        }
+        let assignments = level0.back_out(&lookup)?;
         let accuracy = match &truth {
             Some(t) => Some(crate::metrics::prediction_accuracy(t, &assignments)?),
             None => None,
@@ -934,7 +1117,9 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         n,
         dim_in,
         dim_used,
-        iterations: reduction.iterations(),
+        // The fused level-0 pass is an iteration too, but it is no
+        // longer prepended to `levels` (its map lives on disk).
+        iterations: reduction.iterations() + 1,
         prototypes: reduction.prototypes.rows(),
         clusters: crate::metrics::num_clusters(&assignments),
         accuracy,
@@ -1068,13 +1253,14 @@ mod tests {
         assert!(report.prototypes <= 4000 / 4 + 8, "{}", report.prototypes);
         assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
         assert_eq!(report.phases.len(), 5);
-        // Fan-out topology: distributor + per-stage workers + reorder,
-        // reported in source→…→sink order.
+        // Fan-out topology: distributor + per-stage workers + reorder +
+        // checkpoint sink, reported in source→…→sink order.
         let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
         assert_eq!(names[0], "source");
         assert_eq!(names[1], "reduce/rr");
         assert!(names.contains(&"reduce/0"));
-        assert_eq!(*names.last().unwrap(), "reorder");
+        assert!(names.contains(&"reorder"));
+        assert_eq!(*names.last().unwrap(), "checkpoint");
     }
 
     #[test]
@@ -1141,7 +1327,11 @@ mod tests {
             assert_eq!(got.n, base.n, "r={r}");
             assert_eq!(got.prototypes.data(), base.prototypes.data(), "r={r}");
             assert_eq!(got.weights, base.weights, "r={r}");
-            assert_eq!(got.assignments, base.assignments, "r={r}");
+            assert_eq!(
+                got.level0.read_assignments().unwrap(),
+                base.level0.read_assignments().unwrap(),
+                "r={r}"
+            );
             assert_eq!(got.labels, base.labels, "r={r}");
             assert_eq!(got.moments.count, base.moments.count, "r={r}");
             assert_eq!(got.moments.sum, base.moments.sum, "r={r}");
@@ -1225,7 +1415,7 @@ mod tests {
         }
         assert_eq!(stream.prototypes.data(), &data[..]);
         assert_eq!(stream.weights, weights);
-        assert_eq!(stream.assignments, assignments);
+        assert_eq!(stream.level0.read_assignments().unwrap(), assignments);
         assert_eq!(stream.labels, ds.labels);
         assert_eq!(stream.moments.count, moments.count);
         assert_eq!(stream.moments.sum, moments.sum);
@@ -1239,7 +1429,7 @@ mod tests {
         let par = ingest_streaming(&par_cfg).unwrap();
         assert_eq!(par.prototypes.data(), &data[..]);
         assert_eq!(par.weights, weights);
-        assert_eq!(par.assignments, assignments);
+        assert_eq!(par.level0.read_assignments().unwrap(), assignments);
         assert_eq!(par.moments.cross, moments.cross);
     }
 

@@ -31,77 +31,6 @@ use crate::Result;
 
 pub use crate::exec::resolve_workers;
 
-/// Deprecated shim over [`crate::exec::Executor`].
-///
-/// Until the shared-executor refactor, every parallel call site spawned
-/// its own scoped thread team through this type. The executor subsumes
-/// it: one persistent work-stealing team per run, shared by every layer.
-/// The shim keeps out-of-tree `run_tasks`/`run_chunks` callers
-/// compiling for one more release — it owns a private `Executor` and
-/// forwards. Two caveats for such callers: (1) the cost model changed —
-/// the old type was a plain descriptor that spawned scoped threads per
-/// call, while constructing this shim now spawns `workers − 1`
-/// persistent threads and joins them on drop, so build one and reuse it
-/// rather than constructing per call; (2) every in-tree API that used
-/// to accept `&WorkerPool` (`parallel_knn`, `itis_with_workspace`,
-/// `kmeans_pool`, `Ihtc::run_with`, …) now takes `&Executor`, so
-/// callers of those must migrate regardless. New code should construct
-/// an [`Executor::new`] / [`Executor::with_config`] directly.
-#[deprecated(
-    note = "use crate::exec::Executor — one shared work-stealing executor per run; \
-            WorkerPool is a forwarding shim and will be removed"
-)]
-pub struct WorkerPool {
-    exec: Executor,
-}
-
-#[allow(deprecated)]
-impl Default for WorkerPool {
-    /// Pool sized to the machine (available parallelism − 1, min 1).
-    fn default() -> Self {
-        Self::new(0)
-    }
-}
-
-#[allow(deprecated)]
-impl WorkerPool {
-    /// Create a pool (now: a private [`Executor`]) with `workers`
-    /// threads (0 = machine default).
-    pub fn new(workers: usize) -> Self {
-        Self { exec: Executor::new(workers) }
-    }
-
-    /// Number of worker threads used.
-    pub fn workers(&self) -> usize {
-        self.exec.workers()
-    }
-
-    /// Borrow the backing executor (migration hook for callers moving
-    /// off the shim).
-    pub fn executor(&self) -> &Executor {
-        &self.exec
-    }
-
-    /// Forwarded to [`Executor::run_tasks`].
-    pub fn run_tasks<T: Send, R: Send>(
-        &self,
-        tasks: Vec<T>,
-        f: impl Fn(T) -> Result<R> + Sync,
-    ) -> Result<Vec<R>> {
-        self.exec.run_tasks(tasks, f)
-    }
-
-    /// Forwarded to [`Executor::run_chunks`].
-    pub fn run_chunks<T: Send>(
-        &self,
-        n: usize,
-        chunk: usize,
-        f: impl Fn(usize, usize) -> Result<T> + Sync,
-    ) -> Result<Vec<T>> {
-        self.exec.run_chunks(n, chunk, f)
-    }
-}
-
 /// Exact k-NN lists computed by sharding queries across the executor
 /// against a shared kd-tree (itself built in parallel on the executor).
 /// Output is byte-identical to [`crate::knn::knn_brute`] for any worker
@@ -196,28 +125,5 @@ mod tests {
         let exec = Executor::new(1);
         let r = parallel_knn(&ds.points, 2, &exec).unwrap();
         assert_eq!(r.len(), 300);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn worker_pool_shim_forwards_to_the_executor() {
-        // The deprecated shim must stay a pure forwarding layer: same
-        // results, same ordering contract, same error propagation.
-        let pool = WorkerPool::new(3);
-        assert_eq!(pool.workers(), 3);
-        assert_eq!(pool.executor().workers(), 3);
-        let out = pool.run_tasks((0..37usize).collect(), |t| Ok(t * 2)).unwrap();
-        assert_eq!(out, (0..37).map(|t| t * 2).collect::<Vec<_>>());
-        let parts = pool.run_chunks(100, 7, |s, e| Ok(e - s)).unwrap();
-        assert_eq!(parts.iter().sum::<usize>(), 100);
-        assert!(pool
-            .run_tasks((0..5usize).collect(), |t| {
-                if t == 3 {
-                    Err(crate::Error::Coordinator("boom".into()))
-                } else {
-                    Ok(t)
-                }
-            })
-            .is_err());
     }
 }

@@ -132,7 +132,15 @@ pub struct ReorderBuffer<T> {
 impl<T> ReorderBuffer<T> {
     /// Empty buffer expecting the stream to start at offset 0.
     pub fn new(bound: usize) -> Self {
-        Self { next: 0, bound: bound.max(1), pending: BTreeMap::new() }
+        Self::with_start(bound, 0)
+    }
+
+    /// Empty buffer for a *resumed* stream: offsets below `start` were
+    /// already released in an earlier run (replayed from a checkpoint),
+    /// so the first expected arrival is `start` — an arrival below it is
+    /// the usual duplicate/overlap hard error.
+    pub fn with_start(bound: usize, start: usize) -> Self {
+        Self { next: start, bound: bound.max(1), pending: BTreeMap::new() }
     }
 
     /// Park one arrival. Errors on a duplicate offset, an overlap with a
@@ -489,6 +497,20 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         bound: usize,
         key: impl Fn(&T) -> (usize, usize) + Send + 'static,
     ) -> PipelineBuilder<T> {
+        self.reorder_from(name, bound, 0, key)
+    }
+
+    /// [`Self::reorder`] for a *resumed* stream: the buffer expects the
+    /// first arrival at offset `start` (everything below it was released
+    /// in an earlier run and replayed from a checkpoint). With
+    /// `start = 0` this is exactly `reorder`.
+    pub fn reorder_from(
+        self,
+        name: &str,
+        bound: usize,
+        start: usize,
+        key: impl Fn(&T) -> (usize, usize) + Send + 'static,
+    ) -> PipelineBuilder<T> {
         let (tx, rx) = std::sync::mpsc::sync_channel::<T>(self.capacity);
         let slot = register_stage(&self.metrics, name);
         let m = self.metrics.clone();
@@ -499,7 +521,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut busy = Duration::ZERO;
             let mut blocked = Duration::ZERO;
-            let mut buf = ReorderBuffer::new(bound);
+            let mut buf = ReorderBuffer::with_start(bound, start);
             let mut result = Ok(());
             'recv: for item in upstream {
                 let t0 = Instant::now();
@@ -691,6 +713,53 @@ mod tests {
         .build();
         let err = collect(p).unwrap_err();
         assert!(err.to_string().contains("poison shard"), "{err}");
+    }
+
+    #[test]
+    fn source_error_with_parallel_stages_is_root_cause() {
+        // The source dies mid-stream while several reduce stages are
+        // still draining: the stage threads and distributor see their
+        // channels close and report hang-up symptoms — join must surface
+        // the source's own error, for every fan-out width.
+        for stages in [2usize, 4] {
+            let p = PipelineBuilder::source("gen", 1, |emit| {
+                for i in 0..20u64 {
+                    emit(i)?;
+                }
+                Err(Error::Data("source torn mid-stream".into()))
+            })
+            .map_init_parallel("par", stages, || (), |_, x: u64| Ok(x))
+            .reorder("reorder", 64, |x: &u64| (*x as usize, 1))
+            .build();
+            let err = collect(p).unwrap_err();
+            assert!(matches!(err, Error::Data(_)), "stages={stages}: {err}");
+            assert!(err.to_string().contains("source torn mid-stream"), "stages={stages}: {err}");
+        }
+    }
+
+    #[test]
+    fn reorder_from_resumes_mid_stream() {
+        // A resumed stream starts at the checkpoint row, not 0: the
+        // buffer releases [30, 70) in order, and an arrival below the
+        // start offset is the usual duplicate/overlap hard error.
+        let p = PipelineBuilder::source("gen", 2, |emit| {
+            for i in (30..70u64).rev() {
+                emit(i)?;
+            }
+            Ok(())
+        })
+        .map_init_parallel("par", 3, || (), |_, x: u64| Ok(x))
+        .reorder_from("reorder", 64, 30, |x: &u64| (*x as usize, 1))
+        .build();
+        let (out, _) = collect(p).unwrap();
+        assert_eq!(out, (30..70u64).collect::<Vec<_>>());
+
+        let mut buf = ReorderBuffer::with_start(8, 30);
+        assert!(buf.push(10, 5, ()).is_err(), "pre-start arrival must be rejected");
+        buf.push(30, 5, ()).unwrap();
+        assert!(buf.pop_ready().is_some());
+        assert_eq!(buf.released_through(), 35);
+        buf.finish().unwrap();
     }
 
     #[test]

@@ -2,7 +2,8 @@
 //!
 //! Supports the subset of CSV the pipeline needs: numeric feature columns,
 //! optional header row, optional integer label column. Malformed rows are
-//! reported with line numbers.
+//! reported with line numbers *and* byte offsets, so a torn or truncated
+//! stream can be triaged (and resumed) without re-reading the file.
 
 use super::Dataset;
 use crate::linalg::Matrix;
@@ -45,10 +46,13 @@ pub fn read_csv(path: impl AsRef<Path>, opts: &CsvOptions) -> Result<Dataset> {
 /// feature-column count. Returns `Ok(true)` when the line held a data
 /// row, `Ok(false)` for blank lines. Shared by the one-shot
 /// [`parse_csv`] and the incremental [`CsvChunks`] reader so both report
-/// identical errors.
+/// identical errors: `name:line:` plus the byte offset of the line's
+/// first character, so a malformed or truncated row mid-stream can be
+/// located (and the file repaired or re-fetched) without a re-scan.
 fn parse_line(
     line: &str,
     lineno: usize,
+    byte: u64,
     name: &str,
     opts: &CsvOptions,
     cols: &mut Option<usize>,
@@ -65,7 +69,8 @@ fn parse_line(
         None => *cols = Some(nfeat),
         Some(c) if *c != nfeat => {
             return Err(Error::Data(format!(
-                "{name}:{}: expected {c} feature fields, found {nfeat}",
+                "{name}:{}: expected {c} feature fields, found {nfeat} (byte {byte}; a short \
+                 final row usually means the file was truncated mid-write)",
                 lineno + 1
             )))
         }
@@ -74,12 +79,12 @@ fn parse_line(
     for (i, field) in fields.iter().enumerate() {
         if Some(i) == opts.label_column {
             let v: i64 = field.trim().parse().map_err(|_| {
-                Error::Data(format!("{name}:{}: bad label '{field}'", lineno + 1))
+                Error::Data(format!("{name}:{}: bad label '{field}' (byte {byte})", lineno + 1))
             })?;
             labels.push(v as u32);
         } else {
             let v: f32 = field.trim().parse().map_err(|_| {
-                Error::Data(format!("{name}:{}: bad number '{field}'", lineno + 1))
+                Error::Data(format!("{name}:{}: bad number '{field}' (byte {byte})", lineno + 1))
             })?;
             data.push(v);
         }
@@ -88,18 +93,29 @@ fn parse_line(
 }
 
 /// Parse CSV from any reader (exposed for tests and in-memory sources).
-pub fn parse_csv(reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<Dataset> {
+pub fn parse_csv(mut reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<Dataset> {
     let mut data: Vec<f32> = Vec::new();
     let mut labels: Vec<u32> = Vec::new();
     let mut cols: Option<usize> = None;
     let mut rows = 0usize;
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    let mut byte = 0u64;
 
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        if lineno == 0 && opts.has_header {
+    loop {
+        line.clear();
+        let n = reader.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        let line_start = byte;
+        byte += n as u64;
+        let this = lineno;
+        lineno += 1;
+        if this == 0 && opts.has_header {
             continue;
         }
-        if parse_line(&line, lineno, name, opts, &mut cols, &mut data, &mut labels)? {
+        if parse_line(&line, this, line_start, name, opts, &mut cols, &mut data, &mut labels)? {
             rows += 1;
         }
     }
@@ -115,12 +131,16 @@ pub fn parse_csv(reader: impl BufRead, name: &str, opts: &CsvOptions) -> Result<
 /// shards is equivalent to one [`parse_csv`] call on the same input.
 /// The iterator fuses on the first error.
 pub struct CsvChunks<R: BufRead> {
-    lines: std::io::Lines<R>,
+    reader: R,
+    /// Reused line buffer (read_line appends; cleared per line).
+    line: String,
     name: String,
     opts: CsvOptions,
     shard_rows: usize,
     cols: Option<usize>,
     lineno: usize,
+    /// Byte offset of the next unread line's first character.
+    byte: u64,
     done: bool,
 }
 
@@ -128,6 +148,45 @@ impl<R: BufRead> CsvChunks<R> {
     /// Number of feature columns, known after the first emitted shard.
     pub fn cols(&self) -> Option<usize> {
         self.cols
+    }
+
+    /// Byte offset the reader has consumed through (start of the next
+    /// unread line).
+    pub fn byte_offset(&self) -> u64 {
+        self.byte
+    }
+
+    /// Skip `rows` data rows (plus the header and any blank lines, which
+    /// are skipped exactly as the parser skips them) without parsing —
+    /// the checkpoint-resume fast path: a resumed run trusts the rows it
+    /// already reduced and repositions the reader at the first missing
+    /// one. Line and byte counters keep advancing, so errors after the
+    /// seek still report true file positions. Errors when the file ends
+    /// before `rows` data rows were seen (the checkpoint covers more
+    /// rows than the file holds — wrong file, or a shrunken one).
+    pub fn seek_to_row(&mut self, rows: usize) -> Result<()> {
+        let mut remaining = rows;
+        while remaining > 0 {
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line)?;
+            if n == 0 {
+                return Err(Error::Data(format!(
+                    "{}: stream ended at line {} (byte {}) while seeking to data row {rows} — \
+                     the checkpoint covers more rows than the file holds",
+                    self.name, self.lineno, self.byte
+                )));
+            }
+            self.byte += n as u64;
+            let lineno = self.lineno;
+            self.lineno += 1;
+            if lineno == 0 && self.opts.has_header {
+                continue;
+            }
+            if !self.line.trim().is_empty() {
+                remaining -= 1;
+            }
+        }
+        Ok(())
     }
 }
 
@@ -142,22 +201,28 @@ impl<R: BufRead> Iterator for CsvChunks<R> {
         let mut labels: Vec<u32> = Vec::new();
         let mut rows = 0usize;
         while rows < self.shard_rows {
-            let Some(line) = self.lines.next() else { break };
-            let line = match line {
-                Ok(l) => l,
+            self.line.clear();
+            let n = match self.reader.read_line(&mut self.line) {
+                Ok(n) => n,
                 Err(e) => {
                     self.done = true;
                     return Some(Err(e.into()));
                 }
             };
+            if n == 0 {
+                break;
+            }
+            let line_start = self.byte;
+            self.byte += n as u64;
             let lineno = self.lineno;
             self.lineno += 1;
             if lineno == 0 && self.opts.has_header {
                 continue;
             }
             match parse_line(
-                &line,
+                &self.line,
                 lineno,
+                line_start,
                 &self.name,
                 &self.opts,
                 &mut self.cols,
@@ -197,12 +262,14 @@ pub fn csv_chunks<R: BufRead>(
     shard_rows: usize,
 ) -> CsvChunks<R> {
     CsvChunks {
-        lines: reader.lines(),
+        reader,
+        line: String::new(),
         name: name.to_string(),
         opts: opts.clone(),
         shard_rows: shard_rows.max(1),
         cols: None,
         lineno: 0,
+        byte: 0,
         done: false,
     }
 }
@@ -222,6 +289,20 @@ pub fn read_csv_chunks(
         .map(|s| s.to_string_lossy().into_owned())
         .unwrap_or_else(|| "csv".into());
     Ok(csv_chunks(reader, &name, opts, shard_rows))
+}
+
+/// [`read_csv_chunks`] positioned at data row `start_row` (0-based,
+/// header excluded) — what a checkpoint-resumed streaming run uses to
+/// continue from the first row its replayed frames do not cover.
+pub fn read_csv_chunks_from(
+    path: impl AsRef<Path>,
+    opts: &CsvOptions,
+    shard_rows: usize,
+    start_row: usize,
+) -> Result<CsvChunks<std::io::BufReader<std::fs::File>>> {
+    let mut chunks = read_csv_chunks(path, opts, shard_rows)?;
+    chunks.seek_to_row(start_row)?;
+    Ok(chunks)
 }
 
 /// Write a dataset to CSV (features then optional `label` column).
@@ -358,5 +439,56 @@ mod tests {
     fn chunked_empty_input_yields_nothing() {
         let mut it = csv_chunks(Cursor::new("h1,h2\n"), "t", &CsvOptions::default(), 8);
         assert!(it.next().is_none());
+    }
+
+    #[test]
+    fn truncated_final_line_reports_row_and_byte_offset() {
+        // A file torn mid-write: the last row is cut after the
+        // delimiter. The error must carry the 1-based line number AND
+        // the byte offset of the malformed line, so triage can jump
+        // straight to the tear. Line 4 starts at byte 14
+        // ("h1,h2\n" = 6, "1,2\n" = 4, "3,4\n" = 4).
+        let src = "h1,h2\n1,2\n3,4\n5,";
+        let mut it = csv_chunks(Cursor::new(src), "t", &CsvOptions::default(), 100);
+        let err = it.next().unwrap().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(":4:"), "{msg}");
+        assert!(msg.contains("byte 14"), "{msg}");
+        assert!(it.next().is_none(), "iterator must fuse after the error");
+
+        // A row cut *before* the delimiter loses a field instead —
+        // reported as a field-count mismatch at the same position.
+        let src = "h1,h2\n1,2\n3,4\n5";
+        let err = parse_csv(Cursor::new(src), "t", &CsvOptions::default()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(":4:") && msg.contains("byte 14") && msg.contains("truncated"),
+            "{msg}");
+    }
+
+    #[test]
+    fn seek_to_row_matches_full_read_tail() {
+        // seek_to_row(k) + chunked read ≡ the tail of the one-shot read,
+        // for boundary and mid-shard seek points — the resume contract.
+        let ds = crate::data::synth::gaussian_mixture_paper(300, 11);
+        let dir = std::env::temp_dir().join("ihtc_csv_seek_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("seek.csv");
+        write_csv(&ds, &path).unwrap();
+        let opts = CsvOptions { label_column: Some(2), k_hint: 3, ..Default::default() };
+        let whole = read_csv(&path, &opts).unwrap();
+        for start in [0usize, 64, 100, 299, 300] {
+            let mut data: Vec<f32> = Vec::new();
+            let mut labels: Vec<u32> = Vec::new();
+            for item in read_csv_chunks_from(&path, &opts, 64, start).unwrap() {
+                let (m, l) = item.unwrap();
+                data.extend_from_slice(m.data());
+                labels.extend(l.unwrap());
+            }
+            assert_eq!(&data, &whole.points.data()[start * 2..], "start={start}");
+            assert_eq!(&labels, &whole.labels.as_ref().unwrap()[start..], "start={start}");
+        }
+        // Seeking past the end is the explicit wrong-file error.
+        let err = read_csv_chunks_from(&path, &opts, 64, 301).unwrap_err();
+        assert!(err.to_string().contains("more rows than the file holds"), "{err}");
     }
 }

@@ -41,9 +41,7 @@
 //!   count, the steal policy, or scheduling (the byte-parity suites in
 //!   `rust/tests/` pin this down).
 //!
-//! `crate::coordinator::WorkerPool` remains as a thin deprecated shim
-//! over this module so out-of-tree callers keep compiling one more
-//! release. No in-tree code spawns ad-hoc threads anymore: the driver
+//! No in-tree code spawns ad-hoc threads anymore: the driver
 //! paths create one `Executor` per run and share it, while the
 //! workspace-less convenience entry points (`knn_auto`, `itis`,
 //! `Ihtc::run`, `DefaultKnn`) construct a short-lived machine-default

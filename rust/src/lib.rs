@@ -38,6 +38,7 @@
 //! assert!(result.assignments.len() == 10_000);
 //! ```
 
+pub mod checkpoint;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

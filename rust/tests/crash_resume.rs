@@ -1,0 +1,260 @@
+//! Crash/recovery acceptance suite for the checkpointed streaming
+//! ingest: an interrupted-then-resumed run must be byte-identical to an
+//! uninterrupted one — prototypes, weights, level-0 assignments, labels,
+//! and (f64-exact) moments — for crash points at shard boundaries and
+//! mid-shard, across the `reduce_stages × knn_shards` grid, and a torn
+//! or corrupted checkpoint tail must be detected and truncated to the
+//! last valid frame, never silently consumed.
+
+use ihtc::checkpoint::{self, FaultPlan};
+use ihtc::config::{DataSource, PipelineConfig};
+use ihtc::coordinator::driver::{
+    ingest_streaming, ingest_streaming_with_faults, run, StreamedReduction,
+};
+use ihtc::itis::PrototypeKind;
+use ihtc::Error;
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Fresh checkpoint destination under a per-suite temp dir: removes any
+/// stale dest/tmp pair from a previous test-binary invocation so every
+/// run starts from a clean slate.
+fn fresh_ckpt(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("ihtc_crash_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let dest = dir.join(format!("{name}.ckpt"));
+    let _ = std::fs::remove_file(&dest);
+    let _ = std::fs::remove_file(checkpoint::tmp_path(&dest));
+    dest
+}
+
+/// Streaming config over the paper mixture. `ckpt: None` is the
+/// uninterrupted reference (anonymous spill only); `Some` arms the
+/// durable checkpoint with `resume: true`, which is a no-op on the
+/// first run (no file yet) and a replay on every later one.
+fn config(n: usize, stages: usize, knn_shards: usize, ckpt: Option<&PathBuf>) -> PipelineConfig {
+    PipelineConfig {
+        source: DataSource::PaperMixture { n },
+        streaming: true,
+        prototype: PrototypeKind::WeightedCentroid,
+        workers: 4,
+        shard_size: 512,
+        reduce_stages: stages,
+        knn_shards,
+        checkpoint_path: ckpt.map(|p| p.to_string_lossy().into_owned()),
+        resume: ckpt.is_some(),
+        ..Default::default()
+    }
+}
+
+fn assert_identical(got: &StreamedReduction, base: &StreamedReduction, what: &str) {
+    assert_eq!(got.n, base.n, "{what}: n");
+    let gb: Vec<u32> = got.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = base.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, bb, "{what}: prototype bytes");
+    assert_eq!(got.weights, base.weights, "{what}: weights");
+    assert_eq!(
+        got.level0.read_assignments().unwrap(),
+        base.level0.read_assignments().unwrap(),
+        "{what}: level-0 assignments"
+    );
+    assert_eq!(got.labels, base.labels, "{what}: labels");
+    assert_eq!(got.moments.count, base.moments.count, "{what}: moment count");
+    let gs: Vec<u64> = got.moments.sum.iter().map(|v| v.to_bits()).collect();
+    let bs: Vec<u64> = base.moments.sum.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gs, bs, "{what}: moment sums");
+    let gc: Vec<u64> = got.moments.cross.iter().map(|v| v.to_bits()).collect();
+    let bc: Vec<u64> = base.moments.cross.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gc, bc, "{what}: moment cross");
+}
+
+/// Interrupt a run by failing the source at `row`, then resume it.
+/// Returns the resumed reduction. The interruption must surface as the
+/// injected root cause, never a "hung up" symptom.
+fn interrupt_and_resume(cfg: &PipelineConfig, row: usize, what: &str) -> StreamedReduction {
+    let faults = FaultPlan { fail_source_at_row: Some(row), ..FaultPlan::none() };
+    let err = ingest_streaming_with_faults(cfg, &faults).unwrap_err();
+    assert!(err.to_string().contains("fault injection"), "{what}: {err}");
+    ingest_streaming(cfg).unwrap()
+}
+
+#[test]
+fn kill_and_resume_byte_identical_across_grid() {
+    // The acceptance grid: crash at a shard boundary (row 1536 = 3 ×
+    // shard_size) and mid-shard (row 1800), across reduce_stages ×
+    // knn_shards. n = 2600 ends on a partial shard (40 rows) so the
+    // resumed tail also re-creates the short final shard.
+    let n = 2600;
+    let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
+    assert_eq!(base.n, n);
+    for stages in [1usize, 2, 4] {
+        for knn_shards in [1usize, 4] {
+            for crash_row in [1536usize, 1800] {
+                let what = format!("stages={stages} knn={knn_shards} crash={crash_row}");
+                let ckpt = fresh_ckpt(&format!("grid_{stages}_{knn_shards}_{crash_row}"));
+                let cfg = config(n, stages, knn_shards, Some(&ckpt));
+                let resumed = interrupt_and_resume(&cfg, crash_row, &what);
+                assert_identical(&resumed, &base, &what);
+                // The completed run committed the checkpoint into place.
+                assert!(ckpt.exists(), "{what}: no committed checkpoint");
+            }
+        }
+    }
+}
+
+#[test]
+fn reduce_stage_kill_mid_shard_is_resumable() {
+    // Kill a concurrent reduce stage (panic, not a clean Err) while it
+    // holds the shard at offset 1024: join must surface the panic as a
+    // coordinator error, the checkpoint keeps its offset-tiled prefix,
+    // and the resumed run is byte-identical to the uninterrupted one.
+    let n = 2600;
+    let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
+    let ckpt = fresh_ckpt("stage_kill");
+    let cfg = config(n, 2, 1, Some(&ckpt));
+    let faults = FaultPlan { kill_reduce_at_offset: Some(1024), ..FaultPlan::none() };
+    let err = ingest_streaming_with_faults(&cfg, &faults).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("panicked"), "{err}");
+    let resumed = ingest_streaming(&cfg).unwrap();
+    assert_identical(&resumed, &base, "stage kill");
+}
+
+#[test]
+fn sink_write_error_aborts_with_coordinator_error() {
+    // A checkpoint-sink write failure must abort the whole run with
+    // Error::Coordinator as the root cause (not a hang-up symptom), and
+    // the frames written before the failure must still support resume.
+    let n = 2600;
+    let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
+    let ckpt = fresh_ckpt("sink_fail");
+    let cfg = config(n, 2, 1, Some(&ckpt));
+    let faults = FaultPlan { fail_sink_at_frame: Some(2), ..FaultPlan::none() };
+    let err = ingest_streaming_with_faults(&cfg, &faults).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("checkpoint sink"), "{err}");
+    let resumed = ingest_streaming(&cfg).unwrap();
+    assert_identical(&resumed, &base, "sink failure");
+}
+
+#[test]
+fn torn_or_corrupted_tail_truncates_to_last_valid_frame() {
+    // Tamper with the interrupted run's tmp file the way a real crash
+    // would: garbage appended past the last frame, a short (torn) final
+    // frame, and a bit flip inside the final frame's payload. All three
+    // must be detected and truncated to the last CRC-clean frame, and
+    // the resumed run must still be byte-identical.
+    let n = 2600;
+    let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
+    for (tamper, name) in [
+        (0u8, "tail_garbage"),
+        (1u8, "tail_torn"),
+        (2u8, "tail_bitflip"),
+    ] {
+        let ckpt = fresh_ckpt(name);
+        let cfg = config(n, 1, 1, Some(&ckpt));
+        let faults = FaultPlan { fail_source_at_row: Some(1800), ..FaultPlan::none() };
+        ingest_streaming_with_faults(&cfg, &faults).unwrap_err();
+        let tmp = checkpoint::tmp_path(&ckpt);
+        assert!(tmp.exists(), "{name}: interrupted run left no tmp checkpoint");
+        match tamper {
+            0 => {
+                // Garbage past the last frame boundary.
+                let mut f = std::fs::OpenOptions::new().append(true).open(&tmp).unwrap();
+                f.write_all(&[0xAB; 16]).unwrap();
+            }
+            1 => {
+                // Torn final frame: chop bytes off the end.
+                let len = std::fs::metadata(&tmp).unwrap().len();
+                let f = std::fs::OpenOptions::new().write(true).open(&tmp).unwrap();
+                f.set_len(len - 5).unwrap();
+            }
+            _ => {
+                // Bit flip inside the final frame: CRC must catch it.
+                let mut bytes = std::fs::read(&tmp).unwrap();
+                let at = bytes.len() - 10;
+                bytes[at] ^= 0x40;
+                std::fs::write(&tmp, &bytes).unwrap();
+            }
+        }
+        let resumed = ingest_streaming(&cfg).unwrap();
+        assert_identical(&resumed, &base, name);
+    }
+}
+
+#[test]
+fn foreign_file_at_checkpoint_path_is_a_hard_error() {
+    // A file that is not a checkpoint (wrong magic) must never be
+    // truncated or overwritten by resume — that would destroy user data
+    // on a mistyped path.
+    let ckpt = fresh_ckpt("foreign");
+    std::fs::write(checkpoint::tmp_path(&ckpt), b"definitely not a checkpoint file").unwrap();
+    let cfg = config(2600, 1, 1, Some(&ckpt));
+    let err = ingest_streaming(&cfg).unwrap_err();
+    assert!(err.to_string().contains("magic"), "{err}");
+}
+
+#[test]
+fn resume_of_a_completed_run_is_idempotent() {
+    // Resuming a checkpoint that already covers the whole stream must
+    // replay it without touching the source (zero new frames) and
+    // return the same bytes again.
+    let n = 2600;
+    let ckpt = fresh_ckpt("completed");
+    let cfg = config(n, 1, 1, Some(&ckpt));
+    let first = ingest_streaming(&cfg).unwrap();
+    assert!(ckpt.exists());
+    let again = ingest_streaming(&cfg).unwrap();
+    assert_identical(&again, &first, "completed-run resume");
+}
+
+#[test]
+fn full_run_after_interrupted_ingest_matches_uninterrupted() {
+    // End-to-end: interrupt the checkpointed ingest, then drive the
+    // whole pipeline (remaining ITIS iterations, clusterer, back-out)
+    // through `run` with resume — the final per-unit labels must equal
+    // an uninterrupted run's.
+    let n = 2600;
+    let (want, _) = run(&config(n, 1, 1, None)).unwrap();
+    let ckpt = fresh_ckpt("full_run");
+    let cfg = config(n, 2, 1, Some(&ckpt));
+    let faults = FaultPlan { fail_source_at_row: Some(1536), ..FaultPlan::none() };
+    ingest_streaming_with_faults(&cfg, &faults).unwrap_err();
+    let (got, report) = run(&cfg).unwrap();
+    assert_eq!(got, want);
+    assert_eq!(report.n, n);
+    assert_eq!(report.iterations, 2);
+}
+
+#[test]
+fn csv_source_resume_is_byte_identical() {
+    // The CSV arm of the resume contract: seek_to_row must land the
+    // reader exactly where the checkpoint stops, labels included.
+    let n = 2000;
+    let ds = ihtc::data::synth::gaussian_mixture_paper(n, 77);
+    let dir = std::env::temp_dir().join("ihtc_crash_resume");
+    std::fs::create_dir_all(&dir).unwrap();
+    let csv_path = dir.join("resume_source.csv");
+    let mut w = std::io::BufWriter::new(std::fs::File::create(&csv_path).unwrap());
+    writeln!(w, "x,y,label").unwrap();
+    let labels = ds.labels.as_ref().unwrap();
+    for i in 0..n {
+        let row = ds.points.row(i);
+        writeln!(w, "{},{},{}", row[0], row[1], labels[i]).unwrap();
+    }
+    w.flush().unwrap();
+    drop(w);
+    let source = DataSource::Csv {
+        path: csv_path.to_string_lossy().into_owned(),
+        label_column: Some(2),
+    };
+    let mut base_cfg = config(n, 1, 1, None);
+    base_cfg.source = source.clone();
+    let base = ingest_streaming(&base_cfg).unwrap();
+    assert_eq!(base.n, n);
+    let ckpt = fresh_ckpt("csv_resume");
+    let mut cfg = config(n, 2, 1, Some(&ckpt));
+    cfg.source = source;
+    let resumed = interrupt_and_resume(&cfg, 1000, "csv resume");
+    assert_identical(&resumed, &base, "csv resume");
+}

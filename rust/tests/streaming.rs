@@ -159,7 +159,11 @@ fn shuffled_shard_completions_reorder_to_in_order_bytes() {
         let stream = ingest_streaming(&cfg).unwrap();
         assert_eq!(stream.prototypes.data(), &want_data[..], "reduce_stages={r}");
         assert_eq!(stream.weights, want_weights, "reduce_stages={r}");
-        assert_eq!(stream.assignments, want_assignments, "reduce_stages={r}");
+        assert_eq!(
+            stream.level0.read_assignments().unwrap(),
+            want_assignments,
+            "reduce_stages={r}"
+        );
     }
 }
 

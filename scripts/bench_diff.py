@@ -11,7 +11,9 @@ bytes regressed by more than --threshold percent.
 Usage:
     scripts/bench_diff.py --current rust --baseline bench_baseline
     scripts/bench_diff.py --current out --baseline base --threshold 5
-    scripts/bench_diff.py ... --warn-only     # report, always exit 0
+    scripts/bench_diff.py ... --warn-only     # time regressions never fail
+    scripts/bench_diff.py ... --fail-on-regression  # peak-bytes regressions
+                                              # fail even under --warn-only
     scripts/bench_diff.py ... --seed-if-empty # copy current → empty baseline
 
 Besides the per-benchmark diff, the report includes scaling sections
@@ -25,8 +27,12 @@ toolchain: when the baseline directory is missing or holds no
 BENCH_*.json, the current run's files are copied into it (commit them to
 seed the baseline — see bench_baseline/README.md).
 
-Exit status: 0 when no regressions (or --warn-only), 1 when at least
-one metric regressed past the threshold, 2 on usage errors.
+Exit status: 0 when no regressions, 1 when at least one metric regressed
+past the threshold, 2 on usage errors. `--warn-only` downgrades *time*
+regressions to warnings (CI runner timing noise exceeds any sane
+threshold); `--fail-on-regression` keeps *peak-bytes* regressions fatal
+regardless — allocation counts are deterministic, so a peak regression
+on a noisy runner is a real one.
 """
 
 import argparse
@@ -168,7 +174,11 @@ def main():
     ap.add_argument("--threshold", type=float, default=10.0,
                     help="regression threshold in percent (default: 10)")
     ap.add_argument("--warn-only", action="store_true",
-                    help="report regressions but exit 0 (noisy CI runners)")
+                    help="report time regressions but do not fail on them "
+                         "(noisy CI runners)")
+    ap.add_argument("--fail-on-regression", action="store_true",
+                    help="exit 1 on peak-bytes regressions even under "
+                         "--warn-only (allocation counts are deterministic)")
     ap.add_argument("--seed-if-empty", action="store_true",
                     help="when the baseline directory is missing/empty, copy the "
                          "current BENCH_*.json there to start the trajectory")
@@ -223,6 +233,11 @@ def main():
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
           f"{improvements} improvement(s), {len(missing)} missing, "
           f"{slower} scaled config(s) slower than their r1/s1 baseline")
+    peak_regressions = [r for r in regressions if r[1] == "peak"]
+    if args.fail_on_regression and peak_regressions:
+        print(f"failing: {len(peak_regressions)} peak-bytes regression(s) "
+              f"(deterministic metric — not runner noise)", file=sys.stderr)
+        return 1
     if regressions and not args.warn_only:
         return 1
     return 0
