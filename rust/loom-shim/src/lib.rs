@@ -1,0 +1,42 @@
+//! std-backed shim for the subset of the [loom](https://docs.rs/loom)
+//! API that `ihtc`'s `sync` facade and loom scenarios use.
+//!
+//! See Cargo.toml for why this exists (offline dependency resolution).
+//! The re-exports are deliberately *just* re-exports: when CI swaps the
+//! real loom in, any API drift fails the build loudly instead of
+//! silently testing against different semantics.
+
+/// Run a model scenario. The real loom explores every interleaving the
+/// preemption bound allows; the shim runs the body once on real
+/// threads — a smoke execution that keeps the scenarios runnable (and
+/// compiling) offline.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    f();
+}
+
+/// `loom::sync` — std re-exports.
+pub mod sync {
+    pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+    /// `loom::sync::atomic` — std re-exports.
+    pub mod atomic {
+        pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+    }
+}
+
+/// `loom::thread` — std re-exports.
+pub mod thread {
+    pub use std::thread::JoinHandle;
+
+    /// Plain spawn (the real loom registers the thread with the model).
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        std::thread::spawn(f)
+    }
+}

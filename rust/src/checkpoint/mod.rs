@@ -39,6 +39,11 @@ use crate::{Error, Result};
 use std::fs::{self, File, OpenOptions};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+// Raw std atomic, not the `crate::sync` facade: a file-scope static
+// needs const construction, which loom's doubles do not offer — and the
+// spill-sequence counter is process-global bookkeeping, not part of the
+// modeled executor protocol.
+// det-lint: allow(raw-atomic)
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// File magic: "IHTC checkpoint, format 1".
@@ -745,6 +750,71 @@ mod tests {
         // The classic IEEE-802.3 check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    // The `miri_frame_codec_*` tests below are pure in-memory (no
+    // filesystem, no threads): they are the checkpoint slice of the CI
+    // Miri lane, where the codec's slice indexing and byte-level
+    // reinterpretation run under the interpreter's UB checks.
+
+    #[test]
+    fn miri_frame_codec_roundtrip_is_exact() {
+        for (shard, mo) in fixture_shards() {
+            let payload = encode_frame(&shard, &mo);
+            let frame = decode_frame(&payload, 2).unwrap();
+            assert_eq!(frame.offset, shard.offset);
+            assert_eq!(frame.prototypes, shard.prototypes.data());
+            assert_eq!(frame.weights, shard.weights);
+            assert_eq!(frame.assignments, shard.assignments);
+            assert_eq!(frame.labels, shard.labels);
+            assert_eq!(frame.moments.count, mo.count);
+            assert_eq!(frame.moments.sum, mo.sum);
+            assert_eq!(frame.moments.cross, mo.cross);
+        }
+        // Label-less shards take the shorter layout and round-trip too.
+        let (mut shard, mo) = fixture_shards().remove(0);
+        shard.labels = None;
+        let frame = decode_frame(&encode_frame(&shard, &mo), 2).unwrap();
+        assert!(frame.labels.is_none());
+        assert_eq!(frame.assignments, shard.assignments);
+    }
+
+    #[test]
+    fn miri_frame_codec_rejects_every_truncation() {
+        // decode_frame pre-validates the total length, so `Cursor::take`
+        // can never slice out of bounds: chopping the payload at *any*
+        // byte must yield Err, never a panic or an out-of-bounds read
+        // (under Miri the latter would be caught as UB, not just a test
+        // failure).
+        let (shard, mo) = fixture_shards().remove(0);
+        let payload = encode_frame(&shard, &mo);
+        for cut in 0..payload.len() {
+            assert!(
+                decode_frame(&payload[..cut], 2).is_err(),
+                "truncation to {cut}/{} bytes must be rejected",
+                payload.len()
+            );
+        }
+        // Extra trailing bytes are a shape mismatch, not extra frames.
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(decode_frame(&padded, 2).is_err());
+    }
+
+    #[test]
+    fn miri_frame_codec_rejects_shape_lies() {
+        // A CRC-valid payload whose declared shape disagrees with its
+        // length is version skew / writer bug — hard error either way
+        // the disagreement points.
+        let (shard, mo) = fixture_shards().remove(0);
+        let payload = encode_frame(&shard, &mo);
+        // Inflate the declared row count (bytes 8..12, little-endian).
+        let mut lied = payload.clone();
+        lied[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_frame(&lied, 2).is_err());
+        // Decode under the wrong dimensionality.
+        assert!(decode_frame(&payload, 3).is_err());
+        assert!(decode_frame(&payload, 0).is_err());
     }
 
     #[test]

@@ -105,14 +105,19 @@ impl Dendrogram {
             parent[rb as usize] = node;
             components -= 1;
         }
-        // Relabel roots to compact 0..k.
+        // Relabel roots to compact 0..k, first-seen order (leaf-index
+        // order, so labels are deterministic). Roots are merge-tree node
+        // ids < 2n − 1 — a flat table beats hashing.
         let mut labels = vec![0u32; n];
-        let mut remap = std::collections::HashMap::new();
+        let mut remap = vec![u32::MAX; 2 * n - 1];
+        let mut next = 0u32;
         for i in 0..n {
-            let root = find(&mut parent, i as u32);
-            let next = remap.len() as u32;
-            let id = *remap.entry(root).or_insert(next);
-            labels[i] = id;
+            let root = find(&mut parent, i as u32) as usize;
+            if remap[root] == u32::MAX {
+                remap[root] = next;
+                next += 1;
+            }
+            labels[i] = remap[root];
         }
         Ok(labels)
     }

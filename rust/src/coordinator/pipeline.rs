@@ -8,10 +8,13 @@
 //! the pipeline is actually bottlenecked.
 
 use crate::linalg::Matrix;
+use crate::sync::{thread, Arc, Mutex};
 use crate::{Error, Result};
 use std::collections::BTreeMap;
+// Channels stay on std: loom has no mpsc double, and the pipeline is
+// only *compiled* under `--cfg loom` (the loom scenarios model the
+// executor, which the stages submit into), never executed there.
 use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// A contiguous block of dataset rows flowing through the ingest
@@ -235,7 +238,7 @@ impl<T> ReorderBuffer<T> {
 pub struct Pipeline<T> {
     /// Receiver of the final stage's output.
     pub output: Receiver<T>,
-    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    handles: Vec<thread::JoinHandle<Result<()>>>,
     metrics: MetricsHandle,
 }
 
@@ -288,7 +291,7 @@ pub struct PipelineBuilder<T: Send + 'static> {
     capacity: usize,
     metrics: MetricsHandle,
     head: Receiver<T>,
-    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+    handles: Vec<thread::JoinHandle<Result<()>>>,
 }
 
 impl<T: Send + 'static> PipelineBuilder<T> {
@@ -303,7 +306,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         let (tx, rx) = std::sync::mpsc::sync_channel::<T>(capacity.max(1));
         let m = metrics.clone();
         let name = name.to_string();
-        let handle = std::thread::spawn(move || {
+        let handle = thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let t0 = Instant::now();
             let mut blocked = Duration::ZERO;
@@ -351,7 +354,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         let name = name.to_string();
         let upstream = self.head;
         let mut handles = self.handles;
-        handles.push(std::thread::spawn(move || {
+        handles.push(thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut blocked = Duration::ZERO;
             let mut state = init();
@@ -424,7 +427,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
             let out_tx = out_tx.clone();
             let init = init.clone();
             let f = f.clone();
-            handles.push(std::thread::spawn(move || {
+            handles.push(thread::spawn_named(format!("ihtc-stage-{worker_name}"), move || {
                 let mut stats = StageMetrics { name: worker_name, ..Default::default() };
                 let mut blocked = Duration::ZERO;
                 let mut state = (*init)();
@@ -457,7 +460,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         let upstream = self.head;
         let m = metrics.clone();
         let dist_name = format!("{name}/rr");
-        handles.push(std::thread::spawn(move || {
+        handles.push(thread::spawn_named(format!("ihtc-stage-{dist_name}"), move || {
             let mut stats = StageMetrics { name: dist_name, ..Default::default() };
             let mut busy = Duration::ZERO;
             let mut blocked = Duration::ZERO;
@@ -517,7 +520,7 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         let name = name.to_string();
         let upstream = self.head;
         let mut handles = self.handles;
-        handles.push(std::thread::spawn(move || {
+        handles.push(thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut busy = Duration::ZERO;
             let mut blocked = Duration::ZERO;

@@ -1,0 +1,210 @@
+//! Loom model checking of the executor's unsafe concurrency core.
+//!
+//! Compiled only under `RUSTFLAGS="--cfg loom"` (run with
+//! `cargo test --release --lib loom_`). Offline, the `loom` name
+//! resolves to the std-backed shim in `rust/loom-shim` and every
+//! scenario body executes once on real threads — a smoke pass. In CI's
+//! `loom` job the real model checker is swapped in and each
+//! `loom::model` call exhaustively explores thread interleavings up to
+//! the `LOOM_MAX_PREEMPTIONS` bound, including every Relaxed-atomic
+//! weak-memory outcome — this is what licenses the `Ordering::Relaxed`
+//! arguments written on `Batch::claim`, `Batch::abort_rest`, and the
+//! `failed` flag in `run_erased`.
+//!
+//! Scenario map (each name is referenced from the ordering-audit
+//! comments in `exec/mod.rs`):
+//!
+//! * `loom_claim_is_exclusive_and_complete` — the claim/execute race:
+//!   two claimers, every index executed exactly once.
+//! * `loom_abort_rest_accounts_every_index_once` — a failing task's
+//!   bulk-claim racing a live claimer: `remaining` reaches 0 exactly
+//!   (no deadlock, no double-count), nothing executes twice.
+//! * `loom_wait_notify_no_lost_wakeup` — the submitter's
+//!   wait/notify_all handshake.
+//! * `loom_run_tasks_publishes_results` — the full `run_tasks` path:
+//!   lazy spawn, queue hand-off, result publication, drop/shutdown.
+//! * `loom_concurrent_submitters_one_team` — two submitters sharing
+//!   one background worker.
+//! * `loom_lazy_spawn_races_once` — racing `ensure_spawned` calls
+//!   bring up exactly one team.
+//! * `loom_shutdown_wakeup_not_lost` — drop racing a worker that may
+//!   sit anywhere between its shutdown check and its condvar wait.
+
+use super::*;
+
+/// Shared context for the raw-`Batch` scenarios: per-index execution
+/// counters plus an optional index whose execution reports failure
+/// (driving `abort_rest`).
+struct CountCtx {
+    executed: Vec<AtomicUsize>,
+    abort_at: Option<usize>,
+}
+
+/// Counting trampoline with the same shape as `run_erased`.
+///
+/// # Safety
+/// `p` must point to a live `CountCtx` whose `executed` has at least
+/// `i + 1` slots, and `i` must come from `Batch::claim`.
+unsafe fn run_counting(p: *const (), i: usize) -> bool {
+    // SAFETY: forwarded from the caller's contract; the scenario keeps
+    // the `CountCtx` alive on the submitting thread's stack until
+    // `Batch::wait` has observed `remaining == 0`.
+    let ctx = unsafe { &*(p as *const CountCtx) };
+    ctx.executed[i].fetch_add(1, Ordering::Relaxed);
+    ctx.abort_at == Some(i)
+}
+
+/// Build a raw batch over `ctx` with `n` tasks — the exact layout
+/// `run_tasks` erects on its stack frame.
+fn counting_batch(ctx: &CountCtx, n: usize) -> Arc<Batch> {
+    Arc::new(Batch {
+        n,
+        cursor: AtomicUsize::new(0),
+        remaining: AtomicUsize::new(n),
+        run: run_counting,
+        ctx: (ctx as *const CountCtx).cast(),
+        done: Mutex::new(()),
+        done_cv: Condvar::new(),
+    })
+}
+
+/// Claim-and-execute until the batch is exhausted (a worker's inner
+/// loop without the queue around it).
+fn drain(batch: &Batch) {
+    while let Some(i) = batch.claim() {
+        // SAFETY: `i` was just claimed from `batch`, and the batch's
+        // `CountCtx` outlives the submitter's `wait()` below.
+        unsafe { batch.execute(i) };
+    }
+}
+
+#[test]
+fn loom_claim_is_exclusive_and_complete() {
+    loom::model(|| {
+        let ctx = CountCtx {
+            executed: (0..2).map(|_| AtomicUsize::new(0)).collect(),
+            abort_at: None,
+        };
+        let batch = counting_batch(&ctx, 2);
+        let worker = {
+            let batch = Arc::clone(&batch);
+            thread::spawn_named("model-worker".into(), move || drain(&batch))
+        };
+        drain(&batch);
+        batch.wait();
+        worker.join().unwrap();
+        for (i, slot) in ctx.executed.iter().enumerate() {
+            assert_eq!(slot.load(Ordering::Relaxed), 1, "index {i} must run exactly once");
+        }
+        assert_eq!(batch.remaining.load(Ordering::Relaxed), 0);
+    });
+}
+
+#[test]
+fn loom_abort_rest_accounts_every_index_once() {
+    loom::model(|| {
+        let ctx = CountCtx {
+            executed: (0..3).map(|_| AtomicUsize::new(0)).collect(),
+            abort_at: Some(0),
+        };
+        let batch = counting_batch(&ctx, 3);
+        let worker = {
+            let batch = Arc::clone(&batch);
+            thread::spawn_named("model-worker".into(), move || drain(&batch))
+        };
+        drain(&batch);
+        // The exactly-once accounting property IS `wait` returning: a
+        // missed decrement deadlocks here, a double decrement underflows
+        // `remaining` (usize wrap keeps it nonzero) and also deadlocks.
+        batch.wait();
+        worker.join().unwrap();
+        assert_eq!(batch.remaining.load(Ordering::Relaxed), 0);
+        assert!(batch.cursor.load(Ordering::Relaxed) >= 3, "abort must exhaust the cursor");
+        for (i, slot) in ctx.executed.iter().enumerate() {
+            assert!(slot.load(Ordering::Relaxed) <= 1, "index {i} ran twice");
+        }
+        // Whoever claimed index 0 executed it (both drains run to
+        // exhaustion), so the aborting task itself always runs.
+        assert_eq!(ctx.executed[0].load(Ordering::Relaxed), 1);
+    });
+}
+
+#[test]
+fn loom_wait_notify_no_lost_wakeup() {
+    loom::model(|| {
+        let ctx = CountCtx {
+            executed: vec![AtomicUsize::new(0)],
+            abort_at: None,
+        };
+        let batch = counting_batch(&ctx, 1);
+        let worker = {
+            let batch = Arc::clone(&batch);
+            thread::spawn_named("model-worker".into(), move || drain(&batch))
+        };
+        // The worker may decrement-and-notify before, during, or after
+        // this wait's predicate check; the lock-before-notify protocol
+        // must never strand the submitter.
+        batch.wait();
+        worker.join().unwrap();
+        assert_eq!(ctx.executed[0].load(Ordering::Relaxed), 1);
+    });
+}
+
+#[test]
+fn loom_run_tasks_publishes_results() {
+    loom::model(|| {
+        let exec = Executor::new(2);
+        let out = exec.run_tasks(vec![10usize, 20], |t| Ok(t * 2)).unwrap();
+        assert_eq!(out, vec![20, 40]);
+        // Drop is part of the model: the lazily-spawned worker must
+        // observe shutdown and join from wherever the scheduler left it.
+        drop(exec);
+    });
+}
+
+#[test]
+fn loom_concurrent_submitters_one_team() {
+    loom::model(|| {
+        let exec = Arc::new(Executor::new(2));
+        let other = {
+            let exec = Arc::clone(&exec);
+            thread::spawn_named("model-submitter".into(), move || {
+                exec.run_tasks(vec![1usize, 2], |t| Ok(t + 100)).unwrap()
+            })
+        };
+        let mine = exec.run_tasks(vec![3usize, 4], |t| Ok(t + 200)).unwrap();
+        assert_eq!(mine, vec![203, 204]);
+        assert_eq!(other.join().unwrap(), vec![101, 102]);
+    });
+}
+
+#[test]
+fn loom_lazy_spawn_races_once() {
+    loom::model(|| {
+        let exec = Arc::new(Executor::new(2));
+        let racer = {
+            let exec = Arc::clone(&exec);
+            thread::spawn_named("model-racer".into(), move || exec.ensure_spawned())
+        };
+        exec.ensure_spawned();
+        racer.join().unwrap();
+        assert_eq!(
+            exec.handles.lock().unwrap().len(),
+            1,
+            "budget 2 ⇒ exactly one background worker, however the race lands"
+        );
+        assert!(exec.spawned.load(Ordering::Relaxed));
+    });
+}
+
+#[test]
+fn loom_shutdown_wakeup_not_lost() {
+    loom::model(|| {
+        let exec = Executor::new(2);
+        exec.ensure_spawned();
+        // Drop races the worker through every point of its loop —
+        // including the window between its shutdown check and its
+        // condvar wait. Model completion == no stranded worker.
+        drop(exec);
+    });
+}

@@ -51,20 +51,21 @@
 //! pools' cost) when a parallel section engages; pass an executor
 //! explicitly to amortize the team across calls.
 
+use crate::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use crate::sync::thread::JoinHandle;
+use crate::sync::{thread, Arc, Condvar, Mutex};
 use crate::{Error, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
-use std::thread::JoinHandle;
+
+#[cfg(all(loom, test))]
+mod loom_tests;
 
 /// Resolve a worker-count setting (0 = available parallelism − 1, min 1).
 pub fn resolve_workers(requested: usize) -> usize {
     if requested > 0 {
         return requested;
     }
-    std::thread::available_parallelism()
-        .map(|p| p.get().saturating_sub(1).max(1))
-        .unwrap_or(1)
+    thread::available_parallelism().saturating_sub(1).max(1)
 }
 
 /// Which queued batch an idle worker serves first when several runs'
@@ -120,6 +121,8 @@ struct Batch {
     remaining: AtomicUsize,
     /// Monomorphized trampoline executing task `i` against `ctx`;
     /// returns true when the task failed and the batch should abort.
+    // SAFETY contract of the fn pointer: callers must pass this batch's
+    // own `ctx` and an index claimed from `cursor` — see `run_erased`.
     run: unsafe fn(*const (), usize) -> bool,
     /// Borrowed batch state (slots, results, closure) on the submitter's
     /// stack. Only dereferenced for successfully claimed indices.
@@ -137,6 +140,19 @@ unsafe impl Sync for Batch {}
 
 impl Batch {
     /// Claim the next unexecuted task index, if any.
+    ///
+    /// Ordering audit (loom: `claim_is_exclusive_and_complete`,
+    /// `abort_rest_accounts_every_index_once`): both cursor operations
+    /// are deliberately `Relaxed`. Index *uniqueness* needs no ordering
+    /// at all — `fetch_add` is a read-modify-write, and RMWs on one
+    /// atomic always observe the latest value in its modification
+    /// order, so two claimers can never receive the same index. Task
+    /// *data* visibility is not the cursor's job either: workers reach
+    /// the batch through the queue mutex (which synchronizes the
+    /// submitter's writes), and result publication rides the
+    /// `remaining` Release/Acquire pair plus the slot mutexes. The
+    /// pre-check is a pure optimization — a stale read only costs one
+    /// extra `fetch_add` past `n`, which the `i < n` guard absorbs.
     fn claim(&self) -> Option<usize> {
         // Pre-check keeps the cursor from racing far past `n` while a
         // batch lingers in the queue.
@@ -173,6 +189,10 @@ impl Batch {
             // adapted to the remaining-counter completion protocol).
             self.abort_rest();
         }
+        // Release pairs with the Acquire load in `wait`: everything this
+        // task wrote (its result slot, its `&mut` output window)
+        // happens-before the submitter observing `remaining == 0` — the
+        // submitter may deallocate the `ctx` frame right after.
         if self.remaining.fetch_sub(1, Ordering::Release) == 1 {
             // Take the lock so a submitter between its predicate check
             // and `wait` cannot miss this wakeup.
@@ -185,6 +205,16 @@ impl Batch {
     /// `remaining`. Indices already claimed by racing workers are NOT
     /// covered here — their claimers decrement for them — so every
     /// index is counted exactly once whichever way the race goes.
+    ///
+    /// Ordering audit (loom: `abort_rest_accounts_every_index_once`):
+    /// the `swap` is `Relaxed` for the same reason `claim`'s `fetch_add`
+    /// is — it is an RMW on the cursor's modification order, so it
+    /// partitions indices exactly: everything below `prev` was (or will
+    /// be) claimed by racing `fetch_add`s, everything in `prev..n` is
+    /// accounted here and can never be claimed afterwards. The
+    /// `fetch_sub` on `remaining` is `Release` so that a bulk decrement
+    /// that happens to be the *last* one still orders this thread's
+    /// prior task writes before the submitter's Acquire observation.
     fn abort_rest(&self) {
         let prev = self.cursor.swap(self.n, Ordering::Relaxed);
         let skipped = self.n.saturating_sub(prev);
@@ -195,6 +225,14 @@ impl Batch {
     }
 
     /// Block until every task has finished executing.
+    ///
+    /// No lost wakeup (loom: `wait_notify_no_lost_wakeup`): the
+    /// predicate is checked while holding `done`, and notifiers take
+    /// `done` *before* `notify_all` — so a notifier can never fire in
+    /// the window between this thread's predicate check and its `wait`
+    /// (which releases the lock atomically). The `Acquire` load pairs
+    /// with the `Release` `fetch_sub`s in `execute`/`abort_rest`; see
+    /// the comment there for why that edge is load-bearing.
     fn wait(&self) {
         let mut guard = self.done.lock().unwrap();
         while self.remaining.load(Ordering::Acquire) > 0 {
@@ -281,6 +319,13 @@ unsafe fn run_erased<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
     let ctx = unsafe { &*(p as *const BatchCtx<'_, T, R, F>) };
     let task = ctx.slots[i].lock().unwrap().take();
     let Some(task) = task else { return false };
+    // Ordering audit (loom: `run_tasks_publishes_results`): `failed` is
+    // Relaxed on both sides because it is advisory-only — a stale
+    // `false` merely executes one more task whose result is then
+    // discarded by the collector's first-error scan, and a stale `true`
+    // cannot occur before some task actually failed (the store is
+    // program-ordered after the failing result is recorded under its
+    // slot mutex). No correctness property reads through this flag.
     if ctx.failed.load(Ordering::Relaxed) {
         // A sibling already failed: drop the task unexecuted (its result
         // stays `None`; the collector reports the recorded error).
@@ -363,13 +408,13 @@ impl Executor {
         }
         for i in 0..self.budget - 1 {
             let s = Arc::clone(shared);
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("ihtc-exec-{i}"))
-                    .spawn(move || worker_loop(&s))
-                    .expect("spawn executor worker"),
-            );
+            handles.push(thread::spawn_named(format!("ihtc-exec-{i}"), move || worker_loop(&s)));
         }
+        // Release/Acquire on `spawned` (loom: `lazy_spawn_races_once`):
+        // a fast-path reader that sees `true` skips the handles lock, so
+        // the flag itself must publish "the team is up"; the double
+        // check under the lock needs only Relaxed — the lock already
+        // synchronizes with the spawning critical section.
         self.spawned.store(true, Ordering::Release);
     }
 
@@ -446,11 +491,14 @@ impl Executor {
         batch.wait();
         drop(batch);
         // Collect in submission order; first error wins (matching the
-        // retired `WorkerPool::run_tasks` contract).
+        // retired `WorkerPool::run_tasks` contract). Slots are drained
+        // through `lock()` rather than `into_inner()` — the facade's
+        // loom double does not expose consuming accessors, and after
+        // `wait()` every lock is uncontended anyway.
         let mut out = Vec::with_capacity(n);
         let mut first_err = None;
-        for slot in results {
-            match slot.into_inner().unwrap() {
+        for slot in &results {
+            match slot.lock().unwrap().take() {
                 Some(Ok(v)) => out.push(v),
                 Some(Err(e)) => {
                     if first_err.is_none() {
@@ -495,13 +543,21 @@ impl Drop for Executor {
         if let Some(shared) = &self.shared {
             {
                 // Flip the flag under the queue lock so a worker between
-                // its shutdown check and `wait` cannot miss the wakeup.
+                // its shutdown check and `wait` cannot miss the wakeup
+                // (loom: `shutdown_wakeup_not_lost`). Relaxed suffices:
+                // both the store and every worker's load happen inside
+                // the queue-lock critical section, which synchronizes.
                 let _guard = shared.queue.lock().unwrap();
                 shared.shutdown.store(true, Ordering::Relaxed);
             }
             shared.available.notify_all();
         }
-        for handle in self.handles.get_mut().unwrap().drain(..) {
+        // Drain under the lock, join outside it (`get_mut` is absent
+        // from the facade's loom double; nothing else can hold this
+        // lock during drop anyway).
+        let handles: Vec<JoinHandle<()>> =
+            self.handles.lock().unwrap().drain(..).collect();
+        for handle in handles {
             let _ = handle.join();
         }
     }
@@ -616,6 +672,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 4 submitters × 20 rounds — minutes under Miri; loom models the same shape
     fn concurrent_submitters_share_one_team() {
         // Four submitter threads, one 3-thread executor: every batch
         // completes with results in submission order, whatever the
@@ -639,6 +696,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 64 × 200k-iteration tasks — far too slow under Miri
     fn skewed_batches_self_balance() {
         // Steal-heavy smoke: one submitter's batch is 100× more
         // expensive per task; both finish correctly while sharing the
@@ -663,6 +721,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 4 configs × 200 tasks × 3 threads — slow under Miri, covered natively
     fn policies_do_not_change_results() {
         // Steal policy and fairness are scheduling-only: results are
         // keyed by submission index, so every combination is identical.

@@ -760,4 +760,35 @@ mod tests {
         let res = t.knn_query(&one, &[0.0, 0.0], 1, u32::MAX);
         assert_eq!(res.len(), 1);
     }
+
+    #[test]
+    fn miri_arena_reuse_smoke() {
+        // The kd-tree slice of the CI Miri lane (the name matches the
+        // job's test filter): a deliberately tiny input — Miri runs at
+        // ~100× native cost — driving the arena paths the forest leans
+        // on: fresh build, in-place rebuild over an offset range with
+        // reused (and stale-capacity) arenas, and a query through the
+        // spliced node/bbox layout. Executor parallelism is covered by
+        // the exec tests; below the parallel-build cutoff this stays on
+        // the serial arena code by design.
+        let data: Vec<f32> = (0..40u32)
+            .flat_map(|i| [(i % 7) as f32, (i / 7) as f32 * 1.5])
+            .collect();
+        let m = Matrix::from_vec(data, 40, 2).unwrap();
+        let fresh = KdTree::build_with_leaf_size(&m, 3);
+        let mut reused = KdTree::default();
+        reused.rebuild_range(&m, 0, 40, 3);
+        assert_eq!(reused.perm, fresh.perm);
+        assert_eq!(
+            fresh.knn_all(&m, 3).unwrap().indices,
+            reused.knn_all(&m, 3).unwrap().indices
+        );
+        // Rebuild over a sub-range: capacities only grow, leaves keep
+        // global row ids, no stale nodes leak into queries.
+        reused.rebuild_range(&m, 10, 30, 3);
+        assert_eq!(reused.len(), 20);
+        let res = reused.knn_query(&m, m.row(0), 4, u32::MAX);
+        assert_eq!(res.len(), 4);
+        assert!(res.iter().all(|&(_, j)| (10u32..30).contains(&j)));
+    }
 }

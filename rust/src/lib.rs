@@ -37,6 +37,23 @@
 //!     .unwrap();
 //! assert!(result.assignments.len() == 10_000);
 //! ```
+//!
+//! ## Verification lanes
+//!
+//! The determinism contract ("same config ⇒ same bytes", any worker
+//! count, any steal policy) rests on hand-written atomics in [`exec`].
+//! Those are machine-checked, not just test-passed: [`sync`] is a
+//! facade that swaps `std` primitives for loom's model-checked doubles
+//! under `--cfg loom`, nightly CI runs Miri and ThreadSanitizer over
+//! the unsafe core, and an in-tree lint (`rust/xtask`) rejects unsafe
+//! blocks without SAFETY comments and nondeterministic collection
+//! iteration in output-affecting modules. See README §Verification
+//! lanes for how to run each lane locally.
+
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with its own SAFETY argument — the fn-level
+// contract never silently licenses the body's dereferences.
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod checkpoint;
 pub mod cluster;
@@ -54,6 +71,7 @@ pub mod report;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod sync;
 pub mod tc;
 
 /// Crate-wide error type.

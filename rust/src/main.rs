@@ -26,12 +26,15 @@ static ALLOC: ihtc::memtrack::CountingAllocator = ihtc::memtrack::CountingAlloca
 struct Args {
     #[allow(dead_code)]
     positional: Vec<String>,
+    // Keyed `get` lookups only, never iterated — hash order can't leak.
+    // det-lint: allow(hash-iter)
     flags: std::collections::HashMap<String, String>,
 }
 
 impl Args {
     fn parse(argv: impl Iterator<Item = String>) -> Args {
         let mut positional = Vec::new();
+        // det-lint: allow(hash-iter) — same map as the field above.
         let mut flags = std::collections::HashMap::new();
         let mut argv = argv.peekable();
         while let Some(arg) = argv.next() {

@@ -15,6 +15,11 @@
 //! each phase with [`reset_peak`] / [`peak_bytes`].
 
 use std::alloc::{GlobalAlloc, Layout, System};
+// Raw std atomics, not the `crate::sync` facade: a `#[global_allocator]`
+// static needs const construction and runs before (and underneath)
+// everything else, so it can never be a loom double — loom cannot model
+// the allocator its own runtime allocates through.
+// det-lint: allow(raw-atomic)
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 static LIVE: AtomicUsize = AtomicUsize::new(0);
@@ -23,9 +28,15 @@ static PEAK: AtomicUsize = AtomicUsize::new(0);
 /// Counting wrapper around the system allocator.
 pub struct CountingAllocator;
 
+// SAFETY: every method delegates the actual allocation verbatim to
+// `System` (which upholds the `GlobalAlloc` contract) and only adds
+// counter arithmetic on the side — layouts, pointers, and sizes pass
+// through untouched, so the wrapper inherits `System`'s guarantees.
 unsafe impl GlobalAlloc for CountingAllocator {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
-        let p = System.alloc(layout);
+        // SAFETY: `layout` is forwarded unchanged from our own caller,
+        // who promises it is non-zero-sized per the trait contract.
+        let p = unsafe { System.alloc(layout) };
         if !p.is_null() {
             let live = LIVE.fetch_add(layout.size(), Ordering::Relaxed) + layout.size();
             PEAK.fetch_max(live, Ordering::Relaxed);
@@ -34,12 +45,18 @@ unsafe impl GlobalAlloc for CountingAllocator {
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
-        System.dealloc(ptr, layout);
+        // SAFETY: `ptr`/`layout` are forwarded unchanged; the caller
+        // promises `ptr` came from this allocator with this layout, and
+        // our `alloc`/`realloc` return `System`'s pointers untouched.
+        unsafe { System.dealloc(ptr, layout) };
         LIVE.fetch_sub(layout.size(), Ordering::Relaxed);
     }
 
     unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
-        let p = System.realloc(ptr, layout, new_size);
+        // SAFETY: forwarded unchanged under the caller's contract
+        // (`ptr` from this allocator, `layout` its current layout,
+        // `new_size` non-zero).
+        let p = unsafe { System.realloc(ptr, layout, new_size) };
         if !p.is_null() {
             if new_size >= layout.size() {
                 let live =

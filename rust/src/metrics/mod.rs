@@ -20,6 +20,9 @@ use crate::{Error, Result};
 /// [`crate::cluster::NOISE`]) to dense `0..k` ids, preserving first-seen
 /// order. Returns `(compact_labels, k)`.
 pub fn compact_labels(assign: &[u32]) -> (Vec<u32>, usize) {
+    // Keyed entry-lookup only, never iterated: ids are assigned in
+    // first-seen input order, so the output cannot depend on hash order.
+    // det-lint: allow(hash-iter)
     let mut remap = std::collections::HashMap::new();
     let mut out = Vec::with_capacity(assign.len());
     for &a in assign {
@@ -32,7 +35,7 @@ pub fn compact_labels(assign: &[u32]) -> (Vec<u32>, usize) {
 
 /// Count distinct clusters in an assignment vector.
 pub fn num_clusters(assign: &[u32]) -> usize {
-    assign.iter().collect::<std::collections::HashSet<_>>().len()
+    compact_labels(assign).1
 }
 
 /// Sizes of each cluster (after label compaction; order = first seen).

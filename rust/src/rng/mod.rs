@@ -139,6 +139,10 @@ impl Xoshiro256 {
     /// Sample `k` distinct indices from `0..n` (Floyd's algorithm).
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "cannot sample {k} from {n}");
+        // Membership probes only, never iterated: the output order comes
+        // from Floyd's loop over j, so hash order cannot leak into it. A
+        // bool table over 0..n would defeat the point of sampling k ≪ n.
+        // det-lint: allow(hash-iter)
         let mut chosen = std::collections::HashSet::with_capacity(k);
         let mut out = Vec::with_capacity(k);
         for j in (n - k)..n {

@@ -1,0 +1,111 @@
+//! The concurrency facade: every synchronization primitive the crate's
+//! parallel layers use, re-exported from one place.
+//!
+//! Default builds (`cfg(not(loom))`) re-export `std` types verbatim, so
+//! this module costs nothing — no wrappers, no indirection, the same
+//! codegen as importing `std::sync` directly. Under `--cfg loom` the
+//! same names resolve to [loom](https://docs.rs/loom)'s model-checked
+//! doubles, which lets the loom scenarios in
+//! `rust/src/exec/loom_tests.rs` exhaustively explore the executor's
+//! interleavings (claim/execute races, `abort_rest` vs. racing
+//! decrements, the wait/notify protocol, lazy spawn, shutdown) instead
+//! of relying on whatever schedules the test host happens to produce.
+//!
+//! Two rules keep the facade meaningful, both enforced by the in-tree
+//! determinism lint (`rust/xtask`):
+//!
+//! * **No raw `std::sync::atomic` imports outside this module.**
+//!   Atomics that bypass the facade are invisible to loom and therefore
+//!   unverified. The two deliberate exceptions — `memtrack`'s global
+//!   allocator counters and `checkpoint`'s spill-name counter — need
+//!   const-initialized `static`s (loom's atomics are not const-
+//!   constructible, and loom cannot model a global allocator at all);
+//!   each carries an inline `det-lint: allow(raw-atomic)` marker with
+//!   that argument.
+//! * **No `thread::spawn` outside this module.** `exec` and the
+//!   pipeline spawn through [`thread::spawn_named`]; threads spawned
+//!   anywhere else are scheduling surface the determinism suites never
+//!   exercise.
+//!
+//! The loom dependency itself is cfg-gated in `rust/Cargo.toml` and
+//! points at the in-tree `rust/loom-shim` package (std-backed, same
+//! API subset) so offline builds resolve without crates.io; the CI
+//! loom job swaps the real model checker in. See README §Verification
+//! lanes.
+
+#[cfg(not(loom))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+#[cfg(loom)]
+pub use loom::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+/// Atomic types and orderings (std or loom, by `cfg(loom)`).
+pub mod atomic {
+    #[cfg(not(loom))]
+    pub use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+    #[cfg(loom)]
+    pub use loom::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+}
+
+/// Thread spawning (std or loom, by `cfg(loom)`).
+pub mod thread {
+    #[cfg(not(loom))]
+    pub use std::thread::JoinHandle;
+
+    #[cfg(loom)]
+    pub use loom::thread::JoinHandle;
+
+    /// Spawn a named thread. Under loom the name is dropped (model
+    /// threads are anonymous); under std a failed spawn is a panic —
+    /// the executor treats thread exhaustion as unrecoverable, exactly
+    /// as the retired per-call pools did.
+    pub fn spawn_named<F, T>(name: String, f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        #[cfg(not(loom))]
+        {
+            std::thread::Builder::new()
+                .name(name)
+                .spawn(f)
+                .expect("spawn thread")
+        }
+        #[cfg(loom)]
+        {
+            let _ = name;
+            loom::thread::spawn(f)
+        }
+    }
+
+    /// The machine's available parallelism (≥ 1). Loom models run with
+    /// a fixed budget of 2 — the model explores interleavings, not
+    /// machine sizes.
+    pub fn available_parallelism() -> usize {
+        #[cfg(not(loom))]
+        {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        }
+        #[cfg(loom)]
+        {
+            2
+        }
+    }
+}
+
+#[cfg(all(test, not(loom)))]
+mod tests {
+    #[test]
+    fn spawn_named_names_the_thread() {
+        let h = super::thread::spawn_named("ihtc-facade-test".to_string(), || {
+            std::thread::current().name().map(str::to_string)
+        });
+        assert_eq!(h.join().unwrap().as_deref(), Some("ihtc-facade-test"));
+    }
+
+    #[test]
+    fn available_parallelism_at_least_one() {
+        assert!(super::thread::available_parallelism() >= 1);
+    }
+}

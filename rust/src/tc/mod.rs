@@ -200,12 +200,21 @@ pub fn validate(
             )));
         }
     }
-    // Seed independence in NG²: no two seeds within two walks.
-    let seed_set: std::collections::HashSet<u32> = result.seeds.iter().copied().collect();
+    // Seed independence in NG²: no two seeds within two walks. The
+    // membership set is a flat bool table over unit ids (deterministic
+    // by construction, no hashing) — which also forces the range check
+    // a validator owes its caller before seeds index anything.
+    let mut is_seed = vec![false; n];
+    for &s in &result.seeds {
+        if s as usize >= n {
+            return Err(Error::InvalidArgument(format!("seed {s} out of range (n={n})")));
+        }
+        is_seed[s as usize] = true;
+    }
     for &s in &result.seeds {
         let mut bad = false;
         graph.for_two_walk(s as usize, |v, _| {
-            if seed_set.contains(&v) {
+            if is_seed[v as usize] {
                 bad = true;
             }
         });

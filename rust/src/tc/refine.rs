@@ -36,10 +36,15 @@ pub fn reassign_boundary(
         sizes[a as usize] += 1;
     }
     let seed_of = |c: u32| result.seeds[c as usize] as usize;
-    let seed_set: std::collections::HashSet<u32> = result.seeds.iter().copied().collect();
+    // Membership-only over unit ids < n: a flat bool table instead of a
+    // hash set — deterministic by construction and cheaper to probe.
+    let mut is_seed = vec![false; n];
+    for &s in &result.seeds {
+        is_seed[s as usize] = true;
+    }
     let mut moves = 0usize;
     for i in 0..n {
-        if seed_set.contains(&(i as u32)) {
+        if is_seed[i] {
             continue; // seeds anchor their clusters
         }
         let cur = result.assignments[i];

@@ -1,0 +1,454 @@
+//! `cargo xtask`-style determinism / unsafe-hygiene lint.
+//!
+//! Usage: `cargo run --manifest-path rust/xtask/Cargo.toml -- [SRC_DIR]`
+//! (default `rust/src`). Exit code 0 = clean, 1 = findings, 2 = usage /
+//! I/O error. CI runs this as the `determinism-lint` job.
+//!
+//! The byte-parity contract ("same config ⇒ same output bytes, any
+//! worker count") and the loom/Miri lanes only stay meaningful if new
+//! code keeps their preconditions. Those preconditions are mechanical,
+//! so this binary enforces them mechanically:
+//!
+//! 1. **safety-comment** — every `unsafe` keyword must have a
+//!    `// SAFETY:` (or `# Safety` doc section) within the 10 lines
+//!    above or 2 below it.
+//! 2. **hash-iter** — no `HashMap`/`HashSet` in non-test code: hash
+//!    iteration order is nondeterministic across processes (SipHash
+//!    keys are random), so any iterated map silently breaks byte
+//!    parity. Keyed-lookup-only uses are allowlisted in place with a
+//!    `det-lint: allow(hash-iter)` comment stating *why* order cannot
+//!    leak.
+//! 3. **wallclock** — `Instant`/`SystemTime` only in the timing-owning
+//!    modules (driver, pipeline stage metrics, bench runners, main):
+//!    time must never steer an algorithm.
+//! 4. **raw-spawn** — no `thread::spawn` outside the `sync` facade:
+//!    ad-hoc threads bypass the executor (and loom cannot see them).
+//! 5. **raw-atomic** — no `std::sync::atomic` imports outside the
+//!    `sync` facade: raw atomics dodge loom's model checking.
+//!    Const-init statics that genuinely cannot go through the facade
+//!    carry `det-lint: allow(raw-atomic)` markers in place.
+//!
+//! `#[cfg(test)]` modules are skipped entirely (tests may hash, sleep,
+//! and spawn freely); line comments, block comments, and string
+//! literals are stripped before matching so prose and error messages
+//! never trip a rule. Markers are read from the *raw* text, so they
+//! live in ordinary comments.
+
+use std::path::{Path, PathBuf};
+
+/// How far above a flagged line a marker / SAFETY comment may sit.
+const LOOKBACK: usize = 10;
+/// How far below an `unsafe` keyword its SAFETY comment may sit (an
+/// `unsafe fn` whose first body line is the comment).
+const LOOKAHEAD: usize = 2;
+/// Marker window for `det-lint: allow(...)` (same line or just above).
+const MARKER_LOOKBACK: usize = 5;
+
+#[derive(Debug, PartialEq)]
+struct Finding {
+    file: PathBuf,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file.display(), self.line, self.rule, self.message)
+    }
+}
+
+fn main() {
+    let root = std::env::args().nth(1).unwrap_or_else(|| "rust/src".to_string());
+    let root = PathBuf::from(root);
+    if !root.is_dir() {
+        eprintln!("xtask: source dir {} not found (run from the repo root)", root.display());
+        std::process::exit(2);
+    }
+    let mut files = Vec::new();
+    if let Err(e) = collect_rs_files(&root, &mut files) {
+        eprintln!("xtask: walking {}: {e}", root.display());
+        std::process::exit(2);
+    }
+    files.sort();
+    let mut findings = Vec::new();
+    for file in &files {
+        match std::fs::read_to_string(file) {
+            Ok(text) => lint_file(file, &text, &mut findings),
+            Err(e) => {
+                eprintln!("xtask: reading {}: {e}", file.display());
+                std::process::exit(2);
+            }
+        }
+    }
+    if findings.is_empty() {
+        println!("determinism-lint: {} files clean", files.len());
+        return;
+    }
+    for f in &findings {
+        eprintln!("{f}");
+    }
+    eprintln!("determinism-lint: {} finding(s) in {} files", findings.len(), files.len());
+    std::process::exit(1);
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// One source line, pre-processed.
+struct Line {
+    /// Code with comments and string-literal *contents* blanked out.
+    code: String,
+    /// The raw text (markers and SAFETY comments are read from here).
+    raw: String,
+    /// Inside a `#[cfg(test)] mod … { … }` block.
+    in_test_mod: bool,
+}
+
+/// Lexer state carried across lines (strings and block comments span
+/// physical lines).
+#[derive(Default)]
+struct LexState {
+    in_block_comment: bool,
+    in_string: bool,
+    /// Raw string (`r"…"`): no escape processing until the closing quote.
+    raw_string: bool,
+}
+
+/// Blank out comments and string contents, preserving byte positions
+/// well enough for word matching. Quote characters themselves are kept
+/// so `"…"` still reads as a string token boundary.
+fn strip_line(raw: &str, st: &mut LexState) -> String {
+    let bytes = raw.as_bytes();
+    let mut out = vec![b' '; bytes.len()];
+    let mut i = 0;
+    while i < bytes.len() {
+        if st.in_block_comment {
+            if bytes[i] == b'*' && i + 1 < bytes.len() && bytes[i + 1] == b'/' {
+                st.in_block_comment = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+            continue;
+        }
+        if st.in_string {
+            match bytes[i] {
+                b'\\' if !st.raw_string => i += 2, // skip the escaped char
+                b'"' => {
+                    st.in_string = false;
+                    st.raw_string = false;
+                    out[i] = b'"';
+                    i += 1;
+                }
+                _ => i += 1,
+            }
+            continue;
+        }
+        match bytes[i] {
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'/' => break, // line comment
+            b'/' if i + 1 < bytes.len() && bytes[i + 1] == b'*' => {
+                st.in_block_comment = true;
+                i += 2;
+            }
+            b'"' => {
+                st.in_string = true;
+                st.raw_string = i > 0 && bytes[i - 1] == b'r';
+                out[i] = b'"';
+                i += 1;
+            }
+            b'\'' => {
+                // Char literal or lifetime. `'x'` / `'\n'` forms are
+                // consumed; a lifetime (no closing quote nearby) passes.
+                let close = if i + 2 < bytes.len() && bytes[i + 1] == b'\\' {
+                    (i + 3 < bytes.len() && bytes[i + 3] == b'\'').then_some(i + 3)
+                } else {
+                    (i + 2 < bytes.len() && bytes[i + 2] == b'\'').then_some(i + 2)
+                };
+                match close {
+                    Some(c) => i = c + 1,
+                    None => {
+                        out[i] = b'\'';
+                        i += 1;
+                    }
+                }
+            }
+            c => {
+                out[i] = c;
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8(out).expect("blanked ASCII stays valid UTF-8")
+}
+
+/// Pre-process a file: strip every line and mark `#[cfg(test)]` module
+/// bodies (attribute, then the next `mod` item, then its brace extent).
+fn preprocess(text: &str) -> Vec<Line> {
+    let mut st = LexState::default();
+    let mut lines: Vec<Line> = text
+        .lines()
+        .map(|raw| Line { code: strip_line(raw, &mut st), raw: raw.to_string(), in_test_mod: false })
+        .collect();
+    let mut armed = false; // saw #[cfg(test)], waiting for the mod item
+    let mut depth = 0i64; // brace depth inside the test mod (0 = outside)
+    for line in lines.iter_mut() {
+        let code = line.code.as_str();
+        if depth > 0 {
+            line.in_test_mod = true;
+            depth += brace_delta(code);
+            if depth <= 0 {
+                depth = 0;
+            }
+            continue;
+        }
+        if code.contains("#[cfg(test)]") || code.contains("#[cfg(all(test") {
+            armed = true;
+            continue;
+        }
+        if armed && code.trim_start().starts_with("mod ") {
+            armed = false;
+            line.in_test_mod = true;
+            depth = brace_delta(code);
+            if depth <= 0 {
+                // `#[cfg(test)] mod tests;` — a file-level test module;
+                // nothing more to skip here.
+                depth = 0;
+            }
+            continue;
+        }
+        if armed && !code.trim().is_empty() && !code.trim_start().starts_with("#[") {
+            // The attribute applied to a non-mod item (e.g. a cfg'd fn);
+            // stop waiting rather than skip the rest of the file.
+            armed = false;
+        }
+    }
+    lines
+}
+
+fn brace_delta(code: &str) -> i64 {
+    code.bytes().fold(0i64, |acc, b| match b {
+        b'{' => acc + 1,
+        b'}' => acc - 1,
+        _ => acc,
+    })
+}
+
+/// Does `code` contain `word` with non-word characters (or edges) on
+/// both sides? Keeps `unsafe_op_in_unsafe_fn` from matching `unsafe`.
+fn has_word(code: &str, word: &str) -> bool {
+    let is_word = |b: u8| b == b'_' || b.is_ascii_alphanumeric();
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find(word) {
+        let start = from + pos;
+        let end = start + word.len();
+        let ok_before = start == 0 || !is_word(bytes[start - 1]);
+        let ok_after = end >= bytes.len() || !is_word(bytes[end]);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Is a `det-lint: allow(<rule>)` marker on this line or just above?
+fn has_marker(lines: &[Line], idx: usize, rule: &str) -> bool {
+    let needle = format!("det-lint: allow({rule})");
+    let lo = idx.saturating_sub(MARKER_LOOKBACK);
+    lines[lo..=idx].iter().any(|l| l.raw.contains(&needle))
+}
+
+/// Is a SAFETY / `# Safety` comment near line `idx`?
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    let lo = idx.saturating_sub(LOOKBACK);
+    let hi = (idx + LOOKAHEAD).min(lines.len() - 1);
+    lines[lo..=hi].iter().any(|l| {
+        let raw = l.raw.to_ascii_lowercase();
+        raw.contains("safety:") || raw.contains("# safety")
+    })
+}
+
+fn path_matches(file: &Path, suffixes: &[&str]) -> bool {
+    let p = file.to_string_lossy().replace('\\', "/");
+    suffixes.iter().any(|s| p.ends_with(s))
+}
+
+fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
+    let lines = preprocess(text);
+    // Per-file rule exemptions (the facade and the timing owners).
+    let is_sync_facade = path_matches(file, &["sync/mod.rs"]);
+    let owns_wallclock = path_matches(
+        file,
+        &["coordinator/driver.rs", "coordinator/pipeline.rs", "sim/runners.rs", "src/main.rs"],
+    );
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test_mod {
+            continue;
+        }
+        let code = line.code.as_str();
+        let lineno = idx + 1;
+        let mut push = |rule: &'static str, message: String| {
+            findings.push(Finding { file: file.to_path_buf(), line: lineno, rule, message });
+        };
+        if has_word(code, "unsafe") && !has_safety_comment(&lines, idx) {
+            push(
+                "safety-comment",
+                "`unsafe` without a nearby `// SAFETY:` comment stating the proof obligation"
+                    .to_string(),
+            );
+        }
+        if (has_word(code, "HashMap") || has_word(code, "HashSet"))
+            && !has_marker(&lines, idx, "hash-iter")
+        {
+            push(
+                "hash-iter",
+                "hash collections iterate in nondeterministic order; use BTreeMap/Vec, or mark \
+                 a keyed-lookup-only use with `det-lint: allow(hash-iter)` and say why order \
+                 cannot leak"
+                    .to_string(),
+            );
+        }
+        if !owns_wallclock && (has_word(code, "Instant") || has_word(code, "SystemTime")) {
+            push(
+                "wallclock",
+                "wall-clock reads belong to the driver/pipeline/bench timing modules; \
+                 algorithms must not read time"
+                    .to_string(),
+            );
+        }
+        if !is_sync_facade {
+            // `thread::spawn(` but not `thread::spawn_named` — the word
+            // check handles the suffix.
+            if code.contains("thread::spawn") && !code.contains("thread::spawn_named") {
+                push(
+                    "raw-spawn",
+                    "spawn threads through `crate::sync::thread::spawn_named` (the facade loom \
+                     models), not `thread::spawn`"
+                        .to_string(),
+                );
+            }
+            if code.contains("std::sync::atomic") && !has_marker(&lines, idx, "raw-atomic") {
+                push(
+                    "raw-atomic",
+                    "import atomics from `crate::sync::atomic` so loom can model them, or mark \
+                     a const-init static with `det-lint: allow(raw-atomic)`"
+                        .to_string(),
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(file: &str, text: &str) -> Vec<&'static str> {
+        let mut findings = Vec::new();
+        lint_file(Path::new(file), text, &mut findings);
+        findings.iter().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        assert_eq!(run("src/a.rs", "unsafe { foo() };"), vec!["safety-comment"]);
+        assert!(run("src/a.rs", "// SAFETY: checked above\nunsafe { foo() };").is_empty());
+        // Doc-style `# Safety` sections count too.
+        assert!(run("src/a.rs", "/// # Safety\n/// caller checks p\nunsafe fn f() {}").is_empty());
+        // The comment may sit just below an `unsafe fn` signature.
+        assert!(run("src/a.rs", "unsafe fn f() {\n    // SAFETY: forwarded\n}").is_empty());
+    }
+
+    #[test]
+    fn safety_word_boundaries() {
+        // The lint attribute must not read as the `unsafe` keyword.
+        assert!(run("src/lib.rs", "#![deny(unsafe_op_in_unsafe_fn)]").is_empty());
+    }
+
+    #[test]
+    fn hash_collections_flagged_unless_marked() {
+        assert_eq!(run("src/a.rs", "let m = std::collections::HashMap::new();"), vec!["hash-iter"]);
+        assert_eq!(run("src/a.rs", "use std::collections::HashSet;"), vec!["hash-iter"]);
+        assert!(run(
+            "src/a.rs",
+            "// keyed lookups only\n// det-lint: allow(hash-iter)\nlet m = std::collections::HashMap::new();"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn comments_and_strings_do_not_trip_rules() {
+        assert!(run("src/a.rs", "// a HashMap would be wrong here").is_empty());
+        assert!(run("src/a.rs", "/* unsafe HashSet Instant */ let x = 1;").is_empty());
+        assert!(run("src/a.rs", "let m = \"an unsafe HashMap of Instant\";").is_empty());
+        // Multi-line string continuation.
+        assert!(run("src/a.rs", "let m = \"first half \\\n  second HashMap half\";").is_empty());
+        // …and code after a closed block comment is still scanned.
+        assert_eq!(run("src/a.rs", "/* ok */ let m = std::collections::HashMap::new();"), vec![
+            "hash-iter"
+        ]);
+    }
+
+    #[test]
+    fn test_modules_are_skipped() {
+        let text = "fn prod() {}\n#[cfg(test)]\nmod tests {\n    use std::collections::HashMap;\n    fn t() { unsafe { x() } }\n}\n";
+        assert!(run("src/a.rs", text).is_empty());
+        // …but code after the test mod is scanned again.
+        let text2 = "#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nuse std::collections::HashMap;\n";
+        assert_eq!(run("src/a.rs", text2), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn wallclock_only_in_timing_owners() {
+        assert_eq!(run("src/tc/mod.rs", "let t = Instant::now();"), vec!["wallclock"]);
+        assert!(run("src/coordinator/driver.rs", "let t = Instant::now();").is_empty());
+        assert!(run("src/coordinator/pipeline.rs", "let t = Instant::now();").is_empty());
+        assert!(run("src/sim/runners.rs", "let t = Instant::now();").is_empty());
+        assert!(run("src/main.rs", "let t = std::time::Instant::now();").is_empty());
+    }
+
+    #[test]
+    fn spawn_and_atomics_confined_to_facade() {
+        assert_eq!(run("src/knn/mod.rs", "std::thread::spawn(|| {});"), vec!["raw-spawn"]);
+        assert!(run("src/knn/mod.rs", "thread::spawn_named(name, f);").is_empty());
+        assert!(run("src/sync/mod.rs", "std::thread::spawn(f)").is_empty());
+        assert_eq!(
+            run("src/knn/mod.rs", "use std::sync::atomic::AtomicUsize;"),
+            vec!["raw-atomic"]
+        );
+        assert!(run("src/sync/mod.rs", "pub use std::sync::atomic::Ordering;").is_empty());
+        assert!(run(
+            "src/memtrack.rs",
+            "// const-init static\n// det-lint: allow(raw-atomic)\nuse std::sync::atomic::AtomicUsize;"
+        )
+        .is_empty());
+    }
+
+    #[test]
+    fn file_level_test_mod_declaration_does_not_swallow_the_file() {
+        // `#[cfg(test)] mod foo;` (semicolon form) must not mark the
+        // rest of the file as test code.
+        let text = "#[cfg(all(loom, test))]\nmod loom_tests;\nuse std::collections::HashMap;\n";
+        assert_eq!(run("src/a.rs", text), vec!["hash-iter"]);
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes_survive_the_lexer() {
+        assert!(run("src/a.rs", "let c = '\"'; let s: &'static str = \"HashMap\";").is_empty());
+        assert_eq!(
+            run("src/a.rs", "let c = 'x'; let m = std::collections::HashMap::new();"),
+            vec!["hash-iter"]
+        );
+    }
+}
