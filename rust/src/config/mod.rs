@@ -10,7 +10,7 @@
 pub mod json;
 
 use crate::cluster::hac::Linkage;
-use crate::exec::{ExecutorConfig, StealPolicy};
+use crate::exec::{ExecutorConfig, Priority, StealPolicy};
 use crate::hybrid::FinalClusterer;
 use crate::itis::PrototypeKind;
 use crate::tc::SeedOrder;
@@ -100,12 +100,21 @@ pub struct PipelineConfig {
     /// `iterations ≥ 1` and `prototype = "weighted"` (weighted centroids
     /// keep the fused means exact).
     pub streaming: bool,
-    /// Concurrent reduce stages for the fused streaming ingest (fan-out
-    /// of the per-shard level-0 TC across stage threads, each with its
-    /// own pool + workspace). Results are re-ordered by shard offset
-    /// before concatenation, so every value produces byte-identical
-    /// output; values > 1 only change throughput. Must be ≥ 1.
+    /// Max per-shard reduce batches in flight on the shared executor at
+    /// once during the fused streaming ingest. An in-flight cap, not a
+    /// thread budget: batches run on the one worker team, so values
+    /// above `workers` are fine (they queue), and each in-flight batch
+    /// owns one pooled `ItisWorkspace`. Results are re-ordered by shard
+    /// offset before concatenation, so every value produces
+    /// byte-identical output; values > 1 only change throughput and
+    /// peak workspace memory. Must be ≥ 1.
     pub reduce_stages: usize,
+    /// Priority class the streaming reduce batches are submitted at
+    /// (`"high"`, `"normal"` — the default — or `"bulk"`).
+    /// Scheduling-only: output bytes are identical under every class;
+    /// lower it to let latency-sensitive work overtake a bulk ingest on
+    /// the same team.
+    pub reduce_priority: Priority,
     /// Durable checkpoint file for streaming runs (optional). When set,
     /// every reduced shard is appended to this file as a CRC32-checked
     /// frame behind the reorder stage, so the file always holds an
@@ -157,6 +166,7 @@ impl Default for PipelineConfig {
             queue_capacity: 4,
             streaming: false,
             reduce_stages: 1,
+            reduce_priority: Priority::Normal,
             checkpoint_path: None,
             checkpoint_every_rows: 0,
             resume: false,
@@ -243,6 +253,13 @@ impl PipelineConfig {
         }
         if let Some(r) = j.opt_usize("reduce_stages")? {
             cfg.reduce_stages = r;
+        }
+        if let Some(p) = j.opt_str("reduce_priority")? {
+            cfg.reduce_priority = Priority::parse(p).ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown reduce_priority '{p}' (high | normal | bulk)"
+                ))
+            })?;
         }
         if let Some(p) = j.opt_str("checkpoint_path")? {
             cfg.checkpoint_path = Some(p.to_string());
@@ -357,23 +374,17 @@ impl PipelineConfig {
                 self.checkpoint_every_rows
             )));
         }
-        // Stages share ONE work-stealing executor (they no longer own
-        // thread teams), and each active stage occupies one compute
-        // thread as a submitter — so stages beyond the worker budget
-        // add threads without adding any parallel capacity (the team
-        // cannot serve more than `workers` stages at once). Reject that
-        // instead of silently oversubscribing. With workers: 0 the
-        // budget is resolved from the machine at run time, so the check
-        // cannot apply deterministically and is skipped.
-        if self.streaming && self.workers > 0 && self.reduce_stages > self.workers {
-            return Err(Error::Config(format!(
-                "reduce_stages = {} exceeds the executor's worker budget ({}): stages share one \
-                 work-stealing executor and each occupies a compute thread, so stages beyond \
-                 the budget only oversubscribe without adding parallel capacity — lower \
-                 reduce_stages, raise workers, or use workers: 0 to size the budget to the \
-                 machine",
-                self.reduce_stages, self.workers
-            )));
+        // Note reduce_stages may exceed `workers`: it caps in-flight
+        // executor *batches* (queued work and pooled workspaces), not
+        // threads — the retired stage-thread scheme's budget check is
+        // gone with the stage threads themselves.
+        if self.reduce_priority != Priority::Normal && !self.streaming {
+            return Err(Error::Config(
+                "reduce_priority has no effect without streaming: true — only the fused \
+                 streaming ingest submits prioritized reduce batches (set streaming, or drop \
+                 the knob)"
+                    .into(),
+            ));
         }
         if self.streaming {
             if self.iterations == 0 {
@@ -643,26 +654,51 @@ mod tests {
     }
 
     #[test]
-    fn reduce_stages_validated_against_worker_budget() {
-        // Stages share one executor and each occupies a compute thread:
-        // an explicit budget smaller than the stage count is a config
-        // error (extra stages would only oversubscribe)...
-        let err = PipelineConfig::from_json(
+    fn reduce_stages_may_exceed_worker_budget() {
+        // reduce_stages caps in-flight executor batches, not threads:
+        // a count above an explicit worker budget is valid (batches
+        // queue on the team) — the retired stage-thread scheme's budget
+        // error is gone with the stage threads themselves.
+        assert!(PipelineConfig::from_json(
             r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4, "workers": 2}"#,
         )
-        .unwrap_err();
-        assert!(err.to_string().contains("budget"), "{err}");
-        // ...matching budgets are fine...
+        .is_ok());
         assert!(PipelineConfig::from_json(
-            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4, "workers": 4}"#,
+            r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 4, "workers": 1}"#,
         )
         .is_ok());
-        // ...and workers: 0 resolves at run time, so the check is
-        // skipped and any stage count is accepted.
         assert!(PipelineConfig::from_json(
             r#"{"streaming": true, "prototype": "weighted", "reduce_stages": 8}"#,
         )
         .is_ok());
+    }
+
+    #[test]
+    fn reduce_priority_parse_and_validation() {
+        assert_eq!(PipelineConfig::from_json("{}").unwrap().reduce_priority, Priority::Normal);
+        let cfg = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_priority": "bulk"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.reduce_priority, Priority::Bulk);
+        let cfg = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_priority": "high"}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.reduce_priority, Priority::High);
+        // Unknown classes and mistyped knobs are config errors.
+        let err = PipelineConfig::from_json(
+            r#"{"streaming": true, "prototype": "weighted", "reduce_priority": "urgent"}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("reduce_priority"), "{err}");
+        assert!(PipelineConfig::from_json(r#"{"reduce_priority": 3}"#).is_err());
+        // A non-default class on the materialized path would be
+        // silently inert — reject it instead.
+        let err = PipelineConfig::from_json(r#"{"reduce_priority": "bulk"}"#).unwrap_err();
+        assert!(err.to_string().contains("streaming"), "{err}");
+        // The default class is accepted anywhere (it IS the default).
+        assert!(PipelineConfig::from_json(r#"{"reduce_priority": "normal"}"#).is_ok());
     }
 
     #[test]

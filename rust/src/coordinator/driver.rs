@@ -13,9 +13,10 @@
 //! 5. **backout** — label propagation to all `n` units, metrics, output.
 //!
 //! With `streaming: true` the first phase is **fused**: every incoming
-//! shard is threshold-clustered into weighted prototypes *inside* the
-//! pipeline's reduce stage (one [`crate::itis::reduce_shard`] call per
-//! shard, reusing the stage thread's [`ItisWorkspace`]), and only the
+//! shard is threshold-clustered into weighted prototypes as a
+//! prioritized batch on the run's shared executor (one
+//! [`crate::itis::reduce_shard`] call per shard, reusing a pooled
+//! [`ItisWorkspace`] recycled across batches), and only the
 //! concatenated prototype stream — roughly `n / t*` rows — is ever
 //! resident: the per-row level-0 assignment map is spilled to disk by a
 //! checkpoint sink stage ([`crate::checkpoint`]) and read back once,
@@ -27,7 +28,7 @@
 //! iterations then resume on the prototypes ([`crate::itis::itis_resume`]).
 //! The default materialized path is untouched and remains byte-identical.
 
-use super::pipeline::{collect, PipelineBuilder, ReducedShard, RowShard, StageMetrics};
+use super::pipeline::{collect, ExecStageOpts, PipelineBuilder, ReducedShard, RowShard, StageMetrics};
 use super::PoolKnnProvider;
 use crate::checkpoint::{self, CheckpointWriter, FaultPlan, Level0Map};
 use crate::cluster::kmeans::{self, NativeAssign};
@@ -113,8 +114,8 @@ impl RunReport {
         }
         for s in &self.stages {
             out.push_str(&format!(
-                "  stage {:<10} items={:<6} busy={:?} blocked={:?}\n",
-                s.name, s.items, s.busy, s.blocked
+                "  stage {:<10} items={:<6} busy={:?} queued={:?} blocked={:?}\n",
+                s.name, s.items, s.busy, s.queued, s.blocked
             ));
         }
         out.push_str(&format!("  total          {:>9.3}s\n", self.total_seconds));
@@ -472,23 +473,23 @@ fn shard_source(config: &PipelineConfig, start_row: usize) -> Result<ShardProduc
 /// with only the in-flight shards plus the growing prototype stream
 /// resident.
 ///
-/// The reduce stage fans out across `config.reduce_stages` concurrent
-/// stage threads (each owning its [`crate::itis::ShardReducer`]:
-/// a reusable `ItisWorkspace`, so buffers never cross threads), and a
-/// reorder stage keyed on `RowShard::offset` releases results strictly
-/// in stream order before concatenation. Stage threads are *task
-/// submitters* into the run's one shared work-stealing executor — the
-/// worker budget self-balances across stages (a stage that lands a hard
-/// shard pulls in the whole team) instead of being divided statically
-/// (`resolve_workers(workers) / reduce_stages` each, the retired
-/// scheme, which stranded threads on skewed shards and oversubscribed
-/// when `reduce_stages > workers`). The ordering contract is enforced,
-/// not assumed: the collector tolerates arbitrary arrival order, but
+/// The reduce is **executor-native**: the fused source thread submits
+/// each shard as a single-task batch on the run's one shared
+/// work-stealing executor at `config.reduce_priority`, with
+/// `config.reduce_stages` batches in flight at once — an in-flight cap,
+/// not a thread budget (it may exceed `workers`; no reduce-stage or
+/// distributor OS threads exist). Per-batch [`crate::itis::ShardReducer`]
+/// states (each a reusable `ItisWorkspace`) are pooled and recycled
+/// across batches, so at most `reduce_stages` ever exist; they cross
+/// worker threads between batches, never during one. Completions are
+/// reordered inline on the source thread (keyed on `RowShard::offset`)
+/// before the checkpoint sink, so frames still hit the file strictly in
+/// stream order. The ordering contract is enforced, not assumed:
 /// offsets must tile the stream — a gap, duplicate, or overlap is a
 /// hard [`Error::Coordinator`] in release builds. Because release order
-/// equals stream order and each shard's reduction is worker-count
-/// invariant, any `reduce_stages` value yields a byte-identical
-/// [`StreamedReduction`].
+/// equals stream order and each shard's reduction is worker-count and
+/// priority invariant, any `reduce_stages` × `workers` × priority
+/// combination yields a byte-identical [`StreamedReduction`].
 pub fn ingest_streaming(config: &PipelineConfig) -> Result<StreamedReduction> {
     ingest_streaming_with_faults(config, &FaultPlan::none())
 }
@@ -543,8 +544,9 @@ fn ingest_streaming_on(
         min_prototypes: 1,
     };
     let knn_shards = config.knn_shards.max(1);
-    // Every stage shares `exec`: stage states are built on the stage
-    // threads, so they take owning `Arc` handles to the one team.
+    // The pooled reducer states are built lazily on the fused source
+    // thread and submit their own nested k-NN batches, so they take
+    // owning `Arc` handles to the one team.
     let stage_exec = Arc::clone(exec);
     // Shared slot for the checkpoint writer. The sink stage owns the
     // writer while the pipeline runs; the collector reclaims it after
@@ -563,14 +565,45 @@ fn ingest_streaming_on(
     let sink_slot = Arc::clone(&writer_slot);
     let sink_dest = ckpt_dest.clone();
     let sync_every = config.checkpoint_every_rows;
-    // Reorder bound: everything that can be in flight at once — each
-    // stage's input queue plus the item it is processing, the output
-    // funnel, and slack for the distributor/reorder hand-offs. A correct
-    // (tiling) stream can never park more than this.
-    let reorder_bound = stages_n * (capacity + 2) + capacity + 2;
-    let pipe = PipelineBuilder::source(
-        "source",
-        capacity,
+    let pipe = PipelineBuilder::source_exec_ordered(
+        ExecStageOpts {
+            source: "source".into(),
+            stage: "reduce".into(),
+            reorder: "reorder".into(),
+            capacity,
+            // An in-flight cap on executor batches, not a thread count —
+            // values above `workers` are fine (batches queue on the team).
+            max_in_flight: stages_n,
+            priority: config.reduce_priority,
+            // Out-of-order completions that may park while the stream
+            // head is still reducing: the window itself plus channel
+            // slack. A correct (tiling) stream can never park more.
+            parked_bound: stages_n + capacity + 2,
+            start: start_row,
+        },
+        Arc::clone(exec),
+        move || {
+            crate::itis::ShardReducer::new(Arc::clone(&stage_exec), knn_shards, itis_cfg.clone())
+        },
+        move |reducer, shard: RowShard| {
+            if kill_reduce == Some(shard.offset) {
+                panic!("fault injection: reduce stage killed at offset {}", shard.offset);
+            }
+            let mut moments = Moments::new(shard.points.cols());
+            moments.fold(&shard.points);
+            let red = reducer.reduce(&shard.points)?;
+            Ok((
+                ReducedShard {
+                    offset: shard.offset,
+                    prototypes: red.prototypes,
+                    weights: red.weights,
+                    assignments: red.assignments,
+                    labels: shard.labels,
+                },
+                moments,
+            ))
+        },
+        |(shard, _): &(ReducedShard, Moments)| (shard.offset, shard.assignments.len()),
         move |emit: &mut dyn FnMut(RowShard) -> Result<()>| {
             let mut guarded = |shard: RowShard| {
                 if let Some(k) = fail_source {
@@ -585,38 +618,6 @@ fn ingest_streaming_on(
             produce(&mut guarded)
         },
     )
-        .map_init_parallel(
-            "reduce",
-            stages_n,
-            move || {
-                crate::itis::ShardReducer::new(
-                    Arc::clone(&stage_exec),
-                    knn_shards,
-                    itis_cfg.clone(),
-                )
-            },
-            move |reducer, shard: RowShard| {
-                if kill_reduce == Some(shard.offset) {
-                    panic!("fault injection: reduce stage killed at offset {}", shard.offset);
-                }
-                let mut moments = Moments::new(shard.points.cols());
-                moments.fold(&shard.points);
-                let red = reducer.reduce(&shard.points)?;
-                Ok((
-                    ReducedShard {
-                        offset: shard.offset,
-                        prototypes: red.prototypes,
-                        weights: red.weights,
-                        assignments: red.assignments,
-                        labels: shard.labels,
-                    },
-                    moments,
-                ))
-            },
-        )
-        .reorder_from("reorder", reorder_bound, start_row, |(shard, _): &(ReducedShard, Moments)| {
-            (shard.offset, shard.assignments.len())
-        })
         // Checkpoint sink, strictly behind the reorder stage: frames hit
         // the file in stream order, so the file always holds an
         // offset-tiled prefix of the stream — exactly the resume
@@ -648,8 +649,8 @@ fn ingest_streaming_on(
         })
         .build();
 
-    // Concatenate the prototype stream. The reorder stage guarantees
-    // stream order; the hard check below replaces the old
+    // Concatenate the prototype stream. The fused head's inline reorder
+    // guarantees stream order; the hard check below replaces the old
     // debug_assert-only guard (which vanished in release builds and let
     // an out-of-order shard silently corrupt every downstream weight and
     // back-out label). The per-row assignments are NOT accumulated here
@@ -956,10 +957,9 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
 /// matrix no longer exists by phase 5).
 fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     let t_all = Instant::now();
-    // One executor for the whole run: the ingest pipeline's reduce
-    // stages submit into it through an `Arc` (stage states are built on
-    // stage threads, so they need an owning handle), and phases 2–5 use
-    // it directly by reference.
+    // One executor for the whole run: the fused ingest submits its
+    // per-shard reduce batches (and their nested k-NN batches) into it
+    // through an `Arc`, and phases 2–5 use it directly by reference.
     let exec = Arc::new(Executor::with_config(config.executor()));
     let mut phases = Vec::new();
 
@@ -1234,8 +1234,8 @@ mod tests {
             source: DataSource::PaperMixture { n },
             streaming: true,
             prototype: PrototypeKind::WeightedCentroid,
-            // 4 ≥ every reduce_stages value the tests sweep: stages
-            // share one executor and must fit its explicit budget.
+            // reduce_stages is an in-flight batch cap, not a thread
+            // budget — sweeps may exceed this worker count freely.
             workers: 4,
             shard_size: 512,
             ..Default::default()
@@ -1253,14 +1253,14 @@ mod tests {
         assert!(report.prototypes <= 4000 / 4 + 8, "{}", report.prototypes);
         assert!(report.accuracy.unwrap() > 0.85, "{report:?}");
         assert_eq!(report.phases.len(), 5);
-        // Fan-out topology: distributor + per-stage workers + reorder +
-        // checkpoint sink, reported in source→…→sink order.
+        // Executor-native topology: the fused head reports source,
+        // reduce (batch queue/run split), and inline reorder slots, then
+        // the checkpoint sink — in source→…→sink order, with no
+        // per-stage or distributor slots left.
         let names: Vec<&str> = report.stages.iter().map(|s| s.name.as_str()).collect();
-        assert_eq!(names[0], "source");
-        assert_eq!(names[1], "reduce/rr");
-        assert!(names.contains(&"reduce/0"));
-        assert!(names.contains(&"reorder"));
-        assert_eq!(*names.last().unwrap(), "checkpoint");
+        assert_eq!(names, ["source", "reduce", "reorder", "checkpoint"]);
+        let reduce = report.stages.iter().find(|s| s.name == "reduce").unwrap();
+        assert_eq!(reduce.items, 4000 / 512 + 1, "one batch per shard");
     }
 
     #[test]
@@ -1349,7 +1349,7 @@ mod tests {
         cfg.reduce_stages = 4;
         let (par, report) = run(&cfg).unwrap();
         assert_eq!(base, par);
-        assert!(report.stages.iter().any(|s| s.name == "reduce/3"));
+        assert!(report.stages.iter().any(|s| s.name == "reduce"));
     }
 
     #[test]

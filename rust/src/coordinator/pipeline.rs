@@ -1,20 +1,33 @@
-//! Bounded-channel streaming pipeline with backpressure and metrics.
+//! Executor-native streaming pipeline with backpressure and metrics.
 //!
-//! The ingestion path (`source → preprocess → reduce`) is expressed as a
-//! chain of stages connected by `sync_channel`s of configurable capacity.
-//! A slow downstream stage fills its input queue and blocks the producer
-//! — classic backpressure — and every stage records items processed,
-//! busy time, and blocked-on-send time so the launcher can print where
-//! the pipeline is actually bottlenecked.
+//! The ingestion path is expressed as a short chain of OS threads
+//! connected by `sync_channel`s — but the *parallel* work inside it no
+//! longer runs on dedicated stage threads. The fused
+//! [`PipelineBuilder::source_exec_ordered`] entry runs the source
+//! closure on one thread whose emit callback submits each item as a
+//! prioritized batch to the run's shared [`Executor`]
+//! ([`Executor::submit`] → [`BatchHandle`]), windows the in-flight
+//! batches (`reduce_stages` is that window, not a thread count), and
+//! feeds completions through an inline [`ReorderBuffer`] so downstream
+//! stages still see strict stream order. A slow downstream stage fills
+//! its input queue and blocks the producer — classic backpressure — and
+//! every stage records items processed, busy time, blocked-on-send
+//! time, and (for executor batches) queue-wait vs. run time, so the
+//! launcher can print where the pipeline is actually bottlenecked.
 
+use crate::exec::{BatchHandle, Executor, Priority};
 use crate::linalg::Matrix;
 use crate::sync::{thread, Arc, Mutex};
 use crate::{Error, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 // Channels stay on std: loom has no mpsc double, and the pipeline is
 // only *compiled* under `--cfg loom` (the loom scenarios model the
-// executor, which the stages submit into), never executed there.
-use std::sync::mpsc::{Receiver, SyncSender, TrySendError};
+// executor, which the source thread submits into), never executed
+// there. The endpoints live on exactly two kinds of surviving threads —
+// the fused source and the map/sink stages — and carry no atomics of
+// their own, so nothing here dodges the model checker.
+// det-lint: allow(std-mpsc)
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
 use std::time::{Duration, Instant};
 
 /// A contiguous block of dataset rows flowing through the ingest
@@ -58,6 +71,13 @@ pub struct StageMetrics {
     pub busy: Duration,
     /// Time spent blocked sending downstream (backpressure).
     pub blocked: Duration,
+    /// Time the stage's work sat queued on the shared executor before a
+    /// worker first claimed it (executor-native stages only; zero for
+    /// plain thread stages). Together with `busy` this splits "the
+    /// reduce is slow" into "the team is oversubscribed" vs. "the work
+    /// itself is expensive" — attribution the per-stage threads used to
+    /// give for free.
+    pub queued: Duration,
 }
 
 impl StageMetrics {
@@ -218,6 +238,14 @@ impl<T> ReorderBuffer<T> {
         self.next
     }
 
+    /// Out-of-order items currently parked (waiting for the stream
+    /// head). The fused executor stage gates new submissions on this so
+    /// a slow head batch cannot let completed successors pile up
+    /// without bound.
+    pub fn parked(&self) -> usize {
+        self.pending.len()
+    }
+
     /// End-of-stream check: any still-parked item means the stream had a
     /// gap (an offset that never arrived).
     pub fn finish(&self) -> Result<()> {
@@ -230,6 +258,163 @@ impl<T> ReorderBuffer<T> {
             )));
         }
         Ok(())
+    }
+}
+
+/// Knobs for [`PipelineBuilder::source_exec_ordered`], bundled so the
+/// call site stays readable next to its four closures.
+pub struct ExecStageOpts {
+    /// Metrics name for the source half (also the thread name suffix).
+    pub source: String,
+    /// Metrics name for the executor-batch stage.
+    pub stage: String,
+    /// Metrics name for the inline reorder accounting.
+    pub reorder: String,
+    /// Output channel capacity (backpressure toward the sink).
+    pub capacity: usize,
+    /// Max batches in flight on the executor at once — the
+    /// `reduce_stages` knob. Caps pooled per-batch states and parked
+    /// memory, not threads: the work itself runs on the shared team.
+    pub max_in_flight: usize,
+    /// Priority class every batch is submitted at.
+    pub priority: Priority,
+    /// Max *completed but out-of-order* items parked in the inline
+    /// reorder buffer before submission pauses to wait for the stream
+    /// head. Size it at least to `max_in_flight`.
+    pub parked_bound: usize,
+    /// First expected stream offset (resume support; 0 for a fresh run).
+    pub start: usize,
+}
+
+/// In-flight window + reorder state of one executor-native stage. The
+/// fused source thread drives it from inside its emit callback (submit
+/// side) and drains it after the producer returns; it owns no thread of
+/// its own. Batches are submitted in stream order, so the window front
+/// is always the batch producing the offset the reorder head waits for
+/// — that is what makes `make_room`'s wait-on-front converge.
+struct ExecPump<S, In, T, F, K>
+where
+    S: Send + 'static,
+    In: Send + 'static,
+    T: Send + 'static,
+    F: Fn((S, In)) -> Result<(S, T)> + Send + Sync + Clone + 'static,
+    K: Fn(&T) -> (usize, usize),
+{
+    exec: std::sync::Arc<Executor>,
+    priority: Priority,
+    max_in_flight: usize,
+    parked_bound: usize,
+    /// Prototype task closure, cloned per submission (it captures only
+    /// an `Arc` of the caller's work function).
+    task_fn: F,
+    /// Builds a fresh state when the pool is empty (cold start).
+    init: Box<dyn Fn() -> S + Send>,
+    /// Handles of in-flight batches, in submission (= stream) order.
+    window: VecDeque<BatchHandle<(S, In), (S, T), F>>,
+    /// Recycled per-batch states — at most `max_in_flight` ever exist.
+    pool: Vec<S>,
+    buf: ReorderBuffer<T>,
+    tx: SyncSender<T>,
+    key: K,
+    // Metrics accumulators, split per conceptual stage.
+    stage_items: usize,
+    queued: Duration,
+    run: Duration,
+    exec_wait: Duration,
+    send_blocked: Duration,
+    released: usize,
+}
+
+impl<S, In, T, F, K> ExecPump<S, In, T, F, K>
+where
+    S: Send + 'static,
+    In: Send + 'static,
+    T: Send + 'static,
+    F: Fn((S, In)) -> Result<(S, T)> + Send + Sync + Clone + 'static,
+    K: Fn(&T) -> (usize, usize),
+{
+    /// Collect every completed batch: recycle its state, account its
+    /// queue-wait/run split, park its output, and release whatever
+    /// became contiguous. Returns whether any batch was collected.
+    fn drain_done(&mut self) -> Result<bool> {
+        let mut progressed = false;
+        let mut i = 0;
+        while i < self.window.len() {
+            if !self.window[i].done() {
+                i += 1;
+                continue;
+            }
+            let h = self.window.remove(i).expect("index checked in bounds");
+            let (qw, rt) = h.timings();
+            self.queued += qw;
+            self.run += rt;
+            // collect() errors on any shortfall, so pop() is total here.
+            let (state, out) = h
+                .collect()?
+                .pop()
+                .ok_or_else(|| Error::Coordinator("executor lost tasks".into()))?;
+            self.pool.push(state);
+            self.stage_items += 1;
+            let (offset, extent) = (self.key)(&out);
+            self.buf.push(offset, extent, out)?;
+            while let Some(ready) = self.buf.pop_ready() {
+                send_counted(&self.tx, ready, &mut self.send_blocked)?;
+                self.released += 1;
+            }
+            progressed = true;
+        }
+        Ok(progressed)
+    }
+
+    /// Help the executor with (or block on) the oldest in-flight batch.
+    fn push_front_along(&mut self) {
+        let Some(front) = self.window.front() else { return };
+        if !front.help() {
+            let t0 = Instant::now();
+            front.wait();
+            self.exec_wait += t0.elapsed();
+        }
+    }
+
+    /// Block until there is room for one more submission: a free window
+    /// slot AND parked-headroom in the reorder buffer. In-order
+    /// submission means the window front is exactly the stream-head
+    /// batch, so driving it forward shrinks both gauges.
+    fn make_room(&mut self) -> Result<()> {
+        loop {
+            self.drain_done()?;
+            if self.window.len() < self.max_in_flight && self.buf.parked() < self.parked_bound {
+                return Ok(());
+            }
+            if self.window.is_empty() {
+                // Window empty ⇒ parked == 0 (everything collected was
+                // contiguous), so the gate above must have passed;
+                // defensive exit rather than a spin.
+                return Ok(());
+            }
+            self.push_front_along();
+        }
+    }
+
+    /// Submit one item as a single-task batch on the shared executor.
+    fn submit(&mut self, item: In) -> Result<()> {
+        self.make_room()?;
+        let state = self.pool.pop().unwrap_or_else(|| (self.init)());
+        let h = self.exec.submit(vec![(state, item)], self.priority, self.task_fn.clone());
+        self.window.push_back(h);
+        Ok(())
+    }
+
+    /// Drain every in-flight batch, then require the released stream to
+    /// have tiled completely (the reorder gap check).
+    fn finish(&mut self) -> Result<()> {
+        while !self.window.is_empty() {
+            if self.drain_done()? {
+                continue;
+            }
+            self.push_front_along();
+        }
+        self.buf.finish()
     }
 }
 
@@ -303,9 +488,11 @@ impl<T: Send + 'static> PipelineBuilder<T> {
     ) -> Self {
         let metrics: MetricsHandle = Arc::new(Mutex::new(Vec::new()));
         let slot = register_stage(&metrics, name);
-        let (tx, rx) = std::sync::mpsc::sync_channel::<T>(capacity.max(1));
+        let (tx, rx) = sync_channel::<T>(capacity.max(1));
         let m = metrics.clone();
         let name = name.to_string();
+        // Surviving source thread: I/O-bound producer, not stage work.
+        // det-lint: allow(stage-spawn)
         let handle = thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let t0 = Instant::now();
@@ -336,24 +523,26 @@ impl<T: Send + 'static> PipelineBuilder<T> {
     }
 
     /// Append a transform stage with thread-local state, built once on
-    /// the stage thread and handed to every invocation. This is the
-    /// pooled stage variant the fused streaming reduce uses: the state
-    /// holds reusable workspaces (plus an `Arc` handle to the run's
-    /// shared executor) so every shard is processed through the same
-    /// buffers with zero steady-state allocation. The state never crosses threads, so it does not need
-    /// to be `Send` — only the initializer does.
+    /// the stage thread and handed to every invocation (e.g. the
+    /// streaming checkpoint sink's open file + CRC state). The state
+    /// never crosses threads, so it does not need to be `Send` — only
+    /// the initializer does. Parallel work does not belong here: that is
+    /// [`Self::source_exec_ordered`]'s executor window.
     pub fn map_init<S: 'static, U: Send + 'static>(
         self,
         name: &str,
         init: impl FnOnce() -> S + Send + 'static,
         mut f: impl FnMut(&mut S, T) -> Result<U> + Send + 'static,
     ) -> PipelineBuilder<U> {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
+        let (tx, rx) = sync_channel::<U>(self.capacity);
         let slot = register_stage(&self.metrics, name);
         let m = self.metrics.clone();
         let name = name.to_string();
         let upstream = self.head;
         let mut handles = self.handles;
+        // Surviving sink/serial-map thread (e.g. the checkpoint sink):
+        // inherently sequential by contract, not parallel stage work.
+        // det-lint: allow(stage-spawn)
         handles.push(thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut blocked = Duration::ZERO;
@@ -384,107 +573,142 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         PipelineBuilder { capacity: self.capacity, metrics: self.metrics, head: rx, handles }
     }
 
-    /// Append a fan-out/fan-in transform: `stages` concurrent stage
-    /// threads, each with its own `init()`-built state (the `map_init`
-    /// pattern — e.g. one `ItisWorkspace` per stage, every stage
-    /// submitting its task batches into the run's one shared executor),
-    /// fed round-robin by a distributor thread and funneled into one
-    /// output channel. Item completion order is **not** stream order: a slow
-    /// item on one stage lets later items overtake it, so a downstream
-    /// consumer that needs stream order must follow with [`Self::reorder`].
+    /// Start an executor-native fan-out/fan-in pipeline head: one
+    /// thread runs `produce`, and its emit callback submits each item as
+    /// a single-task batch ([`Executor::submit`]) at `opts.priority` on
+    /// the run's shared team — there is no distributor thread and no
+    /// per-stage worker threads. Up to `opts.max_in_flight` batches ride
+    /// the executor concurrently (the `reduce_stages` knob), each with a
+    /// pooled `init()`-built state that is recycled across batches (so
+    /// states cross worker threads and must be `Send`). Completions are
+    /// collected back on this same thread, reordered inline through a
+    /// [`ReorderBuffer`] keyed by `key` (`(offset, extent)` tiling, resume
+    /// supported via `opts.start`), and sent downstream strictly in
+    /// stream order.
     ///
-    /// Metrics: one slot per stage thread (`{name}/0` … `{name}/N-1`)
-    /// plus the distributor (`{name}/rr`), all pre-registered in
-    /// topological order. Errors from any failing sibling propagate
-    /// through [`Pipeline::join`], which keeps the first *root-cause*
-    /// error even when the siblings' hang-up symptoms race it.
+    /// Metrics: three slots in topological order — `opts.source`
+    /// (produce time minus pump time), `opts.stage` (Σ batch run time as
+    /// `busy`, Σ executor queue-wait as `queued`, wait-for-completion as
+    /// `blocked`), and `opts.reorder` (released items, send backpressure
+    /// as `blocked`).
     ///
-    /// `init` and `f` run once per stage thread and are shared, so they
-    /// must be `Fn + Send + Sync` (per-item mutability lives in `S`).
-    pub fn map_init_parallel<S: 'static, U: Send + 'static>(
-        self,
-        name: &str,
-        stages: usize,
-        init: impl Fn() -> S + Send + Sync + 'static,
-        f: impl Fn(&mut S, T) -> Result<U> + Send + Sync + 'static,
-    ) -> PipelineBuilder<U> {
-        let stages = stages.max(1);
-        let (out_tx, out_rx) = std::sync::mpsc::sync_channel::<U>(self.capacity);
-        let mut handles = self.handles;
-        let metrics = self.metrics;
-        let init = Arc::new(init);
-        let f = Arc::new(f);
-        // Register the distributor before the workers so join() reports
-        // source → fan-out → workers in topological order.
-        let dist_slot = register_stage(&metrics, &format!("{name}/rr"));
-        let mut worker_txs = Vec::with_capacity(stages);
-        for i in 0..stages {
-            let (tx, rx) = std::sync::mpsc::sync_channel::<T>(self.capacity);
-            worker_txs.push(tx);
-            let worker_name = format!("{name}/{i}");
-            let slot = register_stage(&metrics, &worker_name);
-            let m = metrics.clone();
-            let out_tx = out_tx.clone();
-            let init = init.clone();
-            let f = f.clone();
-            handles.push(thread::spawn_named(format!("ihtc-stage-{worker_name}"), move || {
-                let mut stats = StageMetrics { name: worker_name, ..Default::default() };
-                let mut blocked = Duration::ZERO;
-                let mut state = (*init)();
-                let mut result = Ok(());
-                for item in rx {
-                    let t0 = Instant::now();
-                    match (*f)(&mut state, item) {
-                        Ok(out) => {
-                            stats.busy += t0.elapsed();
-                            if let Err(e) = send_counted(&out_tx, out, &mut blocked) {
-                                result = Err(e);
-                                break;
-                            }
-                            stats.items += 1;
-                        }
-                        Err(e) => {
-                            result = Err(e);
-                            break;
-                        }
-                    }
-                }
-                stats.blocked = blocked;
-                store_stage(&m, slot, stats);
-                result
-            }));
-        }
-        // Workers hold the only output senders: the channel closes when
-        // the last worker exits, not when the distributor does.
-        drop(out_tx);
-        let upstream = self.head;
+    /// Error propagation: a failing batch (including a panicking task,
+    /// surfaced as `Error::Coordinator("executor task panicked")`)
+    /// aborts the remaining in-flight batches via their handles' drop
+    /// and returns the root cause through [`Pipeline::join`]; a
+    /// `produce` error does the same. Tiling violations are the usual
+    /// hard [`Error::Coordinator`]s from [`ReorderBuffer`].
+    pub fn source_exec_ordered<In, S>(
+        opts: ExecStageOpts,
+        exec: std::sync::Arc<Executor>,
+        init: impl Fn() -> S + Send + 'static,
+        work: impl Fn(&mut S, In) -> Result<T> + Send + Sync + 'static,
+        key: impl Fn(&T) -> (usize, usize) + Send + 'static,
+        produce: impl FnOnce(&mut dyn FnMut(In) -> Result<()>) -> Result<()> + Send + 'static,
+    ) -> PipelineBuilder<T>
+    where
+        In: Send + 'static,
+        S: Send + 'static,
+    {
+        let metrics: MetricsHandle = Arc::new(Mutex::new(Vec::new()));
+        let src_slot = register_stage(&metrics, &opts.source);
+        let stage_slot = register_stage(&metrics, &opts.stage);
+        let ro_slot = register_stage(&metrics, &opts.reorder);
+        let capacity = opts.capacity.max(1);
+        let (tx, rx) = sync_channel::<T>(capacity);
         let m = metrics.clone();
-        let dist_name = format!("{name}/rr");
-        handles.push(thread::spawn_named(format!("ihtc-stage-{dist_name}"), move || {
-            let mut stats = StageMetrics { name: dist_name, ..Default::default() };
-            let mut busy = Duration::ZERO;
-            let mut blocked = Duration::ZERO;
-            let mut result = Ok(());
-            let mut next = 0usize;
-            for item in upstream {
-                // Busy covers only the hand-off itself (minus blocked
-                // backpressure) — idle recv waits on the upstream must
-                // not make the distributor look like the bottleneck.
-                let t0 = Instant::now();
-                if let Err(e) = send_counted(&worker_txs[next], item, &mut blocked) {
-                    result = Err(e);
-                    break;
+        // The ONE thread of the fused head: source + submit window +
+        // reorder fan-in. All parallel work lands on the shared
+        // executor team, so peak OS threads stay team + source + sink.
+        // det-lint: allow(stage-spawn)
+        let handle = thread::spawn_named(format!("ihtc-stage-{}", opts.source), move || {
+            let work = std::sync::Arc::new(work);
+            let task_fn = {
+                let work = std::sync::Arc::clone(&work);
+                move |(mut state, item): (S, In)| {
+                    let out = (work)(&mut state, item)?;
+                    Ok((state, out))
                 }
-                busy += t0.elapsed();
-                stats.items += 1;
-                next = (next + 1) % worker_txs.len();
+            };
+            let max_in_flight = opts.max_in_flight.max(1);
+            let parked_bound = opts.parked_bound.max(max_in_flight);
+            let mut pump = ExecPump {
+                exec,
+                priority: opts.priority,
+                max_in_flight,
+                parked_bound,
+                task_fn,
+                init: Box::new(init),
+                window: VecDeque::new(),
+                pool: Vec::new(),
+                // One drain pass can park up to a full window on top of
+                // the gate's parked headroom; sized so a tiling stream
+                // can never spuriously overflow.
+                buf: ReorderBuffer::with_start(parked_bound + max_in_flight, opts.start),
+                tx,
+                key,
+                stage_items: 0,
+                queued: Duration::ZERO,
+                run: Duration::ZERO,
+                exec_wait: Duration::ZERO,
+                send_blocked: Duration::ZERO,
+                released: 0,
+            };
+            let mut src_items = 0usize;
+            let mut pump_time = Duration::ZERO;
+            let t0 = Instant::now();
+            let mut emit = |item: In| -> Result<()> {
+                let e0 = Instant::now();
+                let r = pump.submit(item);
+                pump_time += e0.elapsed();
+                if r.is_ok() {
+                    src_items += 1;
+                }
+                r
+            };
+            let mut result = produce(&mut emit);
+            let produce_total = t0.elapsed();
+            drop(emit);
+            if result.is_ok() {
+                result = pump.finish();
             }
-            stats.busy = busy.saturating_sub(blocked);
-            stats.blocked = blocked;
-            store_stage(&m, dist_slot, stats);
+            store_stage(
+                &m,
+                src_slot,
+                StageMetrics {
+                    name: opts.source,
+                    items: src_items,
+                    busy: produce_total.saturating_sub(pump_time),
+                    ..Default::default()
+                },
+            );
+            store_stage(
+                &m,
+                stage_slot,
+                StageMetrics {
+                    name: opts.stage,
+                    items: pump.stage_items,
+                    busy: pump.run,
+                    blocked: pump.exec_wait,
+                    queued: pump.queued,
+                },
+            );
+            store_stage(
+                &m,
+                ro_slot,
+                StageMetrics {
+                    name: opts.reorder,
+                    items: pump.released,
+                    blocked: pump.send_blocked,
+                    ..Default::default()
+                },
+            );
+            // On error, dropping `pump` cancels the in-flight batches
+            // (each handle's drop aborts its unclaimed tasks) and closes
+            // `tx` so the sink drains out cleanly.
             result
-        }));
-        PipelineBuilder { capacity: self.capacity, metrics, head: out_rx, handles }
+        });
+        PipelineBuilder { capacity, metrics, head: rx, handles: vec![handle] }
     }
 
     /// Append a reorder stage: items arriving in any order are parked in
@@ -514,12 +738,15 @@ impl<T: Send + 'static> PipelineBuilder<T> {
         start: usize,
         key: impl Fn(&T) -> (usize, usize) + Send + 'static,
     ) -> PipelineBuilder<T> {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<T>(self.capacity);
+        let (tx, rx) = sync_channel::<T>(self.capacity);
         let slot = register_stage(&self.metrics, name);
         let m = self.metrics.clone();
         let name = name.to_string();
         let upstream = self.head;
         let mut handles = self.handles;
+        // Standalone reorder stage for channel-fed pipelines; the fused
+        // executor head reorders inline and does not use this thread.
+        // det-lint: allow(stage-spawn)
         handles.push(thread::spawn_named(format!("ihtc-stage-{name}"), move || {
             let mut stats = StageMetrics { name, ..Default::default() };
             let mut busy = Duration::ZERO;
@@ -636,123 +863,209 @@ mod tests {
         assert_eq!(id.items, 0, "send failed, so the item was not processed");
     }
 
-    #[test]
-    fn map_init_parallel_processes_everything() {
-        // 3 concurrent stage threads, per-stage state counting its own
-        // items: all inputs come out (order not guaranteed), per-stage
-        // metrics are pre-registered in topological order, and the
-        // distributor's round-robin spreads items across every stage.
-        let p = PipelineBuilder::source("gen", 2, |emit| {
-            for i in 0..99u64 {
-                emit(i)?;
-            }
-            Ok(())
-        })
-        .map_init_parallel("par", 3, || 0u64, |seen, x| {
-            *seen += 1;
-            Ok(x * 2)
-        })
-        .build();
-        let (mut out, metrics) = collect(p).unwrap();
-        out.sort_unstable();
-        assert_eq!(out, (0..99u64).map(|i| i * 2).collect::<Vec<_>>());
-        let names: Vec<&str> = metrics.iter().map(|m| m.name.as_str()).collect();
-        assert_eq!(names, ["gen", "par/rr", "par/0", "par/1", "par/2"]);
-        let rr = metrics.iter().find(|m| m.name == "par/rr").unwrap();
-        assert_eq!(rr.items, 99);
-        let worker_total: usize =
-            metrics.iter().filter(|m| m.name.starts_with("par/") && m.name != "par/rr")
-                .map(|m| m.items)
-                .sum();
-        assert_eq!(worker_total, 99);
-        // Round-robin distribution: every stage saw exactly a third.
-        assert!(metrics
-            .iter()
-            .filter(|m| m.name.starts_with("par/") && m.name != "par/rr")
-            .all(|m| m.items == 33));
+    /// Shorthand opts for the executor-stage tests.
+    fn opts(in_flight: usize, priority: Priority, start: usize) -> ExecStageOpts {
+        ExecStageOpts {
+            source: "gen".into(),
+            stage: "par".into(),
+            reorder: "reorder".into(),
+            capacity: 2,
+            max_in_flight: in_flight,
+            priority,
+            parked_bound: in_flight.max(4),
+            start,
+        }
     }
 
     #[test]
-    fn map_init_parallel_reorder_restores_stream_order() {
-        // Workers sleep a value-dependent amount so completion order is
-        // scrambled; the reorder stage must still release items strictly
-        // in stream order (offset = item index, extent 1).
-        let p = PipelineBuilder::source("gen", 2, |emit| {
-            for i in 0..40u64 {
-                emit(i)?;
-            }
-            Ok(())
-        })
-        .map_init_parallel("par", 4, || (), |_, x: u64| {
-            std::thread::sleep(Duration::from_millis((x * 7) % 5));
-            Ok(x)
-        })
-        .reorder("reorder", 64, |x: &u64| (*x as usize, 1))
+    fn exec_stage_processes_everything_in_order() {
+        // The fused head submits every item as a batch on the shared
+        // executor and reorders inline: all inputs come out *in stream
+        // order* (no trailing reorder stage needed), the three metric
+        // slots land in topological order, and the per-batch state is
+        // pooled rather than rebuilt.
+        let exec = std::sync::Arc::new(Executor::new(3));
+        let p = PipelineBuilder::source_exec_ordered(
+            opts(3, Priority::Normal, 0),
+            exec,
+            || 0u64,
+            |seen, x: u64| {
+                *seen += 1;
+                Ok((x, x * 2))
+            },
+            |t: &(u64, u64)| (t.0 as usize, 1),
+            |emit| {
+                for i in 0..99u64 {
+                    emit(i)?;
+                }
+                Ok(())
+            },
+        )
+        .build();
+        let (out, metrics) = collect(p).unwrap();
+        assert_eq!(out, (0..99u64).map(|i| (i, i * 2)).collect::<Vec<_>>());
+        let names: Vec<&str> = metrics.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, ["gen", "par", "reorder"]);
+        assert!(metrics.iter().all(|m| m.items == 99), "{metrics:?}");
+    }
+
+    #[test]
+    fn exec_stage_restores_stream_order_inline() {
+        // Batch run time is value-dependent so completion order on the
+        // team is scrambled; the inline buffer must still release items
+        // strictly in stream order, and the sleep must be attributed to
+        // batch *run* time (stage busy), not queue wait — the
+        // queue-wait/run split is what replaced per-thread busy clocks.
+        let exec = std::sync::Arc::new(Executor::new(4));
+        let p = PipelineBuilder::source_exec_ordered(
+            opts(4, Priority::High, 0),
+            exec,
+            || (),
+            |_, x: u64| {
+                std::thread::sleep(Duration::from_millis((x * 7) % 5));
+                Ok(x)
+            },
+            |x: &u64| (*x as usize, 1),
+            |emit| {
+                for i in 0..40u64 {
+                    emit(i)?;
+                }
+                Ok(())
+            },
+        )
         .build();
         let (out, metrics) = collect(p).unwrap();
         assert_eq!(out, (0..40u64).collect::<Vec<_>>());
+        let par = metrics.iter().find(|m| m.name == "par").unwrap();
+        assert_eq!(par.items, 40);
+        // Σ sleeps ≈ 80ms; all of it is run time inside the batches.
+        assert!(
+            par.busy >= Duration::from_millis(40),
+            "sleeps must land in stage busy (run) time, got {:?}",
+            par.busy
+        );
         let ro = metrics.iter().find(|m| m.name == "reorder").unwrap();
         assert_eq!(ro.items, 40);
     }
 
     #[test]
-    fn parallel_stage_error_is_root_cause() {
-        // One of several siblings fails; the distributor and source
-        // report hang-up symptoms, the surviving siblings drain cleanly —
-        // join must surface the failing sibling's own error.
-        let p = PipelineBuilder::source("gen", 1, |emit| {
-            for i in 0..50u64 {
-                emit(i)?;
-            }
-            Ok(())
-        })
-        .map_init_parallel("par", 3, || (), |_, x: u64| {
-            if x == 7 {
-                Err(Error::Data("poison shard".into()))
-            } else {
-                Ok(x)
-            }
-        })
+    fn exec_stage_error_is_root_cause() {
+        // One batch fails mid-stream: the pump aborts the remaining
+        // in-flight batches and the failing task's own error surfaces
+        // through join — never a hang-up symptom.
+        let exec = std::sync::Arc::new(Executor::new(3));
+        let p = PipelineBuilder::source_exec_ordered(
+            opts(3, Priority::Normal, 0),
+            exec,
+            || (),
+            |_, x: u64| {
+                if x == 7 {
+                    Err(Error::Data("poison shard".into()))
+                } else {
+                    Ok(x)
+                }
+            },
+            |x: &u64| (*x as usize, 1),
+            |emit| {
+                for i in 0..50u64 {
+                    emit(i)?;
+                }
+                Ok(())
+            },
+        )
         .build();
         let err = collect(p).unwrap_err();
         assert!(err.to_string().contains("poison shard"), "{err}");
     }
 
     #[test]
-    fn source_error_with_parallel_stages_is_root_cause() {
-        // The source dies mid-stream while several reduce stages are
-        // still draining: the stage threads and distributor see their
-        // channels close and report hang-up symptoms — join must surface
-        // the source's own error, for every fan-out width.
-        for stages in [2usize, 4] {
-            let p = PipelineBuilder::source("gen", 1, |emit| {
-                for i in 0..20u64 {
-                    emit(i)?;
-                }
-                Err(Error::Data("source torn mid-stream".into()))
-            })
-            .map_init_parallel("par", stages, || (), |_, x: u64| Ok(x))
-            .reorder("reorder", 64, |x: &u64| (*x as usize, 1))
+    fn source_error_with_exec_stage_is_root_cause() {
+        // The producer dies mid-stream while batches are still in
+        // flight: the pump's drop cancels them, and join must surface
+        // the source's own error — for every in-flight width, including
+        // widths above the worker budget.
+        for in_flight in [2usize, 4] {
+            let exec = std::sync::Arc::new(Executor::new(2));
+            let p = PipelineBuilder::source_exec_ordered(
+                opts(in_flight, Priority::Bulk, 0),
+                exec,
+                || (),
+                |_, x: u64| Ok(x),
+                |x: &u64| (*x as usize, 1),
+                |emit| {
+                    for i in 0..20u64 {
+                        emit(i)?;
+                    }
+                    Err(Error::Data("source torn mid-stream".into()))
+                },
+            )
             .build();
             let err = collect(p).unwrap_err();
-            assert!(matches!(err, Error::Data(_)), "stages={stages}: {err}");
-            assert!(err.to_string().contains("source torn mid-stream"), "stages={stages}: {err}");
+            assert!(matches!(err, Error::Data(_)), "in_flight={in_flight}: {err}");
+            assert!(
+                err.to_string().contains("source torn mid-stream"),
+                "in_flight={in_flight}: {err}"
+            );
         }
     }
 
     #[test]
-    fn reorder_from_resumes_mid_stream() {
-        // A resumed stream starts at the checkpoint row, not 0: the
-        // buffer releases [30, 70) in order, and an arrival below the
-        // start offset is the usual duplicate/overlap hard error.
-        let p = PipelineBuilder::source("gen", 2, |emit| {
-            for i in (30..70u64).rev() {
-                emit(i)?;
-            }
-            Ok(())
-        })
-        .map_init_parallel("par", 3, || (), |_, x: u64| Ok(x))
-        .reorder_from("reorder", 64, 30, |x: &u64| (*x as usize, 1))
+    fn exec_stage_serial_executor_matches_wide() {
+        // Budget-1 executor: submit() runs each batch inline and the
+        // handle is born complete — output must be identical to a wide
+        // team, and max_in_flight above the worker budget is explicitly
+        // fine (it is an in-flight cap, not a thread budget).
+        let run = |workers: usize, in_flight: usize| {
+            let exec = std::sync::Arc::new(Executor::new(workers));
+            let p = PipelineBuilder::source_exec_ordered(
+                opts(in_flight, Priority::Normal, 0),
+                exec,
+                || 0u64,
+                |acc, x: u64| {
+                    *acc = acc.wrapping_add(x);
+                    Ok(x * 3)
+                },
+                |x: &u64| ((*x / 3) as usize, 1),
+                |emit| {
+                    for i in 0..60u64 {
+                        emit(i)?;
+                    }
+                    Ok(())
+                },
+            )
+            .build();
+            collect(p).unwrap().0
+        };
+        let want = run(1, 1);
+        for (workers, in_flight) in [(1, 4), (2, 2), (4, 3)] {
+            assert_eq!(run(workers, in_flight), want, "workers={workers} in_flight={in_flight}");
+        }
+    }
+
+    #[test]
+    fn exec_stage_resumes_mid_stream() {
+        // A resumed stream starts at the checkpoint row, not 0:
+        // submission is in stream order from offset 30, completions
+        // scramble on the team, and the inline buffer releases [30, 70)
+        // in order. An arrival below the start offset stays the usual
+        // duplicate/overlap hard error (raw buffer checks below).
+        let exec = std::sync::Arc::new(Executor::new(3));
+        let p = PipelineBuilder::source_exec_ordered(
+            opts(3, Priority::Normal, 30),
+            exec,
+            || (),
+            |_, x: u64| {
+                std::thread::sleep(Duration::from_millis((x * 3) % 4));
+                Ok(x)
+            },
+            |x: &u64| (*x as usize, 1),
+            |emit| {
+                for i in 30..70u64 {
+                    emit(i)?;
+                }
+                Ok(())
+            },
+        )
         .build();
         let (out, _) = collect(p).unwrap();
         assert_eq!(out, (30..70u64).collect::<Vec<_>>());
@@ -760,7 +1073,9 @@ mod tests {
         let mut buf = ReorderBuffer::with_start(8, 30);
         assert!(buf.push(10, 5, ()).is_err(), "pre-start arrival must be rejected");
         buf.push(30, 5, ()).unwrap();
+        assert_eq!(buf.parked(), 1);
         assert!(buf.pop_ready().is_some());
+        assert_eq!(buf.parked(), 0);
         assert_eq!(buf.released_through(), 35);
         buf.finish().unwrap();
     }
@@ -1003,7 +1318,7 @@ mod tests {
             name: "x".into(),
             items: 100,
             busy: Duration::from_secs(2),
-            blocked: Duration::ZERO,
+            ..Default::default()
         };
         assert!((m.throughput() - 50.0).abs() < 1e-9);
     }

@@ -29,6 +29,14 @@
 //!   bring up exactly one team.
 //! * `loom_shutdown_wakeup_not_lost` — drop racing a worker that may
 //!   sit anywhere between its shutdown check and its condvar wait.
+//! * `loom_submit_handle_wait_no_lost_wakeup` — the non-blocking
+//!   `submit` → `BatchHandle::collect` path: queue hand-off to a
+//!   background worker, the handle's help/wait handshake, result
+//!   publication through the owned context.
+//! * `loom_submit_drop_aborts_unclaimed` — dropping an uncollected
+//!   handle races the worker's claims: `abort_rest` + the drop-side
+//!   wait must neither hang nor double-count, and no task may run
+//!   after its cancellation.
 
 use super::*;
 
@@ -205,6 +213,41 @@ fn loom_shutdown_wakeup_not_lost() {
         // Drop races the worker through every point of its loop —
         // including the window between its shutdown check and its
         // condvar wait. Model completion == no stranded worker.
+        drop(exec);
+    });
+}
+
+#[test]
+fn loom_submit_handle_wait_no_lost_wakeup() {
+    loom::model(|| {
+        // Budget 2 ⇒ one background worker racing the handle holder
+        // through submit → claim/execute → done-notify → collect. The
+        // worker may finish before, during, or after the handle's
+        // help/wait — collect must never strand (lost wakeup) and must
+        // see every result (the remaining Release/Acquire edge).
+        let exec = Executor::new(2);
+        let h = exec.submit(vec![1usize, 2], Priority::High, |t| Ok(t + 10));
+        assert_eq!(h.collect().unwrap(), vec![11, 12]);
+        drop(exec);
+    });
+}
+
+#[test]
+fn loom_submit_drop_aborts_unclaimed() {
+    loom::model(|| {
+        let exec = Executor::new(2);
+        let ran = AtomicUsize::new(0);
+        let h = exec.submit(vec![(), (), ()], Priority::Bulk, |()| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        });
+        // Drop without collecting: abort_rest bulk-claims whatever the
+        // worker has not claimed yet, then waits out in-flight tasks so
+        // the owned context cannot free under a live dereference. Model
+        // completion == no hang; the counter bounds prove cancelled
+        // tasks never ran.
+        drop(h);
+        assert!(ran.load(Ordering::Relaxed) <= 3);
         drop(exec);
     });
 }

@@ -3,20 +3,20 @@
 //! Before this module, every parallel layer spawned its own thread team:
 //! each `ShardReducer`, kd-forest build, k-means assignment pass, and
 //! ITIS prototype reduction went through a per-call `WorkerPool` (scoped
-//! threads spawned and joined per invocation), and the streaming
-//! pipeline *statically divided* the worker budget across reduce stages
-//! (`resolve_workers(workers) / reduce_stages`, min 1) — stranding
-//! threads when one stage's shard was harder than its siblings', and
-//! oversubscribing when `reduce_stages > workers`. [`Executor`] replaces
-//! all of that with a single persistent team:
+//! threads spawned and joined per invocation). [`Executor`] replaced all
+//! of that with a single persistent team, and the streaming pipeline is
+//! now executor-native too: per-shard reduce work arrives as submitted
+//! batches ([`Executor::submit`] → [`BatchHandle`]) instead of running
+//! on dedicated stage threads, so `reduce_stages` caps *in-flight
+//! batches*, not OS threads.
 //!
 //! * **One team per run.** The driver (and `Ihtc::run_with` for the
 //!   materialized path) creates one `Executor`; every parallel site —
 //!   kd-tree builds, `KdForest` shard builds, pooled k-NN queries, the
 //!   ITIS prototype reduction, k-means assignment parts, and the
-//!   streaming reduce stages — submits task batches into it by
-//!   reference (or via a shared [`std::sync::Arc`] from the pipeline's
-//!   stage threads).
+//!   streaming per-shard reduce batches — submits task batches into it
+//!   by reference (or via a shared [`std::sync::Arc`] from the
+//!   pipeline's source thread).
 //! * **Submitters are workers.** `Executor::new(w)` spawns `w − 1`
 //!   background threads; the thread calling [`Executor::run_tasks`]
 //!   participates in its own batch, so one active submitter runs on
@@ -26,27 +26,31 @@
 //!   submitters *share* the one background team instead of multiplying
 //!   it: peak compute threads are `w − 1 + S` (each submitter occupies
 //!   its own thread while active), bounded and transient, where the
-//!   per-call-pool scheme would have run `S · w`.
-//! * **Work-stealing across batches.** Batches queue in a shared
-//!   injector; idle workers claim tasks from queued batches through an
+//!   per-call-pool scheme would have run `S · w`. A [`BatchHandle`]
+//!   holder can likewise pitch in via [`BatchHandle::help`]/`wait`.
+//! * **Work-stealing across batches, priorities across classes.**
+//!   Batches queue in per-[`Priority`] injectors; idle workers always
+//!   serve the highest non-empty class, then claim tasks through an
 //!   atomic cursor (the stealing granularity), so when one streaming
-//!   reduce stage hits a hard shard, the whole team converges on it
-//!   while lighter stages' submitters finish their own batches solo.
-//!   [`StealPolicy`] picks which queued batch idle workers serve first;
+//!   reduce batch is hard, the whole team converges on it while lighter
+//!   batches' submitters finish solo. [`StealPolicy`] picks which
+//!   queued batch idle workers serve first *within* a class;
 //!   `fair_stages` caps how many tasks a worker takes from one batch
-//!   before re-selecting, so a giant batch cannot starve its siblings.
+//!   before re-selecting, so a giant batch cannot starve its siblings —
+//!   and the re-selection re-reads the class scan, so newly arrived
+//!   high-priority work overtakes within one fairness grain.
 //! * **Determinism.** Results are keyed by submission index and
 //!   returned in task order, and every in-tree task partitioning is
 //!   index-deterministic — so output bytes never depend on the worker
-//!   count, the steal policy, or scheduling (the byte-parity suites in
-//!   `rust/tests/` pin this down).
+//!   count, the steal policy, the priority class, or scheduling (the
+//!   byte-parity suites in `rust/tests/` pin this down).
 //!
 //! No in-tree code spawns ad-hoc threads anymore: the driver
 //! paths create one `Executor` per run and share it, while the
 //! workspace-less convenience entry points (`knn_auto`, `itis`,
 //! `Ihtc::run`, `DefaultKnn`) construct a short-lived machine-default
 //! `Executor` per call. Background workers spawn lazily on the first
-//! multi-task batch, so those throwaway executors cost nothing on
+//! submitted batch, so those throwaway executors cost nothing on
 //! serial-fallback workloads and one team spawn (the retired scoped
 //! pools' cost) when a parallel section engages; pass an executor
 //! explicitly to amortize the team across calls.
@@ -56,6 +60,9 @@ use crate::sync::thread::JoinHandle;
 use crate::sync::{thread, Arc, Condvar, Mutex};
 use crate::{Error, Result};
 use std::collections::VecDeque;
+use std::time::Duration;
+#[cfg(not(loom))]
+use std::time::Instant;
 
 #[cfg(all(loom, test))]
 mod loom_tests;
@@ -81,6 +88,52 @@ pub enum StealPolicy {
     Lifo,
 }
 
+/// Priority class of a submitted batch. Workers always serve the
+/// highest non-empty class; [`StealPolicy`] and the fairness rotation
+/// order batches *within* a class. Priorities are scheduling-only:
+/// results stay keyed by submission index, so output bytes are
+/// identical whatever class work runs in — pinned by the priority sweep
+/// in `rust/tests/exec_determinism.rs`, like steal/fairness already are.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Priority {
+    /// Overtakes everything else queued — the class for latency-critical
+    /// work (e.g. assignment-serving query batches that must not sit
+    /// behind a bulk re-index).
+    High,
+    /// The default class; [`Executor::run_tasks`] submits here.
+    #[default]
+    Normal,
+    /// Yields to everything else queued — background maintenance work.
+    Bulk,
+}
+
+impl Priority {
+    /// Number of classes (the per-priority queue array size).
+    const COUNT: usize = 3;
+
+    /// Every class, highest first — for byte-parity test sweeps.
+    pub const ALL: [Priority; Priority::COUNT] = [Priority::High, Priority::Normal, Priority::Bulk];
+
+    /// Queue index: highest priority scans first.
+    fn index(self) -> usize {
+        match self {
+            Priority::High => 0,
+            Priority::Normal => 1,
+            Priority::Bulk => 2,
+        }
+    }
+
+    /// Parse a config-file value (`"high" | "normal" | "bulk"`).
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            "bulk" => Some(Priority::Bulk),
+            _ => None,
+        }
+    }
+}
+
 /// Executor construction knobs (the config file's `executor` block).
 #[derive(Clone, Copy, Debug)]
 pub struct ExecutorConfig {
@@ -89,13 +142,14 @@ pub struct ExecutorConfig {
     /// thread itself. Taken literally — the config layer enforces a
     /// sanity ceiling; direct API callers own their budget.
     pub workers: usize,
-    /// Which queued batch idle workers serve first.
+    /// Which queued batch idle workers serve first (within a class).
     pub steal: StealPolicy,
-    /// When several batches are queued (e.g. concurrent reduce stages),
-    /// cap how many tasks a worker takes from one batch before
-    /// re-selecting, and rotate the served batch to the back of the
-    /// queue — so no stage's batch starves its siblings. Off, a worker
-    /// drains its chosen batch completely.
+    /// When several batches are queued (e.g. concurrent in-flight reduce
+    /// batches), cap how many tasks a worker takes from one batch before
+    /// re-selecting, and rotate the served batch to the back of its
+    /// class queue — so no batch starves its same-priority siblings.
+    /// Off, a worker drains its chosen batch completely. Higher-priority
+    /// classes always preempt the rotation at re-selection time.
     pub fair_stages: bool,
 }
 
@@ -110,9 +164,47 @@ impl Default for ExecutorConfig {
 /// re-selection lock touch is noise).
 const FAIR_GRAIN: usize = 8;
 
+/// Wall-clock stamps for one batch — metrics only, never read by any
+/// scheduling decision (the wallclock lint allowlists this module for
+/// exactly this struct). Not compiled under loom: `Instant` would
+/// explode the model's state space for no modeled behavior.
+#[cfg(not(loom))]
+struct BatchTiming {
+    submitted: Instant,
+    /// Stamped by whichever thread claims index 0 — the first claim in
+    /// the cursor's modification order — ending the queue-wait span.
+    first_claim: Mutex<Option<Instant>>,
+    /// Stamped when `remaining` reaches 0 (under the `done` lock).
+    finished: Mutex<Option<Instant>>,
+}
+
+#[cfg(not(loom))]
+impl BatchTiming {
+    fn start() -> Self {
+        Self { submitted: Instant::now(), first_claim: Mutex::new(None), finished: Mutex::new(None) }
+    }
+
+    /// `(queue_wait, run_time)` once the batch is done; zeros before.
+    fn queue_and_run(&self) -> (Duration, Duration) {
+        let first = *self.first_claim.lock().unwrap();
+        let fin = *self.finished.lock().unwrap();
+        match (first, fin) {
+            (Some(fc), Some(fi)) => (
+                fc.saturating_duration_since(self.submitted),
+                fi.saturating_duration_since(fc),
+            ),
+            // Aborted before any claim: the whole span was queue wait.
+            (None, Some(fi)) => (fi.saturating_duration_since(self.submitted), Duration::ZERO),
+            _ => (Duration::ZERO, Duration::ZERO),
+        }
+    }
+}
+
 /// One submitted batch: `n` type-erased tasks claimed through an atomic
-/// cursor. The `ctx` pointer targets a stack frame inside the submitting
-/// `run_tasks` call; see the safety argument on [`Executor::run_tasks`].
+/// cursor. The `ctx` pointer targets either a stack frame inside the
+/// submitting `run_tasks` call or the heap-pinned `OwnedCtx` of a
+/// [`BatchHandle`]; see the safety arguments on [`Executor::run_tasks`]
+/// and [`Executor::submit`].
 struct Batch {
     n: usize,
     /// Next unclaimed task index; claims beyond `n` mean "exhausted".
@@ -124,17 +216,19 @@ struct Batch {
     // SAFETY contract of the fn pointer: callers must pass this batch's
     // own `ctx` and an index claimed from `cursor` — see `run_erased`.
     run: unsafe fn(*const (), usize) -> bool,
-    /// Borrowed batch state (slots, results, closure) on the submitter's
-    /// stack. Only dereferenced for successfully claimed indices.
+    /// Borrowed batch state (slots, results, closure). Only dereferenced
+    /// for successfully claimed indices.
     ctx: *const (),
     done: Mutex<()>,
     done_cv: Condvar,
+    #[cfg(not(loom))]
+    timing: BatchTiming,
 }
 
 // SAFETY: `ctx` is only dereferenced through `run` for claimed task
-// indices, and the submitter blocks until `remaining == 0`, which
-// happens strictly after the last such dereference — so the pointee
-// outlives every access. All other fields are Sync primitives.
+// indices, and the submitter (or handle) blocks until `remaining == 0`,
+// which happens strictly after the last such dereference — so the
+// pointee outlives every access. All other fields are Sync primitives.
 unsafe impl Send for Batch {}
 unsafe impl Sync for Batch {}
 
@@ -161,6 +255,12 @@ impl Batch {
         }
         let i = self.cursor.fetch_add(1, Ordering::Relaxed);
         if i < self.n {
+            #[cfg(not(loom))]
+            if i == 0 {
+                // Index 0 is the first claim in the cursor's modification
+                // order: stamp the end of the batch's queue wait.
+                *self.timing.first_claim.lock().unwrap() = Some(Instant::now());
+            }
             Some(i)
         } else {
             None
@@ -197,6 +297,10 @@ impl Batch {
             // Take the lock so a submitter between its predicate check
             // and `wait` cannot miss this wakeup.
             let _guard = self.done.lock().unwrap();
+            #[cfg(not(loom))]
+            {
+                *self.timing.finished.lock().unwrap() = Some(Instant::now());
+            }
             self.done_cv.notify_all();
         }
     }
@@ -206,33 +310,39 @@ impl Batch {
     /// covered here — their claimers decrement for them — so every
     /// index is counted exactly once whichever way the race goes.
     ///
-    /// Ordering audit (loom: `abort_rest_accounts_every_index_once`):
-    /// the `swap` is `Relaxed` for the same reason `claim`'s `fetch_add`
-    /// is — it is an RMW on the cursor's modification order, so it
-    /// partitions indices exactly: everything below `prev` was (or will
-    /// be) claimed by racing `fetch_add`s, everything in `prev..n` is
-    /// accounted here and can never be claimed afterwards. The
-    /// `fetch_sub` on `remaining` is `Release` so that a bulk decrement
-    /// that happens to be the *last* one still orders this thread's
-    /// prior task writes before the submitter's Acquire observation.
+    /// Ordering audit (loom: `abort_rest_accounts_every_index_once`,
+    /// `submit_drop_aborts_unclaimed`): the `swap` is `Relaxed` for the
+    /// same reason `claim`'s `fetch_add` is — it is an RMW on the
+    /// cursor's modification order, so it partitions indices exactly:
+    /// everything below `prev` was (or will be) claimed by racing
+    /// `fetch_add`s, everything in `prev..n` is accounted here and can
+    /// never be claimed afterwards. The `fetch_sub` on `remaining` is
+    /// `Release` so that a bulk decrement that happens to be the *last*
+    /// one still orders this thread's prior task writes before the
+    /// submitter's Acquire observation.
     fn abort_rest(&self) {
         let prev = self.cursor.swap(self.n, Ordering::Relaxed);
         let skipped = self.n.saturating_sub(prev);
         if skipped > 0 && self.remaining.fetch_sub(skipped, Ordering::Release) == skipped {
             let _guard = self.done.lock().unwrap();
+            #[cfg(not(loom))]
+            {
+                *self.timing.finished.lock().unwrap() = Some(Instant::now());
+            }
             self.done_cv.notify_all();
         }
     }
 
     /// Block until every task has finished executing.
     ///
-    /// No lost wakeup (loom: `wait_notify_no_lost_wakeup`): the
-    /// predicate is checked while holding `done`, and notifiers take
-    /// `done` *before* `notify_all` — so a notifier can never fire in
-    /// the window between this thread's predicate check and its `wait`
-    /// (which releases the lock atomically). The `Acquire` load pairs
-    /// with the `Release` `fetch_sub`s in `execute`/`abort_rest`; see
-    /// the comment there for why that edge is load-bearing.
+    /// No lost wakeup (loom: `wait_notify_no_lost_wakeup`,
+    /// `submit_handle_wait_no_lost_wakeup`): the predicate is checked
+    /// while holding `done`, and notifiers take `done` *before*
+    /// `notify_all` — so a notifier can never fire in the window between
+    /// this thread's predicate check and its `wait` (which releases the
+    /// lock atomically). The `Acquire` load pairs with the `Release`
+    /// `fetch_sub`s in `execute`/`abort_rest`; see the comment there for
+    /// why that edge is load-bearing.
     fn wait(&self) {
         let mut guard = self.done.lock().unwrap();
         while self.remaining.load(Ordering::Acquire) > 0 {
@@ -243,7 +353,10 @@ impl Batch {
 
 /// State shared between the executor handle and its background workers.
 struct Shared {
-    queue: Mutex<VecDeque<Arc<Batch>>>,
+    /// One injector per [`Priority`] class, indexed by
+    /// `Priority::index` (highest first). Workers always serve the
+    /// highest non-empty class.
+    queues: Mutex<[VecDeque<Arc<Batch>>; Priority::COUNT]>,
     available: Condvar,
     shutdown: AtomicBool,
     steal: StealPolicy,
@@ -254,17 +367,25 @@ struct Shared {
 fn worker_loop(shared: &Shared) {
     loop {
         let batch = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut qs = shared.queues.lock().unwrap();
             loop {
                 if shared.shutdown.load(Ordering::Relaxed) {
                     return;
                 }
-                q.retain(|b| !b.exhausted());
-                let picked = match shared.steal {
-                    StealPolicy::Fifo => q.pop_front(),
-                    StealPolicy::Lifo => q.pop_back(),
-                };
-                if let Some(b) = picked {
+                for q in qs.iter_mut() {
+                    q.retain(|b| !b.exhausted());
+                }
+                // Serve the highest-priority class with queued work; the
+                // steal policy and the fairness rotation apply *within*
+                // that class. Because every re-selection re-runs this
+                // scan, freshly queued higher-priority batches overtake
+                // within one fairness grain.
+                if let Some(q) = qs.iter_mut().find(|q| !q.is_empty()) {
+                    let b = match shared.steal {
+                        StealPolicy::Fifo => q.pop_front(),
+                        StealPolicy::Lifo => q.pop_back(),
+                    }
+                    .expect("class queue checked non-empty");
                     // Keep the batch visible to the other workers; under
                     // fairness it goes to the far end so the next idle
                     // worker serves a *different* batch first.
@@ -281,7 +402,7 @@ fn worker_loop(shared: &Shared) {
                     }
                     break b;
                 }
-                q = shared.available.wait(q).unwrap();
+                qs = shared.available.wait(qs).unwrap();
             }
         };
         let grain = if shared.fair { FAIR_GRAIN } else { usize::MAX };
@@ -295,6 +416,72 @@ fn worker_loop(shared: &Shared) {
             }
         }
     }
+}
+
+/// Execute task `i` against the given slot/result/flag/closure state —
+/// the shared body of the borrowed (`run_erased`) and owned
+/// (`run_owned`) trampolines, and of the inline `submit` path. Returns
+/// true when the task failed (the batch should abort).
+fn run_slot<T, R, F: Fn(T) -> Result<R>>(
+    slots: &[Mutex<Option<T>>],
+    results: &[Mutex<Option<Result<R>>>],
+    failed: &AtomicBool,
+    f: &F,
+    i: usize,
+) -> bool {
+    let task = slots[i].lock().unwrap().take();
+    let Some(task) = task else { return false };
+    // Ordering audit (loom: `run_tasks_publishes_results`): `failed` is
+    // Relaxed on both sides because it is advisory-only — a stale
+    // `false` merely executes one more task whose result is then
+    // discarded by the collector's first-error scan, and a stale `true`
+    // cannot occur before some task actually failed (the store is
+    // program-ordered after the failing result is recorded under its
+    // slot mutex). No correctness property reads through this flag.
+    if failed.load(Ordering::Relaxed) {
+        // A sibling already failed: drop the task unexecuted (its result
+        // stays `None`; the collector reports the recorded error).
+        return false;
+    }
+    // A panicking task must still decrement `remaining` (the caller's
+    // `execute` does) or the submitter would deadlock — convert it into
+    // an error instead of unwinding through the worker loop.
+    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(task)))
+        .unwrap_or_else(|_| Err(Error::Coordinator("executor task panicked".into())));
+    let is_err = out.is_err();
+    if is_err {
+        failed.store(true, Ordering::Relaxed);
+    }
+    *results[i].lock().unwrap() = Some(out);
+    is_err
+}
+
+/// Drain `results` in submission order; first recorded error wins, and
+/// a shortfall without an error is the "lost tasks" invariant breach.
+fn collect_results<R>(results: &[Mutex<Option<Result<R>>>]) -> Result<Vec<R>> {
+    // Slots are drained through `lock()` rather than `into_inner()` —
+    // the facade's loom double does not expose consuming accessors, and
+    // after the wait every lock is uncontended anyway.
+    let mut out = Vec::with_capacity(results.len());
+    let mut first_err = None;
+    for slot in results {
+        match slot.lock().unwrap().take() {
+            Some(Ok(v)) => out.push(v),
+            Some(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            None => {}
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if out.len() != results.len() {
+        return Err(Error::Coordinator("executor lost tasks".into()));
+    }
+    Ok(out)
 }
 
 /// Borrowed state of one `run_tasks` batch, erased behind `Batch::ctx`.
@@ -317,38 +504,146 @@ unsafe fn run_erased<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
 ) -> bool {
     // SAFETY: forwarded from the caller's contract.
     let ctx = unsafe { &*(p as *const BatchCtx<'_, T, R, F>) };
-    let task = ctx.slots[i].lock().unwrap().take();
-    let Some(task) = task else { return false };
-    // Ordering audit (loom: `run_tasks_publishes_results`): `failed` is
-    // Relaxed on both sides because it is advisory-only — a stale
-    // `false` merely executes one more task whose result is then
-    // discarded by the collector's first-error scan, and a stale `true`
-    // cannot occur before some task actually failed (the store is
-    // program-ordered after the failing result is recorded under its
-    // slot mutex). No correctness property reads through this flag.
-    if ctx.failed.load(Ordering::Relaxed) {
-        // A sibling already failed: drop the task unexecuted (its result
-        // stays `None`; the collector reports the recorded error).
-        return false;
+    run_slot(ctx.slots, ctx.results, ctx.failed, ctx.f, i)
+}
+
+/// Owned state of one `submit` batch, heap-pinned inside its
+/// [`BatchHandle`] and erased behind `Batch::ctx`.
+struct OwnedCtx<T, R, F> {
+    slots: Vec<Mutex<Option<T>>>,
+    results: Vec<Mutex<Option<Result<R>>>>,
+    failed: AtomicBool,
+    f: F,
+}
+
+/// Monomorphized trampoline for owned-context batches.
+///
+/// # Safety
+/// `p` must point to a live `OwnedCtx<T, R, F>` and `i` must be a
+/// claimed, not-yet-executed index into its slots. Liveness is the
+/// handle's obligation: both `collect` and `Drop` wait for
+/// `remaining == 0` before the `Box<OwnedCtx>` can free.
+unsafe fn run_owned<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
+    p: *const (),
+    i: usize,
+) -> bool {
+    // SAFETY: forwarded from the caller's contract.
+    let ctx = unsafe { &*(p as *const OwnedCtx<T, R, F>) };
+    run_slot(&ctx.slots, &ctx.results, &ctx.failed, &ctx.f, i)
+}
+
+/// A non-blocking batch submitted via [`Executor::submit`]: poll with
+/// [`done`](Self::done), contribute cycles with [`help`](Self::help),
+/// block with [`wait`](Self::wait), and take the results (submission
+/// order, first error wins) with [`collect`](Self::collect).
+///
+/// Dropping the handle **aborts** the batch: every unclaimed task is
+/// cancelled, and the drop blocks only for tasks already running on
+/// workers (their claims were made before the abort). That wait is what
+/// keeps the erased context pointer sound — the `Box<OwnedCtx>` inside
+/// the handle must outlive the last worker dereference, exactly the
+/// frame-lifetime argument `run_tasks` makes for its stack context,
+/// with the heap allocation as the "frame" (loom:
+/// `submit_drop_aborts_unclaimed`).
+pub struct BatchHandle<T, R, F> {
+    /// `None` on the inline path (budget-1 executor, or an empty task
+    /// list): the batch completed during `submit` itself.
+    batch: Option<Arc<Batch>>,
+    /// Heap-pinned so `Batch::ctx`'s raw pointer stays valid while the
+    /// handle value moves around (queues of handles, returns).
+    ctx: Box<OwnedCtx<T, R, F>>,
+    /// Run time of the inline path (its queue wait is zero by
+    /// construction).
+    #[cfg(not(loom))]
+    inline_run: Duration,
+}
+
+impl<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync> BatchHandle<T, R, F> {
+    /// True once every task has finished (or been aborted).
+    ///
+    /// The `Acquire` load pairs with the `Release` `fetch_sub`s in
+    /// `Batch::execute`/`abort_rest`: observing 0 here makes every
+    /// task's result write visible to a subsequent `collect`.
+    pub fn done(&self) -> bool {
+        match &self.batch {
+            None => true,
+            Some(b) => b.remaining.load(Ordering::Acquire) == 0,
+        }
     }
-    // A panicking task must still decrement `remaining` (the caller's
-    // `execute` does) or the submitter would deadlock — convert it into
-    // an error instead of unwinding through the worker loop.
-    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| (ctx.f)(task)))
-        .unwrap_or_else(|_| Err(Error::Coordinator("executor task panicked".into())));
-    let failed = out.is_err();
-    if failed {
-        ctx.failed.store(true, Ordering::Relaxed);
+
+    /// Claim and execute one of this batch's own tasks on the calling
+    /// thread. Returns false when every task is already claimed — the
+    /// holder's cue that only waiting remains.
+    pub fn help(&self) -> bool {
+        let Some(b) = &self.batch else { return false };
+        match b.claim() {
+            Some(i) => {
+                // SAFETY: `i` was just claimed from this handle's own
+                // batch, whose `OwnedCtx` is alive for as long as the
+                // handle (self) is borrowed here.
+                unsafe { b.execute(i) };
+                true
+            }
+            None => false,
+        }
     }
-    *ctx.results[i].lock().unwrap() = Some(out);
-    failed
+
+    /// Drive remaining unclaimed tasks on this thread, then block until
+    /// tasks claimed by workers finish too.
+    pub fn wait(&self) {
+        let Some(b) = &self.batch else { return };
+        while self.help() {}
+        b.wait();
+    }
+
+    /// Wait for completion and take the results in submission order;
+    /// the first task error (or panic, surfaced as
+    /// `Error::Coordinator("executor task panicked")`) wins.
+    pub fn collect(self) -> Result<Vec<R>> {
+        self.wait();
+        collect_results(&self.ctx.results)
+        // Drop runs after this: abort_rest on an exhausted batch is a
+        // no-op and the wait sees remaining == 0 immediately.
+    }
+
+    /// `(queue_wait, run_time)` for the batch — meaningful once
+    /// [`done`](Self::done) is true (zeros before, and always zero
+    /// queue wait on the inline path). Metrics only; under loom this
+    /// returns zeros.
+    #[cfg(not(loom))]
+    pub fn timings(&self) -> (Duration, Duration) {
+        match &self.batch {
+            Some(b) => b.timing.queue_and_run(),
+            None => (Duration::ZERO, self.inline_run),
+        }
+    }
+
+    /// Loom double of [`Self::timings`]: stamps are not modeled.
+    #[cfg(loom)]
+    pub fn timings(&self) -> (Duration, Duration) {
+        (Duration::ZERO, Duration::ZERO)
+    }
+}
+
+impl<T, R, F> Drop for BatchHandle<T, R, F> {
+    fn drop(&mut self) {
+        if let Some(b) = &self.batch {
+            // Cancel every unclaimed task, then wait out the claimed
+            // in-flight ones: the `OwnedCtx` box must stay allocated
+            // until the last worker dereference completes (loom:
+            // `submit_drop_aborts_unclaimed`).
+            b.abort_rest();
+            b.wait();
+        }
+    }
 }
 
 /// The shared work-stealing thread team (see the module docs).
 ///
 /// Create one per run and hand it down by reference; it is `Sync`, so
-/// pipeline stage threads can share it through an `Arc` and submit
-/// concurrently. Dropping the executor joins its background threads.
+/// the pipeline's source thread can share it through an `Arc` and
+/// submit concurrently with in-task `run_tasks` calls. Dropping the
+/// executor joins its background threads.
 pub struct Executor {
     budget: usize,
     shared: Option<Arc<Shared>>,
@@ -386,7 +681,7 @@ impl Executor {
         let budget = resolve_workers(config.workers);
         let shared = (budget > 1).then(|| {
             Arc::new(Shared {
-                queue: Mutex::new(VecDeque::new()),
+                queues: Mutex::new(Default::default()),
                 available: Condvar::new(),
                 shutdown: AtomicBool::new(false),
                 steal: config.steal,
@@ -423,6 +718,17 @@ impl Executor {
         self.budget
     }
 
+    /// Queue a batch and notify the team.
+    fn enqueue(&self, batch: &Arc<Batch>, priority: Priority) {
+        self.ensure_spawned();
+        let shared = self.shared.as_ref().expect("enqueue requires a background team");
+        {
+            let mut qs = shared.queues.lock().unwrap();
+            qs[priority.index()].push_back(Arc::clone(batch));
+        }
+        shared.available.notify_all();
+    }
+
     /// Work-stealing execution of pre-built tasks (each typically owning
     /// disjoint `&mut` windows of a shared output buffer, so workers
     /// write results in place — no stitch copies). Results come back in
@@ -430,7 +736,7 @@ impl Executor {
     /// what; the first task error aborts the batch and is returned. The
     /// submitting thread participates in its own batch, so the call
     /// completes even when every background worker is busy with other
-    /// submitters' batches.
+    /// submitters' batches. Submits at [`Priority::Normal`].
     pub fn run_tasks<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
         &self,
         tasks: Vec<T>,
@@ -475,14 +781,10 @@ impl Executor {
             ctx: (&ctx as *const BatchCtx<'_, T, R, F>).cast(),
             done: Mutex::new(()),
             done_cv: Condvar::new(),
+            #[cfg(not(loom))]
+            timing: BatchTiming::start(),
         });
-        self.ensure_spawned();
-        let shared = self.shared.as_ref().expect("checked above");
-        {
-            let mut q = shared.queue.lock().unwrap();
-            q.push_back(Arc::clone(&batch));
-        }
-        shared.available.notify_all();
+        self.enqueue(&batch, Priority::Normal);
         // Participate: the submitter is the batch's guaranteed worker.
         while let Some(i) = batch.claim() {
             // SAFETY: `i` was just claimed from `batch`.
@@ -491,30 +793,68 @@ impl Executor {
         batch.wait();
         drop(batch);
         // Collect in submission order; first error wins (matching the
-        // retired `WorkerPool::run_tasks` contract). Slots are drained
-        // through `lock()` rather than `into_inner()` — the facade's
-        // loom double does not expose consuming accessors, and after
-        // `wait()` every lock is uncontended anyway.
-        let mut out = Vec::with_capacity(n);
-        let mut first_err = None;
-        for slot in &results {
-            match slot.lock().unwrap().take() {
-                Some(Ok(v)) => out.push(v),
-                Some(Err(e)) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-                None => {}
+        // retired `WorkerPool::run_tasks` contract).
+        collect_results(&results)
+    }
+
+    /// Non-blocking batch submission: queue `tasks` at `priority` and
+    /// return a [`BatchHandle`] to poll, help, or collect. Unlike
+    /// [`run_tasks`](Self::run_tasks), the calling thread does NOT
+    /// automatically participate — workers pick the batch up, and the
+    /// holder can contribute via the handle. On a budget-1 executor
+    /// there is no background team, so the batch runs inline right here
+    /// (the exact serial path) and the handle is born complete.
+    pub fn submit<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync>(
+        &self,
+        tasks: Vec<T>,
+        priority: Priority,
+        f: F,
+    ) -> BatchHandle<T, R, F> {
+        let n = tasks.len();
+        let ctx = Box::new(OwnedCtx {
+            slots: tasks.into_iter().map(|t| Mutex::new(Some(t))).collect(),
+            results: (0..n).map(|_| Mutex::new(None)).collect(),
+            failed: AtomicBool::new(false),
+            f,
+        });
+        if self.shared.is_none() || n == 0 {
+            #[cfg(not(loom))]
+            let t0 = Instant::now();
+            for i in 0..n {
+                run_slot(&ctx.slots, &ctx.results, &ctx.failed, &ctx.f, i);
             }
+            return BatchHandle {
+                batch: None,
+                ctx,
+                #[cfg(not(loom))]
+                inline_run: t0.elapsed(),
+            };
         }
-        if let Some(e) = first_err {
-            return Err(e);
+        // SAFETY of the erasure below: `batch.ctx` points at the
+        // heap-pinned `OwnedCtx` owned by the returned handle. Workers
+        // dereference it only for claimed indices, each claimed index
+        // decrements `remaining` exactly once after its dereferences
+        // complete, and the handle (`collect` or Drop) waits for
+        // `remaining == 0` before the box can free — so no dereference
+        // outlives the pointee, wherever the handle value moves.
+        let batch = Arc::new(Batch {
+            n,
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n),
+            run: run_owned::<T, R, F>,
+            ctx: (&*ctx as *const OwnedCtx<T, R, F>).cast(),
+            done: Mutex::new(()),
+            done_cv: Condvar::new(),
+            #[cfg(not(loom))]
+            timing: BatchTiming::start(),
+        });
+        self.enqueue(&batch, priority);
+        BatchHandle {
+            batch: Some(batch),
+            ctx,
+            #[cfg(not(loom))]
+            inline_run: Duration::ZERO,
         }
-        if out.len() != n {
-            return Err(Error::Coordinator("executor lost tasks".into()));
-        }
-        Ok(out)
     }
 
     /// Process `0..n` in chunks of `chunk`; `f(start, end)` produces a
@@ -547,7 +887,7 @@ impl Drop for Executor {
                 // (loom: `shutdown_wakeup_not_lost`). Relaxed suffices:
                 // both the store and every worker's load happen inside
                 // the queue-lock critical section, which synchronizes.
-                let _guard = shared.queue.lock().unwrap();
+                let _guard = shared.queues.lock().unwrap();
                 shared.shutdown.store(true, Ordering::Relaxed);
             }
             shared.available.notify_all();
@@ -676,7 +1016,7 @@ mod tests {
     fn concurrent_submitters_share_one_team() {
         // Four submitter threads, one 3-thread executor: every batch
         // completes with results in submission order, whatever the
-        // interleaving. This is the streaming reduce stages' usage shape.
+        // interleaving. This is the concurrent-callers usage shape.
         let exec = Arc::new(Executor::new(3));
         let mut joins = Vec::new();
         for s in 0..4u64 {
@@ -761,5 +1101,113 @@ mod tests {
         exec.run_tasks((0..8usize).collect(), Ok).unwrap();
         assert!(exec.spawned.load(Ordering::Relaxed));
         drop(exec);
+    }
+
+    #[test]
+    fn submit_collect_matches_run_tasks_every_priority() {
+        // The handle path returns the same ordered results as the
+        // blocking path, for every budget and priority class — the
+        // priority byte-invariance contract at the unit level.
+        let want: Vec<usize> = (0..97).map(|t| t * 3 + 1).collect();
+        for workers in [1usize, 2, 4] {
+            for priority in Priority::ALL {
+                let exec = Executor::new(workers);
+                let h = exec.submit((0..97usize).collect(), priority, |t| Ok(t * 3 + 1));
+                let out = h.collect().unwrap();
+                assert_eq!(out, want, "workers={workers} priority={priority:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn submit_handle_polls_and_helps_to_completion() {
+        // Even if the background team never touches the batch, the
+        // holder can finish it alone through help(): done() must flip
+        // and collect() must return everything in order.
+        let exec = Executor::new(2);
+        let h = exec.submit((0..40usize).collect(), Priority::Bulk, |t| Ok(t + 7));
+        while h.help() {}
+        h.wait();
+        assert!(h.done());
+        let (queue_wait, _run) = h.timings();
+        let _ = queue_wait; // stamps exist once done; values are timing-dependent
+        assert_eq!(h.collect().unwrap(), (7..47usize).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn submit_surfaces_errors_and_panics() {
+        for workers in [1usize, 2] {
+            let exec = Executor::new(workers);
+            let h = exec.submit((0..30usize).collect(), Priority::Normal, |t| {
+                if t == 11 {
+                    Err(Error::Coordinator("boom".into()))
+                } else {
+                    Ok(t)
+                }
+            });
+            let err = h.collect().unwrap_err();
+            assert!(err.to_string().contains("boom"), "workers={workers}: {err}");
+            let h = exec.submit((0..30usize).collect(), Priority::Normal, |t| {
+                if t == 3 {
+                    panic!("task exploded");
+                }
+                Ok(t)
+            });
+            let err = h.collect().unwrap_err();
+            assert!(err.to_string().contains("panicked"), "workers={workers}: {err}");
+            // The executor survives for the next batch.
+            let out = exec.submit(vec![1usize, 2], Priority::Normal, Ok).collect().unwrap();
+            assert_eq!(out, vec![1, 2], "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn dropping_handle_aborts_without_hanging() {
+        use std::sync::atomic::AtomicUsize as StdAtomicUsize;
+        for _ in 0..16 {
+            let exec = Executor::new(3);
+            let ran = StdAtomicUsize::new(0);
+            let h = exec.submit((0..64usize).collect(), Priority::Normal, |t| {
+                ran.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Ok(t)
+            });
+            // Drop without collecting: unclaimed tasks are cancelled,
+            // in-flight ones finish; neither drop nor executor drop may
+            // hang, and the team stays healthy for the next batch.
+            drop(h);
+            assert!(ran.load(std::sync::atomic::Ordering::Relaxed) <= 64);
+            let out = exec.run_tasks(vec![5usize], Ok).unwrap();
+            assert_eq!(out, vec![5]);
+        }
+    }
+
+    #[test]
+    fn inline_submit_reports_zero_queue_wait() {
+        // Budget 1 ⇒ the batch runs during submit; the handle is born
+        // complete with a zero queue-wait stamp (deterministic, unlike
+        // the threaded stamps).
+        let exec = Executor::new(1);
+        let h = exec.submit(vec![1usize, 2, 3], Priority::High, |t| Ok(t * 2));
+        assert!(h.done());
+        let (queue_wait, _run) = h.timings();
+        assert_eq!(queue_wait, Duration::ZERO);
+        assert_eq!(h.collect().unwrap(), vec![2, 4, 6]);
+    }
+
+    #[test]
+    fn concurrent_priority_submitters_keep_order() {
+        // A High and a Bulk submitter share the team; each handle still
+        // collects its own results in submission order.
+        let exec = Arc::new(Executor::new(3));
+        let bulk = {
+            let exec = Arc::clone(&exec);
+            std::thread::spawn(move || {
+                exec.submit((0..50usize).collect(), Priority::Bulk, |t| Ok(t + 1000)).collect()
+            })
+        };
+        let high =
+            exec.submit((0..50usize).collect(), Priority::High, |t| Ok(t + 2000)).collect().unwrap();
+        assert_eq!(high, (2000..2050usize).collect::<Vec<_>>());
+        assert_eq!(bulk.join().unwrap().unwrap(), (1000..1050usize).collect::<Vec<_>>());
     }
 }

@@ -561,16 +561,18 @@ pub fn reduce_shard(
     Ok(ShardReduction { prototypes, weights: new_weights, assignments: tc.assignments })
 }
 
-/// Everything one streaming reduce stage owns: a handle to the run's
-/// **shared executor**, its reusable [`ItisWorkspace`], and the
-/// unit-weight scratch buffer. The fused ingest spawns one
-/// `ShardReducer` per concurrent reduce stage (via
-/// `PipelineBuilder::map_init_parallel`); workspaces never cross stage
-/// threads, but the thread team is one: every stage submits its k-NN
-/// and prototype batches into the same executor, so the worker budget
-/// self-balances across stages — a stage that lands a hard shard pulls
-/// in the whole team, instead of being confined to a statically carved
-/// `workers / reduce_stages` slice.
+/// Everything one in-flight streaming reduce batch owns: a handle to
+/// the run's **shared executor**, its reusable [`ItisWorkspace`], and
+/// the unit-weight scratch buffer. The fused ingest
+/// (`PipelineBuilder::source_exec_ordered`) pools at most
+/// `reduce_stages` of these and hands one to each per-shard batch it
+/// submits, recycling it when the batch completes — so a reducer may
+/// run on a different worker thread for every shard (the type is
+/// `Send`; nothing in it is thread-affine), but only one batch ever
+/// holds it at a time. The thread team is one: each batch submits its
+/// nested k-NN and prototype sub-batches into the same executor it is
+/// running on, which is deadlock-free because `run_tasks` submitters
+/// drain their own batch instead of parking on a worker slot.
 pub struct ShardReducer {
     exec: std::sync::Arc<Executor>,
     ws: ItisWorkspace,
@@ -580,10 +582,10 @@ pub struct ShardReducer {
 }
 
 impl ShardReducer {
-    /// Stage-local state around the run's shared `exec`: fresh buffers,
+    /// Batch-local state around the run's shared `exec`: fresh buffers,
     /// reduced with `config`; the per-shard k-NN step uses a
     /// `knn_shards`-tree kd-forest (1 = single tree), rebuilt in this
-    /// stage's workspace for every data shard.
+    /// reducer's workspace for every data shard.
     pub fn new(exec: std::sync::Arc<Executor>, knn_shards: usize, config: ItisConfig) -> Self {
         Self {
             exec,

@@ -11,7 +11,7 @@
 //! decrements, the wait/notify protocol, lazy spawn, shutdown) instead
 //! of relying on whatever schedules the test host happens to produce.
 //!
-//! Two rules keep the facade meaningful, both enforced by the in-tree
+//! Four rules keep the facade meaningful, all enforced by the in-tree
 //! determinism lint (`rust/xtask`):
 //!
 //! * **No raw `std::sync::atomic` imports outside this module.**
@@ -26,6 +26,21 @@
 //!   pipeline spawn through [`thread::spawn_named`]; threads spawned
 //!   anywhere else are scheduling surface the determinism suites never
 //!   exercise.
+//! * **No `spawn_named` outside this module and `exec`.** With the
+//!   executor-native pipeline, parallel work belongs on the shared
+//!   team as prioritized batches; a new dedicated stage thread is a
+//!   structural regression. The surviving source/sink/reorder spawn
+//!   sites in `coordinator/pipeline.rs` each carry a
+//!   `det-lint: allow(stage-spawn)` marker stating why the thread is
+//!   legitimately not executor work (I/O-bound producer, inherently
+//!   sequential sink).
+//! * **No `std::sync::mpsc` outside this module's facade story.** The
+//!   pipeline's channel endpoints deliberately stay on std — loom has
+//!   no mpsc double, and the pipeline is only *compiled*, never
+//!   executed, under `--cfg loom` (the loom scenarios model the
+//!   executor the stages submit into). The one import site carries a
+//!   `det-lint: allow(std-mpsc)` marker with that argument; new mpsc
+//!   uses elsewhere must justify themselves the same way.
 //!
 //! The loom dependency itself is cfg-gated in `rust/Cargo.toml` and
 //! points at the in-tree `rust/loom-shim` package (std-backed, same

@@ -104,10 +104,11 @@ fn kill_and_resume_byte_identical_across_grid() {
 
 #[test]
 fn reduce_stage_kill_mid_shard_is_resumable() {
-    // Kill a concurrent reduce stage (panic, not a clean Err) while it
-    // holds the shard at offset 1024: join must surface the panic as a
-    // coordinator error, the checkpoint keeps its offset-tiled prefix,
-    // and the resumed run is byte-identical to the uninterrupted one.
+    // Kill a reduce batch (panic, not a clean Err) while it holds the
+    // shard at offset 1024: the executor converts the worker panic into
+    // a coordinator error, join surfaces it as the root cause, the
+    // checkpoint keeps its offset-tiled prefix, and the resumed run is
+    // byte-identical to the uninterrupted one.
     let n = 2600;
     let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
     let ckpt = fresh_ckpt("stage_kill");
@@ -118,6 +119,27 @@ fn reduce_stage_kill_mid_shard_is_resumable() {
     assert!(err.to_string().contains("panicked"), "{err}");
     let resumed = ingest_streaming(&cfg).unwrap();
     assert_identical(&resumed, &base, "stage kill");
+}
+
+#[test]
+fn kill_and_resume_with_more_batches_than_workers() {
+    // Executor-native grid point: `reduce_stages` is an in-flight batch
+    // cap, so 8 in-flight batches on a 4-worker team (queue pressure the
+    // retired per-stage threads could never create) must still crash and
+    // resume byte-identically — here at a bulk priority, so the reduce
+    // batches also sit in the lowest-priority queue behind nothing.
+    let n = 2600;
+    let base = ingest_streaming(&config(n, 1, 1, None)).unwrap();
+    let ckpt = fresh_ckpt("wide_batch_kill");
+    let mut cfg = config(n, 8, 1, Some(&ckpt));
+    cfg.reduce_priority = ihtc::exec::Priority::Bulk;
+    cfg.validate().unwrap();
+    let faults = FaultPlan { kill_reduce_at_offset: Some(1536), ..FaultPlan::none() };
+    let err = ingest_streaming_with_faults(&cfg, &faults).unwrap_err();
+    assert!(matches!(err, Error::Coordinator(_)), "{err}");
+    assert!(err.to_string().contains("panicked"), "{err}");
+    let resumed = ingest_streaming(&cfg).unwrap();
+    assert_identical(&resumed, &base, "wide batch kill");
 }
 
 #[test]

@@ -1,14 +1,15 @@
 //! Shared-executor determinism suite: the one work-stealing thread team
 //! that now backs every parallel layer must never change output bytes —
-//! not under worker-count changes, not under reduce-stage fan-out, not
-//! under kd-forest sharding, not under steal-policy/fairness knobs, and
-//! not when one reduce stage is adversarially skewed so the stealing
-//! actually rebalances the budget mid-stream.
+//! not under worker-count changes, not under the in-flight reduce-batch
+//! cap, not under priority classes, not under kd-forest sharding, not
+//! under steal-policy/fairness knobs, and not when one reduce batch is
+//! adversarially skewed so the stealing actually rebalances the budget
+//! mid-stream.
 
 use ihtc::config::{DataSource, PipelineConfig};
 use ihtc::coordinator::driver::{ingest_streaming, StreamedReduction};
 use ihtc::coordinator::parallel_knn;
-use ihtc::exec::{Executor, ExecutorConfig, StealPolicy};
+use ihtc::exec::{Executor, ExecutorConfig, Priority, StealPolicy};
 use ihtc::itis::PrototypeKind;
 use ihtc::knn::knn_brute;
 use std::io::Write;
@@ -79,20 +80,17 @@ fn assert_reductions_identical(got: &StreamedReduction, base: &StreamedReduction
 
 #[test]
 fn skewed_stage_byte_identical_across_workers_stages_knn_shards() {
-    // The acceptance grid: one stage's shards are deliberately harder,
-    // and every workers × reduce_stages × knn_shards combination (with
-    // stages ≤ workers, the validated contract) must produce a
-    // byte-identical StreamedReduction while sharing one executor.
+    // The acceptance grid: one batch's shards are deliberately harder,
+    // and every workers × reduce_stages × knn_shards combination must
+    // produce a byte-identical StreamedReduction while sharing one
+    // executor. `reduce_stages` is now an in-flight batch cap, not a
+    // thread budget, so stages > workers is a legal (and exercised)
+    // grid point — more batches queued than workers to claim them.
     let path = write_skewed_csv(4000, 500);
     let base = ingest_streaming(&skewed_config(&path, 1, 1, 1)).unwrap();
     assert_eq!(base.n, 4000);
     for workers in [1usize, 2, 4] {
         for stages in [1usize, 2, 4] {
-            if stages > workers {
-                // Rejected by config validation (each stage occupies a
-                // compute thread; covered in config/mod.rs tests).
-                continue;
-            }
             for knn_shards in [1usize, 2] {
                 let cfg = skewed_config(&path, workers, stages, knn_shards);
                 cfg.validate().unwrap();
@@ -101,6 +99,33 @@ fn skewed_stage_byte_identical_across_workers_stages_knn_shards() {
                     &got,
                     &base,
                     &format!("workers={workers} stages={stages} knn_shards={knn_shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn priority_classes_never_change_bytes() {
+    // The priority class steers *which* queue the reduce batches wait
+    // in, never what they compute: for every class the full
+    // reduce_stages × workers grid must reproduce the serial oracle
+    // byte-for-byte. (Non-Normal classes only validate with streaming
+    // on — skewed_config sets it.)
+    let path = write_skewed_csv(3000, 500);
+    let base = ingest_streaming(&skewed_config(&path, 1, 1, 1)).unwrap();
+    assert_eq!(base.n, 3000);
+    for priority in [Priority::High, Priority::Normal, Priority::Bulk] {
+        for workers in [1usize, 2, 4] {
+            for stages in [1usize, 2, 4] {
+                let mut cfg = skewed_config(&path, workers, stages, 1);
+                cfg.reduce_priority = priority;
+                cfg.validate().unwrap();
+                let got = ingest_streaming(&cfg).unwrap();
+                assert_reductions_identical(
+                    &got,
+                    &base,
+                    &format!("priority={priority:?} workers={workers} stages={stages}"),
                 );
             }
         }

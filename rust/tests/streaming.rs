@@ -18,8 +18,9 @@ fn streaming_config(n: usize) -> PipelineConfig {
         source: DataSource::PaperMixture { n },
         streaming: true,
         prototype: PrototypeKind::WeightedCentroid,
-        // 4 ≥ every reduce_stages value swept below: stages share one
-        // executor and must fit an explicit worker budget.
+        // The executor team; reduce batches are capped by
+        // `reduce_stages` independently of this (the cap may exceed the
+        // team — extra batches just queue).
         workers: 4,
         shard_size: 700,
         ..Default::default()
@@ -151,8 +152,8 @@ fn shuffled_shard_completions_reorder_to_in_order_bytes() {
         assert_eq!(assignments, want_assignments, "trial {trial}");
     }
 
-    // The real parallel fan-in (N concurrent reduce stages) must agree
-    // with the same reference bytes.
+    // The real parallel fan-in (N in-flight reduce batches on the
+    // shared executor) must agree with the same reference bytes.
     for r in [2usize, 4] {
         let mut cfg = streaming_config(4000);
         cfg.reduce_stages = r;

@@ -19,14 +19,26 @@
 //!    `det-lint: allow(hash-iter)` comment stating *why* order cannot
 //!    leak.
 //! 3. **wallclock** — `Instant`/`SystemTime` only in the timing-owning
-//!    modules (driver, pipeline stage metrics, bench runners, main):
-//!    time must never steer an algorithm.
+//!    modules (driver, pipeline stage metrics, executor batch timing,
+//!    bench runners, main): time must never steer an algorithm.
 //! 4. **raw-spawn** — no `thread::spawn` outside the `sync` facade:
 //!    ad-hoc threads bypass the executor (and loom cannot see them).
 //! 5. **raw-atomic** — no `std::sync::atomic` imports outside the
 //!    `sync` facade: raw atomics dodge loom's model checking.
 //!    Const-init statics that genuinely cannot go through the facade
 //!    carry `det-lint: allow(raw-atomic)` markers in place.
+//! 6. **stage-spawn** — no `thread::spawn_named` outside `sync` and
+//!    `exec`: with the executor-native pipeline, parallel work is
+//!    submitted to the shared team as prioritized batches, so a new
+//!    dedicated stage thread is a structural regression. The surviving
+//!    source/sink/reorder threads in `coordinator/pipeline.rs` carry
+//!    `det-lint: allow(stage-spawn)` markers stating why each is
+//!    legitimately not executor work.
+//! 7. **std-mpsc** — no `std::sync::mpsc` outside the `sync` facade:
+//!    loom has no mpsc double, so channel endpoints are invisible to
+//!    the model checker. The pipeline's one deliberate import carries
+//!    `det-lint: allow(std-mpsc)` with the argument (the pipeline is
+//!    compiled but never *executed* under `--cfg loom`).
 //!
 //! `#[cfg(test)]` modules are skipped entirely (tests may hash, sleep,
 //! and spawn freely); line comments, block comments, and string
@@ -288,9 +300,19 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
     let lines = preprocess(text);
     // Per-file rule exemptions (the facade and the timing owners).
     let is_sync_facade = path_matches(file, &["sync/mod.rs"]);
+    // `exec` owns spawning the worker team; everyone else submits
+    // batches instead of spawning (see the stage-spawn rule).
+    let owns_spawn_named =
+        is_sync_facade || file.to_string_lossy().replace('\\', "/").contains("/exec/");
     let owns_wallclock = path_matches(
         file,
-        &["coordinator/driver.rs", "coordinator/pipeline.rs", "sim/runners.rs", "src/main.rs"],
+        &[
+            "coordinator/driver.rs",
+            "coordinator/pipeline.rs",
+            "exec/mod.rs",
+            "sim/runners.rs",
+            "src/main.rs",
+        ],
     );
     for (idx, line) in lines.iter().enumerate() {
         if line.in_test_mod {
@@ -346,6 +368,27 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
                         .to_string(),
                 );
             }
+            if code.contains("std::sync::mpsc") && !has_marker(&lines, idx, "std-mpsc") {
+                push(
+                    "std-mpsc",
+                    "std channels have no loom double; route new concurrency through the \
+                     executor, or mark a never-run-under-loom endpoint with \
+                     `det-lint: allow(std-mpsc)` and say why"
+                        .to_string(),
+                );
+            }
+        }
+        if !owns_spawn_named
+            && code.contains("thread::spawn_named")
+            && !has_marker(&lines, idx, "stage-spawn")
+        {
+            push(
+                "stage-spawn",
+                "dedicated stage threads bypass the shared executor; submit a prioritized \
+                 batch via `Executor::submit`, or mark a surviving source/sink thread with \
+                 `det-lint: allow(stage-spawn)` and say why it is not executor work"
+                    .to_string(),
+            );
         }
     }
 }
@@ -414,6 +457,7 @@ mod tests {
         assert_eq!(run("src/tc/mod.rs", "let t = Instant::now();"), vec!["wallclock"]);
         assert!(run("src/coordinator/driver.rs", "let t = Instant::now();").is_empty());
         assert!(run("src/coordinator/pipeline.rs", "let t = Instant::now();").is_empty());
+        assert!(run("src/exec/mod.rs", "let t = Instant::now();").is_empty());
         assert!(run("src/sim/runners.rs", "let t = Instant::now();").is_empty());
         assert!(run("src/main.rs", "let t = std::time::Instant::now();").is_empty());
     }
@@ -421,7 +465,6 @@ mod tests {
     #[test]
     fn spawn_and_atomics_confined_to_facade() {
         assert_eq!(run("src/knn/mod.rs", "std::thread::spawn(|| {});"), vec!["raw-spawn"]);
-        assert!(run("src/knn/mod.rs", "thread::spawn_named(name, f);").is_empty());
         assert!(run("src/sync/mod.rs", "std::thread::spawn(f)").is_empty());
         assert_eq!(
             run("src/knn/mod.rs", "use std::sync::atomic::AtomicUsize;"),
@@ -433,6 +476,42 @@ mod tests {
             "// const-init static\n// det-lint: allow(raw-atomic)\nuse std::sync::atomic::AtomicUsize;"
         )
         .is_empty());
+    }
+
+    #[test]
+    fn stage_spawn_confined_to_exec_unless_marked() {
+        // A dedicated stage thread in algorithm code is a regression…
+        assert_eq!(run("src/knn/mod.rs", "thread::spawn_named(name, f);"), vec!["stage-spawn"]);
+        // …but the facade and the executor's own worker team are the owners…
+        assert!(run("src/sync/mod.rs", "thread::spawn_named(name, f);").is_empty());
+        assert!(run("src/exec/mod.rs", "thread::spawn_named(name, f);").is_empty());
+        // …and a marked source/sink thread passes with its justification.
+        assert!(run(
+            "src/coordinator/pipeline.rs",
+            "// I/O-bound producer, not executor work\n// det-lint: allow(stage-spawn)\nthread::spawn_named(name, f);"
+        )
+        .is_empty());
+        // `spawn_named` through the facade path must not also trip raw-spawn.
+        assert_eq!(
+            run("src/knn/mod.rs", "crate::sync::thread::spawn_named(name, f);"),
+            vec!["stage-spawn"]
+        );
+    }
+
+    #[test]
+    fn std_mpsc_confined_to_facade_unless_marked() {
+        assert_eq!(
+            run("src/knn/mod.rs", "use std::sync::mpsc::sync_channel;"),
+            vec!["std-mpsc"]
+        );
+        assert!(run("src/sync/mod.rs", "use std::sync::mpsc::sync_channel;").is_empty());
+        assert!(run(
+            "src/coordinator/pipeline.rs",
+            "// never executed under loom\n// det-lint: allow(std-mpsc)\nuse std::sync::mpsc::{sync_channel, Receiver};"
+        )
+        .is_empty());
+        // Prose mentioning mpsc must not trip the rule.
+        assert!(run("src/knn/mod.rs", "// std::sync::mpsc would be wrong here").is_empty());
     }
 
     #[test]
