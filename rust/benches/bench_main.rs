@@ -113,6 +113,31 @@ fn read_median(name: &str) -> Option<u64> {
     digits.parse().ok()
 }
 
+/// Splice one extra numeric field into a just-written bench JSON (the
+/// bounds bench records its measured `bound_hit_pct` alongside the
+/// timings so `scripts/bench_diff.py` can report pruning power, not
+/// just wall-clock).
+fn append_json_field(name: &str, key: &str, value: &str) {
+    let path = bench_json_path(name);
+    let Ok(text) = std::fs::read_to_string(&path) else { return };
+    let head = text.trim_end().trim_end_matches('}');
+    if let Err(e) = std::fs::write(&path, format!("{head},\"{key}\":{value}}}\n")) {
+        eprintln!("warning: cannot rewrite {}: {e}", path.display());
+    }
+}
+
+/// Deterministic pseudo-random row-major matrix for the kernel benches
+/// (an LCG; no rand dependency, same bytes every run).
+fn kernel_rows(n: usize, d: usize, salt: u32) -> Vec<f32> {
+    let mut state = 0x9e37_79b9u32 ^ salt;
+    (0..n * d)
+        .map(|_| {
+            state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            (state >> 8) as f32 / (1u32 << 24) as f32 - 0.5
+        })
+        .collect()
+}
+
 fn main() {
     // `cargo bench` passes `--bench`; everything else is a filter.
     let filter: Vec<String> = std::env::args()
@@ -222,6 +247,73 @@ fn main() {
     b.run("micro/hac_ward_n4e3", 3, || {
         hac(&ds_hac.points, &HacConfig::default()).unwrap()
     });
+
+    // ---------- distance kernels: scalar vs dispatched SIMD ----------
+    // The `_scalar` benches always run (direct calls, any build); the
+    // `_simd` benches only exist when the dispatcher actually resolved
+    // the AVX2/FMA kernels (feature on + CPU support + no
+    // IHTC_FORCE_SCALAR), so bench_diff.py's kernel-scaling section can
+    // pair them without guessing the build. d=8 is the SIMD threshold
+    // (one vector lane, worst case); d=64 is the amortized case.
+    for d in [8usize, 64] {
+        let rows = if b.fast { 2_000 } else { 50_000 };
+        let a = kernel_rows(rows, d, 1);
+        let c = kernel_rows(rows, d, 2);
+        b.run(&format!("kernel/sq_dist_scalar_d{d}"), 5, || {
+            let mut acc = 0.0f32;
+            for i in 0..rows {
+                acc += ihtc::linalg::sq_dist_scalar(&a[i * d..(i + 1) * d], &c[i * d..(i + 1) * d]);
+            }
+            acc
+        });
+        b.run(&format!("kernel/dot_scalar_d{d}"), 5, || {
+            let mut acc = 0.0f32;
+            for i in 0..rows {
+                acc += ihtc::linalg::dot_scalar(&a[i * d..(i + 1) * d], &c[i * d..(i + 1) * d]);
+            }
+            acc
+        });
+        if ihtc::linalg::simd::active() {
+            let sq = ihtc::linalg::simd::sq_dist_kernel();
+            let dot = ihtc::linalg::simd::dot_kernel();
+            b.run(&format!("kernel/sq_dist_simd_d{d}"), 5, || {
+                let mut acc = 0.0f32;
+                for i in 0..rows {
+                    acc += sq(&a[i * d..(i + 1) * d], &c[i * d..(i + 1) * d]);
+                }
+                acc
+            });
+            b.run(&format!("kernel/dot_simd_d{d}"), 5, || {
+                let mut acc = 0.0f32;
+                for i in 0..rows {
+                    acc += dot(&a[i * d..(i + 1) * d], &c[i * d..(i + 1) * d]);
+                }
+                acc
+            });
+        }
+    }
+
+    // ---------- bounded k-means: Elkan/Hamerly pruning ----------
+    // Identical input and config except the `bounds` flag; the results
+    // are byte-identical by contract (tests pin that), so the only
+    // things that move are wall-clock and the recorded bound-hit rate.
+    {
+        let mut cfg = KMeansConfig::new(8);
+        b.run("kmeans/bounds_off_n1e5_k8", 3, || {
+            kmeans_with_backend(&ds_big.points, None, &cfg, &NativeAssign).unwrap()
+        });
+        cfg.bounds = true;
+        let hit_pct = std::cell::Cell::new(None);
+        b.run("kmeans/bounds_on_n1e5_k8", 3, || {
+            let r = kmeans_with_backend(&ds_big.points, None, &cfg, &NativeAssign).unwrap();
+            hit_pct.set(Some(100.0 * r.bound_hits as f64 / r.bound_checks.max(1) as f64));
+            r
+        });
+        if let Some(pct) = hit_pct.get() {
+            append_json_field("kmeans/bounds_on_n1e5_k8", "bound_hit_pct", &format!("{pct:.1}"));
+            println!("kmeans: Elkan/Hamerly bound hit rate {pct:.1}% of checked points pruned");
+        }
+    }
 
     // ---------- one end-to-end bench per paper table ----------
     // Table 1 / Figs 3-4: IHTC+kmeans, m=0 vs m=1 vs m=2 (the headline).

@@ -7,13 +7,38 @@
 //! paper's Table 1 measures with and without ITIS pre-processing.
 
 use crate::exec::Executor;
-use crate::linalg::{sq_dist, Matrix};
+use crate::linalg::{simd, sq_dist, Matrix};
 use crate::rng::Xoshiro256;
 use crate::{Error, Result};
 
 /// Fixed row count per parallel assignment part. Partial sums merge in
 /// part order, so pooled results do not depend on the worker count.
 const PART: usize = 8192;
+
+/// Row count per serial assignment block (both the plain and the
+/// bounded serial Lloyd loops chunk by this, so their f64 WCSS
+/// accumulation order — per-point within a block, blocks summed in
+/// order — is structurally identical).
+const BLOCK: usize = 4096;
+
+/// Relative slack on the Elkan/Hamerly prune test. A prune needs
+/// `u·(1+BOUND_SLACK) < max(lower, half_sep)` — all f64, with `u` the
+/// freshly computed distance to the current center. The bounds
+/// themselves carry only ~1e-7 relative error (one f32 kernel plus an
+/// f64 sqrt; the decayed lower bound adds ≤ max_iters·[`DELTA_INFLATE`]),
+/// so a test that passes with 1e-4 slack implies a *true* gap of
+/// ~1e-4·distance between the assigned center and every other — far
+/// above the ~1e-6 relative error of the f32 distance kernel. The full
+/// scan could therefore neither find a strictly closer center nor an
+/// exact tie at a smaller index, which is what makes skipping it
+/// byte-exact (see `assign_block_bounded`).
+const BOUND_SLACK: f64 = 1e-4;
+
+/// Relative inflation applied to per-iteration center-movement deltas
+/// before they decay the lower bounds, so a kernel that *under*-computes
+/// a movement by a few ULP can never make a stale lower bound unsafe,
+/// even accumulated across `max_iters` iterations.
+const DELTA_INFLATE: f64 = 1e-5;
 
 /// Initialization strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -39,12 +64,26 @@ pub struct KMeansConfig {
     pub seed: u64,
     /// Relative WCSS improvement below which a restart stops early.
     pub tol: f64,
+    /// Elkan/Hamerly triangle-inequality pruning of the assignment scan.
+    /// Exact: labels, centers, WCSS, and iteration count are
+    /// byte-identical to the unpruned path (the pruned evaluations are
+    /// provably non-winners; every *computed* value is unchanged).
+    /// Requires a backend with [`AssignBackend::supports_bounds`].
+    pub bounds: bool,
 }
 
 impl KMeansConfig {
     /// Defaults mirroring the paper's R usage (`kmeans(x, k)`).
     pub fn new(k: usize) -> Self {
-        Self { k, max_iters: 100, restarts: 1, init: KMeansInit::PlusPlus, seed: 0x5EED, tol: 1e-6 }
+        Self {
+            k,
+            max_iters: 100,
+            restarts: 1,
+            init: KMeansInit::PlusPlus,
+            seed: 0x5EED,
+            tol: 1e-6,
+            bounds: false,
+        }
     }
 }
 
@@ -59,6 +98,12 @@ pub struct KMeansResult {
     pub wcss: f64,
     /// Lloyd iterations used by the winning restart.
     pub iterations: usize,
+    /// Bound tests attempted by the winning restart (one per point per
+    /// post-initial iteration when `bounds` is on; 0 otherwise).
+    pub bound_checks: u64,
+    /// Bound tests that pruned the full k-center scan. The hit rate
+    /// `bound_hits / bound_checks` is the bench-reported pruning power.
+    pub bound_hits: u64,
 }
 
 /// The assignment + accumulation step for one block of points: given
@@ -81,6 +126,15 @@ pub trait AssignBackend {
         sums: &mut [f64],
         counts: &mut [f64],
     ) -> Result<f64>;
+
+    /// Whether `KMeansConfig::bounds` may be combined with this backend.
+    /// Bounded Lloyd replays the *native* scan when a bound fails, so it
+    /// is only byte-exact against backends whose `assign_block` computes
+    /// exactly that scan — [`NativeAssign`] opts in; remote/AOT backends
+    /// (PJRT) keep the default `false` and are rejected up front.
+    fn supports_bounds(&self) -> bool {
+        false
+    }
 }
 
 /// Pure-Rust assignment backend.
@@ -100,13 +154,17 @@ impl AssignBackend for NativeAssign {
     ) -> Result<f64> {
         let k = centers.rows();
         let d = points.cols();
+        // One kernel dispatch per block; the bounded path's replay scan
+        // (`scan_best_second`) hoists the same pointer, so both scans
+        // call the identical kernel in the identical order.
+        let sq = simd::sq_dist_kernel();
         let mut wcss = 0.0f64;
         for i in 0..np {
             let x = points.row(p0 + i);
             let mut best = 0usize;
             let mut best_d = f32::INFINITY;
             for c in 0..k {
-                let dist = sq_dist(x, centers.row(c));
+                let dist = sq(x, centers.row(c));
                 if dist < best_d {
                     best_d = dist;
                     best = c;
@@ -123,6 +181,10 @@ impl AssignBackend for NativeAssign {
         }
         Ok(wcss)
     }
+
+    fn supports_bounds(&self) -> bool {
+        true
+    }
 }
 
 /// Reusable buffers for [`kmeans_pool`]: per-part partial accumulators,
@@ -132,6 +194,16 @@ impl AssignBackend for NativeAssign {
 pub struct KMeansWorkspace {
     part_sums: Vec<Vec<f64>>,
     part_counts: Vec<Vec<f64>>,
+    // ── Elkan/Hamerly bound state (`KMeansConfig::bounds`) ──
+    /// Per-point f64 lower bound on the distance to the second-closest
+    /// center, refreshed on every full scan and decayed by the maximum
+    /// center movement otherwise.
+    lower: Vec<f64>,
+    /// Per-center half distance to its nearest other center (Elkan's
+    /// half-center-distance test), recomputed every iteration.
+    half_sep: Vec<f64>,
+    /// Centers snapshot from before `update_centers`, for movement deltas.
+    old_centers: Vec<f32>,
 }
 
 impl KMeansWorkspace {
@@ -171,8 +243,25 @@ pub fn kmeans_pool<B: AssignBackend + Sync>(
             return Err(Error::Shape("weights vs points".into()));
         }
     }
+    if config.bounds && !backend.supports_bounds() {
+        return Err(Error::InvalidArgument(
+            "kmeans bounds require a backend that supports them (native assignment)".into(),
+        ));
+    }
     if exec.workers() <= 1 || n < 2 * PART {
+        if config.bounds {
+            // Serial fallback, but keep the caller's workspace so the
+            // bound buffers are reused across restarts and runs.
+            return run_restarts(points, config, |centers| {
+                lloyd_bounded(points, weights, centers, config, ws)
+            });
+        }
         return kmeans_with_backend(points, weights, config, backend);
+    }
+    if config.bounds {
+        return run_restarts(points, config, |centers| {
+            lloyd_bounded_pool(points, weights, centers, config, exec, ws)
+        });
     }
     run_restarts(points, config, |centers| {
         lloyd_pool(points, weights, centers, config, backend, exec, ws)
@@ -232,6 +321,20 @@ pub fn kmeans_with_backend(
         if w.len() != n {
             return Err(Error::Shape("weights vs points".into()));
         }
+    }
+    if config.bounds {
+        if !backend.supports_bounds() {
+            return Err(Error::InvalidArgument(
+                "kmeans bounds require a backend that supports them (native assignment)".into(),
+            ));
+        }
+        // No caller-provided workspace on this entry point; the bound
+        // buffers still live in a KMeansWorkspace (shared across the
+        // restarts of this call) so the two bounded loops have one home.
+        let mut ws = KMeansWorkspace::new();
+        return run_restarts(points, config, |centers| {
+            lloyd_bounded(points, weights, centers, config, &mut ws)
+        });
     }
     run_restarts(points, config, |centers| lloyd(points, weights, centers, config, backend))
 }
@@ -327,7 +430,6 @@ fn lloyd(
     let mut assignments = vec![0u32; n];
     let mut prev_wcss = f64::INFINITY;
     let mut iterations = 0;
-    const BLOCK: usize = 4096;
     // Accumulators hoisted out of the iteration loop (§Perf: the seed
     // allocated fresh k×d buffers every Lloyd iteration).
     let mut sums = vec![0.0f64; k * d];
@@ -364,7 +466,14 @@ fn lloyd(
         }
         prev_wcss = wcss;
     }
-    Ok(KMeansResult { assignments, centers, wcss: prev_wcss, iterations })
+    Ok(KMeansResult {
+        assignments,
+        centers,
+        wcss: prev_wcss,
+        iterations,
+        bound_checks: 0,
+        bound_hits: 0,
+    })
 }
 
 /// One Lloyd run with the assignment phase sharded over the executor.
@@ -439,7 +548,349 @@ fn lloyd_pool<B: AssignBackend + Sync>(
         }
         prev_wcss = wcss;
     }
-    Ok(KMeansResult { assignments, centers, wcss: prev_wcss, iterations })
+    Ok(KMeansResult {
+        assignments,
+        centers,
+        wcss: prev_wcss,
+        iterations,
+        bound_checks: 0,
+        bound_hits: 0,
+    })
+}
+
+// ── Elkan/Hamerly bounded Lloyd ─────────────────────────────────────────
+//
+// Exactness argument (the byte-parity contract rests on this):
+//
+// The unbounded scan assigns each point to the lowest-indexed center
+// attaining the minimum *computed* f32 distance (strict `<` over
+// ascending center index). The bounded path always computes the exact
+// distance `d_a` to the point's current center — one kernel call, the
+// same call the full scan would make — and skips the remaining k−1
+// calls only when the triangle inequality proves, with [`BOUND_SLACK`]
+// margin over every FP error in the bound arithmetic, that each other
+// center is strictly farther by ≳1e-4 relative. That gap dwarfs the
+// ~1e-6 relative error of the f32 kernel, so the skipped scan could
+// neither have found a strictly smaller computed distance nor an exact
+// tie at a smaller index. Assignment, its distance (and hence the f64
+// WCSS term), the per-cluster accumulations, and the convergence test
+// are therefore bit-for-bit those of the unbounded path; pruning only
+// removes evaluations whose results provably would not have been used.
+// The serial/pooled bounded loops replicate the BLOCK/PART f64
+// accumulation structure of their unbounded twins for the same reason.
+
+/// Per-run pruning counters.
+#[derive(Clone, Copy, Debug, Default)]
+struct BoundStats {
+    checks: u64,
+    hits: u64,
+}
+
+/// `half_sep[c] = ½·min_{c'≠c} dist(c, c')` — Elkan's half-center-
+/// distance: a point within `half_sep[c]` of center `c` cannot be
+/// closer to any other center. O(k²) per iteration, negligible next to
+/// the O(n·k) scans it prunes.
+fn half_separation(centers: &Matrix, half_sep: &mut Vec<f64>) {
+    let k = centers.rows();
+    let sq = simd::sq_dist_kernel();
+    half_sep.clear();
+    half_sep.resize(k, f64::INFINITY);
+    for a in 0..k {
+        for b in a + 1..k {
+            let d = (sq(centers.row(a), centers.row(b)) as f64).sqrt();
+            if d < 2.0 * half_sep[a] {
+                half_sep[a] = 0.5 * d;
+            }
+            if d < 2.0 * half_sep[b] {
+                half_sep[b] = 0.5 * d;
+            }
+        }
+    }
+}
+
+/// Maximum center movement since `old` (inflated by [`DELTA_INFLATE`]
+/// so it stays an upper bound under kernel FP error); decays the
+/// per-point lower bounds.
+fn max_center_delta(old: &[f32], centers: &Matrix) -> f64 {
+    let d = centers.cols();
+    let sq = simd::sq_dist_kernel();
+    let mut dmax = 0.0f64;
+    for c in 0..centers.rows() {
+        let delta = (sq(&old[c * d..(c + 1) * d], centers.row(c)) as f64).sqrt();
+        if delta > dmax {
+            dmax = delta;
+        }
+    }
+    dmax * (1.0 + DELTA_INFLATE)
+}
+
+/// The unbounded assignment scan, verbatim (same kernel pointer, same
+/// visit order, same strict `<`), additionally tracking the second-best
+/// distance to refresh the Hamerly lower bound.
+#[inline]
+fn scan_best_second(
+    sq: simd::KernelFn,
+    x: &[f32],
+    centers: &Matrix,
+) -> (usize, f32, f32) {
+    let mut best = 0usize;
+    let mut best_d = f32::INFINITY;
+    let mut second = f32::INFINITY;
+    for c in 0..centers.rows() {
+        let dist = sq(x, centers.row(c));
+        if dist < best_d {
+            second = best_d;
+            best_d = dist;
+            best = c;
+        } else if dist < second {
+            second = dist;
+        }
+    }
+    (best, best_d, second)
+}
+
+/// Bounded counterpart of [`NativeAssign::assign_block`]: identical
+/// per-point outputs and accumulation order, with the k-center scan
+/// skipped whenever the bound test proves it redundant. `assign_out`
+/// carries the previous iteration's assignments in (`first_iter` marks
+/// them — and the lower bounds — uninitialized).
+#[allow(clippy::too_many_arguments)]
+fn assign_block_bounded(
+    points: &Matrix,
+    weights: Option<&[f32]>,
+    p0: usize,
+    np: usize,
+    centers: &Matrix,
+    half_sep: &[f64],
+    first_iter: bool,
+    assign_out: &mut [u32],
+    lower: &mut [f64],
+    sums: &mut [f64],
+    counts: &mut [f64],
+    stats: &mut BoundStats,
+) -> f64 {
+    let d = points.cols();
+    let sq = simd::sq_dist_kernel();
+    let mut wcss = 0.0f64;
+    for i in 0..np {
+        let x = points.row(p0 + i);
+        let mut pruned = false;
+        let (mut best, mut best_d) = (0usize, f32::INFINITY);
+        if !first_iter {
+            let a = assign_out[i] as usize;
+            let d_a = sq(x, centers.row(a));
+            let u = (d_a as f64).sqrt();
+            stats.checks += 1;
+            if u * (1.0 + BOUND_SLACK) < lower[i].max(half_sep[a]) {
+                stats.hits += 1;
+                pruned = true;
+                best = a;
+                best_d = d_a;
+            }
+        }
+        if !pruned {
+            let (b, bd, second) = scan_best_second(sq, x, centers);
+            best = b;
+            best_d = bd;
+            lower[i] = (second as f64).sqrt();
+        }
+        assign_out[i] = best as u32;
+        let w = weights.map(|w| w[p0 + i] as f64).unwrap_or(1.0);
+        wcss += w * best_d as f64;
+        counts[best] += w;
+        let acc = &mut sums[best * d..(best + 1) * d];
+        for (a, &v) in acc.iter_mut().zip(x) {
+            *a += w * v as f64;
+        }
+    }
+    wcss
+}
+
+/// Serial bounded Lloyd — byte-identical outputs to [`lloyd`] over
+/// [`NativeAssign`] (see the exactness argument above), with most
+/// post-warmup distance evaluations pruned on well-separated data.
+fn lloyd_bounded(
+    points: &Matrix,
+    weights: Option<&[f32]>,
+    mut centers: Matrix,
+    config: &KMeansConfig,
+    ws: &mut KMeansWorkspace,
+) -> Result<KMeansResult> {
+    let n = points.rows();
+    let d = points.cols();
+    let k = config.k;
+    let mut assignments = vec![0u32; n];
+    let mut prev_wcss = f64::INFINITY;
+    let mut iterations = 0;
+    let mut stats = BoundStats::default();
+    let mut sums = vec![0.0f64; k * d];
+    let mut counts = vec![0.0f64; k];
+    ws.lower.clear();
+    ws.lower.resize(n, 0.0);
+
+    for iter in 0..config.max_iters.max(1) {
+        iterations = iter + 1;
+        sums.iter_mut().for_each(|v| *v = 0.0);
+        counts.iter_mut().for_each(|v| *v = 0.0);
+        half_separation(&centers, &mut ws.half_sep);
+        let mut wcss = 0.0f64;
+        let mut p0 = 0;
+        while p0 < n {
+            let np = BLOCK.min(n - p0);
+            wcss += assign_block_bounded(
+                points,
+                weights,
+                p0,
+                np,
+                &centers,
+                &ws.half_sep,
+                iter == 0,
+                &mut assignments[p0..p0 + np],
+                &mut ws.lower[p0..p0 + np],
+                &mut sums,
+                &mut counts,
+                &mut stats,
+            );
+            p0 += np;
+        }
+        ws.old_centers.clear();
+        ws.old_centers.extend_from_slice(centers.data());
+        update_centers(points, &assignments, &mut centers, &sums, &counts);
+        let dmax = max_center_delta(&ws.old_centers, &centers);
+        for l in &mut ws.lower {
+            *l = (*l - dmax).max(0.0);
+        }
+        if prev_wcss.is_finite() {
+            let denom = prev_wcss.abs().max(1e-30);
+            if (prev_wcss - wcss) / denom < config.tol {
+                prev_wcss = wcss;
+                break;
+            }
+        }
+        prev_wcss = wcss;
+    }
+    Ok(KMeansResult {
+        assignments,
+        centers,
+        wcss: prev_wcss,
+        iterations,
+        bound_checks: stats.checks,
+        bound_hits: stats.hits,
+    })
+}
+
+/// Pooled bounded Lloyd — byte-identical outputs to [`lloyd_pool`] over
+/// [`NativeAssign`] for any worker count: the same fixed [`PART`]
+/// decomposition, per-part accumulators merged in part order, with each
+/// part additionally owning its slice of the lower-bound array (bound
+/// state is per-point, so parts never share it).
+fn lloyd_bounded_pool(
+    points: &Matrix,
+    weights: Option<&[f32]>,
+    mut centers: Matrix,
+    config: &KMeansConfig,
+    exec: &Executor,
+    ws: &mut KMeansWorkspace,
+) -> Result<KMeansResult> {
+    let n = points.rows();
+    let d = points.cols();
+    let k = config.k;
+    let mut assignments = vec![0u32; n];
+    let mut prev_wcss = f64::INFINITY;
+    let mut iterations = 0;
+    let mut stats = BoundStats::default();
+    let nparts = n.div_ceil(PART);
+    if ws.part_sums.len() < nparts {
+        ws.part_sums.resize_with(nparts, Vec::new);
+        ws.part_counts.resize_with(nparts, Vec::new);
+    }
+    ws.lower.clear();
+    ws.lower.resize(n, 0.0);
+    let mut merged_sums = vec![0.0f64; k * d];
+    let mut merged_counts = vec![0.0f64; k];
+
+    for iter in 0..config.max_iters.max(1) {
+        iterations = iter + 1;
+        for p in 0..nparts {
+            ws.part_sums[p].clear();
+            ws.part_sums[p].resize(k * d, 0.0);
+            ws.part_counts[p].clear();
+            ws.part_counts[p].resize(k, 0.0);
+        }
+        half_separation(&centers, &mut ws.half_sep);
+        let centers_ref = &centers;
+        let half_sep: &[f64] = &ws.half_sep;
+        let first_iter = iter == 0;
+        let mut tasks: Vec<(usize, &mut [u32], &mut [f64], &mut [f64], &mut [f64])> =
+            Vec::with_capacity(nparts);
+        for ((((p, a_chunk), l_chunk), s), c) in assignments
+            .chunks_mut(PART)
+            .enumerate()
+            .zip(ws.lower.chunks_mut(PART))
+            .zip(ws.part_sums.iter_mut().take(nparts))
+            .zip(ws.part_counts.iter_mut().take(nparts))
+        {
+            tasks.push((p * PART, a_chunk, l_chunk, s.as_mut_slice(), c.as_mut_slice()));
+        }
+        let part_results = exec.run_tasks(tasks, |(p0, a_chunk, l_chunk, s, c)| {
+            let np = a_chunk.len();
+            let mut part_stats = BoundStats::default();
+            let wcss = assign_block_bounded(
+                points,
+                weights,
+                p0,
+                np,
+                centers_ref,
+                half_sep,
+                first_iter,
+                a_chunk,
+                l_chunk,
+                s,
+                c,
+                &mut part_stats,
+            );
+            Ok((wcss, part_stats))
+        })?;
+        // Part order, exactly as lloyd_pool sums its per-part WCSS.
+        let wcss: f64 = part_results.iter().map(|(w, _)| w).sum();
+        for (_, ps) in &part_results {
+            stats.checks += ps.checks;
+            stats.hits += ps.hits;
+        }
+        merged_sums.iter_mut().for_each(|v| *v = 0.0);
+        merged_counts.iter_mut().for_each(|v| *v = 0.0);
+        for p in 0..nparts {
+            for (g, v) in merged_sums.iter_mut().zip(&ws.part_sums[p]) {
+                *g += v;
+            }
+            for (g, v) in merged_counts.iter_mut().zip(&ws.part_counts[p]) {
+                *g += v;
+            }
+        }
+        ws.old_centers.clear();
+        ws.old_centers.extend_from_slice(centers.data());
+        update_centers(points, &assignments, &mut centers, &merged_sums, &merged_counts);
+        let dmax = max_center_delta(&ws.old_centers, &centers);
+        for l in &mut ws.lower {
+            *l = (*l - dmax).max(0.0);
+        }
+        if prev_wcss.is_finite() {
+            let denom = prev_wcss.abs().max(1e-30);
+            if (prev_wcss - wcss) / denom < config.tol {
+                prev_wcss = wcss;
+                break;
+            }
+        }
+        prev_wcss = wcss;
+    }
+    Ok(KMeansResult {
+        assignments,
+        centers,
+        wcss: prev_wcss,
+        iterations,
+        bound_checks: stats.checks,
+        bound_hits: stats.hits,
+    })
 }
 
 #[cfg(test)]
@@ -566,6 +1017,99 @@ mod tests {
         // Fixed-part merging makes pooled results worker-count exact.
         assert_eq!(results[0].assignments, results[1].assignments);
         assert_eq!(results[0].wcss.to_bits(), results[1].wcss.to_bits());
+    }
+
+    #[test]
+    fn bounded_serial_byte_identical_to_unbounded() {
+        let ds = gaussian_mixture_paper(3000, 90);
+        let base = KMeansConfig { restarts: 2, ..KMeansConfig::new(3) };
+        let plain = kmeans(&ds.points, &base).unwrap();
+        let bounded = kmeans(&ds.points, &KMeansConfig { bounds: true, ..base.clone() }).unwrap();
+        assert_eq!(plain.assignments, bounded.assignments);
+        assert_eq!(plain.wcss.to_bits(), bounded.wcss.to_bits());
+        assert_eq!(plain.iterations, bounded.iterations);
+        let pc: Vec<u32> = plain.centers.data().iter().map(|v| v.to_bits()).collect();
+        let bc: Vec<u32> = bounded.centers.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(pc, bc);
+        // The unbounded path never tests bounds; the bounded one must
+        // actually prune on well-separated blobs.
+        assert_eq!(plain.bound_checks, 0);
+        assert!(bounded.bound_hits > 0, "no prunes on separated blobs");
+        assert!(bounded.bound_hits <= bounded.bound_checks);
+        // Weighted runs take the same bounded path.
+        let weights: Vec<f32> = (0..3000).map(|i| 1.0 + (i % 5) as f32).collect();
+        let pw = kmeans_weighted(&ds.points, &weights, &base).unwrap();
+        let bw = kmeans_weighted(
+            &ds.points,
+            &weights,
+            &KMeansConfig { bounds: true, ..base },
+        )
+        .unwrap();
+        assert_eq!(pw.assignments, bw.assignments);
+        assert_eq!(pw.wcss.to_bits(), bw.wcss.to_bits());
+    }
+
+    #[test]
+    fn bounded_pool_byte_identical_to_unbounded_pool() {
+        let ds = gaussian_mixture_paper(17_000, 91);
+        let base = KMeansConfig { restarts: 2, ..KMeansConfig::new(3) };
+        let exec = Executor::new(4);
+        let mut ws = KMeansWorkspace::new();
+        let plain = kmeans_pool(&ds.points, None, &base, &NativeAssign, &exec, &mut ws).unwrap();
+        let mut ws_b = KMeansWorkspace::new();
+        let bounded = kmeans_pool(
+            &ds.points,
+            None,
+            &KMeansConfig { bounds: true, ..base },
+            &NativeAssign,
+            &exec,
+            &mut ws_b,
+        )
+        .unwrap();
+        assert_eq!(plain.assignments, bounded.assignments);
+        assert_eq!(plain.wcss.to_bits(), bounded.wcss.to_bits());
+        assert_eq!(plain.iterations, bounded.iterations);
+        assert!(bounded.bound_hits > 0);
+    }
+
+    #[test]
+    fn bounds_rejected_without_backend_support() {
+        // A backend that keeps the default `supports_bounds() == false`
+        // must be rejected up front, not silently run unbounded.
+        struct NoBounds;
+        impl AssignBackend for NoBounds {
+            fn assign_block(
+                &self,
+                _points: &Matrix,
+                _weights: Option<&[f32]>,
+                _p0: usize,
+                _np: usize,
+                _centers: &Matrix,
+                _assign_out: &mut [u32],
+                _sums: &mut [f64],
+                _counts: &mut [f64],
+            ) -> Result<f64> {
+                Ok(0.0)
+            }
+        }
+        let ds = gaussian_mixture_paper(100, 92);
+        let cfg = KMeansConfig { bounds: true, ..KMeansConfig::new(3) };
+        assert!(kmeans_with_backend(&ds.points, None, &cfg, &NoBounds).is_err());
+        let exec = Executor::new(2);
+        let mut ws = KMeansWorkspace::new();
+        assert!(kmeans_pool(&ds.points, None, &cfg, &NoBounds, &exec, &mut ws).is_err());
+    }
+
+    #[test]
+    fn bounded_matches_unbounded_on_all_duplicates() {
+        // Degenerate geometry: every distance is 0, every half-
+        // separation is 0, so no bound can ever fire — the bounded path
+        // must degrade to the exact full scan, not misbehave.
+        let m = Matrix::from_vec(vec![1.25f32; 200], 100, 2).unwrap();
+        let plain = kmeans(&m, &KMeansConfig::new(3)).unwrap();
+        let bounded = kmeans(&m, &KMeansConfig { bounds: true, ..KMeansConfig::new(3) }).unwrap();
+        assert_eq!(plain.assignments, bounded.assignments);
+        assert_eq!(plain.wcss.to_bits(), bounded.wcss.to_bits());
     }
 
     #[test]

@@ -81,6 +81,17 @@ pub struct PipelineConfig {
     pub clusterer: FinalClusterer,
     /// Hot-path backend.
     pub backend: Backend,
+    /// Assertion that this binary carries the `simd` distance kernels
+    /// (the `simd` cargo feature). Kernel dispatch is resolved once per
+    /// process from the compiled feature + runtime CPU detection — a
+    /// config cannot flip it — so a knob that disagrees with the build
+    /// would be silently inert and is rejected instead. Defaults to the
+    /// build's own state, so omitting it always validates.
+    pub simd: bool,
+    /// Elkan/Hamerly bound pruning for the k-means final clusterer
+    /// (exact — output bytes unchanged; see `KMeansConfig::bounds`).
+    /// Requires a kmeans clusterer and the native backend.
+    pub kmeans_bounds: bool,
     /// Coordinator worker threads (0 = available parallelism).
     pub workers: usize,
     /// kd-forest shard count for the k-NN index: partition each level's
@@ -160,6 +171,8 @@ impl Default for PipelineConfig {
             seed_order: SeedOrder::Natural,
             clusterer: FinalClusterer::KMeans { k: 3, restarts: 4 },
             backend: Backend::Native,
+            simd: cfg!(feature = "simd"),
+            kmeans_bounds: false,
             workers: 0,
             knn_shards: 1,
             shard_size: 8_192,
@@ -235,6 +248,12 @@ impl PipelineConfig {
                 "pjrt" => Backend::Pjrt,
                 other => return Err(Error::Config(format!("unknown backend '{other}'"))),
             };
+        }
+        if let Some(b) = j.opt_bool("simd")? {
+            cfg.simd = b;
+        }
+        if let Some(b) = j.opt_bool("kmeans_bounds")? {
+            cfg.kmeans_bounds = b;
         }
         if let Some(w) = j.opt_usize("workers")? {
             cfg.workers = w;
@@ -385,6 +404,44 @@ impl PipelineConfig {
                  the knob)"
                     .into(),
             ));
+        }
+        // The `simd` knob is a build assertion, not a runtime switch:
+        // kernel dispatch resolves once per process from the compiled
+        // feature + CPU detection, so a config disagreeing with the
+        // build would be silently inert — reject with the fix named.
+        if self.simd && !cfg!(feature = "simd") {
+            return Err(Error::Config(
+                "simd: true but this binary was built without the `simd` cargo feature — \
+                 rebuild with `--features simd` (or drop the knob; it defaults to the \
+                 build's own state)"
+                    .into(),
+            ));
+        }
+        if !self.simd && cfg!(feature = "simd") {
+            return Err(Error::Config(
+                "simd: false but this binary was built with the `simd` cargo feature — \
+                 use a featureless build, or set IHTC_FORCE_SCALAR=1 to force the scalar \
+                 kernels at runtime (or drop the knob)"
+                    .into(),
+            ));
+        }
+        if self.kmeans_bounds {
+            if !matches!(self.clusterer, FinalClusterer::KMeans { .. }) {
+                return Err(Error::Config(
+                    "kmeans_bounds has no effect without a kmeans clusterer — the bound \
+                     pruning lives in the k-means assignment scan (switch the clusterer, \
+                     or drop the knob)"
+                        .into(),
+                ));
+            }
+            if self.backend == Backend::Pjrt {
+                return Err(Error::Config(
+                    "kmeans_bounds requires backend: \"native\" — the PJRT assignment \
+                     backend evaluates whole distance tiles and cannot skip per-point \
+                     scans (switch the backend, or drop the knob)"
+                        .into(),
+                ));
+            }
         }
         if self.streaming {
             if self.iterations == 0 {
@@ -699,6 +756,41 @@ mod tests {
         assert!(err.to_string().contains("streaming"), "{err}");
         // The default class is accepted anywhere (it IS the default).
         assert!(PipelineConfig::from_json(r#"{"reduce_priority": "normal"}"#).is_ok());
+    }
+
+    #[test]
+    fn simd_knob_is_a_build_assertion() {
+        // Default mirrors the build, so "{}" always validates.
+        assert_eq!(PipelineConfig::from_json("{}").unwrap().simd, cfg!(feature = "simd"));
+        let matching = format!(r#"{{"simd": {}}}"#, cfg!(feature = "simd"));
+        assert!(PipelineConfig::from_json(&matching).is_ok());
+        // A knob that disagrees with the build would be silently inert
+        // (dispatch is resolved from the build, not the config).
+        let mismatched = format!(r#"{{"simd": {}}}"#, !cfg!(feature = "simd"));
+        let err = PipelineConfig::from_json(&mismatched).unwrap_err();
+        assert!(err.to_string().contains("simd"), "{err}");
+        // Mistyped knobs are config errors, never silently ignored.
+        assert!(PipelineConfig::from_json(r#"{"simd": "yes"}"#).is_err());
+    }
+
+    #[test]
+    fn kmeans_bounds_parse_and_validation() {
+        assert!(!PipelineConfig::from_json("{}").unwrap().kmeans_bounds);
+        // Default clusterer is kmeans on the native backend → valid.
+        assert!(PipelineConfig::from_json(r#"{"kmeans_bounds": true}"#).unwrap().kmeans_bounds);
+        // Bound pruning lives in the k-means scan — inert elsewhere.
+        let err = PipelineConfig::from_json(
+            r#"{"kmeans_bounds": true, "clusterer": {"kind": "hac", "k": 3}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("kmeans"), "{err}");
+        // The PJRT backend evaluates whole tiles; it cannot prune.
+        let err = PipelineConfig::from_json(r#"{"kmeans_bounds": true, "backend": "pjrt"}"#)
+            .unwrap_err();
+        assert!(err.to_string().contains("native"), "{err}");
+        assert!(PipelineConfig::from_json(r#"{"backend": "pjrt"}"#).is_ok());
+        // Mistyped knobs are config errors, never silently ignored.
+        assert!(PipelineConfig::from_json(r#"{"kmeans_bounds": "yes"}"#).is_err());
     }
 
     #[test]

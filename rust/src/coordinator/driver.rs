@@ -771,6 +771,7 @@ fn cluster_prototypes(
             let cfg = kmeans::KMeansConfig {
                 restarts: (*restarts).max(1),
                 seed: config.seed,
+                bounds: config.kmeans_bounds,
                 ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
             };
             let result = match engine {

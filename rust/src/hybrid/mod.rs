@@ -106,6 +106,11 @@ pub struct Ihtc {
     /// Results are byte-identical for every value; > 1 parallelizes
     /// index construction across shard trees.
     pub knn_shards: usize,
+    /// Elkan/Hamerly bound pruning for a k-means final clusterer
+    /// (`KMeansConfig::bounds`). Exact — labels and centroids stay
+    /// byte-identical — and ignored by non-k-means clusterers (the
+    /// config layer rejects that combination up front).
+    pub kmeans_bounds: bool,
 }
 
 /// Full IHTC output.
@@ -138,6 +143,7 @@ impl Ihtc {
             seed_order: SeedOrder::Natural,
             seed: 0x1117C,
             knn_shards: 1,
+            kmeans_bounds: false,
         }
     }
 
@@ -183,6 +189,7 @@ impl Ihtc {
                 let cfg = kmeans::KMeansConfig {
                     restarts: (*restarts).max(1),
                     seed: self.seed,
+                    bounds: self.kmeans_bounds,
                     ..kmeans::KMeansConfig::new((*k).min(protos.rows()))
                 };
                 kmeans::kmeans_pool(

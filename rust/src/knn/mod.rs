@@ -39,7 +39,11 @@ pub mod graph;
 pub mod kdtree;
 
 use crate::exec::Executor;
-use crate::linalg::{sq_dist, sq_norm, Matrix};
+// The dimensionality-regime constants (norm-trick and kd-tree
+// boundaries) live in `linalg` next to the kernels they route between,
+// so this dispatcher, the SIMD dispatcher, and the kernel docs share
+// one source of truth.
+use crate::linalg::{simd, sq_norm, Matrix, KDTREE_MAX_DIM, KDTREE_MIN_ROWS, NORM_TRICK_MIN_DIM};
 use crate::{Error, Result};
 
 /// Below this row count the pooled paths fall back to serial execution
@@ -47,10 +51,6 @@ use crate::{Error, Result};
 const PARALLEL_QUERY_MIN: usize = 2048;
 /// Below this row count the kd-tree is built serially.
 const PARALLEL_BUILD_MIN: usize = 8192;
-/// The norm-trick kernel pays off once the dot product amortizes the
-/// extra passes; below this dimensionality the direct difference kernel
-/// is both faster and bit-identical to [`sq_dist`].
-const NORM_TRICK_MIN_DIM: usize = 4;
 
 /// Directed k-NN lists: for each of `n` query points, its `k` nearest
 /// neighbors (by squared Euclidean distance), self excluded, ascending.
@@ -218,6 +218,8 @@ pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
     validate_k(n, k)?;
     let mut indices = vec![0u32; n * k];
     let mut dists = vec![0f32; n * k];
+    // One kernel dispatch for the whole O(n²) sweep.
+    let sq = simd::sq_dist_kernel();
     for i in 0..n {
         let mut top = TopK::new(k);
         let qi = points.row(i);
@@ -225,7 +227,7 @@ pub fn knn_brute(points: &Matrix, k: usize) -> Result<KnnLists> {
             if j == i {
                 continue;
             }
-            top.push(sq_dist(qi, points.row(j)), j as u32);
+            top.push(sq(qi, points.row(j)), j as u32);
         }
         for (slot, (d, j)) in top.into_sorted().into_iter().enumerate() {
             indices[i * k + slot] = j;
@@ -295,10 +297,12 @@ pub trait ChunkEvaluator {
 
 /// Native (pure-Rust) chunk evaluator mirroring the L1 Pallas kernel.
 ///
-/// For d ≥ 4 the workspace path uses the same `‖q‖² + ‖r‖² − 2 q·r`
-/// decomposition as the kernel (reference norms precomputed once per
-/// block, dot-product inner loop); below that the direct difference
-/// kernel wins and stays bit-identical to [`sq_dist`].
+/// For d ≥ [`NORM_TRICK_MIN_DIM`] the workspace path uses the same
+/// `‖q‖² + ‖r‖² − 2 q·r` decomposition as the kernel (reference norms
+/// precomputed once per block, dot-product inner loop); below that the
+/// direct difference kernel wins and stays bit-identical to
+/// [`crate::linalg::sq_dist`]. Both inner loops hoist their kernel
+/// function pointer from [`simd`] once per block.
 pub struct NativeChunks {
     /// Reference-block edge length.
     pub block: usize,
@@ -320,6 +324,9 @@ impl ChunkEvaluator for NativeChunks {
         nr: usize,
         tops: &mut [TopK],
     ) -> Result<()> {
+        // Hoisted dispatch: the block loop carries a bare fn-pointer
+        // call, never a per-pair kernel lookup.
+        let sq = simd::sq_dist_kernel();
         for qi in 0..nq {
             let q = points.row(q0 + qi);
             let top = &mut tops[qi];
@@ -327,7 +334,7 @@ impl ChunkEvaluator for NativeChunks {
                 if rj == q0 + qi {
                     continue;
                 }
-                top.push(sq_dist(q, points.row(rj)), rj as u32);
+                top.push(sq(q, points.row(rj)), rj as u32);
             }
         }
         Ok(())
@@ -355,17 +362,17 @@ impl ChunkEvaluator for NativeChunks {
         }
         scratch.dist_row.clear();
         scratch.dist_row.resize(nr, 0.0);
+        // Hoisted dispatch: the norm-trick inner loop is a bare
+        // fn-pointer call (scalar = the historical inline loop,
+        // bit-for-bit; AVX2 when the `simd` dispatcher installed it).
+        let dot = simd::dot_kernel();
         for qi in 0..nq {
             let q = points.row(q0 + qi);
             let qn = sq_norm(q);
             for (jj, slot) in scratch.dist_row.iter_mut().enumerate() {
-                let r = points.row(r0 + jj);
-                let mut dot = 0.0f32;
-                for (x, y) in q.iter().zip(r) {
-                    dot += x * y;
-                }
                 // Clamp: catastrophic cancellation can go slightly negative.
-                *slot = (qn + scratch.rnorms[r0 + jj] - 2.0 * dot).max(0.0);
+                *slot = (qn + scratch.rnorms[r0 + jj] - 2.0 * dot(q, points.row(r0 + jj)))
+                    .max(0.0);
             }
             let top = &mut tops[qi];
             for (jj, &dd) in scratch.dist_row.iter().enumerate() {
@@ -578,7 +585,7 @@ pub fn knn_auto_into(
 /// and single-tree paths route the same workload differently.
 #[inline]
 fn kdtree_regime(points: &Matrix) -> bool {
-    points.cols() <= 12 && points.rows() > 256
+    points.cols() <= KDTREE_MAX_DIM && points.rows() > KDTREE_MIN_ROWS
 }
 
 /// [`knn_auto_into`] with a sharded kd-forest backend. When `shards > 1`

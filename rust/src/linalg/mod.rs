@@ -7,8 +7,39 @@
 //! Euclidean distance to measure dissimilarity").
 
 pub mod pca;
+pub mod simd;
 
 use crate::{Error, Result};
+
+// ── Dimensionality-regime constants ─────────────────────────────────────
+//
+// One shared home for every "which kernel/backend at which d" threshold,
+// so the scalar fast paths below, the SIMD dispatcher (`simd`), the k-NN
+// backend chooser (`knn::kdtree_regime` / the norm-trick predicate), and
+// the doc comments can never disagree about the regime boundaries.
+
+/// Largest dimensionality served by the hand-written small-`d` fast
+/// paths in [`sq_dist_scalar`] (the paper's post-PCA regime, §5:
+/// d ∈ 2..7, bottoms out at 2–3 after PCA on the evaluated datasets).
+pub const SMALL_DIM_MAX: usize = 3;
+
+/// Minimum dimensionality at which the blocked norm-trick
+/// (`‖q‖² + ‖r‖² − 2 q·r`) kernel beats plain per-pair [`sq_dist`] in
+/// the chunked k-NN evaluator.
+pub const NORM_TRICK_MIN_DIM: usize = 4;
+
+/// Largest dimensionality at which kd-tree pruning still wins over
+/// brute force (curse of dimensionality; see `knn::kdtree_regime`).
+pub const KDTREE_MAX_DIM: usize = 12;
+
+/// Minimum row count for the kd-tree/forest backend to be worth its
+/// build cost (below this, brute force wins; see `knn::kdtree_regime`).
+pub const KDTREE_MIN_ROWS: usize = 256;
+
+/// Minimum dimensionality at which the AVX2 kernels ([`simd`]) use the
+/// 8-lane vector body. Below this they delegate to the scalar kernels,
+/// so the small-`d` fast paths stay byte-equal under every dispatch.
+pub const SIMD_MIN_DIM: usize = 8;
 
 /// A dense, row-major matrix of `f32` values.
 ///
@@ -144,18 +175,44 @@ impl Matrix {
     }
 }
 
-/// Squared Euclidean distance between two feature vectors.
+/// Squared Euclidean distance between two feature vectors — the
+/// innermost loop of the whole system (k-NN graph construction, k-means
+/// assignment, HAC linkage).
 ///
-/// Unrolled-by-4 accumulation: this is the innermost loop of the whole
-/// system (k-NN graph construction, k-means assignment, HAC linkage), so
-/// it is kept branch-free and auto-vectorizable.
+/// Without the `simd` feature this *is* [`sq_dist_scalar`]; with it,
+/// each call goes through the process-wide kernel set resolved once by
+/// [`simd::kernels`] (hot loops should hoist [`simd::sq_dist_kernel`]
+/// instead so not even that load repeats per pair).
+#[cfg(not(feature = "simd"))]
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    sq_dist_scalar(a, b)
+}
+
+/// Squared Euclidean distance, dispatched through the resolved kernel
+/// set (see the `cfg(not(feature = "simd"))` twin for the contract).
+#[cfg(feature = "simd")]
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    (simd::kernels().sq_dist)(a, b)
+}
+
+/// Scalar squared Euclidean distance kernel.
+///
+/// Unrolled-by-4 accumulation, kept branch-free and auto-vectorizable.
+/// This is the reference implementation every other kernel is measured
+/// against: the `simd` dispatcher falls back to it, and sub-
+/// [`SIMD_MIN_DIM`] inputs use it verbatim even with AVX2 active.
+#[inline]
+pub fn sq_dist_scalar(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
     let n = a.len();
-    // Fast paths for the post-PCA dimensionalities the paper uses (§5:
-    // d ∈ 2..7). The generic unrolled loop below costs a division and
-    // two loop setups that dominate at d = 2.
+    // Fast paths for dimensionalities up to SMALL_DIM_MAX — the paper's
+    // post-PCA regime (§5 reduces to a handful of components; the
+    // evaluated datasets bottom out at d = 2..3). The generic unrolled
+    // loop below costs a division and two loop setups that dominate at
+    // d = 2. The norm-trick/kd-tree boundaries for larger d live beside
+    // SMALL_DIM_MAX at the top of this module.
     if n == 2 {
         let d0 = a[0] - b[0];
         let d1 = a[1] - b[1];
@@ -188,6 +245,22 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// Scalar dot-product kernel — the norm-trick inner loop.
+///
+/// Plain sequential accumulation, bit-identical to the historical
+/// inline `for (x, y) in q.iter().zip(r) { dot += x * y }` loops it
+/// replaces (in [`pairwise_sq_dists`] and `knn::NativeChunks`), so
+/// featureless builds stay byte-for-byte unchanged.
+#[inline]
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut dot = 0.0f32;
+    for (x, y) in a.iter().zip(b) {
+        dot += x * y;
+    }
+    dot
+}
+
 /// Euclidean distance.
 #[inline]
 pub fn dist(a: &[f32], b: &[f32]) -> f32 {
@@ -211,19 +284,16 @@ pub fn pairwise_sq_dists(queries: &Matrix, refs: &Matrix, out: &mut [f32]) {
     assert_eq!(queries.cols(), refs.cols());
     assert_eq!(out.len(), queries.rows() * refs.rows());
     let (nq, nr) = (queries.rows(), refs.rows());
+    // One dispatch for the whole block — no per-pair kernel lookup.
+    let dot = simd::dot_kernel();
     let rnorms: Vec<f32> = (0..nr).map(|j| sq_norm(refs.row(j))).collect();
     for i in 0..nq {
         let q = queries.row(i);
         let qn = sq_norm(q);
         let row = &mut out[i * nr..(i + 1) * nr];
         for (j, slot) in row.iter_mut().enumerate() {
-            let r = refs.row(j);
-            let mut dot = 0.0f32;
-            for (x, y) in q.iter().zip(r) {
-                dot += x * y;
-            }
             // Clamp: catastrophic cancellation can produce tiny negatives.
-            *slot = (qn + rnorms[j] - 2.0 * dot).max(0.0);
+            *slot = (qn + rnorms[j] - 2.0 * dot(q, refs.row(j))).max(0.0);
         }
     }
 }
@@ -278,6 +348,25 @@ mod tests {
     fn sq_dist_zero_on_self() {
         let a = [1.5f32, -2.0, 3.25];
         assert_eq!(sq_dist(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn dot_scalar_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.7).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32 * 0.3).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert_eq!(dot_scalar(&a, &b).to_bits(), naive.to_bits());
+    }
+
+    #[test]
+    fn regime_constants_are_ordered() {
+        // The regimes must tile without overlap: small-dim fast paths,
+        // then norm-trick, then the SIMD vector body; kd-tree sits on
+        // top of the norm-trick range.
+        assert_eq!(SMALL_DIM_MAX + 1, NORM_TRICK_MIN_DIM);
+        assert!(NORM_TRICK_MIN_DIM <= SIMD_MIN_DIM);
+        assert!(KDTREE_MAX_DIM >= NORM_TRICK_MIN_DIM);
+        assert!(KDTREE_MIN_ROWS > 0);
     }
 
     #[test]

@@ -1,0 +1,271 @@
+//! Pinned SIMD distance kernels with one-time runtime dispatch.
+//!
+//! The scalar kernels in [`super`] are unrolled for auto-vectorization
+//! but not pinned to a target feature set — whether they actually emit
+//! vector code depends on the default target. This module pins them:
+//! behind the `simd` cargo feature it provides explicit `std::arch`
+//! x86_64 AVX2/FMA implementations of the squared-distance and dot
+//! kernels, selected **once per process** by [`kernels`] so the hot
+//! loops carry a plain function-pointer call and no per-call detection
+//! branch (hot loops hoist the pointer via [`sq_dist_kernel`] /
+//! [`dot_kernel`] and pay nothing per element).
+//!
+//! Dispatch rules, in order:
+//!
+//! 1. Feature `simd` off → this module only re-exports the scalar
+//!    kernels; no detection code is compiled and every output byte
+//!    matches the unfeatured build by construction.
+//! 2. `IHTC_FORCE_SCALAR=1` (any value but `0`) → scalar fallback even
+//!    when the feature and the CPU support AVX2. This is the lane CI's
+//!    `kernels` job uses to cover the detection branch itself.
+//! 3. `is_x86_feature_detected!("avx2")` + `fma` on x86_64 → the AVX2
+//!    kernels; anything else → scalar fallback.
+//!
+//! ## FP-ordering contract
+//!
+//! The AVX2 kernels reassociate the reduction (8 partial sums + FMA
+//! instead of the scalar kernel's 4 partial sums and separate
+//! multiply/add), so with the SIMD kernels active, distances may differ
+//! from scalar by a few ULP. Everything downstream is built on total
+//! orders over the *computed* values (`(distance, index)` in k-NN,
+//! strict argmin in k-means), so each kernel choice is individually
+//! deterministic: same build + same `IHTC_FORCE_SCALAR` setting ⇒ same
+//! output bytes for any worker count. Byte parity *across* kernel
+//! choices is deliberately not promised — `rust/tests/kernel_parity.rs`
+//! pins the bounded-ULP tolerance contract instead. Dimensions below
+//! [`super::SIMD_MIN_DIM`] never enter the vector loop, so the paper's
+//! post-PCA small-dimension fast paths stay byte-equal to scalar even
+//! with SIMD active.
+
+use super::{dot_scalar, sq_dist_scalar};
+
+/// A distance-kernel entry point: two equal-length rows in, one f32 out.
+pub type KernelFn = fn(&[f32], &[f32]) -> f32;
+
+/// The resolved kernel set for this process.
+#[derive(Clone, Copy, Debug)]
+pub struct Kernels {
+    /// Squared Euclidean distance (the [`super::sq_dist`] hot path).
+    pub sq_dist: KernelFn,
+    /// Dot product (the norm-trick kernel in `knn::NativeChunks`).
+    pub dot: KernelFn,
+    /// True when the AVX2/FMA implementations are installed.
+    pub simd: bool,
+}
+
+/// The always-available scalar kernel set (bit-for-bit the unfeatured
+/// build's arithmetic).
+pub static SCALAR: Kernels = Kernels { sq_dist: sq_dist_scalar, dot: dot_scalar, simd: false };
+
+/// The process-wide kernel set. Without the `simd` feature this is a
+/// zero-cost reference to [`SCALAR`].
+#[cfg(not(feature = "simd"))]
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    &SCALAR
+}
+
+/// The process-wide kernel set, resolved once on first use (runtime
+/// CPU detection + the `IHTC_FORCE_SCALAR` override) and then a plain
+/// pointer load. Hot loops should hoist the function pointers via
+/// [`sq_dist_kernel`] / [`dot_kernel`] so not even this load sits in
+/// the inner loop.
+#[cfg(feature = "simd")]
+pub fn kernels() -> &'static Kernels {
+    static KERNELS: std::sync::OnceLock<Kernels> = std::sync::OnceLock::new();
+    KERNELS.get_or_init(resolve)
+}
+
+/// One-time dispatch decision (see the module docs for the rules). The
+/// env read happens once per process, before any kernel runs — it is a
+/// build-configuration input like the cargo feature itself, not a
+/// mid-run nondeterminism source.
+#[cfg(feature = "simd")]
+fn resolve() -> Kernels {
+    if std::env::var_os("IHTC_FORCE_SCALAR").is_some_and(|v| v != "0") {
+        return SCALAR;
+    }
+    #[cfg(target_arch = "x86_64")]
+    if std::is_x86_feature_detected!("avx2") && std::is_x86_feature_detected!("fma") {
+        return Kernels { sq_dist: x86::sq_dist_avx2, dot: x86::dot_avx2, simd: true };
+    }
+    SCALAR
+}
+
+/// The resolved squared-distance kernel as a bare function pointer —
+/// hoist this out of hot loops so each call is a direct indirect call
+/// with no dispatch logic at all.
+#[inline]
+pub fn sq_dist_kernel() -> KernelFn {
+    kernels().sq_dist
+}
+
+/// The resolved dot-product kernel as a bare function pointer (the
+/// norm-trick inner loop in `knn::NativeChunks` hoists this per block).
+#[inline]
+pub fn dot_kernel() -> KernelFn {
+    kernels().dot
+}
+
+/// Whether the AVX2/FMA kernels are active in this process. False when
+/// the feature is off, the CPU lacks AVX2/FMA, or `IHTC_FORCE_SCALAR`
+/// is set — the parity tests branch their tolerance contract on this.
+#[inline]
+pub fn active() -> bool {
+    kernels().simd
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod x86 {
+    use super::super::{dot_scalar, sq_dist_scalar, SIMD_MIN_DIM};
+    use core::arch::x86_64::{
+        __m256, _mm256_castps256_ps128, _mm256_extractf128_ps, _mm256_fmadd_ps,
+        _mm256_loadu_ps, _mm256_setzero_ps, _mm256_sub_ps, _mm_add_ps, _mm_add_ss,
+        _mm_cvtss_f32, _mm_movehl_ps, _mm_shuffle_ps,
+    };
+
+    /// Horizontal sum of an 8-lane register: lanes are reduced pairwise
+    /// (hi half + lo half, then within the 128-bit half), one fixed
+    /// association per call — deterministic, like every kernel here.
+    ///
+    /// # Safety
+    /// AVX2 must be available; callers are themselves
+    /// `#[target_feature(enable = "avx2")]` fns reached only through
+    /// the dispatcher's runtime detection.
+    #[target_feature(enable = "avx2")]
+    fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 0b01));
+        _mm_cvtss_f32(s)
+    }
+
+    /// AVX2/FMA squared Euclidean distance. Dimensions below
+    /// [`SIMD_MIN_DIM`] delegate to the scalar kernel so the small-dim
+    /// fast paths stay byte-equal to the scalar build; the vector body
+    /// accumulates 8 lanes with FMA and handles the tail scalar-wise.
+    ///
+    /// # Safety
+    /// AVX2 + FMA must be available. This fn is reached only through
+    /// [`sq_dist_avx2`], whose pointer the dispatcher installs after
+    /// `is_x86_feature_detected!` confirms both features.
+    #[target_feature(enable = "avx2", enable = "fma")]
+    fn sq_dist_avx2_inner(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        if n < SIMD_MIN_DIM {
+            return sq_dist_scalar(a, b);
+        }
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 ≤ n bounds both unaligned 8-float loads
+            // inside their slices.
+            let (va, vb) = unsafe {
+                (_mm256_loadu_ps(a.as_ptr().add(i)), _mm256_loadu_ps(b.as_ptr().add(i)))
+            };
+            let d = _mm256_sub_ps(va, vb);
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            let d = a[i] - b[i];
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// AVX2/FMA dot product (norm-trick inner loop); same structure and
+    /// dispatch contract as [`sq_dist_avx2_inner`].
+    ///
+    /// # Safety
+    /// AVX2 + FMA must be available — see [`sq_dist_avx2_inner`].
+    #[target_feature(enable = "avx2", enable = "fma")]
+    fn dot_avx2_inner(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        if n < SIMD_MIN_DIM {
+            return dot_scalar(a, b);
+        }
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 8 <= n {
+            // SAFETY: i + 8 ≤ n bounds both unaligned 8-float loads
+            // inside their slices.
+            let (va, vb) = unsafe {
+                (_mm256_loadu_ps(a.as_ptr().add(i)), _mm256_loadu_ps(b.as_ptr().add(i)))
+            };
+            acc = _mm256_fmadd_ps(va, vb, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    /// Plain-`fn` wrapper in `KernelFn` shape over the target-feature fn.
+    pub(super) fn sq_dist_avx2(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: this symbol is only reachable through the Kernels
+        // pointer the dispatcher installs after runtime detection of
+        // AVX2 + FMA, so the required target features are present.
+        unsafe { sq_dist_avx2_inner(a, b) }
+    }
+
+    /// Plain-`fn` wrapper in `KernelFn` shape over the target-feature fn.
+    pub(super) fn dot_avx2(a: &[f32], b: &[f32]) -> f32 {
+        // SAFETY: as for `sq_dist_avx2` — the dispatcher's runtime
+        // detection is the precondition proof.
+        unsafe { dot_avx2_inner(a, b) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_set_is_always_available() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0];
+        let b = [9.0f32, 8.0, 7.0, 6.0, 5.0, 4.0, 3.0, 2.0, 1.0];
+        assert_eq!((SCALAR.sq_dist)(&a, &b), sq_dist_scalar(&a, &b));
+        assert_eq!((SCALAR.dot)(&a, &b), dot_scalar(&a, &b));
+        assert!(!SCALAR.simd);
+    }
+
+    #[test]
+    fn dispatched_kernels_match_scalar_within_tolerance() {
+        // Under the scalar lanes this is byte equality; with AVX2 active
+        // it is the bounded-ULP contract (see kernel_parity.rs for the
+        // exhaustive dim sweep).
+        let a: Vec<f32> = (0..33).map(|i| (i as f32) * 0.37 - 3.0).collect();
+        let b: Vec<f32> = (0..33).map(|i| (33 - i) as f32 * 0.21).collect();
+        let (ks, kd) = ((kernels().sq_dist)(&a, &b), sq_dist_scalar(&a, &b));
+        if active() {
+            assert!((ks - kd).abs() <= 1e-5 * (1.0 + kd.abs()), "{ks} vs {kd}");
+        } else {
+            assert_eq!(ks.to_bits(), kd.to_bits());
+        }
+    }
+
+    #[test]
+    fn small_dims_byte_equal_under_every_kernel() {
+        // d < SIMD_MIN_DIM never enters the vector body.
+        for d in 1..super::super::SIMD_MIN_DIM {
+            let a: Vec<f32> = (0..d).map(|i| i as f32 * 0.5 + 0.25).collect();
+            let b: Vec<f32> = (0..d).map(|i| (d - i) as f32 * 0.125).collect();
+            assert_eq!(
+                (kernels().sq_dist)(&a, &b).to_bits(),
+                sq_dist_scalar(&a, &b).to_bits(),
+                "d={d}"
+            );
+            assert_eq!((kernels().dot)(&a, &b).to_bits(), dot_scalar(&a, &b).to_bits(), "d={d}");
+        }
+    }
+}

@@ -1,0 +1,199 @@
+//! Kernel and bounds parity suite — the executable form of the
+//! FP-ordering contract in `linalg::simd`:
+//!
+//! * **Scalar vs dispatched kernel.** With the `simd` feature off or
+//!   `IHTC_FORCE_SCALAR` set, the dispatched kernels *are* the scalar
+//!   kernels and every comparison here is `to_bits` equality. With the
+//!   AVX2/FMA kernels active, the reduction is reassociated, so the
+//!   contract weakens to bounded relative error: for squared distance
+//!   and dot, `|simd − scalar| ≤ 1e-5 · (1 + |scalar|)` across every
+//!   dimension and input scale tested. Dimensions below
+//!   `SIMD_MIN_DIM` never enter the vector body and stay `to_bits`
+//!   equal under every dispatch.
+//! * **Norm-trick vs direct.** The chunked k-NN path computes
+//!   `‖q‖² + ‖r‖² − 2·q·r` instead of the direct subtract-square sum.
+//!   That identity cancels catastrophically when `‖q − r‖² ≪ ‖q‖²`,
+//!   so its contract is *absolute* in the input scale:
+//!   `|trick − direct| ≤ 1e-4 · (1 + ‖q‖² + ‖r‖²)`. This is the same
+//!   bound the existing k-NN equivalence tests rely on implicitly;
+//!   here it is pinned per kernel so a kernel change that breaks it
+//!   fails fast with the dimension in the message.
+//! * **Bounded vs unbounded k-means.** Elkan/Hamerly pruning is not a
+//!   tolerance contract at all: assignments, WCSS, centers, and
+//!   iteration counts must be `to_bits`-identical for every worker
+//!   count, because the pruned scans are provably non-winners and
+//!   every computed value is untouched.
+//!
+//! CI's `kernels` job runs this file (with the whole suite) three
+//! times: `--features simd`, `--features simd` + `IHTC_FORCE_SCALAR=1`,
+//! and featureless — so both branches of every `if simd::active()`
+//! below are exercised on every push.
+
+use ihtc::cluster::kmeans::{kmeans_pool, KMeansConfig, KMeansWorkspace, NativeAssign};
+use ihtc::data::synth::gaussian_mixture_paper;
+use ihtc::exec::Executor;
+use ihtc::linalg::{dot_scalar, simd, sq_dist_scalar, sq_norm, Matrix, SIMD_MIN_DIM};
+
+/// The dims the contract is pinned at: both sides of `SIMD_MIN_DIM`,
+/// the exact threshold, a non-multiple of the 8-lane width, and two
+/// multi-lane sizes.
+const DIMS: [usize; 7] = [1, 2, 4, 7, 8, 33, 64];
+
+/// Deterministic pseudo-random vector (LCG — no rand dependency).
+fn lcg_vec(n: usize, salt: u32, scale: f32) -> Vec<f32> {
+    let mut state = 0x9e37_79b9u32 ^ salt;
+    (0..n)
+        .map(|_| {
+            state = state.wrapping_mul(1_664_525).wrapping_add(1_013_904_223);
+            ((state >> 8) as f32 / (1u32 << 24) as f32 - 0.5) * scale
+        })
+        .collect()
+}
+
+#[test]
+fn dispatched_kernels_match_scalar_per_contract() {
+    for &d in &DIMS {
+        for (pair, scale) in [(0u32, 1.0f32), (1, 8.0), (2, 0.05)] {
+            let a = lcg_vec(d, pair * 2 + 1, scale);
+            let b = lcg_vec(d, pair * 2 + 2, scale);
+            let (sq_ref, dot_ref) = (sq_dist_scalar(&a, &b), dot_scalar(&a, &b));
+            let sq = (simd::sq_dist_kernel())(&a, &b);
+            let dot = (simd::dot_kernel())(&a, &b);
+            if simd::active() && d >= SIMD_MIN_DIM {
+                assert!(
+                    (sq - sq_ref).abs() <= 1e-5 * (1.0 + sq_ref.abs()),
+                    "sq_dist d={d} scale={scale}: {sq} vs {sq_ref}"
+                );
+                assert!(
+                    (dot - dot_ref).abs() <= 1e-5 * (1.0 + dot_ref.abs()),
+                    "dot d={d} scale={scale}: {dot} vs {dot_ref}"
+                );
+            } else {
+                // Scalar dispatch (feature off / forced / CPU fallback)
+                // and the sub-threshold dims are byte-contracts.
+                assert_eq!(sq.to_bits(), sq_ref.to_bits(), "sq_dist d={d} scale={scale}");
+                assert_eq!(dot.to_bits(), dot_ref.to_bits(), "dot d={d} scale={scale}");
+            }
+        }
+    }
+}
+
+#[test]
+fn public_sq_dist_is_the_dispatched_kernel() {
+    // `linalg::sq_dist` must route through the same dispatch decision
+    // as the hoisted kernel pointers — a drift here would mean hot
+    // loops and one-off call sites disagree about distances.
+    for &d in &DIMS {
+        let a = lcg_vec(d, 71, 2.0);
+        let b = lcg_vec(d, 72, 2.0);
+        assert_eq!(
+            ihtc::linalg::sq_dist(&a, &b).to_bits(),
+            (simd::sq_dist_kernel())(&a, &b).to_bits(),
+            "d={d}"
+        );
+    }
+}
+
+#[test]
+fn norm_trick_matches_direct_within_absolute_contract() {
+    for &d in &DIMS {
+        for (pair, scale) in [(0u32, 1.0f32), (1, 16.0)] {
+            let a = lcg_vec(d, pair * 2 + 11, scale);
+            // Include a near-duplicate pair: worst case for the
+            // cancellation in ‖q‖² + ‖r‖² − 2·q·r.
+            for b in [lcg_vec(d, pair * 2 + 12, scale), {
+                let mut b = a.clone();
+                if let Some(x) = b.first_mut() {
+                    *x += 1e-3;
+                }
+                b
+            }] {
+                let direct = (simd::sq_dist_kernel())(&a, &b);
+                let dot = (simd::dot_kernel())(&a, &b);
+                let trick = (sq_norm(&a) + sq_norm(&b) - 2.0 * dot).max(0.0);
+                let budget = 1e-4 * (1.0 + sq_norm(&a) + sq_norm(&b));
+                assert!(
+                    (trick - direct).abs() <= budget,
+                    "norm trick d={d} scale={scale}: {trick} vs {direct} (budget {budget})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_kmeans_byte_identical_for_every_worker_count() {
+    // n ≥ 2·PART (8192) so worker counts > 1 actually take the pooled
+    // path; w=1 exercises the serial fallback inside kmeans_pool.
+    let ds = gaussian_mixture_paper(17_000, 417);
+    let base = KMeansConfig { restarts: 2, ..KMeansConfig::new(3) };
+    let mut reference: Option<(Vec<u32>, u64, Vec<u32>, usize)> = None;
+    for workers in [1usize, 2, 4] {
+        let exec = Executor::new(workers);
+        let mut ws = KMeansWorkspace::new();
+        let off = kmeans_pool(&ds.points, None, &base, &NativeAssign, &exec, &mut ws).unwrap();
+        let mut ws_b = KMeansWorkspace::new();
+        let on = kmeans_pool(
+            &ds.points,
+            None,
+            &KMeansConfig { bounds: true, ..base },
+            &NativeAssign,
+            &exec,
+            &mut ws_b,
+        )
+        .unwrap();
+        // Bounds on vs off: byte-identical at this worker count.
+        assert_eq!(off.assignments, on.assignments, "w={workers}");
+        assert_eq!(off.wcss.to_bits(), on.wcss.to_bits(), "w={workers}");
+        assert_eq!(off.iterations, on.iterations, "w={workers}");
+        let cb: Vec<u32> = on.centers.data().iter().map(|v| v.to_bits()).collect();
+        let cb_off: Vec<u32> = off.centers.data().iter().map(|v| v.to_bits()).collect();
+        assert_eq!(cb_off, cb, "w={workers}");
+        assert_eq!(off.bound_checks, 0, "unbounded run must not count bound checks");
+        // …and the pruning must actually fire on separated blobs, at
+        // every worker count (a 0% hit rate would mean the bounds are
+        // dead weight, not merely conservative).
+        assert!(on.bound_hits > 0, "w={workers}: no bound ever pruned");
+        assert!(on.bound_hits <= on.bound_checks, "w={workers}");
+        // Pooled (w>1) vs serial (w=1): the pooled path reassociates
+        // partial sums at fixed part boundaries, identically for every
+        // worker count — so all pooled runs must agree with each other.
+        if workers == 1 {
+            continue;
+        }
+        match &reference {
+            None => reference = Some((on.assignments, on.wcss.to_bits(), cb, on.iterations)),
+            Some((ra, rw, rc, ri)) => {
+                assert_eq!(*ra, on.assignments, "pooled runs disagree at w={workers}");
+                assert_eq!(*rw, on.wcss.to_bits(), "pooled runs disagree at w={workers}");
+                assert_eq!(*rc, cb, "pooled runs disagree at w={workers}");
+                assert_eq!(*ri, on.iterations, "pooled runs disagree at w={workers}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bounded_kmeans_survives_all_duplicate_points() {
+    // Every distance is 0 and every center collapses onto the single
+    // point: bounds must neither prune incorrectly nor diverge from
+    // the unbounded path on fully degenerate input.
+    let points = Matrix::from_vec(vec![1.25f32; 200 * 2], 200, 2).unwrap();
+    let cfg = KMeansConfig::new(3);
+    let exec = Executor::new(2);
+    let mut ws = KMeansWorkspace::new();
+    let off = kmeans_pool(&points, None, &cfg, &NativeAssign, &exec, &mut ws).unwrap();
+    let mut ws_b = KMeansWorkspace::new();
+    let on = kmeans_pool(
+        &points,
+        None,
+        &KMeansConfig { bounds: true, ..cfg },
+        &NativeAssign,
+        &exec,
+        &mut ws_b,
+    )
+    .unwrap();
+    assert_eq!(off.assignments, on.assignments);
+    assert_eq!(off.wcss.to_bits(), on.wcss.to_bits());
+    assert_eq!(off.iterations, on.iterations);
+}

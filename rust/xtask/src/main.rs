@@ -39,6 +39,16 @@
 //!    the model checker. The pipeline's one deliberate import carries
 //!    `det-lint: allow(std-mpsc)` with the argument (the pipeline is
 //!    compiled but never *executed* under `--cfg loom`).
+//! 8. **arch-gate** — `core::arch` / `std::arch` /
+//!    `is_x86_feature_detected!` only inside `linalg/` and `knn/`,
+//!    where the kernel dispatcher and its hoisted-pointer callers
+//!    live. Intrinsics sprinkled anywhere else would fork the
+//!    FP-ordering contract per call site; everything reaches SIMD
+//!    through `linalg::simd::kernels()` instead.
+//! 9. **target-feature** — every `#[target_feature]` fn must have a
+//!    SAFETY / `# Safety` comment nearby (same window as rule 1):
+//!    calling one is a CPU-capability proof obligation even when the
+//!    fn itself is safe, and the comment must say who discharges it.
 //!
 //! `#[cfg(test)]` modules are skipped entirely (tests may hash, sleep,
 //! and spawn freely); line comments, block comments, and string
@@ -314,6 +324,11 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
             "src/main.rs",
         ],
     );
+    // The kernel dispatcher and its hoisted-pointer callers (arch-gate).
+    let owns_arch = {
+        let p = file.to_string_lossy().replace('\\', "/");
+        p.contains("/linalg/") || p.contains("/knn/")
+    };
     for (idx, line) in lines.iter().enumerate() {
         if line.in_test_mod {
             continue;
@@ -377,6 +392,26 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
                         .to_string(),
                 );
             }
+        }
+        if !owns_arch
+            && (code.contains("core::arch")
+                || code.contains("std::arch")
+                || has_word(code, "is_x86_feature_detected"))
+        {
+            push(
+                "arch-gate",
+                "arch intrinsics and feature detection live in `linalg/` (dispatcher) and \
+                 `knn/` (hoisted callers); reach SIMD through `linalg::simd::kernels()`"
+                    .to_string(),
+            );
+        }
+        if code.contains("#[target_feature") && !has_safety_comment(&lines, idx) {
+            push(
+                "target-feature",
+                "`#[target_feature]` fn without a nearby SAFETY / `# Safety` comment saying \
+                 who proves the CPU capability (normally the dispatcher's runtime detection)"
+                    .to_string(),
+            );
         }
         if !owns_spawn_named
             && code.contains("thread::spawn_named")
@@ -512,6 +547,42 @@ mod tests {
         .is_empty());
         // Prose mentioning mpsc must not trip the rule.
         assert!(run("src/knn/mod.rs", "// std::sync::mpsc would be wrong here").is_empty());
+    }
+
+    #[test]
+    fn arch_intrinsics_confined_to_kernel_modules() {
+        assert_eq!(
+            run("src/tc/mod.rs", "use core::arch::x86_64::_mm256_loadu_ps;"),
+            vec!["arch-gate"]
+        );
+        assert_eq!(
+            run("src/cluster/kmeans.rs", "if std::is_x86_feature_detected!(\"avx2\") {}"),
+            vec!["arch-gate"]
+        );
+        // The dispatcher and its hoisted-pointer callers are the owners.
+        assert!(run("src/linalg/simd.rs", "use core::arch::x86_64::_mm256_loadu_ps;").is_empty());
+        assert!(run("src/knn/mod.rs", "if std::is_x86_feature_detected!(\"avx2\") {}").is_empty());
+        // Prose and strings must not trip the gate.
+        assert!(run("src/tc/mod.rs", "// core::arch intrinsics live in linalg").is_empty());
+        assert!(run("src/tc/mod.rs", "let m = \"std::arch is gated\";").is_empty());
+    }
+
+    #[test]
+    fn target_feature_needs_safety_comment() {
+        assert_eq!(
+            run("src/linalg/simd.rs", "#[target_feature(enable = \"avx2\")]\nfn f() {}"),
+            vec!["target-feature"]
+        );
+        assert!(run(
+            "src/linalg/simd.rs",
+            "/// # Safety\n/// dispatcher detects avx2\n#[target_feature(enable = \"avx2\")]\nfn f() {}"
+        )
+        .is_empty());
+        assert!(run(
+            "src/linalg/simd.rs",
+            "// SAFETY: only installed after detection\n#[target_feature(enable = \"avx2\")]\nfn f() {}"
+        )
+        .is_empty());
     }
 
     #[test]

@@ -21,6 +21,13 @@ for the `stream/parallel_r{N}*` reduce-stage ingest benches and the
 `knn/forest_s{N}*` kd-forest shard benches: the speedup of every
 rN/sN entry over its r1/s1 sibling in the *current* run, flagging any
 sharded configuration that runs slower than its single-shard baseline.
+A kernel-scaling section pairs the `kernel/<op>_scalar_d{D}` benches
+with their `kernel/<op>_simd_d{D}` siblings (present only in builds
+where the AVX2/FMA dispatcher resolved) and the `kmeans/bounds_off_*`
+benches with `kmeans/bounds_on_*`, including the recorded
+`bound_hit_pct` pruning rate. All of these are ordinary BENCH_*.json
+entries, so the regression gate (`--fail-on-regression`) covers them
+like every other bench.
 
 `--seed-if-empty` starts the perf trajectory on the first machine with a
 toolchain: when the baseline directory is missing or holds no
@@ -157,6 +164,64 @@ def shared_vs_static_report(current, baseline):
         print(f"  {label:<46} static {fmt_ns(old[key]):>10}  shared "
               f"{fmt_ns(doc['median_ns']):>10}  {speedup:.2f}x")
 
+def kernel_report(current):
+    """Scalar-vs-SIMD kernel pairing and bounded-k-means pruning report.
+
+    The `kernel/<op>_simd_d{D}` benches only exist when the AVX2/FMA
+    dispatcher actually resolved (feature built, CPU capable, no
+    IHTC_FORCE_SCALAR), so a missing simd sibling means a scalar build —
+    reported as such rather than treated as an error. Both sections read
+    the *current* run only: the cross-build comparison is within one
+    run's files, the cross-PR trajectory is the ordinary diff above.
+    """
+    pat = re.compile(r"^kernel/(?P<op>\w+?)_(?P<kind>scalar|simd)_d(?P<d>\d+)$")
+    pairs = {}
+    for name, doc in current.items():
+        m = pat.match(name)
+        if m and doc.get("median_ns"):
+            pairs.setdefault((m.group("op"), int(m.group("d"))),
+                             {})[m.group("kind")] = doc["median_ns"]
+    if pairs:
+        print("\nkernel scaling (current run, scalar vs dispatched SIMD):")
+        simd_seen = False
+        for (op, d), by_kind in sorted(pairs.items()):
+            scalar = by_kind.get("scalar")
+            simd = by_kind.get("simd")
+            if scalar is None:
+                continue
+            if simd is None:
+                print(f"  {op} d={d:<4} scalar {fmt_ns(scalar):>10}  (no simd lane in this build)")
+                continue
+            simd_seen = True
+            print(f"  {op} d={d:<4} scalar {fmt_ns(scalar):>10}  simd "
+                  f"{fmt_ns(simd):>10}  {scalar / simd:.2f}x")
+        if not simd_seen:
+            print("  (scalar build — rerun with --features simd on an AVX2 machine "
+                  "for the simd lanes)")
+
+    pat_b = re.compile(r"^kmeans/bounds_(?P<kind>on|off)(?P<rest>.*)$")
+    bounds = {}
+    hit_pct = {}
+    for name, doc in current.items():
+        m = pat_b.match(name)
+        if m and doc.get("median_ns"):
+            bounds.setdefault(m.group("rest"), {})[m.group("kind")] = doc["median_ns"]
+            if m.group("kind") == "on" and doc.get("bound_hit_pct") is not None:
+                hit_pct[m.group("rest")] = doc["bound_hit_pct"]
+    printed = False
+    for rest, by_kind in sorted(bounds.items()):
+        off, on = by_kind.get("off"), by_kind.get("on")
+        if off is None or on is None:
+            continue
+        if not printed:
+            print("\nbounded k-means (current run, Elkan/Hamerly pruning — "
+                  "results are byte-identical by contract):")
+            printed = True
+        hits = f"  hit rate {hit_pct[rest]:.1f}%" if rest in hit_pct else ""
+        print(f"  kmeans{rest:<38} off {fmt_ns(off):>10}  on "
+              f"{fmt_ns(on):>10}  {off / on:.2f}x{hits}")
+
+
 def seed_baseline(cur_dir, base_dir):
     base_dir.mkdir(parents=True, exist_ok=True)
     copied = 0
@@ -200,6 +265,7 @@ def main():
             print(f"no baseline in {base_dir} — nothing to diff (seed it with "
                   f"--seed-if-empty, or copy {cur_dir}/BENCH_*.json there)")
         scaling_report(current)
+        kernel_report(current)
         return 0
 
     regressions = []
@@ -229,6 +295,7 @@ def main():
 
     slower = scaling_report(current)
     shared_vs_static_report(current, baseline)
+    kernel_report(current)
 
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
           f"{improvements} improvement(s), {len(missing)} missing, "
