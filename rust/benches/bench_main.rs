@@ -12,9 +12,11 @@
 //! `$IHTC_BENCH_DIR` (default: the working directory) so the perf
 //! trajectory is tracked across PRs.
 
+use ihtc::checkpoint::FaultPlan;
 use ihtc::cluster::hac::{hac, HacConfig, Linkage};
 use ihtc::cluster::kmeans::{kmeans_with_backend, KMeansConfig, NativeAssign};
 use ihtc::coordinator::parallel_knn;
+use ihtc::dist::DistPool;
 use ihtc::exec::Executor;
 use ihtc::data::synth::{find_spec, gaussian_mixture_paper, realistic};
 use ihtc::data::Preprocess;
@@ -26,7 +28,8 @@ use ihtc::knn::{
 };
 use ihtc::runtime::{Engine, PjrtAssign, PjrtChunks};
 use ihtc::tc::{threshold_cluster, TcConfig};
-use std::time::Instant;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 #[global_allocator]
 static ALLOC: ihtc::memtrack::CountingAllocator = ihtc::memtrack::CountingAllocator;
@@ -490,6 +493,50 @@ fn main() {
                     overhead * 100.0,
                     if overhead <= 0.10 { "  [OK ≤10%]" } else { "  [ABOVE 10% TARGET]" }
                 );
+            }
+        }
+
+        // Distributed leases over loopback: the same fused ingest with
+        // its level-0 reduce batches leased to N worker threads running
+        // the real wire protocol (`ihtc::dist::serve`) on 127.0.0.1.
+        // w0 is the in-process baseline (no pool at all). Output is
+        // byte-identical across w — rust/tests/dist_parity.rs pins
+        // that — so the wN-vs-w0 delta `scripts/bench_diff.py` reports
+        // is purely framing/serialization overhead traded against the
+        // leased remote compute.
+        for w in [0usize, 1, 2] {
+            let name = format!("dist/loopback_w{w}_ingest_n1e6");
+            if !b.matches(&name) {
+                continue;
+            }
+            let mut cfg = stream_cfg(true);
+            cfg.name = format!("dist_w{w}");
+            cfg.reduce_stages = 4; // keep ≥ w leases in flight
+            if w == 0 {
+                b.run(&name, 1, || {
+                    ihtc::coordinator::driver::ingest_streaming(&cfg).unwrap()
+                });
+                continue;
+            }
+            let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(60)).unwrap();
+            let workers: Vec<_> = (0..w)
+                .map(|_| {
+                    let addr = pool.addr().to_string();
+                    std::thread::spawn(move || ihtc::dist::serve(&addr, 2))
+                })
+                .collect();
+            assert!(pool.wait_for_workers(w, Duration::from_secs(10)), "workers didn't connect");
+            b.run(&name, 1, || {
+                ihtc::coordinator::driver::ingest_streaming_with_pool(
+                    &cfg,
+                    Some(Arc::clone(&pool)),
+                    &FaultPlan::none(),
+                )
+                .unwrap()
+            });
+            pool.shutdown();
+            for h in workers {
+                h.join().unwrap().unwrap();
             }
         }
     }

@@ -86,6 +86,57 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 }
 
 // ---------------------------------------------------------------------
+// Shared framing helpers
+//
+// One frame = `payload_len: u64 LE` + payload + `crc32(payload): u32
+// LE`. The checkpoint file and the distributed-lease wire protocol
+// (`crate::dist`) both speak this layout; the *reader policies* differ
+// by medium. A checkpoint tail may legitimately be torn (the process
+// died mid-write), so `scan` below tolerates truncation by design. A
+// socket, by contrast, has no legitimate torn state — a short or
+// CRC-bad frame means a dead or corrupting peer, so [`read_frame_from`]
+// turns it into a hard error.
+
+/// Write one length-prefixed, CRC32-trailed frame to `w`.
+pub fn write_frame_to(w: &mut impl Write, payload: &[u8]) -> std::io::Result<()> {
+    w.write_all(&(payload.len() as u64).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.write_all(&crc32(payload).to_le_bytes())
+}
+
+/// Read one frame from `r`, strictly: `Ok(None)` on clean EOF at a
+/// frame boundary; a torn frame, an absurd length, or a CRC mismatch is
+/// a hard [`Error::Data`] — never a silent truncation. This is the wire
+/// discipline (`crate::dist`); the checkpoint file reader keeps its own
+/// tolerant loop in `scan` because a torn *file* tail is recoverable.
+pub fn read_frame_from(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 8];
+    let got = read_up_to(r, &mut len_buf)?;
+    if got == 0 {
+        return Ok(None);
+    }
+    if got < len_buf.len() {
+        return Err(Error::Data("frame: torn length field".into()));
+    }
+    let len = u64::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME_BYTES {
+        return Err(Error::Data(format!("frame: corrupted length {len}")));
+    }
+    let mut payload = vec![0u8; len as usize];
+    if read_up_to(r, &mut payload)? < payload.len() {
+        return Err(Error::Data("frame: torn payload".into()));
+    }
+    let mut crc_buf = [0u8; 4];
+    if read_up_to(r, &mut crc_buf)? < crc_buf.len() {
+        return Err(Error::Data("frame: torn checksum".into()));
+    }
+    if crc32(&payload) != u32::from_le_bytes(crc_buf) {
+        return Err(Error::Data("frame: checksum mismatch".into()));
+    }
+    Ok(Some(payload))
+}
+
+// ---------------------------------------------------------------------
 // Fault injection
 
 /// Deterministic fault injection for the streaming driver. Each field
@@ -173,14 +224,16 @@ fn encode_frame(shard: &ReducedShard, moments: &Moments) -> Vec<u8> {
     buf
 }
 
-/// Little-endian field reader over one frame payload.
-struct Cursor<'a> {
-    buf: &'a [u8],
-    pos: usize,
+/// Little-endian field reader over one frame payload. Shared with the
+/// wire codec in `crate::dist`, whose payloads follow the same
+/// pre-validate-total-length discipline.
+pub(crate) struct Cursor<'a> {
+    pub(crate) buf: &'a [u8],
+    pub(crate) pos: usize,
 }
 
 impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> &'a [u8] {
+    pub(crate) fn take(&mut self, n: usize) -> &'a [u8] {
         // decode_frame pre-validates the total payload length, so a
         // short take here is unreachable; slice indexing keeps it loud.
         let s = &self.buf[self.pos..self.pos + n];
@@ -188,23 +241,23 @@ impl<'a> Cursor<'a> {
         s
     }
 
-    fn u8(&mut self) -> u8 {
+    pub(crate) fn u8(&mut self) -> u8 {
         self.take(1)[0]
     }
 
-    fn u32(&mut self) -> u32 {
+    pub(crate) fn u32(&mut self) -> u32 {
         u32::from_le_bytes(self.take(4).try_into().unwrap())
     }
 
-    fn u64(&mut self) -> u64 {
+    pub(crate) fn u64(&mut self) -> u64 {
         u64::from_le_bytes(self.take(8).try_into().unwrap())
     }
 
-    fn f32(&mut self) -> f32 {
+    pub(crate) fn f32(&mut self) -> f32 {
         f32::from_le_bytes(self.take(4).try_into().unwrap())
     }
 
-    fn f64(&mut self) -> f64 {
+    pub(crate) fn f64(&mut self) -> f64 {
         f64::from_le_bytes(self.take(8).try_into().unwrap())
     }
 }
@@ -529,9 +582,7 @@ impl CheckpointWriter {
             )));
         }
         let payload = encode_frame(shard, moments);
-        self.file.write_all(&(payload.len() as u64).to_le_bytes())?;
-        self.file.write_all(&payload)?;
-        self.file.write_all(&crc32(&payload).to_le_bytes())?;
+        write_frame_to(&mut self.file, &payload)?;
         self.rows += shard.assignments.len();
         self.frames += 1;
         if self.dest.is_some() {
@@ -750,6 +801,37 @@ mod tests {
         // The classic IEEE-802.3 check value.
         assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
         assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn miri_strict_frame_roundtrip_and_rejections() {
+        // write_frame_to / read_frame_from are the wire discipline:
+        // round-trip is exact, and *every* truncation or corruption is a
+        // hard error (a socket has no legitimate torn state).
+        let mut buf = Vec::new();
+        write_frame_to(&mut buf, b"hello").unwrap();
+        write_frame_to(&mut buf, &[0u8; 3]).unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame_from(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame_from(&mut r).unwrap().unwrap(), vec![0u8; 3]);
+        assert!(read_frame_from(&mut r).unwrap().is_none()); // clean EOF
+
+        // Truncation anywhere strictly inside a frame is a hard error.
+        let mut one = Vec::new();
+        write_frame_to(&mut one, b"payload").unwrap();
+        for cut in 1..one.len() {
+            let mut r = &one[..cut];
+            assert!(read_frame_from(&mut r).is_err(), "cut at {cut} must be torn");
+        }
+        // A flipped payload byte fails the checksum.
+        let mut bad = one.clone();
+        bad[10] ^= 0x01;
+        assert!(read_frame_from(&mut &bad[..]).is_err());
+        // Zero-length and absurd-length frames are rejected.
+        let zero = 0u64.to_le_bytes();
+        assert!(read_frame_from(&mut &zero[..]).is_err());
+        let huge = (MAX_FRAME_BYTES + 1).to_le_bytes();
+        assert!(read_frame_from(&mut &huge[..]).is_err());
     }
 
     // The `miri_frame_codec_*` tests below are pure in-memory (no

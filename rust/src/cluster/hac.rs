@@ -166,7 +166,16 @@ pub fn hac_from_dissimilarity(
     if n == 0 {
         return Ok(Dendrogram { n: 0, merges: vec![] });
     }
-    assert_eq!(dmat.len(), n * (n - 1) / 2);
+    // A wrong-length matrix is caller data, not an invariant — erroring
+    // (instead of the old assert) keeps a bad condensed buffer from
+    // aborting a long pipeline run.
+    let want = n * (n - 1) / 2;
+    if dmat.len() != want {
+        return Err(Error::Data(format!(
+            "hac: condensed dissimilarity has {} entries but n = {n} needs {want}",
+            dmat.len()
+        )));
+    }
     let ward = linkage == Linkage::Ward;
     let mut active: Vec<bool> = vec![true; n];
     let mut size: Vec<u32> = vec![1; n];
@@ -303,6 +312,19 @@ mod tests {
         assert_eq!(distinct.len(), 10);
         assert!(dend.cut(0).is_err());
         assert!(dend.cut(11).is_err());
+    }
+
+    #[test]
+    fn wrong_length_dissimilarity_is_an_error_not_a_panic() {
+        // 4 points need 6 condensed entries; 5 must error cleanly.
+        let mut short = vec![0.0f32; 5];
+        let err = hac_from_dissimilarity(4, &mut short, Linkage::Average).unwrap_err();
+        assert!(matches!(err, Error::Data(_)), "{err}");
+        assert!(err.to_string().contains("needs 6"), "{err}");
+        let mut long = vec![0.0f32; 7];
+        assert!(hac_from_dissimilarity(4, &mut long, Linkage::Ward).is_err());
+        // n = 0 with an empty buffer stays the documented no-op.
+        assert_eq!(hac_from_dissimilarity(0, &mut [], Linkage::Single).unwrap().merges.len(), 0);
     }
 
     #[test]

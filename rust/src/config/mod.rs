@@ -153,6 +153,22 @@ pub struct PipelineConfig {
     /// a worker takes from one stage's batch before re-selecting, so no
     /// stage starves its siblings (default true). Scheduling-only.
     pub fair_stages: bool,
+    /// Distributed mode: the coordinator's listen address
+    /// (`host:port`; port 0 picks a free port). Only meaningful with
+    /// `dist_workers > 0`. Parsed from the nested `dist` block's
+    /// `listen` key.
+    pub dist_listen: Option<String>,
+    /// Distributed mode: how many remote worker processes the run
+    /// expects to connect (0, the default, disables distribution
+    /// entirely). Workers that never show — or die mid-run — degrade
+    /// the affected units to in-process execution, byte-identically.
+    /// Parsed from the nested `dist` block's `workers` key.
+    pub dist_workers: usize,
+    /// Distributed mode: seconds of socket silence after which a leased
+    /// worker is declared dead and its unit re-queued (`None` = the
+    /// built-in default). Parsed from the nested `dist` block's
+    /// `lease_timeout` key.
+    pub dist_lease_timeout: Option<f64>,
     /// Write the final assignment CSV here (optional).
     pub output: Option<String>,
 }
@@ -185,6 +201,9 @@ impl Default for PipelineConfig {
             resume: false,
             steal: StealPolicy::Fifo,
             fair_stages: true,
+            dist_listen: None,
+            dist_workers: 0,
+            dist_lease_timeout: None,
             output: None,
         }
     }
@@ -309,6 +328,20 @@ impl PipelineConfig {
             }
             if let Some(fair) = e.opt_bool("fair_stages")? {
                 cfg.fair_stages = fair;
+            }
+        }
+        if let Some(d) = j.get("dist") {
+            // The dist block groups the coordinator/worker knobs; like
+            // every scalar knob they parse strictly — a mistyped value
+            // is an error, never a silently ignored field.
+            if let Some(l) = d.opt_str("listen")? {
+                cfg.dist_listen = Some(l.to_string());
+            }
+            if let Some(w) = d.opt_usize("workers")? {
+                cfg.dist_workers = w;
+            }
+            if let Some(t) = d.opt_f64("lease_timeout")? {
+                cfg.dist_lease_timeout = Some(t);
             }
         }
         if let Some(o) = j.opt_str("output")? {
@@ -443,6 +476,46 @@ impl PipelineConfig {
                 ));
             }
         }
+        // The dist knobs are one feature: a listen address or a lease
+        // timeout without a worker count would be silently inert (the
+        // pool is only built when workers > 0), and a worker count
+        // without an address has nowhere to listen — reject the inert
+        // combinations instead of dropping them.
+        if self.dist_workers > 0 && self.dist_listen.is_none() {
+            return Err(Error::Config(format!(
+                "dist.workers = {} needs dist.listen (\"host:port\"; port 0 picks a free \
+                 port) — the coordinator has no address to lease from",
+                self.dist_workers
+            )));
+        }
+        if self.dist_workers > MAX_WORKERS {
+            return Err(Error::Config(format!(
+                "dist.workers = {} exceeds the sanity ceiling of {MAX_WORKERS} (one I/O \
+                 thread per connected worker)",
+                self.dist_workers
+            )));
+        }
+        if self.dist_listen.is_some() && self.dist_workers == 0 {
+            return Err(Error::Config(
+                "dist.listen has no effect without dist.workers ≥ 1 — no units are leased \
+                 to a pool nobody is expected to join (set dist.workers, or drop the knob)"
+                    .into(),
+            ));
+        }
+        if self.dist_lease_timeout.is_some() && self.dist_workers == 0 {
+            return Err(Error::Config(
+                "dist.lease_timeout has no effect without dist.workers ≥ 1 — there are no \
+                 leases to time out (set dist.workers, or drop the knob)"
+                    .into(),
+            ));
+        }
+        if let Some(t) = self.dist_lease_timeout {
+            if !t.is_finite() || t <= 0.0 {
+                return Err(Error::Config(format!(
+                    "dist.lease_timeout must be a positive number of seconds, got {t}"
+                )));
+            }
+        }
         if self.streaming {
             if self.iterations == 0 {
                 return Err(Error::Config(
@@ -557,6 +630,43 @@ mod tests {
         assert!(matches!(cfg.clusterer, FinalClusterer::Hac { k: 7, .. }));
         assert!(matches!(cfg.source, DataSource::Analogue { ref name, scale_div: 100 } if name == "covertype"));
         assert_eq!(cfg.output.as_deref(), Some("/tmp/out.csv"));
+    }
+
+    #[test]
+    fn dist_block_parses_and_rejects_inert_combinations() {
+        let cfg = PipelineConfig::from_json(
+            r#"{"dist": {"listen": "127.0.0.1:0", "workers": 2, "lease_timeout": 1.5}}"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.dist_listen.as_deref(), Some("127.0.0.1:0"));
+        assert_eq!(cfg.dist_workers, 2);
+        assert_eq!(cfg.dist_lease_timeout, Some(1.5));
+        // Defaults: disabled.
+        let cfg = PipelineConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.dist_workers, 0);
+        assert!(cfg.dist_listen.is_none());
+
+        // Inert combinations are rejected, never dropped.
+        let err = PipelineConfig::from_json(r#"{"dist": {"listen": "127.0.0.1:0"}}"#).unwrap_err();
+        assert!(err.to_string().contains("no effect"), "{err}");
+        let err = PipelineConfig::from_json(r#"{"dist": {"lease_timeout": 5.0}}"#).unwrap_err();
+        assert!(err.to_string().contains("no effect"), "{err}");
+        let err = PipelineConfig::from_json(r#"{"dist": {"workers": 2}}"#).unwrap_err();
+        assert!(err.to_string().contains("dist.listen"), "{err}");
+        // Mistyped knobs are config errors, not silently ignored.
+        assert!(PipelineConfig::from_json(r#"{"dist": {"workers": "two"}}"#).is_err());
+        assert!(PipelineConfig::from_json(r#"{"dist": {"listen": 9000, "workers": 1}}"#).is_err());
+        // Degenerate timeouts are rejected.
+        let err = PipelineConfig::from_json(
+            r#"{"dist": {"listen": "127.0.0.1:0", "workers": 1, "lease_timeout": 0.0}}"#,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("positive"), "{err}");
+        // And the worker ceiling holds for dist workers too.
+        assert!(PipelineConfig::from_json(
+            r#"{"dist": {"listen": "127.0.0.1:0", "workers": 5000}}"#
+        )
+        .is_err());
     }
 
     #[test]

@@ -39,6 +39,7 @@ use crate::data::synth::{
     MixtureSampler, MixtureSpec,
 };
 use crate::data::{csv, Dataset};
+use crate::dist::{DistKnnProvider, DistPool, UnitResult, WorkSpec};
 use crate::exec::Executor;
 use crate::hybrid::{FinalClusterer, IhtcWorkspace};
 use crate::itis::{
@@ -505,7 +506,23 @@ pub fn ingest_streaming_with_faults(
     config: &PipelineConfig,
     faults: &FaultPlan,
 ) -> Result<StreamedReduction> {
-    ingest_streaming_on(config, &Arc::new(Executor::with_config(config.executor())), faults)
+    ingest_streaming_with_pool(config, None, faults)
+}
+
+/// [`ingest_streaming_with_faults`] against an optional distributed
+/// worker pool ([`crate::dist`]): with `Some(pool)` each shard's level-0
+/// reduce is offered to a leased remote worker first, falling back to
+/// the in-process reduce whenever the lease is abandoned (no connected
+/// workers, worker death mid-lease, torn reply). Remote and local
+/// execution run the identical functions on the identical bytes, so the
+/// [`StreamedReduction`] is byte-identical either way — which is what
+/// `rust/tests/dist_parity.rs` pins.
+pub fn ingest_streaming_with_pool(
+    config: &PipelineConfig,
+    pool: Option<Arc<DistPool>>,
+    faults: &FaultPlan,
+) -> Result<StreamedReduction> {
+    ingest_streaming_on(config, &Arc::new(Executor::with_config(config.executor())), pool, faults)
 }
 
 /// Reclaim the sink's writer from its shared slot. A poisoned lock maps
@@ -521,6 +538,7 @@ fn take_writer(slot: &Mutex<Option<CheckpointWriter>>) -> Option<CheckpointWrite
 fn ingest_streaming_on(
     config: &PipelineConfig,
     exec: &Arc<Executor>,
+    pool: Option<Arc<DistPool>>,
     faults: &FaultPlan,
 ) -> Result<StreamedReduction> {
     let capacity = config.queue_capacity.max(1);
@@ -536,14 +554,13 @@ fn ingest_streaming_on(
     };
     let start_row = replayed.as_ref().map_or(0, |r| r.rows);
     let produce = shard_source(config, start_row)?;
-    let itis_cfg = ItisConfig {
-        threshold: config.threshold,
-        stop: StopRule::Iterations(1),
-        prototype: PrototypeKind::WeightedCentroid,
-        seed_order: config.seed_order,
-        min_prototypes: 1,
-    };
+    // The one level-0 shape, shared with the remote-worker path
+    // (`crate::dist::execute_unit`) so both sides provably run the same
+    // reduction.
+    let itis_cfg = ItisConfig::level0(config.threshold, config.seed_order);
     let knn_shards = config.knn_shards.max(1);
+    let dist_threshold = config.threshold;
+    let dist_seed_order = config.seed_order;
     // The pooled reducer states are built lazily on the fused source
     // thread and submit their own nested k-NN batches, so they take
     // owning `Arc` handles to the one team.
@@ -588,6 +605,34 @@ fn ingest_streaming_on(
         move |reducer, shard: RowShard| {
             if kill_reduce == Some(shard.offset) {
                 panic!("fault injection: reduce stage killed at offset {}", shard.offset);
+            }
+            // Offer the shard to a leased remote worker first. An
+            // abandoned lease (no connected workers, worker death
+            // mid-lease, torn reply) falls through to the in-process
+            // reduce below — same functions on the same bytes, so the
+            // output is byte-identical either way.
+            if let Some(pool) = &pool {
+                let lease = pool.submit(&WorkSpec::ReduceShard {
+                    offset: shard.offset as u64,
+                    points: &shard.points,
+                    threshold: dist_threshold,
+                    seed_order: dist_seed_order,
+                    knn_shards,
+                });
+                if let Some(UnitResult::ReduceShard { reduction: red, moments }) =
+                    lease.take_result()
+                {
+                    return Ok((
+                        ReducedShard {
+                            offset: shard.offset,
+                            prototypes: red.prototypes,
+                            weights: red.weights,
+                            assignments: red.assignments,
+                            labels: shard.labels,
+                        },
+                        moments,
+                    ));
+                }
             }
             let mut moments = Moments::new(shard.points.cols());
             moments.fold(&shard.points);
@@ -809,10 +854,33 @@ fn cluster_prototypes(
 }
 
 /// Run the full pipeline: returns `(assignments, report)`.
+///
+/// With a `dist` block in the config this opens the coordinator pool
+/// ([`crate::dist::pool_from_config`]), waits up to one lease timeout
+/// for the configured workers to connect, runs with remote leases
+/// enabled, and shuts the pool down before returning (workers see a
+/// clean EOF and exit). Output bytes are identical with or without
+/// workers — see the [`crate::dist`] determinism contract.
 pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     config.validate()?;
+    let pool = crate::dist::pool_from_config(config)?;
+    let result = run_with_pool(config, pool.as_ref());
+    if let Some(p) = &pool {
+        p.shutdown();
+    }
+    result
+}
+
+/// [`run`] against a caller-owned distributed pool (or none). The
+/// caller keeps the pool's lifecycle: this function never shuts it
+/// down, so tests and benches can reuse one pool across runs.
+pub fn run_with_pool(
+    config: &PipelineConfig,
+    pool: Option<&Arc<DistPool>>,
+) -> Result<(Vec<u32>, RunReport)> {
+    config.validate()?;
     if config.streaming {
-        return run_streaming(config);
+        return run_streaming(config, pool);
     }
     let t_all = Instant::now();
     // The run's one thread team: every parallel site below — kd-tree
@@ -861,13 +929,22 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Native => None,
     };
     let pool_knn = PoolKnnProvider { exec: &exec, shards: config.knn_shards };
+    // Provider priority: PJRT > distributed leases > local pool. The
+    // dist provider leases each forest build + query block and falls
+    // back to `pool_knn`'s exact computation when abandoned, so the
+    // choice never changes the bytes.
+    let dist_knn = pool.map(|p| DistKnnProvider {
+        pool: p,
+        local: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
+    });
     let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
         engine: e,
         fallback: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
     });
-    let knn_provider: &dyn KnnProvider = match &pjrt_knn {
-        Some(p) => p,
-        None => &pool_knn,
+    let knn_provider: &dyn KnnProvider = match (&pjrt_knn, &dist_knn) {
+        (Some(p), _) => p,
+        (None, Some(d)) => d,
+        (None, None) => &pool_knn,
     };
     let mut ws = IhtcWorkspace::new();
 
@@ -956,7 +1033,10 @@ pub fn run(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
 /// match the materialized path so reports stay comparable;
 /// [`RunReport::bss_tss`] is computed on the prototype stream (the full
 /// matrix no longer exists by phase 5).
-fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
+fn run_streaming(
+    config: &PipelineConfig,
+    pool: Option<&Arc<DistPool>>,
+) -> Result<(Vec<u32>, RunReport)> {
     let t_all = Instant::now();
     // One executor for the whole run: the fused ingest submits its
     // per-shard reduce batches (and their nested k-NN batches) into it
@@ -967,7 +1047,7 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
     // Phase 1: fused ingest + shard-wise level-0 TC (+ streaming moments).
     let t0 = Instant::now();
     let (ingested, peak) =
-        memtrack::measure(|| ingest_streaming_on(config, &exec, &FaultPlan::none()));
+        memtrack::measure(|| ingest_streaming_on(config, &exec, pool.cloned(), &FaultPlan::none()));
     let StreamedReduction { prototypes, weights, level0, labels: truth, moments, n, stages } =
         ingested?;
     phases.push(PhaseStat {
@@ -1027,13 +1107,22 @@ fn run_streaming(config: &PipelineConfig) -> Result<(Vec<u32>, RunReport)> {
         Backend::Native => None,
     };
     let pool_knn = PoolKnnProvider { exec: &exec, shards: config.knn_shards };
+    // Provider priority: PJRT > distributed leases > local pool. The
+    // dist provider leases each forest build + query block and falls
+    // back to `pool_knn`'s exact computation when abandoned, so the
+    // choice never changes the bytes.
+    let dist_knn = pool.map(|p| DistKnnProvider {
+        pool: p,
+        local: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
+    });
     let pjrt_knn = engine.as_ref().map(|e| PjrtKnn {
         engine: e,
         fallback: PoolKnnProvider { exec: &exec, shards: config.knn_shards },
     });
-    let knn_provider: &dyn KnnProvider = match &pjrt_knn {
-        Some(p) => p,
-        None => &pool_knn,
+    let knn_provider: &dyn KnnProvider = match (&pjrt_knn, &dist_knn) {
+        (Some(p), _) => p,
+        (None, Some(d)) => d,
+        (None, None) => &pool_knn,
     };
     let mut ws = IhtcWorkspace::new();
 

@@ -1,0 +1,1184 @@
+//! Distributed IHTC: lease executor batches to remote worker processes.
+//!
+//! The executor's contract — batches keyed by submission index, results
+//! order-independent, output bytes scheduling-invariant (PRs 5/7/8) —
+//! is exactly the unit a multi-process scheduler needs. This module
+//! adds the scheduler: a coordinator-side [`DistPool`] listens on a
+//! socket, worker processes ([`serve`]) connect and **lease** whole
+//! self-contained work units, execute them on their own local
+//! [`Executor`], and return results keyed by the coordinator's
+//! submission index. Two unit kinds exist, both chosen because their
+//! output is provably location-independent:
+//!
+//! * **ReduceShard** — one streaming level-0 reduction (rows in →
+//!   prototypes + weights + assignments + [`Moments`] out). The shard
+//!   reduction is worker-count invariant and the moments fold the same
+//!   f32 rows in the same order, so the result bytes match the
+//!   in-process stage exactly.
+//! * **ForestKnn** — one kd-forest shard build + all-rows query block.
+//!   The forest parity contract (byte-identical to `knn_brute` for any
+//!   shards × workers combination) makes the answer independent of
+//!   where it was computed.
+//!
+//! **Wire format.** The protocol reuses the checkpoint module's framing
+//! discipline: a 12-byte handshake (`IHTCDST1` magic + u32 LE version)
+//! sent by the worker and echoed by the coordinator, then a sequence of
+//! frames, each `payload_len: u64 LE` + payload + `crc32(payload): u32
+//! LE` ([`crate::checkpoint::write_frame_to`]). Unlike the checkpoint
+//! *file* reader — where a torn tail is a recoverable crash artifact —
+//! a torn or CRC-bad frame on a socket means a dead or corrupting peer
+//! and is a **hard error** ([`crate::checkpoint::read_frame_from`]):
+//! the connection is dropped and the lease is handled by the re-lease
+//! protocol below. All integers and floats are little-endian; f32/f64
+//! round-trip bit-exactly, which is what makes cross-process byte
+//! parity possible at all.
+//!
+//! **Lease / re-lease semantics.** Each connected worker runs one lease
+//! at a time: the coordinator sends a unit frame, the worker replies
+//! with a result frame echoing the unit id. If the worker disconnects,
+//! times out (`lease_timeout` of socket silence), or sends a torn or
+//! mismatched frame, the coordinator declares it dead and **re-queues**
+//! the unit for the remaining workers; when no workers remain, the unit
+//! — and everything still pending — is *abandoned*, which tells the
+//! submitting caller to run it in-process instead. A unit submitted
+//! while no worker is connected is abandoned immediately. Every lease
+//! therefore terminates in `Done` or `Abandoned`: a lost worker
+//! degrades the run to local execution, it never hangs it.
+//!
+//! **Determinism contract.** Because every unit's result is
+//! byte-identical whether computed locally or remotely, and the
+//! coordinator merges results purely by submission index / stream
+//! offset (the same keys the in-process paths use), the run's output
+//! bytes are identical whether its batches ran in-process, on one
+//! loopback worker, or on N remote workers — including runs where
+//! workers died mid-lease and units fell back. `rust/tests/
+//! dist_parity.rs` pins this grid.
+//!
+//! Concurrency notes: the pool's lease table lives under one
+//! `std::sync::Mutex` with two condvars (`work_cv` wakes worker I/O
+//! threads, `done_cv` wakes submitters). Like the pipeline's mpsc
+//! endpoints, this layer is I/O plumbing that loom never executes — the
+//! loom scenarios model the *executor* the units run on — so it uses
+//! std primitives directly rather than the `crate::sync` facade (which
+//! would be a lie of modeledness, not a verification). Timeouts are
+//! expressed purely through socket read timeouts and bounded sleeps;
+//! the protocol needs no clock reads.
+
+use crate::checkpoint::{read_frame_from, write_frame_to, Cursor};
+use crate::coordinator::driver::Moments;
+use crate::coordinator::PoolKnnProvider;
+use crate::exec::{Completion, Executor};
+use crate::itis::{ItisConfig, KnnProvider, ShardReducer, ShardReduction};
+use crate::knn::{forest::KdForest, KnnLists};
+use crate::linalg::Matrix;
+use crate::tc::SeedOrder;
+use crate::{Error, Result};
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Handshake magic: "IHTC distributed protocol, format 1".
+const DIST_MAGIC: [u8; 8] = *b"IHTCDST1";
+/// Protocol version, echoed in the handshake; a mismatch drops the
+/// connection before any lease is attempted.
+const DIST_VERSION: u32 = 1;
+/// Poll cadence for the nonblocking accept loop and worker waits.
+const POLL_STEP: Duration = Duration::from_millis(5);
+/// Default lease timeout when the config leaves it unset: seconds of
+/// socket silence after which a leased worker is declared dead.
+pub const DEFAULT_LEASE_TIMEOUT_SECS: f64 = 30.0;
+
+const KIND_REDUCE: u8 = 0;
+const KIND_FOREST: u8 = 1;
+const STATUS_OK: u8 = 0;
+const STATUS_ERR: u8 = 1;
+
+fn seed_order_code(s: SeedOrder) -> u8 {
+    match s {
+        SeedOrder::Natural => 0,
+        SeedOrder::DegreeAscending => 1,
+        SeedOrder::DegreeDescending => 2,
+    }
+}
+
+fn seed_order_from_code(c: u8) -> Result<SeedOrder> {
+    match c {
+        0 => Ok(SeedOrder::Natural),
+        1 => Ok(SeedOrder::DegreeAscending),
+        2 => Ok(SeedOrder::DegreeDescending),
+        _ => Err(Error::Data(format!("dist: unknown seed-order code {c}"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Wire codec
+
+/// Checked little-endian reader over one wire payload: every read
+/// verifies the remaining length first, so malformed bytes off a socket
+/// become [`Error::Data`] instead of a panic. (The checkpoint codec's
+/// [`Cursor`] may index unchecked because `decode_frame` pre-validates
+/// the exact total length; wire payloads have variable structure, so
+/// the check moves into each read.)
+struct Wire<'a> {
+    c: Cursor<'a>,
+}
+
+impl<'a> Wire<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { c: Cursor { buf, pos: 0 } }
+    }
+
+    fn remaining(&self) -> usize {
+        self.c.buf.len() - self.c.pos
+    }
+
+    fn need(&self, n: usize) -> Result<()> {
+        if self.remaining() < n {
+            return Err(Error::Data(format!(
+                "dist frame: payload truncated (need {n} more bytes, have {})",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        self.need(1)?;
+        Ok(self.c.u8())
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        self.need(4)?;
+        Ok(self.c.u32())
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        self.need(8)?;
+        Ok(self.c.u64())
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        self.need(4 * n)?;
+        Ok((0..n).map(|_| self.c.f32()).collect())
+    }
+
+    fn f64_vec(&mut self, n: usize) -> Result<Vec<f64>> {
+        self.need(8 * n)?;
+        Ok((0..n).map(|_| self.c.f64()).collect())
+    }
+
+    fn u32_vec(&mut self, n: usize) -> Result<Vec<u32>> {
+        self.need(4 * n)?;
+        Ok((0..n).map(|_| self.c.u32()).collect())
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.need(n)?;
+        Ok(self.c.take(n))
+    }
+
+    fn finish(self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(Error::Data(format!(
+                "dist frame: {} trailing bytes after {what}",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// A work unit to lease, borrowing the submitter's buffers (the encode
+/// copies them onto the wire; nothing is cloned in RAM first).
+pub enum WorkSpec<'a> {
+    /// One streaming level-0 shard reduction (see
+    /// [`crate::itis::reduce_shard`]).
+    ReduceShard {
+        /// Stream row offset (tracing only; the result is keyed by the
+        /// lease's unit id, not by this).
+        offset: u64,
+        /// The shard rows.
+        points: &'a Matrix,
+        /// TC size threshold `t*`.
+        threshold: usize,
+        /// TC seed order.
+        seed_order: SeedOrder,
+        /// kd-forest shards for the per-shard k-NN step.
+        knn_shards: usize,
+    },
+    /// One kd-forest shard build + all-rows k-NN query block.
+    ForestKnn {
+        /// The indexed/query rows.
+        points: &'a Matrix,
+        /// Neighbors per row.
+        k: usize,
+        /// Forest shard count.
+        shards: usize,
+    },
+}
+
+/// A decoded work unit, owned by the worker that leased it.
+pub enum WorkUnit {
+    /// See [`WorkSpec::ReduceShard`].
+    ReduceShard {
+        /// Stream row offset (tracing only).
+        offset: u64,
+        /// The shard rows.
+        points: Matrix,
+        /// TC size threshold `t*`.
+        threshold: usize,
+        /// TC seed order.
+        seed_order: SeedOrder,
+        /// kd-forest shards for the per-shard k-NN step.
+        knn_shards: usize,
+    },
+    /// See [`WorkSpec::ForestKnn`].
+    ForestKnn {
+        /// The indexed/query rows.
+        points: Matrix,
+        /// Neighbors per row.
+        k: usize,
+        /// Forest shard count.
+        shards: usize,
+    },
+}
+
+/// A decoded unit result — byte-identical to what the same unit
+/// produces in-process (the whole point of the protocol).
+pub enum UnitResult {
+    /// [`WorkSpec::ReduceShard`] output.
+    ReduceShard {
+        /// The shard's reduction (prototypes, weights, assignments).
+        reduction: ShardReduction,
+        /// The shard's standardization moments.
+        moments: Moments,
+    },
+    /// [`WorkSpec::ForestKnn`] output.
+    ForestKnn {
+        /// The k-NN lists for every row.
+        lists: KnnLists,
+    },
+}
+
+fn encode_spec(id: u64, spec: &WorkSpec<'_>) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&id.to_le_bytes());
+    match spec {
+        WorkSpec::ReduceShard { offset, points, threshold, seed_order, knn_shards } => {
+            buf.reserve(30 + 4 * points.data().len());
+            buf.push(KIND_REDUCE);
+            buf.extend_from_slice(&offset.to_le_bytes());
+            buf.extend_from_slice(&(*threshold as u64).to_le_bytes());
+            buf.push(seed_order_code(*seed_order));
+            buf.extend_from_slice(&(*knn_shards as u32).to_le_bytes());
+            push_matrix(&mut buf, points);
+        }
+        WorkSpec::ForestKnn { points, k, shards } => {
+            buf.reserve(17 + 4 * points.data().len());
+            buf.push(KIND_FOREST);
+            buf.extend_from_slice(&(*k as u32).to_le_bytes());
+            buf.extend_from_slice(&(*shards as u32).to_le_bytes());
+            push_matrix(&mut buf, points);
+        }
+    }
+    buf
+}
+
+fn push_matrix(buf: &mut Vec<u8>, m: &Matrix) {
+    buf.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    buf.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for v in m.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn read_matrix(w: &mut Wire<'_>) -> Result<Matrix> {
+    let rows = w.u32()? as usize;
+    let cols = w.u32()? as usize;
+    let data = w.f32_vec(rows.checked_mul(cols).ok_or_else(|| {
+        Error::Data("dist frame: matrix shape overflows".into())
+    })?)?;
+    Matrix::from_vec(data, rows, cols)
+}
+
+/// Decode a lease frame into `(unit_id, unit)`.
+pub fn decode_unit(payload: &[u8]) -> Result<(u64, WorkUnit)> {
+    let mut w = Wire::new(payload);
+    let id = w.u64()?;
+    let kind = w.u8()?;
+    let unit = match kind {
+        KIND_REDUCE => {
+            let offset = w.u64()?;
+            let threshold = w.u64()? as usize;
+            let seed_order = seed_order_from_code(w.u8()?)?;
+            let knn_shards = w.u32()? as usize;
+            let points = read_matrix(&mut w)?;
+            WorkUnit::ReduceShard { offset, points, threshold, seed_order, knn_shards }
+        }
+        KIND_FOREST => {
+            let k = w.u32()? as usize;
+            let shards = w.u32()? as usize;
+            let points = read_matrix(&mut w)?;
+            WorkUnit::ForestKnn { points, k, shards }
+        }
+        other => return Err(Error::Data(format!("dist frame: unknown unit kind {other}"))),
+    };
+    w.finish("work unit")?;
+    Ok((id, unit))
+}
+
+fn encode_result_ok(id: u64, res: &UnitResult) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(STATUS_OK);
+    match res {
+        UnitResult::ReduceShard { reduction, moments } => {
+            buf.push(KIND_REDUCE);
+            push_matrix(&mut buf, &reduction.prototypes);
+            for v in &reduction.weights {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            buf.extend_from_slice(&(reduction.assignments.len() as u32).to_le_bytes());
+            for v in &reduction.assignments {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            buf.extend_from_slice(&(moments.count as u64).to_le_bytes());
+            for v in &moments.sum {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in &moments.cross {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        UnitResult::ForestKnn { lists } => {
+            buf.push(KIND_FOREST);
+            buf.extend_from_slice(&(lists.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&(lists.k as u32).to_le_bytes());
+            for v in &lists.indices {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            for v in &lists.dists {
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    buf
+}
+
+fn encode_result_err(id: u64, msg: &str) -> Vec<u8> {
+    let bytes = msg.as_bytes();
+    let mut buf = Vec::with_capacity(13 + bytes.len());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.push(STATUS_ERR);
+    buf.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    buf.extend_from_slice(bytes);
+    buf
+}
+
+/// Decode a result frame into `(unit_id, Ok(result) | Err(worker
+/// message))`. The outer [`Result`] is a malformed frame (protocol
+/// violation → the worker is declared dead); the inner one is a clean
+/// worker-side execution failure (→ the unit falls back to local
+/// execution, which reproduces the same deterministic outcome).
+pub fn decode_result(payload: &[u8]) -> Result<(u64, std::result::Result<UnitResult, String>)> {
+    let mut w = Wire::new(payload);
+    let id = w.u64()?;
+    let status = w.u8()?;
+    if status == STATUS_ERR {
+        let len = w.u32()? as usize;
+        let msg = String::from_utf8_lossy(w.take(len)?).into_owned();
+        w.finish("error result")?;
+        return Ok((id, Err(msg)));
+    }
+    if status != STATUS_OK {
+        return Err(Error::Data(format!("dist frame: unknown result status {status}")));
+    }
+    let kind = w.u8()?;
+    let res = match kind {
+        KIND_REDUCE => {
+            let prototypes = read_matrix(&mut w)?;
+            let weights = w.u32_vec(prototypes.rows())?;
+            let rows = w.u32()? as usize;
+            let assignments = w.u32_vec(rows)?;
+            let d = prototypes.cols();
+            let mut moments = Moments::new(d);
+            moments.count = w.u64()? as usize;
+            moments.sum = w.f64_vec(d)?;
+            moments.cross = w.f64_vec(d * d)?;
+            UnitResult::ReduceShard {
+                reduction: ShardReduction { prototypes, weights, assignments },
+                moments,
+            }
+        }
+        KIND_FOREST => {
+            let rows = w.u32()? as usize;
+            let k = w.u32()? as usize;
+            let n = rows.checked_mul(k).ok_or_else(|| {
+                Error::Data("dist frame: knn shape overflows".into())
+            })?;
+            let indices = w.u32_vec(n)?;
+            let dists = w.f32_vec(n)?;
+            UnitResult::ForestKnn { lists: KnnLists { k, indices, dists } }
+        }
+        other => return Err(Error::Data(format!("dist frame: unknown result kind {other}"))),
+    };
+    w.finish("result")?;
+    Ok((id, Ok(res)))
+}
+
+// ---------------------------------------------------------------------
+// Unit execution (worker side — and the parity reference for tests)
+
+/// Execute one decoded unit on `exec`. This is the *entire* semantic
+/// payload of the protocol: the worker calls exactly the functions the
+/// in-process paths call ([`ShardReducer::reduce`] with
+/// [`ItisConfig::level0`]; [`crate::knn::knn_auto_sharded_into`]), so
+/// the result bytes cannot diverge by construction.
+pub fn execute_unit(unit: &WorkUnit, exec: &Arc<Executor>) -> Result<UnitResult> {
+    match unit {
+        WorkUnit::ReduceShard { points, threshold, seed_order, knn_shards, .. } => {
+            let mut moments = Moments::new(points.cols());
+            moments.fold(points);
+            let mut reducer = ShardReducer::new(
+                Arc::clone(exec),
+                *knn_shards,
+                ItisConfig::level0(*threshold, *seed_order),
+            );
+            let reduction = reducer.reduce(points)?;
+            Ok(UnitResult::ReduceShard { reduction, moments })
+        }
+        WorkUnit::ForestKnn { points, k, shards } => {
+            let mut forest = KdForest::new();
+            let mut lists = KnnLists::default();
+            crate::knn::knn_auto_sharded_into(points, *k, *shards, exec, &mut forest, &mut lists)?;
+            Ok(UnitResult::ForestKnn { lists })
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker process
+
+/// Deterministic fault injection for the wire, mirroring
+/// [`crate::checkpoint::FaultPlan`]: each field names one way a worker
+/// can die, indexed by the worker's 0-based lease count. `Default`
+/// injects nothing. Used by `rust/tests/dist_parity.rs` to pin the
+/// re-lease protocol.
+#[derive(Clone, Debug, Default)]
+pub struct WireFaultPlan {
+    /// Exit without replying after *receiving* this lease — the
+    /// coordinator sees `lease_timeout` of silence or EOF mid-lease.
+    pub kill_after_lease: Option<usize>,
+    /// Reply to this lease with a deliberately torn frame (length
+    /// prefix + half the payload), then exit — the coordinator's strict
+    /// frame reader must turn it into a dead-worker event, never a
+    /// partial result.
+    pub torn_result_at_lease: Option<usize>,
+    /// Exit cleanly after sending this many results — a connection
+    /// dropped *between* frames.
+    pub drop_after_results: Option<usize>,
+}
+
+impl WireFaultPlan {
+    /// A plan that injects nothing (the normal production path).
+    pub fn none() -> Self {
+        Self::default()
+    }
+}
+
+/// Run one worker process: connect to the coordinator at `addr`,
+/// handshake, then lease units one at a time until the coordinator
+/// closes the connection (clean EOF → `Ok`). `workers` sizes the local
+/// executor (0 = the machine's available parallelism).
+pub fn serve(addr: &str, workers: usize) -> Result<()> {
+    serve_with_faults(addr, workers, &WireFaultPlan::none())
+}
+
+/// [`serve`] with deterministic fault injection (tests only — the
+/// production entry point injects nothing).
+pub fn serve_with_faults(addr: &str, workers: usize, faults: &WireFaultPlan) -> Result<()> {
+    let mut stream = TcpStream::connect(addr)?;
+    let _ = stream.set_nodelay(true);
+    let mut hs = [0u8; 12];
+    hs[..8].copy_from_slice(&DIST_MAGIC);
+    hs[8..].copy_from_slice(&DIST_VERSION.to_le_bytes());
+    stream.write_all(&hs)?;
+    let mut echo = [0u8; 12];
+    stream.read_exact(&mut echo)?;
+    if echo != hs {
+        return Err(Error::Runtime(
+            "dist worker: coordinator handshake mismatch (wrong endpoint or version?)".into(),
+        ));
+    }
+    let exec = Arc::new(Executor::new(workers));
+    let mut leases = 0usize;
+    let mut results = 0usize;
+    loop {
+        let payload = match read_frame_from(&mut stream)? {
+            Some(p) => p,
+            None => return Ok(()), // coordinator closed cleanly
+        };
+        let idx = leases;
+        leases += 1;
+        if faults.kill_after_lease == Some(idx) {
+            return Ok(()); // vanish mid-lease: unit received, never answered
+        }
+        let (id, unit) = decode_unit(&payload)?;
+        let reply = match execute_unit(&unit, &exec) {
+            Ok(res) => encode_result_ok(id, &res),
+            Err(e) => encode_result_err(id, &e.to_string()),
+        };
+        if faults.torn_result_at_lease == Some(idx) {
+            stream.write_all(&(reply.len() as u64).to_le_bytes())?;
+            stream.write_all(&reply[..reply.len() / 2])?;
+            let _ = stream.shutdown(Shutdown::Both);
+            return Ok(());
+        }
+        write_frame_to(&mut stream, &reply)?;
+        results += 1;
+        if faults.drop_after_results == Some(results) {
+            return Ok(()); // drop between frames
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Coordinator pool
+
+/// One submitted unit's place in the lease table.
+enum UnitSlot {
+    /// Awaiting a worker (payload retained for the lease).
+    Pending(Arc<Vec<u8>>),
+    /// On a worker's wire (payload retained so a dead worker's unit can
+    /// be re-queued byte-identically).
+    Leased(Arc<Vec<u8>>),
+    /// Result frame received.
+    Done(Vec<u8>),
+    /// No worker will produce this unit — the submitter must run it
+    /// in-process.
+    Abandoned,
+    /// Terminal: the submitter consumed the slot.
+    Taken,
+}
+
+impl UnitSlot {
+    fn terminal(&self) -> bool {
+        matches!(self, UnitSlot::Done(_) | UnitSlot::Abandoned | UnitSlot::Taken)
+    }
+}
+
+#[derive(Default)]
+struct PoolState {
+    /// Unit ids awaiting a lease, in submission order (re-queued units
+    /// go to the front so a died-once unit is retried first).
+    pending: VecDeque<u64>,
+    /// The lease table, indexed by unit id.
+    units: Vec<UnitSlot>,
+    /// Connected, handshaken workers.
+    live_workers: usize,
+    /// Stream clones per live worker, so `shutdown` can unblock their
+    /// I/O threads immediately.
+    streams: Vec<(usize, TcpStream)>,
+    /// True once [`DistPool::shutdown`] ran.
+    shutdown: bool,
+}
+
+/// The coordinator side of the protocol: a listening socket, the lease
+/// table, and one I/O thread per connected worker. See the module docs
+/// for the lease/re-lease semantics. Create with [`DistPool::listen`],
+/// submit with [`DistPool::submit`], and call [`DistPool::shutdown`]
+/// when the run is over (worker connections are closed; workers see a
+/// clean EOF and exit).
+pub struct DistPool {
+    state: Mutex<PoolState>,
+    /// Wakes worker I/O threads parked for pending work.
+    work_cv: Condvar,
+    /// Wakes submitters parked for a unit to turn terminal.
+    done_cv: Condvar,
+    addr: std::net::SocketAddr,
+    lease_timeout: Duration,
+}
+
+impl DistPool {
+    /// Bind `addr` (port 0 picks a free port — see [`Self::addr`]) and
+    /// start accepting workers in the background. `lease_timeout` is
+    /// the seconds of socket silence after which a leased worker is
+    /// declared dead and its unit re-queued.
+    pub fn listen(addr: &str, lease_timeout: Duration) -> Result<Arc<Self>> {
+        if lease_timeout.is_zero() {
+            return Err(Error::InvalidArgument("dist: lease timeout must be > 0".into()));
+        }
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?;
+        let pool = Arc::new(Self {
+            state: Mutex::new(PoolState::default()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            addr: bound,
+            lease_timeout,
+        });
+        let accept_pool = Arc::clone(&pool);
+        // Not executor work: a nonblocking accept poll that parks in
+        // sleep, never computes. The conn threads it spawns are likewise
+        // pure I/O (their compute happens on the *worker process*).
+        // det-lint: allow(stage-spawn)
+        let _accept = crate::sync::thread::spawn_named("ihtc-dist-accept".to_string(), move || {
+            accept_loop(accept_pool, listener)
+        });
+        Ok(pool)
+    }
+
+    /// The actually-bound listen address (resolves port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Connected, handshaken workers right now.
+    pub fn live_workers(&self) -> usize {
+        self.state.lock().unwrap().live_workers
+    }
+
+    /// Block (bounded by `max_wait`) until at least `n` workers are
+    /// connected; returns whether they showed up. A `false` return is
+    /// not an error — the run proceeds and units fall back to local
+    /// execution, byte-identically.
+    pub fn wait_for_workers(&self, n: usize, max_wait: Duration) -> bool {
+        let mut waited = Duration::ZERO;
+        loop {
+            if self.state.lock().unwrap().live_workers >= n {
+                return true;
+            }
+            if waited >= max_wait {
+                return false;
+            }
+            std::thread::sleep(POLL_STEP);
+            waited += POLL_STEP;
+        }
+    }
+
+    /// Submit one unit for remote execution. If no worker is connected
+    /// the lease is abandoned immediately (the caller's cue to run the
+    /// unit in-process); otherwise it is queued for the next free
+    /// worker.
+    pub fn submit(self: &Arc<Self>, spec: &WorkSpec<'_>) -> Lease {
+        let mut st = self.state.lock().unwrap();
+        let id = st.units.len() as u64;
+        if st.shutdown || st.live_workers == 0 {
+            st.units.push(UnitSlot::Abandoned);
+        } else {
+            let payload = Arc::new(encode_spec(id, spec));
+            st.units.push(UnitSlot::Pending(payload));
+            st.pending.push_back(id);
+            drop(st);
+            self.work_cv.notify_all();
+        }
+        Lease { pool: Arc::clone(self), id }
+    }
+
+    /// Stop accepting, close every worker connection (workers see clean
+    /// EOF and exit), and abandon all outstanding units so no submitter
+    /// parks forever. Idempotent.
+    pub fn shutdown(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.shutdown = true;
+        st.pending.clear();
+        for slot in st.units.iter_mut() {
+            if !slot.terminal() {
+                *slot = UnitSlot::Abandoned;
+            }
+        }
+        st.live_workers = 0;
+        for (_, s) in st.streams.drain(..) {
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        drop(st);
+        self.work_cv.notify_all();
+        self.done_cv.notify_all();
+    }
+
+    /// A worker's I/O thread hit an error (disconnect, timeout, torn or
+    /// mismatched frame): deregister it and either re-queue its leased
+    /// unit for the survivors or abandon it — and, with no survivors,
+    /// abandon everything pending (the no-hang guarantee).
+    fn worker_died(&self, token: usize, leased: Option<u64>) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(i) = st.streams.iter().position(|(t, _)| *t == token) {
+            st.streams.remove(i);
+        }
+        // Called only by registered workers' I/O threads, exactly once
+        // each — decrement unconditionally (registration may have failed
+        // to retain a stream clone, but it always counted the worker).
+        st.live_workers = st.live_workers.saturating_sub(1);
+        if st.shutdown {
+            return;
+        }
+        if let Some(id) = leased {
+            if let UnitSlot::Leased(payload) = &st.units[id as usize] {
+                if st.live_workers > 0 {
+                    let payload = Arc::clone(payload);
+                    st.units[id as usize] = UnitSlot::Pending(payload);
+                    st.pending.push_front(id);
+                } else {
+                    st.units[id as usize] = UnitSlot::Abandoned;
+                }
+            }
+        }
+        if st.live_workers == 0 {
+            while let Some(id) = st.pending.pop_front() {
+                st.units[id as usize] = UnitSlot::Abandoned;
+            }
+        }
+        drop(st);
+        self.work_cv.notify_all();
+        self.done_cv.notify_all();
+    }
+}
+
+/// One submitted unit's handle: poll with [`Completion::done`], block
+/// with [`Completion::wait`], consume with [`Lease::take_result`] —
+/// the remote sibling of [`crate::exec::BatchHandle`], behind the same
+/// [`Completion`] surface.
+pub struct Lease {
+    pool: Arc<DistPool>,
+    id: u64,
+}
+
+impl Lease {
+    /// Block until the unit is terminal, then consume it: `Some` is the
+    /// remote result, decoded; `None` means the unit was abandoned, the
+    /// worker reported an execution error, or the result frame failed
+    /// to decode — in every case the caller runs the unit in-process,
+    /// which produces the byte-identical outcome (or the same
+    /// deterministic error).
+    pub fn take_result(&self) -> Option<UnitResult> {
+        let mut st = self.pool.state.lock().unwrap();
+        while !st.units[self.id as usize].terminal() {
+            st = self.pool.done_cv.wait(st).unwrap();
+        }
+        let bytes = match std::mem::replace(&mut st.units[self.id as usize], UnitSlot::Taken) {
+            UnitSlot::Done(b) => b,
+            _ => return None,
+        };
+        drop(st);
+        match decode_result(&bytes) {
+            Ok((rid, Ok(res))) if rid == self.id => Some(res),
+            _ => None,
+        }
+    }
+}
+
+impl Completion for Lease {
+    fn done(&self) -> bool {
+        self.pool.state.lock().unwrap().units[self.id as usize].terminal()
+    }
+
+    fn wait(&self) {
+        let mut st = self.pool.state.lock().unwrap();
+        while !st.units[self.id as usize].terminal() {
+            st = self.pool.done_cv.wait(st).unwrap();
+        }
+    }
+}
+
+fn accept_loop(pool: Arc<DistPool>, listener: TcpListener) {
+    let mut next_token = 0usize;
+    loop {
+        if pool.state.lock().unwrap().shutdown {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let token = next_token;
+                next_token += 1;
+                let conn_pool = Arc::clone(&pool);
+                // Not executor work: blocks on socket I/O for its whole
+                // life; the leased unit's compute runs on the worker
+                // process, not this thread.
+                // det-lint: allow(stage-spawn)
+                let _conn = crate::sync::thread::spawn_named(
+                    format!("ihtc-dist-conn-{token}"),
+                    move || conn_loop(conn_pool, stream, token),
+                );
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => std::thread::sleep(POLL_STEP),
+            Err(_) => std::thread::sleep(POLL_STEP),
+        }
+    }
+}
+
+/// One worker's coordinator-side I/O loop: handshake, register, then
+/// lease → send → await result, until the worker dies or the pool shuts
+/// down.
+fn conn_loop(pool: Arc<DistPool>, mut stream: TcpStream, token: usize) {
+    let _ = stream.set_nodelay(true);
+    if stream.set_read_timeout(Some(pool.lease_timeout)).is_err() {
+        return;
+    }
+    let mut hs = [0u8; 12];
+    if stream.read_exact(&mut hs).is_err()
+        || hs[..8] != DIST_MAGIC
+        || u32::from_le_bytes(hs[8..12].try_into().unwrap()) != DIST_VERSION
+        || stream.write_all(&hs).is_err()
+    {
+        return; // not a compatible worker; never registered
+    }
+    {
+        let mut st = pool.state.lock().unwrap();
+        if st.shutdown {
+            return;
+        }
+        st.live_workers += 1;
+        if let Ok(clone) = stream.try_clone() {
+            st.streams.push((token, clone));
+        }
+    }
+    loop {
+        // Acquire the next pending unit (or exit on shutdown).
+        let (id, payload) = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return; // shutdown already abandoned everything
+                }
+                if let Some(id) = st.pending.pop_front() {
+                    if let UnitSlot::Pending(p) = &st.units[id as usize] {
+                        let payload = Arc::clone(p);
+                        st.units[id as usize] = UnitSlot::Leased(Arc::clone(&payload));
+                        break (id, payload);
+                    }
+                    continue; // stale queue entry; skip
+                }
+                st = pool.work_cv.wait(st).unwrap();
+            }
+        };
+        if write_frame_to(&mut stream, &payload).is_err() {
+            pool.worker_died(token, Some(id));
+            return;
+        }
+        let reply = match read_frame_from(&mut stream) {
+            Ok(Some(r)) => r,
+            // EOF, timeout, torn frame, CRC mismatch: the worker is
+            // dead mid-lease either way.
+            _ => {
+                pool.worker_died(token, Some(id));
+                return;
+            }
+        };
+        if reply.len() < 8 || u64::from_le_bytes(reply[..8].try_into().unwrap()) != id {
+            pool.worker_died(token, Some(id)); // protocol violation
+            return;
+        }
+        let mut st = pool.state.lock().unwrap();
+        st.units[id as usize] = UnitSlot::Done(reply);
+        drop(st);
+        pool.done_cv.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Config plumbing
+
+/// Build the coordinator pool a config asks for: `None` when the `dist`
+/// block is absent/disabled (`workers: 0`), otherwise a listening pool
+/// that has waited up to one lease timeout for the configured worker
+/// count to connect (proceeding regardless — absent workers degrade to
+/// local execution, byte-identically).
+pub fn pool_from_config(config: &crate::config::PipelineConfig) -> Result<Option<Arc<DistPool>>> {
+    if config.dist_workers == 0 {
+        return Ok(None);
+    }
+    let listen = config.dist_listen.as_deref().ok_or_else(|| {
+        Error::Config("dist.workers > 0 requires dist.listen".into())
+    })?;
+    let timeout =
+        Duration::from_secs_f64(config.dist_lease_timeout.unwrap_or(DEFAULT_LEASE_TIMEOUT_SECS));
+    let pool = DistPool::listen(listen, timeout)?;
+    pool.wait_for_workers(config.dist_workers, timeout);
+    Ok(Some(pool))
+}
+
+// ---------------------------------------------------------------------
+// k-NN provider for the materialized path
+
+/// [`KnnProvider`] that leases each forest build + query block to a
+/// remote worker, falling back to the in-process
+/// [`PoolKnnProvider`] when the lease is abandoned. Both sides run
+/// [`crate::knn::knn_auto_sharded_into`], whose output is
+/// byte-identical for every shards × workers combination — so the
+/// provider can switch per call without perturbing a single bit.
+pub struct DistKnnProvider<'a> {
+    /// The coordinator pool.
+    pub pool: &'a Arc<DistPool>,
+    /// The in-process fallback (also defines `shards`).
+    pub local: PoolKnnProvider<'a>,
+}
+
+impl DistKnnProvider<'_> {
+    fn remote(&self, points: &Matrix, k: usize) -> Option<KnnLists> {
+        let lease = self.pool.submit(&WorkSpec::ForestKnn {
+            points,
+            k,
+            shards: self.local.shards,
+        });
+        match lease.take_result() {
+            Some(UnitResult::ForestKnn { lists }) => Some(lists),
+            _ => None,
+        }
+    }
+}
+
+impl KnnProvider for DistKnnProvider<'_> {
+    fn knn(&self, points: &Matrix, k: usize) -> Result<KnnLists> {
+        let mut out = KnnLists::default();
+        self.knn_into(points, k, &mut out)?;
+        Ok(out)
+    }
+
+    fn knn_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {
+        match self.remote(points, k) {
+            Some(lists) => {
+                *out = lists;
+                Ok(())
+            }
+            None => self.local.knn_into(points, k, out),
+        }
+    }
+
+    fn knn_forest_into(
+        &self,
+        points: &Matrix,
+        k: usize,
+        forest: &mut KdForest,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        match self.remote(points, k) {
+            Some(lists) => {
+                *out = lists;
+                Ok(())
+            }
+            None => self.local.knn_forest_into(points, k, forest, out),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::gaussian_mixture_paper;
+
+    fn spawn_worker(addr: std::net::SocketAddr, faults: WireFaultPlan) -> std::thread::JoinHandle<Result<()>> {
+        std::thread::spawn(move || serve_with_faults(&addr.to_string(), 2, &faults))
+    }
+
+    fn local_reduce(points: &Matrix) -> (ShardReduction, Moments) {
+        let exec = Arc::new(Executor::new(2));
+        let mut moments = Moments::new(points.cols());
+        moments.fold(points);
+        let mut reducer = ShardReducer::new(exec, 2, ItisConfig::level0(4, SeedOrder::Natural));
+        (reducer.reduce(points).unwrap(), moments)
+    }
+
+    fn assert_reduce_matches(res: UnitResult, want: &(ShardReduction, Moments)) {
+        let UnitResult::ReduceShard { reduction, moments } = res else {
+            panic!("wrong result kind");
+        };
+        assert_eq!(reduction.prototypes.data(), want.0.prototypes.data());
+        assert_eq!(reduction.weights, want.0.weights);
+        assert_eq!(reduction.assignments, want.0.assignments);
+        assert_eq!(moments.count, want.1.count);
+        assert_eq!(moments.sum, want.1.sum);
+        assert_eq!(moments.cross, want.1.cross);
+    }
+
+    #[test]
+    fn miri_unit_codec_roundtrip_and_rejections() {
+        let ds = gaussian_mixture_paper(40, 7);
+        let spec = WorkSpec::ReduceShard {
+            offset: 64,
+            points: &ds.points,
+            threshold: 4,
+            seed_order: SeedOrder::DegreeAscending,
+            knn_shards: 3,
+        };
+        let payload = encode_spec(9, &spec);
+        let (id, unit) = decode_unit(&payload).unwrap();
+        assert_eq!(id, 9);
+        let WorkUnit::ReduceShard { offset, points, threshold, seed_order, knn_shards } = unit
+        else {
+            panic!("wrong kind");
+        };
+        assert_eq!(offset, 64);
+        assert_eq!(points.data(), ds.points.data());
+        assert_eq!(threshold, 4);
+        assert_eq!(seed_order, SeedOrder::DegreeAscending);
+        assert_eq!(knn_shards, 3);
+        // Every truncation is an error, never a panic.
+        for cut in 0..payload.len() {
+            assert!(decode_unit(&payload[..cut]).is_err(), "cut {cut}");
+        }
+        let mut padded = payload.clone();
+        padded.push(0);
+        assert!(decode_unit(&padded).is_err());
+
+        let fspec = WorkSpec::ForestKnn { points: &ds.points, k: 3, shards: 2 };
+        let fpayload = encode_spec(11, &fspec);
+        let (fid, funit) = decode_unit(&fpayload).unwrap();
+        assert_eq!(fid, 11);
+        let WorkUnit::ForestKnn { points, k, shards } = funit else { panic!("wrong kind") };
+        assert_eq!((k, shards), (3, 2));
+        assert_eq!(points.data(), ds.points.data());
+    }
+
+    #[test]
+    fn miri_result_codec_roundtrip_and_rejections() {
+        // Synthetic reduction (no executor: this runs under Miri).
+        let prototypes = Matrix::from_vec((0..6).map(|v| v as f32 * 0.25).collect(), 3, 2).unwrap();
+        let mut moments = Moments::new(2);
+        moments.count = 4;
+        moments.sum = vec![1.5, -2.0];
+        moments.cross = vec![1.0, 2.0, 3.0, 4.0];
+        let want = (
+            ShardReduction {
+                prototypes,
+                weights: vec![2, 1, 1],
+                assignments: vec![0, 0, 1, 2],
+            },
+            moments,
+        );
+        let res = UnitResult::ReduceShard {
+            reduction: want.0.clone(),
+            moments: Moments {
+                count: want.1.count,
+                sum: want.1.sum.clone(),
+                cross: want.1.cross.clone(),
+            },
+        };
+        let bytes = encode_result_ok(5, &res);
+        let (id, decoded) = decode_result(&bytes).unwrap();
+        assert_eq!(id, 5);
+        assert_reduce_matches(decoded.unwrap(), &want);
+        for cut in 0..bytes.len() {
+            assert!(decode_result(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+
+        let err = encode_result_err(7, "boom");
+        let (id, decoded) = decode_result(&err).unwrap();
+        assert_eq!(id, 7);
+        assert_eq!(decoded.unwrap_err(), "boom");
+
+        let lists = KnnLists { k: 2, indices: vec![1, 2, 0, 3, 0, 1, 1, 2], dists: vec![0.5; 8] };
+        let bytes = encode_result_ok(3, &UnitResult::ForestKnn { lists: lists.clone() });
+        let (_, decoded) = decode_result(&bytes).unwrap();
+        let UnitResult::ForestKnn { lists: got } = decoded.unwrap() else { panic!("kind") };
+        assert_eq!((got.k, got.indices, got.dists), (lists.k, lists.indices, lists.dists));
+    }
+
+    #[test]
+    fn loopback_lease_produces_local_bytes() {
+        let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(20)).unwrap();
+        let worker = spawn_worker(pool.addr(), WireFaultPlan::none());
+        assert!(pool.wait_for_workers(1, Duration::from_secs(10)));
+
+        let ds = gaussian_mixture_paper(500, 21);
+        let want = local_reduce(&ds.points);
+        let lease = pool.submit(&WorkSpec::ReduceShard {
+            offset: 0,
+            points: &ds.points,
+            threshold: 4,
+            seed_order: SeedOrder::Natural,
+            knn_shards: 2,
+        });
+        assert_reduce_matches(lease.take_result().expect("remote result"), &want);
+        assert!(Completion::done(&lease));
+
+        // ForestKnn parity against the pooled local path — and against
+        // the build_query_block convenience, which is the same unit.
+        let exec = Executor::new(2);
+        let mut local = KnnLists::default();
+        let mut forest = KdForest::new();
+        crate::knn::knn_auto_sharded_into(&ds.points, 3, 2, &exec, &mut forest, &mut local)
+            .unwrap();
+        let mut via_block = KnnLists::default();
+        KdForest::new()
+            .build_query_block(&ds.points, 3, 2, &exec, &mut via_block)
+            .unwrap();
+        let flease = pool.submit(&WorkSpec::ForestKnn { points: &ds.points, k: 3, shards: 2 });
+        let Some(UnitResult::ForestKnn { lists }) = flease.take_result() else {
+            panic!("remote knn failed");
+        };
+        assert_eq!(lists.indices, local.indices);
+        assert_eq!(lists.dists, local.dists);
+        assert_eq!(via_block.indices, local.indices);
+        assert_eq!(via_block.dists, local.dists);
+
+        pool.shutdown();
+        worker.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn no_workers_means_immediate_abandon() {
+        let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(1)).unwrap();
+        let ds = gaussian_mixture_paper(50, 3);
+        let lease = pool.submit(&WorkSpec::ForestKnn { points: &ds.points, k: 2, shards: 1 });
+        assert!(Completion::done(&lease)); // no waiting, no hanging
+        assert!(lease.take_result().is_none());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn killed_worker_abandons_its_lease() {
+        let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(20)).unwrap();
+        let worker = spawn_worker(pool.addr(), WireFaultPlan {
+            kill_after_lease: Some(0),
+            ..WireFaultPlan::none()
+        });
+        assert!(pool.wait_for_workers(1, Duration::from_secs(10)));
+        let ds = gaussian_mixture_paper(100, 5);
+        let lease = pool.submit(&WorkSpec::ReduceShard {
+            offset: 0,
+            points: &ds.points,
+            threshold: 4,
+            seed_order: SeedOrder::Natural,
+            knn_shards: 1,
+        });
+        // Sole worker vanished mid-lease → abandoned, not hung.
+        assert!(lease.take_result().is_none());
+        worker.join().unwrap().unwrap();
+        pool.shutdown();
+    }
+
+    #[test]
+    fn torn_result_relerases_to_surviving_worker() {
+        let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(20)).unwrap();
+        let bad = spawn_worker(pool.addr(), WireFaultPlan {
+            torn_result_at_lease: Some(0),
+            ..WireFaultPlan::none()
+        });
+        assert!(pool.wait_for_workers(1, Duration::from_secs(10)));
+        let ds = gaussian_mixture_paper(200, 9);
+        let want = local_reduce(&ds.points);
+        let lease = pool.submit(&WorkSpec::ReduceShard {
+            offset: 0,
+            points: &ds.points,
+            threshold: 4,
+            seed_order: SeedOrder::Natural,
+            knn_shards: 2,
+        });
+        // Give the torn frame time to land, then connect the survivor:
+        // the re-queued unit must produce the byte-identical result.
+        bad.join().unwrap().unwrap();
+        let good = spawn_worker(pool.addr(), WireFaultPlan::none());
+        // An abandoned lease (the survivor connected after the bad
+        // worker's death drained the pool) is the documented
+        // local-fallback path, also byte-identical — so only a *wrong*
+        // remote result can fail here.
+        if let Some(res) = lease.take_result() {
+            assert_reduce_matches(res, &want);
+        }
+        pool.shutdown();
+        good.join().unwrap().unwrap();
+    }
+}

@@ -638,6 +638,31 @@ impl<T, R, F> Drop for BatchHandle<T, R, F> {
     }
 }
 
+/// The poll/block surface a unit of in-flight work exposes, abstracted
+/// from where it runs: [`BatchHandle`] implements it for batches on the
+/// local thread team, and `crate::dist`'s remote lease implements it
+/// for batches leased to a worker process — so driver code can hold
+/// either behind one bound without caring which side of the socket the
+/// work landed on.
+pub trait Completion {
+    /// True once the unit of work has finished (or been abandoned).
+    fn done(&self) -> bool;
+    /// Block until [`done`](Self::done) is true, contributing cycles
+    /// where the implementation can (a local batch self-helps; a remote
+    /// lease just parks).
+    fn wait(&self);
+}
+
+impl<T: Send, R: Send, F: Fn(T) -> Result<R> + Sync> Completion for BatchHandle<T, R, F> {
+    fn done(&self) -> bool {
+        BatchHandle::done(self)
+    }
+
+    fn wait(&self) {
+        BatchHandle::wait(self)
+    }
+}
+
 /// The shared work-stealing thread team (see the module docs).
 ///
 /// Create one per run and hand it down by reference; it is `Sync`, so

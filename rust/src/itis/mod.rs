@@ -160,6 +160,21 @@ impl ItisConfig {
             min_prototypes: 1,
         }
     }
+
+    /// The streaming level-0 shard reduction: exactly one TC pass with
+    /// weight-exact prototypes. Shared by the in-process ingest stage
+    /// and the distributed worker (`crate::dist`) so a leased shard is
+    /// reduced under byte-identical configuration on either side of the
+    /// socket.
+    pub fn level0(threshold: usize, seed_order: crate::tc::SeedOrder) -> Self {
+        Self {
+            threshold,
+            stop: StopRule::Iterations(1),
+            prototype: PrototypeKind::WeightedCentroid,
+            seed_order,
+            min_prototypes: 1,
+        }
+    }
 }
 
 /// One ITIS level: the TC assignment of level-`i` points to level-`i+1`

@@ -102,6 +102,24 @@ impl KdForest {
         }
     }
 
+    /// The self-contained "forest shard build + query block" work unit:
+    /// rebuild this forest over `points` with `shards` shard trees, then
+    /// answer the all-rows k-NN query into `out` via the pooled path.
+    /// This is the unit a distributed worker (`crate::dist`) leases —
+    /// the forest parity contract (byte-identical to `knn_brute` for any
+    /// shards × workers) is what makes its output location-independent.
+    pub fn build_query_block(
+        &mut self,
+        points: &Matrix,
+        k: usize,
+        shards: usize,
+        exec: &Executor,
+        out: &mut KnnLists,
+    ) -> Result<()> {
+        self.rebuild(points, shards, exec);
+        self.knn_all_pool_into(points, k, exec, out)
+    }
+
     /// k-NN lists for every indexed row (self excluded), writing into a
     /// reusable output buffer. Byte-identical to [`super::knn_brute`].
     pub fn knn_all_into(&self, points: &Matrix, k: usize, out: &mut KnnLists) -> Result<()> {

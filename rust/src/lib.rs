@@ -60,6 +60,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod dist;
 pub mod exec;
 pub mod hybrid;
 pub mod itis;

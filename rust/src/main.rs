@@ -7,6 +7,9 @@
 //!   regenerate a paper table/figure (or `--all`).
 //! * `ablation` — seed-order × prototype-kind ablation (DESIGN.md §Perf).
 //! * `generate --dataset gmm --n 10000 --out data.csv` — emit datasets.
+//! * `serve --connect host:port [--workers N]` — run a distributed
+//!   worker process that leases batches from a coordinator (README
+//!   §Distributed mode).
 //! * `check-artifacts` — load the PJRT artifacts and run a smoke block.
 //! * `list` — list reproducible experiments.
 
@@ -88,6 +91,8 @@ USAGE:
   ihtc ablation [--seed S]              seed-order × prototype ablation
   ihtc itis-profile [--n 100000] [--t 2]  ITIS reduction profile
   ihtc generate --dataset gmm|<table3-name> --n N --out file.csv
+  ihtc serve --connect host:port [--workers N]
+                                        lease work from a coordinator
   ihtc check-artifacts [--dir artifacts]  smoke-test the PJRT artifacts
   ihtc list                             list experiments
 ";
@@ -102,6 +107,7 @@ fn main() {
         "ablation" => ablation_cmd(&args),
         "itis-profile" => itis_profile_cmd(&args),
         "generate" => generate_cmd(&args),
+        "serve" => serve_cmd(&args),
         "check-artifacts" => check_artifacts_cmd(&args),
         "list" => {
             for e in sim::EXPERIMENTS {
@@ -259,6 +265,20 @@ fn generate_cmd(args: &Args) -> Result<()> {
     };
     csv::write_csv(&ds, out)?;
     println!("wrote {} rows × {} cols to {out}", ds.len(), ds.dim());
+    Ok(())
+}
+
+/// Worker mode: connect to a coordinator and lease work units until it
+/// closes the connection (clean EOF → exit 0). `--workers 0` sizes the
+/// local executor to the machine's available parallelism.
+fn serve_cmd(args: &Args) -> Result<()> {
+    let addr = args.get("connect").ok_or_else(|| {
+        ihtc::Error::InvalidArgument("serve needs --connect host:port".into())
+    })?;
+    let workers = args.get_usize("workers", 0)?;
+    eprintln!("[serve] leasing from {addr} ({workers} local workers; 0 = auto)…");
+    ihtc::dist::serve(addr, workers)?;
+    eprintln!("[serve] coordinator closed the connection; done");
     Ok(())
 }
 

@@ -1,0 +1,177 @@
+//! Distributed-lease parity suite: a streaming ingest whose level-0
+//! reduce batches are leased to remote worker processes must produce
+//! **byte-identical** output to the plain in-process run — for any
+//! worker count, any `reduce_stages × knn_shards` combination, and
+//! under every wire fault the re-lease protocol handles (worker killed
+//! mid-lease, torn result frame, connection dropped between frames, no
+//! worker ever connecting). The workers here are threads running
+//! [`ihtc::dist::serve_with_faults`] in-process over loopback TCP —
+//! the same code path `ihtc serve` runs as a separate OS process.
+//!
+//! The CI `dist` job pins the grid one cell per matrix entry via
+//! `IHTC_DIST_WORKERS` / `IHTC_REDUCE_STAGES`; unset (a plain local
+//! `cargo test`) every cell runs in one invocation.
+
+use ihtc::checkpoint::FaultPlan;
+use ihtc::config::{DataSource, PipelineConfig};
+use ihtc::coordinator::driver::{
+    ingest_streaming, ingest_streaming_with_pool, StreamedReduction,
+};
+use ihtc::dist::{serve_with_faults, DistPool, WireFaultPlan};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn config(n: usize, stages: usize, knn_shards: usize) -> PipelineConfig {
+    PipelineConfig {
+        source: DataSource::PaperMixture { n },
+        streaming: true,
+        workers: 2,
+        shard_size: 512,
+        reduce_stages: stages,
+        knn_shards,
+        ..Default::default()
+    }
+}
+
+/// f32 comparisons via to_bits: parity here means *bytes*, not ε.
+fn assert_identical(got: &StreamedReduction, base: &StreamedReduction, what: &str) {
+    assert_eq!(got.n, base.n, "{what}: n");
+    let gb: Vec<u32> = got.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    let bb: Vec<u32> = base.prototypes.data().iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gb, bb, "{what}: prototype bytes");
+    assert_eq!(got.weights, base.weights, "{what}: weights");
+    assert_eq!(
+        got.level0.read_assignments().unwrap(),
+        base.level0.read_assignments().unwrap(),
+        "{what}: level-0 assignments"
+    );
+    assert_eq!(got.labels, base.labels, "{what}: labels");
+    assert_eq!(got.moments.count, base.moments.count, "{what}: moments.count");
+    let gs: Vec<u64> = got.moments.sum.iter().map(|v| v.to_bits()).collect();
+    let bs: Vec<u64> = base.moments.sum.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gs, bs, "{what}: moments.sum bits");
+    let gc: Vec<u64> = got.moments.cross.iter().map(|v| v.to_bits()).collect();
+    let bc: Vec<u64> = base.moments.cross.iter().map(|v| v.to_bits()).collect();
+    assert_eq!(gc, bc, "{what}: moments.cross bits");
+}
+
+/// One grid axis: pinned to a single value by the CI matrix env var,
+/// the full default sweep otherwise.
+fn axis(var: &str, default: &[usize]) -> Vec<usize> {
+    match std::env::var(var) {
+        Ok(v) => vec![v.parse().unwrap_or_else(|_| panic!("{var} must be an integer, got {v}"))],
+        Err(_) => default.to_vec(),
+    }
+}
+
+/// Start a pool on a free loopback port plus one worker thread per
+/// fault plan; waits for them all to be connected.
+fn pool_with_workers(
+    plans: Vec<WireFaultPlan>,
+) -> (Arc<DistPool>, Vec<std::thread::JoinHandle<ihtc::Result<()>>>) {
+    let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(30)).unwrap();
+    let n = plans.len();
+    let handles: Vec<_> = plans
+        .into_iter()
+        .map(|plan| {
+            let addr = pool.addr().to_string();
+            std::thread::spawn(move || serve_with_faults(&addr, 2, &plan))
+        })
+        .collect();
+    assert!(pool.wait_for_workers(n, Duration::from_secs(10)), "workers failed to connect");
+    (pool, handles)
+}
+
+fn run_with_workers(cfg: &PipelineConfig, plans: Vec<WireFaultPlan>) -> StreamedReduction {
+    let (pool, handles) = pool_with_workers(plans);
+    let got = ingest_streaming_with_pool(cfg, Some(Arc::clone(&pool)), &FaultPlan::none()).unwrap();
+    pool.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    got
+}
+
+#[test]
+fn loopback_grid_matches_in_process() {
+    for stages in axis("IHTC_REDUCE_STAGES", &[1, 4]) {
+        for knn_shards in [1usize, 4] {
+            let cfg = config(2000, stages, knn_shards);
+            let base = ingest_streaming(&cfg).unwrap();
+            for w in axis("IHTC_DIST_WORKERS", &[1, 2]) {
+                let plans = vec![WireFaultPlan::none(); w];
+                let got = run_with_workers(&cfg, plans);
+                assert_identical(
+                    &got,
+                    &base,
+                    &format!("w{w} stages{stages} knn_shards{knn_shards}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn killed_worker_mid_lease_falls_back_byte_identically() {
+    let stages = axis("IHTC_REDUCE_STAGES", &[4])[0];
+    let cfg = config(2000, stages, 2);
+    let base = ingest_streaming(&cfg).unwrap();
+    // Sole worker vanishes after receiving its first lease: that unit
+    // and everything pending abandon, the whole stream reduces locally.
+    let got = run_with_workers(
+        &cfg,
+        vec![WireFaultPlan { kill_after_lease: Some(0), ..WireFaultPlan::none() }],
+    );
+    assert_identical(&got, &base, "sole worker killed mid-lease");
+    // A killer plus a survivor: the dead worker's unit re-leases to the
+    // survivor (or abandons in the race where the survivor is also
+    // deregistering) — both documented paths, both byte-identical.
+    let got = run_with_workers(
+        &cfg,
+        vec![
+            WireFaultPlan { kill_after_lease: Some(0), ..WireFaultPlan::none() },
+            WireFaultPlan::none(),
+        ],
+    );
+    assert_identical(&got, &base, "killed worker + survivor");
+}
+
+#[test]
+fn torn_result_frame_falls_back_byte_identically() {
+    let cfg = config(1500, 2, 2);
+    let base = ingest_streaming(&cfg).unwrap();
+    // The torn frame must read as a dead worker — never as a partial
+    // result — and the stream must still complete byte-identically.
+    let got = run_with_workers(
+        &cfg,
+        vec![
+            WireFaultPlan { torn_result_at_lease: Some(0), ..WireFaultPlan::none() },
+            WireFaultPlan::none(),
+        ],
+    );
+    assert_identical(&got, &base, "torn result frame");
+}
+
+#[test]
+fn connection_dropped_between_frames_falls_back_byte_identically() {
+    let cfg = config(1500, 2, 2);
+    let base = ingest_streaming(&cfg).unwrap();
+    let got = run_with_workers(
+        &cfg,
+        vec![
+            WireFaultPlan { drop_after_results: Some(1), ..WireFaultPlan::none() },
+            WireFaultPlan::none(),
+        ],
+    );
+    assert_identical(&got, &base, "drop between frames");
+}
+
+#[test]
+fn no_workers_means_plain_in_process_run() {
+    let cfg = config(1000, 2, 1);
+    let base = ingest_streaming(&cfg).unwrap();
+    let pool = DistPool::listen("127.0.0.1:0", Duration::from_secs(5)).unwrap();
+    let got = ingest_streaming_with_pool(&cfg, Some(Arc::clone(&pool)), &FaultPlan::none()).unwrap();
+    pool.shutdown();
+    assert_identical(&got, &base, "no workers connected");
+}

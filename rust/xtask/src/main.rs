@@ -49,6 +49,11 @@
 //!    SAFETY / `# Safety` comment nearby (same window as rule 1):
 //!    calling one is a CPU-capability proof obligation even when the
 //!    fn itself is safe, and the comment must say who discharges it.
+//! 10. **net-gate** — `std::net` / `TcpListener` / `TcpStream` only
+//!    inside `dist/`, the one module that owns the wire protocol. A
+//!    socket anywhere else is an unframed, un-CRC'd, un-timeout'd side
+//!    channel the lease/re-lease and determinism contracts cannot see;
+//!    everything remote goes through `dist::DistPool` / `dist::serve`.
 //!
 //! `#[cfg(test)]` modules are skipped entirely (tests may hash, sleep,
 //! and spawn freely); line comments, block comments, and string
@@ -329,6 +334,8 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
         let p = file.to_string_lossy().replace('\\', "/");
         p.contains("/linalg/") || p.contains("/knn/")
     };
+    // The distributed wire protocol owns every socket (net-gate).
+    let owns_net = file.to_string_lossy().replace('\\', "/").contains("/dist/");
     for (idx, line) in lines.iter().enumerate() {
         if line.in_test_mod {
             continue;
@@ -402,6 +409,18 @@ fn lint_file(file: &Path, text: &str, findings: &mut Vec<Finding>) {
                 "arch-gate",
                 "arch intrinsics and feature detection live in `linalg/` (dispatcher) and \
                  `knn/` (hoisted callers); reach SIMD through `linalg::simd::kernels()`"
+                    .to_string(),
+            );
+        }
+        if !owns_net
+            && (code.contains("std::net")
+                || has_word(code, "TcpListener")
+                || has_word(code, "TcpStream"))
+        {
+            push(
+                "net-gate",
+                "sockets live in `dist/` only (framed, CRC-checked, lease-timed); route remote \
+                 work through `dist::DistPool` / `dist::serve` instead of opening a raw socket"
                     .to_string(),
             );
         }
@@ -565,6 +584,19 @@ mod tests {
         // Prose and strings must not trip the gate.
         assert!(run("src/tc/mod.rs", "// core::arch intrinsics live in linalg").is_empty());
         assert!(run("src/tc/mod.rs", "let m = \"std::arch is gated\";").is_empty());
+    }
+
+    #[test]
+    fn sockets_confined_to_dist_module() {
+        assert_eq!(run("src/coordinator/driver.rs", "use std::net::TcpStream;"), vec!["net-gate"]);
+        assert_eq!(run("src/knn/mod.rs", "let l = TcpListener::bind(addr)?;"), vec!["net-gate"]);
+        // The wire-protocol module is the owner.
+        assert!(run("src/dist/mod.rs", "use std::net::{TcpListener, TcpStream};").is_empty());
+        // Prose and strings must not trip the gate…
+        assert!(run("src/exec/mod.rs", "// a TcpStream would be wrong here").is_empty());
+        assert!(run("src/exec/mod.rs", "let m = \"std::net is gated\";").is_empty());
+        // …and neither must identifiers that merely contain the words.
+        assert!(run("src/exec/mod.rs", "fn not_a_TcpStreamLike() {}").is_empty());
     }
 
     #[test]

@@ -25,7 +25,11 @@ A kernel-scaling section pairs the `kernel/<op>_scalar_d{D}` benches
 with their `kernel/<op>_simd_d{D}` siblings (present only in builds
 where the AVX2/FMA dispatcher resolved) and the `kmeans/bounds_off_*`
 benches with `kmeans/bounds_on_*`, including the recorded
-`bound_hit_pct` pruning rate. All of these are ordinary BENCH_*.json
+`bound_hit_pct` pruning rate. A dist-scaling section pairs the
+`dist/loopback_w{N}*` leased-ingest benches against their `w0`
+in-process sibling — output is byte-identical across worker counts
+(rust/tests/dist_parity.rs pins that), so the ratio is the protocol's
+overhead-vs-offload balance. All of these are ordinary BENCH_*.json
 entries, so the regression gate (`--fail-on-regression`) covers them
 like every other bench.
 
@@ -222,6 +226,39 @@ def kernel_report(current):
               f"{fmt_ns(on):>10}  {off / on:.2f}x{hits}")
 
 
+def dist_report(current):
+    """Distributed-lease loopback scaling: wN workers vs the w0 in-process run.
+
+    The `dist/loopback_w{N}_…` benches run the same fused ingest with
+    level-0 reduce batches leased to N loopback worker processes; w0 is
+    the plain in-process baseline. Output bytes are identical across N
+    (the dist_parity suite pins that), so the ratio isolates wire
+    framing + serialization overhead against the offloaded compute.
+    Reads the *current* run only, like the other scaling sections.
+    """
+    pat = re.compile(r"^dist/loopback_w(?P<w>\d+)(?P<rest>.*)$")
+    families = {}
+    for name, doc in current.items():
+        m = pat.match(name)
+        if m and doc.get("median_ns"):
+            families.setdefault(m.group("rest"), {})[int(m.group("w"))] = doc["median_ns"]
+    printed = False
+    for rest, by_w in sorted(families.items()):
+        if by_w.get(0) is None or len(by_w) < 2:
+            continue
+        if not printed:
+            print("\ndist loopback scaling (current run, leased wN vs in-process w0):")
+            printed = True
+        base = by_w[0]
+        for w in sorted(by_w):
+            if w == 0:
+                print(f"  dist/loopback{rest:<32} w0  {fmt_ns(base):>10}  1.00x (in-process)")
+                continue
+            speedup = base / by_w[w]
+            marker = "" if speedup >= 1.0 else "  (overhead exceeds offload win)"
+            print(f"  dist/loopback{rest:<32} w{w:<2} {fmt_ns(by_w[w]):>10}  {speedup:.2f}x{marker}")
+
+
 def seed_baseline(cur_dir, base_dir):
     base_dir.mkdir(parents=True, exist_ok=True)
     copied = 0
@@ -266,6 +303,7 @@ def main():
                   f"--seed-if-empty, or copy {cur_dir}/BENCH_*.json there)")
         scaling_report(current)
         kernel_report(current)
+        dist_report(current)
         return 0
 
     regressions = []
@@ -296,6 +334,7 @@ def main():
     slower = scaling_report(current)
     shared_vs_static_report(current, baseline)
     kernel_report(current)
+    dist_report(current)
 
     print(f"\n{len(regressions)} regression(s) past {args.threshold:.0f}%, "
           f"{improvements} improvement(s), {len(missing)} missing, "
